@@ -1,0 +1,145 @@
+//! End-to-end prefill driver (E12): a multi-layer BitNet-style model
+//! runs **through the AOT'd PJRT artifacts** — the compute path the
+//! paper accelerates, with Python nowhere at runtime — over a synthetic
+//! tiny-corpus workload, while the cycle-accurate simulator prices every
+//! mpGEMM on the Platinum ASIC.
+//!
+//! Proves all three layers compose: L1 Pallas LUT kernels (inside the
+//! HLO), L2 JAX block graph (the artifact), L3 rust coordinator (this
+//! binary: weight packing, path generation, dispatch, metrics).
+//!
+//! Run after `make artifacts`:
+//!   `cargo run --release --example bitnet_prefill [-- --layers 4 --batches 8]`
+
+use anyhow::Result;
+use platinum::analysis::Gemm;
+use platinum::config::{ExecMode, PlatinumConfig};
+use platinum::encoding::pack_ternary;
+use platinum::pathgen;
+use platinum::runtime::{HostTensor, Runtime};
+use platinum::sim::simulate_gemm;
+use platinum::util::{cli, rng::Rng};
+use std::time::Instant;
+
+struct Layer {
+    wqkv: HostTensor,
+    wo: HostTensor,
+    wup: HostTensor,
+    wdown: HostTensor,
+}
+
+fn packed(rng: &mut Rng, m: usize, k: usize) -> HostTensor {
+    let w = rng.ternary_vec(m * k);
+    HostTensor::I32(pack_ternary(&w, m, k, 5).data.iter().map(|&b| b as i32).collect())
+}
+
+fn main() -> Result<()> {
+    let args = cli::parse(std::env::args().skip(1))?;
+    let n_layers = args.get_usize("layers", 4)?;
+    let n_batches = args.get_usize("batches", 8)?;
+
+    let mut rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let spec = rt.manifest().find("block_s32").expect("run `make artifacts`").clone();
+    let d = spec.meta["d_model"] as usize;
+    let f = spec.meta["d_ffn"] as usize;
+    let s = spec.meta["s"] as usize;
+    println!(
+        "BitNet-style model: {n_layers} layers, d_model={d}, d_ffn={f}, seq={s} — \
+         ~{:.1}M BitLinear params/layer",
+        (3 * d * d + d * d + 2 * d * f) as f64 / 1e6
+    );
+    println!("PJRT platform: {} (artifacts: block_s32)\n", rt.platform());
+
+    // --- build the model: packed ternary weights per layer ----------------
+    let mut rng = Rng::seed_from(2026);
+    let layers: Vec<Layer> = (0..n_layers)
+        .map(|_| Layer {
+            wqkv: packed(&mut rng, 3 * d, d),
+            wo: packed(&mut rng, d, d),
+            wup: packed(&mut rng, f, d),
+            wdown: packed(&mut rng, d, f),
+        })
+        .collect();
+    let path = pathgen::ternary_path(5);
+    let path_rows: Vec<i32> = path
+        .entries
+        .iter()
+        .flat_map(|e| [e.dst as i32, e.src as i32, e.j as i32, e.sign as i32])
+        .collect();
+
+    // --- synthetic tiny-corpus prefill ------------------------------------
+    let cfg = PlatinumConfig::default();
+    let mut total_tokens = 0usize;
+    let mut wall_total = 0.0f64;
+    let mut sim_latency = 0.0f64;
+    let mut sim_energy = 0.0f64;
+    let mut checksum = 0.0f64;
+
+    println!("prefilling {n_batches} sequences of {s} tokens...");
+    for b in 0..n_batches {
+        // synthetic embeddings for one sequence
+        let mut x: Vec<f32> = (0..s * d).map(|_| (rng.f64() as f32 - 0.5) * 0.6).collect();
+        let t0 = Instant::now();
+        for layer in &layers {
+            let inputs = vec![
+                HostTensor::F32(x.clone()),
+                layer.wqkv.clone(),
+                HostTensor::F32(vec![0.02]),
+                layer.wo.clone(),
+                HostTensor::F32(vec![0.02]),
+                layer.wup.clone(),
+                HostTensor::F32(vec![0.02]),
+                layer.wdown.clone(),
+                HostTensor::F32(vec![0.02]),
+                HostTensor::F32(vec![1.0; d]),
+                HostTensor::F32(vec![1.0; d]),
+                HostTensor::I32(path_rows.clone()),
+            ];
+            let y = rt.execute("block_s32", &inputs)?;
+            x = y.as_f32().unwrap().to_vec();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        wall_total += wall;
+        total_tokens += s;
+        checksum += x.iter().map(|v| *v as f64).sum::<f64>();
+
+        // price the same GEMMs on the simulated accelerator
+        for _ in 0..n_layers {
+            for g in [
+                Gemm::new(3 * d, d, s),
+                Gemm::new(d, d, s),
+                Gemm::new(f, d, s),
+                Gemm::new(d, f, s),
+            ] {
+                let r = simulate_gemm(&cfg, ExecMode::Ternary, g);
+                sim_latency += r.latency_s;
+                sim_energy += r.energy_j();
+            }
+        }
+        if b == 0 {
+            println!("  first sequence: wall {:.1} ms (interpret-mode CPU functional path)", wall * 1e3);
+        }
+    }
+
+    // --- report ------------------------------------------------------------
+    let ops: u64 = (0..n_layers)
+        .map(|_| {
+            [(3 * d, d), (d, d), (f, d), (d, f)]
+                .iter()
+                .map(|&(m, k)| Gemm::new(m, k, s).naive_adds())
+                .sum::<u64>()
+        })
+        .sum::<u64>()
+        * n_batches as u64;
+    println!("\n== end-to-end prefill report ==");
+    println!("  tokens processed        {total_tokens}");
+    println!("  functional wall time    {:.2} s  ({:.1} tok/s on this CPU, interpret-mode)",
+        wall_total, total_tokens as f64 / wall_total);
+    println!("  output checksum         {checksum:.3} (finite: {})", checksum.is_finite());
+    println!("  mpGEMM ops (naive adds) {:.2} G", ops as f64 / 1e9);
+    println!("\n  simulated Platinum ASIC (0.96 mm², 500 MHz):");
+    println!("    latency    {:.3} ms  ({:.0} tok/s)", sim_latency * 1e3, total_tokens as f64 / sim_latency);
+    println!("    throughput {:.0} GOP/s (paper Table I: 1534 GOP/s at N=1024)", ops as f64 / sim_latency / 1e9);
+    println!("    energy     {:.2} mJ  ({:.2} W)", sim_energy * 1e3, sim_energy / sim_latency);
+    Ok(())
+}

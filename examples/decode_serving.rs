@@ -1,0 +1,165 @@
+//! Decode serving driver (E12): batched request serving through the
+//! PJRT block artifacts — the edge-LLM decode scenario the paper's
+//! n_cols=8 design targets.
+//!
+//! Requests arrive from producer threads (Poisson-ish arrivals), the
+//! coordinator batches them to the accelerator granularity, executes the
+//! functional forward on the PJRT CPU client, and reports wall-clock
+//! latency percentiles plus simulated Platinum latency/energy.
+//!
+//! Run after `make artifacts`:
+//!   `cargo run --release --example decode_serving [-- --requests 24 --rate 40]`
+
+use anyhow::Result;
+use platinum::analysis::Gemm;
+use platinum::config::{ExecMode, PlatinumConfig};
+use platinum::coordinator::serve::{BatchPolicy, Executor, Request, Response, Server};
+use platinum::encoding::pack_ternary;
+use platinum::pathgen;
+use platinum::runtime::{HostTensor, Runtime};
+use platinum::util::{cli, rng::Rng};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Executor that runs the `block_s8` artifact once per request batch.
+/// (Bucketed static shapes: each request carries an 8-token window.)
+struct BlockExec {
+    rt: Runtime,
+    weights: Vec<HostTensor>,
+    path_rows: Vec<i32>,
+    d: usize,
+    f: usize,
+    seq: usize,
+}
+
+impl BlockExec {
+    fn new() -> Result<Self> {
+        let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+        let spec = rt.manifest().find("block_s8").expect("run `make artifacts`").clone();
+        let d = spec.meta["d_model"] as usize;
+        let f = spec.meta["d_ffn"] as usize;
+        let seq = spec.meta["s"] as usize;
+        let mut rng = Rng::seed_from(7);
+        let mut packed = |m: usize, k: usize| -> HostTensor {
+            let w = rng.ternary_vec(m * k);
+            HostTensor::I32(pack_ternary(&w, m, k, 5).data.iter().map(|&b| b as i32).collect())
+        };
+        let weights = vec![packed(3 * d, d), packed(d, d), packed(f, d), packed(d, f)];
+        let path = pathgen::ternary_path(5);
+        let path_rows = path
+            .entries
+            .iter()
+            .flat_map(|e| [e.dst as i32, e.src as i32, e.j as i32, e.sign as i32])
+            .collect();
+        Ok(BlockExec { rt, weights, path_rows, d, f, seq })
+    }
+}
+
+impl Executor for BlockExec {
+    fn d_model(&self) -> usize {
+        self.d
+    }
+
+    fn run(&mut self, xs: &[&[f32]], seq: usize) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(seq, self.seq, "bucketed executor serves seq={} only", self.seq);
+        // the block artifact is per-sequence; run each request's window
+        // (batch-level parallelism is the accelerator's N dimension — the
+        // simulator prices it; the CPU functional path just iterates)
+        let mut out = Vec::with_capacity(xs.len());
+        for x in xs {
+            let inputs = vec![
+                HostTensor::F32(x.to_vec()),
+                self.weights[0].clone(),
+                HostTensor::F32(vec![0.02]),
+                self.weights[1].clone(),
+                HostTensor::F32(vec![0.02]),
+                self.weights[2].clone(),
+                HostTensor::F32(vec![0.02]),
+                self.weights[3].clone(),
+                HostTensor::F32(vec![0.02]),
+                HostTensor::F32(vec![1.0; self.d]),
+                HostTensor::F32(vec![1.0; self.d]),
+                HostTensor::I32(self.path_rows.clone()),
+            ];
+            let y = self.rt.execute("block_s8", &inputs)?;
+            out.push(y.as_f32().unwrap().to_vec());
+        }
+        Ok(out)
+    }
+
+    fn gemms(&self, seq: usize) -> Vec<Gemm> {
+        vec![
+            Gemm::new(3 * self.d, self.d, seq),
+            Gemm::new(self.d, self.d, seq),
+            Gemm::new(self.f, self.d, seq),
+            Gemm::new(self.d, self.f, seq),
+        ]
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+fn main() -> Result<()> {
+    let args = cli::parse(std::env::args().skip(1))?;
+    let n_requests = args.get_usize("requests", 24)?;
+    let rate = args.get_f64("rate", 40.0)?; // requests/s
+
+    let exec = BlockExec::new()?;
+    let d = exec.d_model();
+    let seq = exec.seq;
+    println!("decode serving: {n_requests} requests, ~{rate}/s arrivals, bucket seq={seq}, d={d}\n");
+
+    let mut server = Server::new(
+        exec,
+        PlatinumConfig::default(),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+    );
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::seed_from(123);
+        for id in 0..n_requests as u64 {
+            let gap = rng.exponential(rate);
+            std::thread::sleep(Duration::from_secs_f64(gap.min(0.1)));
+            let x: Vec<f32> = (0..seq * d).map(|_| (rng.f64() as f32 - 0.5) * 0.6).collect();
+            if tx.send(Request { id, x, seq, arrived: Instant::now() }).is_err() {
+                break;
+            }
+        }
+    });
+
+    let mut out: Vec<Response> = Vec::new();
+    let t0 = Instant::now();
+    server.run(rx, &mut out)?;
+    let total = t0.elapsed().as_secs_f64();
+    producer.join().unwrap();
+
+    let mut walls: Vec<f64> = out
+        .iter()
+        .map(|r| (r.wall + r.queue_delay).as_secs_f64() * 1e3)
+        .collect();
+    walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = &server.stats;
+    println!("== serving report ==");
+    println!("  completed           {}", stats.completed);
+    println!("  batches             {} (mean size {:.2})", stats.batches, stats.mean_batch_size());
+    println!("  offered load        {:.1} req/s, served {:.1} req/s", rate, out.len() as f64 / total);
+    println!("  request latency     p50 {:.1} ms  p95 {:.1} ms  (functional CPU path + queueing)",
+        percentile(&walls, 0.5), percentile(&walls, 0.95));
+    let sim_lat_per_batch = out.iter().map(|r| r.sim_latency_s).sum::<f64>() / out.len() as f64;
+    let sim_en = out.iter().map(|r| r.sim_energy_j).sum::<f64>() / out.len() as f64;
+    println!("\n  simulated Platinum ASIC per batch (N = batch x {seq} tokens):");
+    println!("    decode step latency {:.3} ms", sim_lat_per_batch * 1e3);
+    println!("    decode step energy  {:.3} mJ", sim_en * 1e3);
+    println!("    (paper: Platinum sustains decode utilization via n_cols=8; \
+              Prosperity drops ~8x here)");
+    assert_eq!(out.len(), n_requests);
+    println!("\nOK: all {n_requests} requests served.");
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Quickstart: the whole Platinum flow on one kernel, in one file.
+//!
+//! 1. Offline toolchain: generate the ternary build path, pack weights.
+//! 2. Functional execution through the golden datapath (Algorithm 1/2).
+//! 3. Cycle-accurate simulation: latency / energy / utilization.
+//! 4. The paper's headline comparison on this kernel.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use platinum::analysis::{adds_platinum, Gemm};
+use platinum::baselines::{eyeriss, prosperity, tmac};
+use platinum::config::{ExecMode, PlatinumConfig};
+use platinum::encoding::pack_ternary;
+use platinum::lut::{naive_mpgemm, ternary_mpgemm};
+use platinum::pathgen;
+use platinum::sim::simulate_gemm;
+use platinum::util::rng::Rng;
+
+fn main() {
+    // one BitLinear kernel from BitNet b1.58-3B (decode shape)
+    let g = Gemm::new(3200, 3200, 8);
+    println!("kernel: {}x{}x{} (b1.58-3B qkv, decode)\n", g.m, g.k, g.n);
+
+    // --- 1. offline toolchain -------------------------------------------
+    let path = pathgen::ternary_path(5);
+    println!(
+        "build path: {} additions (naive ternary construction: {} — {:.1}x fewer)",
+        path.additions(),
+        5 * 3usize.pow(5),
+        (5 * 3usize.pow(5)) as f64 / path.additions() as f64
+    );
+    println!(
+        "hazard-free: {} (min RAW distance {} >= pipeline depth {})\n",
+        path.hazard_free(),
+        path.min_raw_distance,
+        pathgen::PIPELINE_DEPTH
+    );
+
+    let mut rng = Rng::seed_from(1);
+    let w = rng.ternary_vec(g.m * g.k);
+    let x = rng.act_vec(g.k * g.n);
+    let packed = pack_ternary(&w, g.m, g.k, 5);
+    println!(
+        "weights: {} ternary values packed to {} bytes ({:.2} bits/weight)\n",
+        g.m * g.k,
+        packed.data.len(),
+        packed.data.len() as f64 * 8.0 / (g.m * g.k) as f64
+    );
+
+    // --- 2. functional execution ----------------------------------------
+    let cfg = PlatinumConfig::default();
+    let (y, ops) = ternary_mpgemm(&cfg, &packed, &x, g.n);
+    let want = naive_mpgemm(&w, g.m, g.k, &x, g.n);
+    assert_eq!(y, want, "golden datapath must be exact");
+    println!(
+        "functional: EXACT vs naive GEMM  (construct {} adds, {} queries, {} reduce adds)",
+        ops.construct_adds, ops.queries, ops.reduce_adds
+    );
+    println!(
+        "analytical Eq(3): {} adds vs naive {} ({:.1}x reduction)\n",
+        adds_platinum(g, 5),
+        g.naive_adds(),
+        g.naive_adds() as f64 / adds_platinum(g, 5) as f64
+    );
+
+    // --- 3. cycle-accurate simulation ------------------------------------
+    let r = simulate_gemm(&cfg, ExecMode::Ternary, g);
+    println!("simulated on Platinum (52 PPEs x 8 cols, 500 MHz, 28 nm):");
+    println!("  latency    {:.3} ms", r.latency_s * 1e3);
+    println!("  throughput {:.0} GOP/s", r.throughput_gops);
+    println!("  energy     {:.2} mJ  (power {:.2} W)", r.energy_j() * 1e3, r.power_w());
+    println!(
+        "  util: adders {:.1}%, LUT ports {:.1}%\n",
+        r.utilization.adders * 100.0,
+        r.utilization.lut_ports * 100.0
+    );
+
+    // --- 4. headline comparison ------------------------------------------
+    let eye = eyeriss::simulate(g, g.n);
+    let pro = prosperity::simulate(g, g.n);
+    let tm = tmac::simulate_m2pro(g);
+    println!("vs baselines on this kernel:");
+    println!("  {:<18} {:>10} {:>12}   slowdown / energy-x", "system", "latency", "energy");
+    for (name, lat, en) in [
+        ("SpikingEyeriss", eye.latency_s, eye.energy_j),
+        ("Prosperity", pro.latency_s, pro.energy_j),
+        ("T-MAC (M2 Pro)", tm.latency_s, tm.energy_j),
+        ("Platinum", r.latency_s, r.energy_j()),
+    ] {
+        println!(
+            "  {:<18} {:>8.2}ms {:>10.2}mJ   {:.1}x / {:.1}x",
+            name,
+            lat * 1e3,
+            en * 1e3,
+            lat / r.latency_s,
+            en / r.energy_j()
+        );
+    }
+}

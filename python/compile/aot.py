@@ -1,0 +1,189 @@
+"""AOT pipeline: lower the L2/L1 graphs once to HLO **text** artifacts.
+
+Python runs only here (``make artifacts``); the rust coordinator loads the
+emitted ``artifacts/*.hlo.txt`` through PJRT and never calls back into
+Python.  HLO text — not ``.serialize()`` — is the interchange format: jax
+≥ 0.5 emits HloModuleProto with 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+Besides the HLO modules we emit:
+  * ``manifest.json`` — name, file, input/output shapes+dtypes, and
+    domain metadata for every artifact (the rust runtime is manifest
+    driven);
+  * ``paths/*.json`` — the offline build paths in the shared ISA, so the
+    rust test-suite can cross-validate its own path generator against the
+    Python one.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import bitserial, encoding, lut_mpgemm, pathgen
+from . import model as model_lib
+
+DTYPES = {"i32": jnp.int32, "f32": jnp.float32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype: str):
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPES[dtype])
+
+
+def emit(outdir: str, name: str, fn, inputs: list[dict], meta: dict, manifest: list):
+    """Lower ``fn`` at the given input specs and write one artifact."""
+    lowered = jax.jit(fn).lower(*[spec(i["shape"], i["dtype"]) for i in inputs])
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as f:
+        f.write(text)
+    manifest.append(
+        {
+            "name": name,
+            "file": fname,
+            "inputs": inputs,
+            "outputs": [meta.pop("_output")],
+            "meta": meta,
+        }
+    )
+    print(f"  wrote {fname} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--seq-lens", type=int, nargs="*", default=[8, 32])
+    args = ap.parse_args()
+    outdir = args.outdir
+    os.makedirs(outdir, exist_ok=True)
+    os.makedirs(os.path.join(outdir, "paths"), exist_ok=True)
+
+    manifest: list[dict] = []
+    tpath = pathgen.ternary_path(encoding.TERNARY_C)
+    bpath = pathgen.binary_path(encoding.BINARY_C)
+
+    # --- shared ISA cross-check payloads -----------------------------------
+    for tag, p, c, kind in (
+        ("ternary_c5", tpath, encoding.TERNARY_C, "ternary"),
+        ("binary_c7", bpath, encoding.BINARY_C, "binary"),
+    ):
+        with open(os.path.join(outdir, "paths", f"{tag}.json"), "w") as f:
+            json.dump(
+                {
+                    "kind": kind,
+                    "c": c,
+                    "entries": p.tolist(),
+                    "min_raw_distance": pathgen.raw_distance(
+                        p,
+                        {encoding.zero_index(c)} if kind == "ternary" else {0},
+                    ),
+                },
+                f,
+            )
+    print("  wrote paths/{ternary_c5,binary_c7}.json")
+
+    # --- raw ternary LUT kernel --------------------------------------------
+    m, k, n = 256, 320, 32
+    c = encoding.TERNARY_C
+    nchunks = k // c
+    emit(
+        outdir,
+        f"lut_gemm_m{m}_k{k}_n{n}",
+        partial(lut_mpgemm.lut_mpgemm, c=c, interpret=True),
+        [
+            {"name": "packed", "shape": [m, nchunks], "dtype": "i32"},
+            {"name": "acts", "shape": [nchunks, c, n], "dtype": "i32"},
+            {"name": "path", "shape": list(tpath.shape), "dtype": "i32"},
+        ],
+        {"m": m, "k": k, "n": n, "c": c, "kind": "ternary_lut",
+         "_output": {"shape": [m, n], "dtype": "i32"}},
+        manifest,
+    )
+
+    # --- raw bit-serial kernel (ternary two-pass planes) --------------------
+    cb = encoding.BINARY_C
+    kb = 322  # multiple of 7
+    nchunks_b = kb // cb
+    emit(
+        outdir,
+        f"bitserial_m{m}_k{kb}_n{n}",
+        partial(bitserial.bitserial_mpgemm, c=cb, interpret=True),
+        [
+            {"name": "planes", "shape": [2, m, nchunks_b], "dtype": "i32"},
+            {"name": "acts", "shape": [nchunks_b, cb, n], "dtype": "i32"},
+            {"name": "path", "shape": list(bpath.shape), "dtype": "i32"},
+            {"name": "plane_weights", "shape": [2], "dtype": "i32"},
+        ],
+        {"m": m, "k": kb, "n": n, "c": cb, "kind": "bitserial_lut",
+         "_output": {"shape": [m, n], "dtype": "i32"}},
+        manifest,
+    )
+
+    # --- BitLinear layer -----------------------------------------------------
+    cfg = model_lib.BlockConfig()
+    s, kk, mm = 32, cfg.d_model, cfg.d_ffn
+    emit(
+        outdir,
+        f"bitlinear_s{s}_k{kk}_m{mm}",
+        partial(model_lib.bitlinear, interpret=True),
+        [
+            {"name": "x", "shape": [s, kk], "dtype": "f32"},
+            {"name": "packed", "shape": [mm, kk // c], "dtype": "i32"},
+            {"name": "beta", "shape": [], "dtype": "f32"},
+            {"name": "path", "shape": list(tpath.shape), "dtype": "i32"},
+        ],
+        {"s": s, "k": kk, "m": mm, "c": c, "kind": "bitlinear",
+         "_output": {"shape": [s, mm], "dtype": "f32"}},
+        manifest,
+    )
+
+    # --- full transformer block, one artifact per serving bucket ------------
+    d, f = cfg.d_model, cfg.d_ffn
+    block_inputs_tail = [
+        {"name": "wqkv", "shape": [3 * d, d // c], "dtype": "i32"},
+        {"name": "bqkv", "shape": [], "dtype": "f32"},
+        {"name": "wo", "shape": [d, d // c], "dtype": "i32"},
+        {"name": "bo", "shape": [], "dtype": "f32"},
+        {"name": "wup", "shape": [f, d // c], "dtype": "i32"},
+        {"name": "bup", "shape": [], "dtype": "f32"},
+        {"name": "wdown", "shape": [d, f // c], "dtype": "i32"},
+        {"name": "bdown", "shape": [], "dtype": "f32"},
+        {"name": "g_attn", "shape": [d], "dtype": "f32"},
+        {"name": "g_ffn", "shape": [d], "dtype": "f32"},
+        {"name": "path", "shape": list(tpath.shape), "dtype": "i32"},
+    ]
+    for s in args.seq_lens:
+        emit(
+            outdir,
+            f"block_s{s}",
+            partial(model_lib.block_forward, cfg=cfg, interpret=True),
+            [{"name": "x", "shape": [s, d], "dtype": "f32"}] + block_inputs_tail,
+            {"s": s, "d_model": d, "d_ffn": f, "n_heads": cfg.n_heads,
+             "c": c, "kind": "block",
+             "_output": {"shape": [s, d], "dtype": "f32"}},
+            manifest,
+        )
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as fp:
+        json.dump({"artifacts": manifest, "c_ternary": c, "c_binary": cb}, fp, indent=1)
+    print(f"  wrote manifest.json ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels, encodings, offline path generation, and oracles."""

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: bit-serial binary-LUT mpGEMM (Platinum-bs, §II, §V-A).
+
+The general-precision path: a B-bit integer weight matrix is decomposed
+into B binary planes; all planes share ONE binary LUT per input chunk
+(c = 7 → 128 entries, same LUT buffer as the ternary path — that is the
+"path-adaptable" property: only the build path and the query stream
+change).  Per chunk:
+
+  construct binary LUT (2^c − 1 adds)  →  query once per (plane, row)
+  →  merge plane partials with plane weights (2^i, MSB negative, or
+     (+1, −1) for the two-pass ternary execution used by the SNN
+     baselines and Platinum-bs).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import encoding, pathgen
+
+
+def _kernel(planes_ref, acts_ref, path_ref, pw_ref, o_ref, *, c: int):
+    path = path_ref[...]
+    a = acts_ref[0]  # (c, N)
+    lut0 = jnp.zeros((2**c, a.shape[1]), jnp.int32)
+
+    def body(i, lut):
+        dst, src, j, sign = path[i, 0], path[i, 1], path[i, 2], path[i, 3]
+        aj = jax.lax.dynamic_index_in_dim(a, j, axis=0, keepdims=False)
+        src_val = jax.lax.dynamic_index_in_dim(lut, src, axis=0, keepdims=False)
+        val = src_val + jnp.where(sign == 1, -aj, aj)
+        return jax.lax.dynamic_update_index_in_dim(lut, val, dst, axis=0)
+
+    lut = jax.lax.fori_loop(0, path.shape[0], body, lut0)
+
+    pw = pw_ref[...]  # (B,) plane weights
+    planes = planes_ref[:, :, 0]  # (B, M) LUT addresses for this chunk
+
+    def plane_body(b, acc):
+        idx = jax.lax.dynamic_index_in_dim(planes, b, axis=0, keepdims=False)
+        w = jax.lax.dynamic_index_in_dim(pw, b, axis=0, keepdims=False)
+        return acc + w * jnp.take(lut, idx, axis=0)
+
+    vals = jax.lax.fori_loop(
+        0, planes.shape[0], plane_body, jnp.zeros_like(o_ref[...])
+    )
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += vals
+
+
+@partial(jax.jit, static_argnames=("c", "interpret"))
+def bitserial_mpgemm(
+    planes_packed: jax.Array,
+    acts: jax.Array,
+    path: jax.Array,
+    plane_weights: jax.Array,
+    *,
+    c: int = encoding.BINARY_C,
+    interpret: bool = True,
+) -> jax.Array:
+    """Bit-serial binary-LUT mpGEMM.
+
+    Args:
+      planes_packed: (B, M, C) int32 — per-plane LUT addresses
+        (:func:`encoding.pack_binary` applied to each plane), C = ⌈K/c⌉.
+      acts: (C, c, N) int32 activations grouped by binary chunk.
+      path: (2^c − 1, 4) int32 (:func:`pathgen.binary_path`).
+      plane_weights: (B,) int32 — 2^i ladder (MSB negative) or (+1, −1).
+
+    Returns: (M, N) int32 = Σ_b pw[b] · planes[b] @ acts.
+    """
+    nb, m, nchunks = planes_packed.shape
+    _, cc, n = acts.shape
+    assert cc == c
+    return pl.pallas_call(
+        partial(_kernel, c=c),
+        grid=(nchunks,),
+        in_specs=[
+            pl.BlockSpec((nb, m, 1), lambda j: (0, 0, j)),
+            pl.BlockSpec((1, c, n), lambda j: (j, 0, 0)),
+            pl.BlockSpec(path.shape, lambda j: (0, 0)),
+            pl.BlockSpec((nb,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(planes_packed, acts, path, plane_weights)

@@ -1,0 +1,153 @@
+"""Weight encodings for Platinum (paper §III-C).
+
+Normative math (shared bit-for-bit with ``rust/src/encoding/``):
+
+* **Ternary chunk** ``w ∈ {-1,0,1}^c`` maps to the base-3 integer
+  ``t = Σ_i (w_i + 1) * 3^i ∈ [0, 3^c)``.  Negating the chunk mirrors
+  ``t ↦ (3^c - 1) - t``; the all-zero chunk sits at the self-mirror point
+  ``t_zero = (3^c - 1) / 2``.  The encoded weight is
+  ``sign << idx_bits | idx`` with ``idx = min(t, 3^c-1-t) ∈ [0, t_zero]``
+  and ``sign = (t > t_zero)`` — the paper's "sign bit + ⌈log2 3^c⌉ − 1
+  index bits" that preserves mirror symmetry without decoding.
+  For c=5 this is 8 bits / 5 weights = **1.6 bits per weight** (Fig 6).
+
+* **Binary chunk** ``b ∈ {0,1}^c`` maps to ``t = Σ_i b_i 2^i`` (plain LUT
+  address, no mirror consolidation) — the bit-serial path (c=7 → 128-entry
+  LUT, same LUT buffer as the ternary path).
+
+All functions are pure numpy/jnp and usable from tests, the Pallas kernels,
+and the AOT pipeline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+TERNARY_C = 5  #: paper's chunk size for the ternary path (§III-A)
+BINARY_C = 7  #: paper's chunk size for the bit-serial path (§V-A)
+
+
+def lut_entries(c: int = TERNARY_C) -> int:
+    """Number of stored (canonical) ternary LUT entries: ⌈3^c / 2⌉."""
+    return (3**c + 1) // 2
+
+
+def zero_index(c: int = TERNARY_C) -> int:
+    """Canonical index of the all-zero chunk (the LUT construction root)."""
+    return (3**c - 1) // 2
+
+
+def index_bits(c: int = TERNARY_C) -> int:
+    """Index bits of the ternary encoding: ⌈log2 3^c⌉ − 1."""
+    return int(np.ceil(c * np.log2(3.0))) - 1
+
+
+def bits_per_weight(c: int) -> float:
+    """Average encoded bits per ternary weight at pack size ``c`` (Fig 6)."""
+    return float(index_bits(c) + 1) / c
+
+
+def chunk_of_index(idx: int, c: int = TERNARY_C) -> np.ndarray:
+    """Inverse map: canonical index → ternary chunk (length-c, {-1,0,1})."""
+    digits = np.zeros(c, dtype=np.int32)
+    t = int(idx)
+    for i in range(c):
+        digits[i] = t % 3
+        t //= 3
+    return digits - 1
+
+
+def pad_to_multiple(x: np.ndarray, axis: int, m: int) -> np.ndarray:
+    """Zero-pad ``x`` along ``axis`` so its extent is a multiple of ``m``."""
+    k = x.shape[axis]
+    pad = (-k) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths)
+
+
+def pack_ternary(w: np.ndarray, c: int = TERNARY_C) -> np.ndarray:
+    """Pack a ternary weight matrix (M, K) with entries in {-1,0,1} into
+    the sign|index byte stream (M, ⌈K/c⌉) of int32 values in [0, 256).
+
+    K is zero-padded to a multiple of c (zeros contribute nothing to the
+    dot product, matching the hardware's padded final chunk).
+    """
+    w = np.asarray(w, dtype=np.int64)
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D weights, got shape {w.shape}")
+    if not np.isin(w, (-1, 0, 1)).all():
+        raise ValueError("weights must be ternary {-1, 0, 1}")
+    w = pad_to_multiple(w, axis=1, m=c)
+    m, k = w.shape
+    chunks = (w + 1).reshape(m, k // c, c)
+    pow3 = 3 ** np.arange(c, dtype=np.int64)
+    t = (chunks * pow3).sum(axis=2)
+    tz = (3**c - 1) // 2
+    mirror = (3**c - 1) - t
+    idx = np.minimum(t, mirror)
+    sign = (t > tz).astype(np.int64)
+    return ((sign << index_bits(c)) | idx).astype(np.int32)
+
+
+def unpack_ternary(packed: np.ndarray, k: int, c: int = TERNARY_C) -> np.ndarray:
+    """Inverse of :func:`pack_ternary`; returns (M, k) ternary int32."""
+    packed = np.asarray(packed, dtype=np.int64)
+    ib = index_bits(c)
+    sign = packed >> ib
+    idx = packed & ((1 << ib) - 1)
+    m, nchunks = packed.shape
+    digits = np.zeros((m, nchunks, c), dtype=np.int64)
+    t = idx.copy()
+    for i in range(c):
+        digits[:, :, i] = t % 3
+        t //= 3
+    w = digits - 1
+    w = np.where(sign[:, :, None] == 1, -w, w)
+    return w.reshape(m, nchunks * c)[:, :k].astype(np.int32)
+
+
+def pack_binary(b: np.ndarray, c: int = BINARY_C) -> np.ndarray:
+    """Pack a binary matrix (M, K) of {0,1} into LUT addresses (M, ⌈K/c⌉)."""
+    b = np.asarray(b, dtype=np.int64)
+    if not np.isin(b, (0, 1)).all():
+        raise ValueError("expected binary matrix")
+    b = pad_to_multiple(b, axis=1, m=c)
+    m, k = b.shape
+    chunks = b.reshape(m, k // c, c)
+    pow2 = 2 ** np.arange(c, dtype=np.int64)
+    return (chunks * pow2).sum(axis=2).astype(np.int32)
+
+
+def unpack_binary(packed: np.ndarray, k: int, c: int = BINARY_C) -> np.ndarray:
+    """Inverse of :func:`pack_binary`."""
+    packed = np.asarray(packed, dtype=np.int64)
+    m, nchunks = packed.shape
+    bits = ((packed[:, :, None] >> np.arange(c)) & 1).astype(np.int32)
+    return bits.reshape(m, nchunks * c)[:, :k]
+
+
+def ternary_planes(w: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Two-pass bit-serial decomposition of ternary weights (§V-A):
+    plane matrices (pos, neg) of {0,1} with plane weights (+1, −1).
+    """
+    w = np.asarray(w)
+    return (w == 1).astype(np.int32), (w == -1).astype(np.int32)
+
+
+def int_bit_planes(w: np.ndarray, bits: int) -> tuple[np.ndarray, np.ndarray]:
+    """General two's-complement bit-plane decomposition for b-bit integer
+    weights: returns (planes (bits, M, K) of {0,1}, plane_weights (bits,))
+    with plane i weighted 2^i and the MSB plane weighted −2^(bits−1).
+    """
+    w = np.asarray(w, dtype=np.int64)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    if w.min() < lo or w.max() > hi:
+        raise ValueError(f"weights out of range for int{bits}")
+    u = w & ((1 << bits) - 1)  # two's complement image
+    planes = ((u[None, :, :] >> np.arange(bits)[:, None, None]) & 1).astype(np.int32)
+    pw = (2 ** np.arange(bits, dtype=np.int64)).astype(np.int32)
+    pw[-1] = -pw[-1]
+    return planes, pw

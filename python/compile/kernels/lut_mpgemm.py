@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: ternary-LUT mpGEMM (Platinum's optimized path, §III-C).
+
+One grid step per input chunk (the role of one PPE round):
+
+1. **Construct** — replay the offline build path into a VMEM-resident LUT
+   value (``⌈3^c/2⌉`` rows × ``n_cols``), one add per stored entry — the
+   Pallas image of the 4-stage construction pipeline.  The loop-carried
+   LUT array is the scratchpad analogue of the per-PPE LUT SRAM.
+2. **Query** — gather the LUT with the 7-bit canonical indices of the
+   packed weight stream and flip by the sign bit (Algorithm 1's
+   ``Flip(LUT[index[6:0]], index[7])``), then accumulate into the output
+   block, which stays resident across the chunk grid (output-stationary,
+   matching the aggregator → output-buffer accumulation).
+
+HARDWARE ADAPTATION: the ASIC streams weights through dual LUT ports at 2
+rows/cycle; on TPU the same loop becomes a vectorized gather over the
+m-tile, and BlockSpec expresses the HBM→VMEM weight streaming that the
+weight buffer performs per round.  Runs under ``interpret=True`` (CPU).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import encoding, pathgen
+
+
+def _kernel(packed_ref, acts_ref, path_ref, o_ref, *, c: int, entries: int, root: int):
+    # --- construct: replay the build path (Algorithm 2) ---
+    path = path_ref[...]  # (P, 4) — value-independent, generated offline
+    a = acts_ref[0]  # (c, N) activation chunk for this grid step
+    lut0 = jnp.zeros((entries, a.shape[1]), jnp.int32)
+
+    def body(i, lut):
+        dst, src, j, sign = path[i, 0], path[i, 1], path[i, 2], path[i, 3]
+        aj = jax.lax.dynamic_index_in_dim(a, j, axis=0, keepdims=False)
+        src_val = jax.lax.dynamic_index_in_dim(lut, src, axis=0, keepdims=False)
+        val = src_val + jnp.where(sign == 1, -aj, aj)
+        return jax.lax.dynamic_update_index_in_dim(lut, val, dst, axis=0)
+
+    lut = jax.lax.fori_loop(0, path.shape[0], body, lut0)
+
+    # --- query: sign|index decode without unpacking the weights ---
+    pk = packed_ref[:, 0]  # (M,) encoded bytes for this chunk column
+    ib = encoding.index_bits(c)
+    idx = pk & ((1 << ib) - 1)
+    sign = pk >> ib
+    vals = jnp.take(lut, idx, axis=0)  # (M, N) — dual-port query stream
+    vals = jnp.where(sign[:, None] == 1, -vals, vals)
+
+    # --- reduce: accumulate into the output-stationary block ---
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += vals
+
+
+@partial(jax.jit, static_argnames=("c", "interpret"))
+def lut_mpgemm(
+    packed: jax.Array,
+    acts: jax.Array,
+    path: jax.Array,
+    *,
+    c: int = encoding.TERNARY_C,
+    interpret: bool = True,
+) -> jax.Array:
+    """Ternary-LUT mpGEMM.
+
+    Args:
+      packed: (M, C) int32 — sign|index encoded ternary weights
+        (:func:`encoding.pack_ternary`), C = ⌈K/c⌉ chunks.
+      acts: (C, c, N) int32 — activations grouped by chunk
+        (zero-padded on K; see :func:`chunk_acts`).
+      path: (⌈3^c/2⌉−1, 4) int32 — offline build path
+        (:func:`pathgen.ternary_path`).
+      c: chunk size (default 5, the paper's ternary configuration).
+
+    Returns: (M, N) int32 = unpack(packed) @ acts.
+    """
+    m, nchunks = packed.shape
+    _, cc, n = acts.shape
+    assert cc == c, f"acts chunk dim {cc} != c {c}"
+    entries = encoding.lut_entries(c)
+    root = encoding.zero_index(c)
+    return pl.pallas_call(
+        partial(_kernel, c=c, entries=entries, root=root),
+        grid=(nchunks,),
+        in_specs=[
+            pl.BlockSpec((m, 1), lambda j: (0, j)),  # weight column stream
+            pl.BlockSpec((1, c, n), lambda j: (j, 0, 0)),  # activation chunk
+            pl.BlockSpec(path.shape, lambda j: (0, 0)),  # build path (resident)
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda j: (0, 0)),  # output-stationary
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(packed, acts, path)
+
+
+def chunk_acts(x: jax.Array, c: int = encoding.TERNARY_C) -> jax.Array:
+    """(K, N) → (⌈K/c⌉, c, N) with zero padding on K (pure jnp, fuses into
+    the surrounding L2 graph)."""
+    k, n = x.shape
+    pad = (-k) % c
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, n), x.dtype)], axis=0)
+    return x.reshape((k + pad) // c, c, n)

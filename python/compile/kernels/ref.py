@@ -1,0 +1,66 @@
+"""Pure-jnp / numpy correctness oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references at
+build time (pytest) — the CORE correctness signal of the L1 layer.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import encoding
+
+
+def ternary_mpgemm_ref(w: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Naive int mpGEMM oracle: (M,K) ternary × (K,N) int → (M,N)."""
+    return np.asarray(w, np.int64) @ np.asarray(x, np.int64)
+
+
+def lut_mpgemm_ref(packed: np.ndarray, x: np.ndarray, c: int = encoding.TERNARY_C) -> np.ndarray:
+    """Oracle that goes through the *encoding* (so it also checks packing):
+    unpack the sign|index stream and do the naive matmul.
+    """
+    k = x.shape[0]
+    w = encoding.unpack_ternary(packed, k, c)
+    return ternary_mpgemm_ref(w, x)
+
+
+def bitserial_mpgemm_ref(
+    planes: np.ndarray, plane_weights: np.ndarray, x: np.ndarray
+) -> np.ndarray:
+    """Bit-serial oracle: y = Σ_b pw[b] * (planes[b] @ x)."""
+    planes = np.asarray(planes, np.int64)
+    x = np.asarray(x, np.int64)
+    acc = np.zeros((planes.shape[1], x.shape[1]), np.int64)
+    for b in range(planes.shape[0]):
+        acc += int(plane_weights[b]) * (planes[b] @ x)
+    return acc
+
+
+def absmax_quant(x: jnp.ndarray, bits: int = 8):
+    """Per-token absmax activation quantization (BitNet's 8-bit scheme).
+
+    Returns (x_q int32 in [-Q, Q], scale f32 per row) with Q = 2^(bits-1)-1.
+    """
+    q = float(2 ** (bits - 1) - 1)
+    scale = q / jnp.clip(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-5, None)
+    xq = jnp.clip(jnp.round(x * scale), -q, q).astype(jnp.int32)
+    return xq, scale
+
+
+def weight_quant_ternary(w: jnp.ndarray):
+    """BitNet b1.58 weight quantization: ternarize by mean abs (absmean).
+
+    Returns (w_ter int32 in {-1,0,1}, beta f32 scalar).
+    """
+    beta = jnp.clip(jnp.mean(jnp.abs(w)), 1e-5, None)
+    wt = jnp.clip(jnp.round(w / beta), -1, 1).astype(jnp.int32)
+    return wt, beta
+
+
+def bitlinear_ref(x: jnp.ndarray, w_ter: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """Reference BitLinear: y = (quant(x) @ w_terᵀ) * beta / scale."""
+    xq, scale = absmax_quant(x)
+    y = jnp.matmul(xq.astype(jnp.int32), w_ter.astype(jnp.int32).T)
+    return y.astype(jnp.float32) * beta / scale

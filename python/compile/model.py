@@ -1,0 +1,169 @@
+"""L2: BitNet-style model graph in JAX, calling the L1 Pallas kernels.
+
+This is the compute graph Platinum accelerates: BitLinear layers (ternary
+weights × 8-bit absmax-quantized activations) inside a pre-norm
+transformer block.  The ternary mpGEMMs run through
+:func:`kernels.lut_mpgemm.lut_mpgemm` — the same LUT construct/query
+structure the ASIC executes — so the AOT artifacts exercise the paper's
+datapath end to end.  Attention score/softmax math stays fp32 (the paper
+routes non-mpGEMM ops to the SFUs).
+
+Weights enter *pre-packed* (sign|index byte stream) plus a per-matrix
+scale β, exactly what the rust coordinator holds in its weight buffers;
+Python never sees the request path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import encoding, pathgen
+from .kernels.lut_mpgemm import chunk_acts, lut_mpgemm
+from .kernels.ref import absmax_quant
+
+
+@dataclass(frozen=True)
+class BlockConfig:
+    """Transformer block hyper-parameters (all BitLinear K dims are
+    multiples of the chunk size c=5)."""
+
+    d_model: int = 320
+    n_heads: int = 4
+    d_ffn: int = 640
+    eps: float = 1e-5
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return x * gain * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def bitlinear(
+    x: jax.Array,
+    packed: jax.Array,
+    beta: jax.Array,
+    path: jax.Array,
+    *,
+    c: int = encoding.TERNARY_C,
+    interpret: bool = True,
+) -> jax.Array:
+    """BitLinear forward through the ternary LUT kernel.
+
+    x: (S, K) f32 → (S, M) f32 with y = dequant(lut_mpgemm(pack(W), q(x))).
+    """
+    xq, scale = absmax_quant(x)  # (S, K) int32, (S, 1) f32
+    acts = chunk_acts(xq.T, c)  # (C, c, S)
+    y = lut_mpgemm(packed, acts, path, c=c, interpret=interpret)  # (M, S) i32
+    return y.astype(jnp.float32).T * beta / scale
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, cfg: BlockConfig) -> jax.Array:
+    """Causal multi-head attention, fp32 (SFU territory, not mpGEMM)."""
+    s, d = q.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = q.reshape(s, h, dh).transpose(1, 0, 2)
+    k = k.reshape(s, h, dh).transpose(1, 0, 2)
+    v = v.reshape(s, h, dh).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / np.sqrt(dh)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,hkd->hqd", probs, v)
+    return ctx.transpose(1, 0, 2).reshape(s, d)
+
+
+def block_forward(
+    x: jax.Array,
+    wqkv: jax.Array,
+    bqkv: jax.Array,
+    wo: jax.Array,
+    bo: jax.Array,
+    wup: jax.Array,
+    bup: jax.Array,
+    wdown: jax.Array,
+    bdown: jax.Array,
+    g_attn: jax.Array,
+    g_ffn: jax.Array,
+    path: jax.Array,
+    *,
+    cfg: BlockConfig = BlockConfig(),
+    interpret: bool = True,
+) -> jax.Array:
+    """One pre-norm BitNet block: x (S, d) f32 → (S, d) f32.
+
+    All four projections (fused QKV, O, FFN up/down) are BitLinear through
+    the LUT kernel; FFN uses squared-ReLU (BitNet b1.58's activation).
+    """
+    bl = partial(bitlinear, path=path, interpret=interpret)
+    h = rmsnorm(x, g_attn, cfg.eps)
+    qkv = bl(h, wqkv, bqkv)  # (S, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    x = x + bl(attention(q, k, v, cfg), wo, bo)
+    h = rmsnorm(x, g_ffn, cfg.eps)
+    up = bl(h, wup, bup)
+    act = jnp.square(jax.nn.relu(up))
+    return x + bl(act, wdown, bdown)
+
+
+# ---------------------------------------------------------------------------
+# Parameter fabrication (build-time only: synthetic ternary weights with the
+# uniform distribution the paper observes in BitNet-b1.58)
+# ---------------------------------------------------------------------------
+
+BLOCK_PARAM_ORDER = (
+    "wqkv", "bqkv", "wo", "bo", "wup", "bup", "wdown", "bdown",
+    "g_attn", "g_ffn", "path",
+)
+
+
+def make_block_params(cfg: BlockConfig, seed: int = 0) -> dict[str, np.ndarray]:
+    """Synthesize packed ternary parameters for one block."""
+    rng = np.random.default_rng(seed)
+
+    def packed_ternary(m: int, k: int) -> tuple[np.ndarray, np.ndarray]:
+        w = rng.integers(-1, 2, size=(m, k)).astype(np.int32)
+        return encoding.pack_ternary(w), np.float32(0.02)
+
+    d, f = cfg.d_model, cfg.d_ffn
+    wqkv, bqkv = packed_ternary(3 * d, d)
+    wo, bo = packed_ternary(d, d)
+    wup, bup = packed_ternary(f, d)
+    wdown, bdown = packed_ternary(d, f)
+    return {
+        "wqkv": wqkv, "bqkv": bqkv,
+        "wo": wo, "bo": bo,
+        "wup": wup, "bup": bup,
+        "wdown": wdown, "bdown": bdown,
+        "g_attn": np.ones(d, np.float32),
+        "g_ffn": np.ones(d, np.float32),
+        "path": pathgen.ternary_path(encoding.TERNARY_C),
+    }
+
+
+def block_ref(x: jax.Array, params: dict[str, np.ndarray], cfg: BlockConfig) -> jax.Array:
+    """Pure-jnp block oracle (unpacked weights, naive matmul) used by the
+    pytest cross-check of the full L2 graph."""
+
+    def bl_ref(h, packed, beta, k):
+        w = encoding.unpack_ternary(np.asarray(packed), k)
+        xq, scale = absmax_quant(h)
+        y = jnp.matmul(xq, jnp.asarray(w, jnp.int32).T)
+        return y.astype(jnp.float32) * beta / scale
+
+    d, f = cfg.d_model, cfg.d_ffn
+    h = rmsnorm(x, jnp.asarray(params["g_attn"]), cfg.eps)
+    qkv = bl_ref(h, params["wqkv"], params["bqkv"], d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    x = x + bl_ref(attention(q, k, v, cfg), params["wo"], params["bo"], d)
+    h = rmsnorm(x, jnp.asarray(params["g_ffn"]), cfg.eps)
+    up = bl_ref(h, params["wup"], params["bup"], d)
+    act = jnp.square(jax.nn.relu(up))
+    return x + bl_ref(act, params["wdown"], params["bdown"], f)

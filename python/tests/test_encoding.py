@@ -1,0 +1,113 @@
+"""Encoding tests: pack/unpack roundtrips, mirror symmetry, Fig 6 claims."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import encoding
+
+
+def rand_ternary(rng, m, k):
+    return rng.integers(-1, 2, size=(m, k)).astype(np.int32)
+
+
+class TestTernaryPack:
+    def test_roundtrip_exact_multiple(self):
+        rng = np.random.default_rng(0)
+        w = rand_ternary(rng, 16, 40)
+        packed = encoding.pack_ternary(w)
+        assert packed.shape == (16, 8)
+        assert packed.min() >= 0 and packed.max() < 256
+        np.testing.assert_array_equal(encoding.unpack_ternary(packed, 40), w)
+
+    def test_roundtrip_padded(self):
+        rng = np.random.default_rng(1)
+        w = rand_ternary(rng, 7, 23)  # 23 -> padded to 25
+        packed = encoding.pack_ternary(w)
+        assert packed.shape == (7, 5)
+        np.testing.assert_array_equal(encoding.unpack_ternary(packed, 23), w)
+
+    def test_zero_chunk_is_self_mirror(self):
+        w = np.zeros((1, 5), np.int32)
+        packed = encoding.pack_ternary(w)
+        assert packed[0, 0] == encoding.zero_index(5) == 121
+        # zero chunk encodes with sign bit clear
+        assert packed[0, 0] >> encoding.index_bits(5) == 0
+
+    def test_mirror_symmetry(self):
+        """pack(-w) differs from pack(w) only in the sign bit (for chunks
+        with any nonzero) — the property that makes queries decode-free."""
+        rng = np.random.default_rng(2)
+        w = rand_ternary(rng, 32, 50)
+        nonzero_chunks = w.reshape(32, 10, 5).any(axis=2)
+        p = encoding.pack_ternary(w)
+        pn = encoding.pack_ternary(-w)
+        ib = encoding.index_bits(5)
+        idx, idxn = p & ((1 << ib) - 1), pn & ((1 << ib) - 1)
+        sgn, sgnn = p >> ib, pn >> ib
+        np.testing.assert_array_equal(idx, idxn)
+        np.testing.assert_array_equal(sgn[nonzero_chunks] ^ sgnn[nonzero_chunks], 1)
+
+    def test_rejects_non_ternary(self):
+        with pytest.raises(ValueError):
+            encoding.pack_ternary(np.array([[2, 0, 0, 0, 0]]))
+
+    @given(st.integers(0, 3**5 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_chunk_of_index_inverts_base3(self, t):
+        chunk = encoding.chunk_of_index(t, 5)
+        assert ((chunk + 1) * 3 ** np.arange(5)).sum() == t
+
+
+class TestBinaryPack:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(3)
+        b = rng.integers(0, 2, size=(9, 30)).astype(np.int32)
+        packed = encoding.pack_binary(b)
+        assert packed.shape == (9, 5)  # ceil(30/7)=5
+        np.testing.assert_array_equal(encoding.unpack_binary(packed, 30), b)
+
+    def test_address_range(self):
+        b = np.ones((1, 7), np.int32)
+        assert encoding.pack_binary(b)[0, 0] == 127
+
+
+class TestPlanes:
+    def test_ternary_planes_reconstruct(self):
+        rng = np.random.default_rng(4)
+        w = rand_ternary(rng, 8, 21)
+        pos, neg = encoding.ternary_planes(w)
+        np.testing.assert_array_equal(pos - neg, w)
+
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    def test_int_bit_planes_reconstruct(self, bits):
+        rng = np.random.default_rng(5)
+        lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+        w = rng.integers(lo, hi + 1, size=(6, 14)).astype(np.int64)
+        planes, pw = encoding.int_bit_planes(w, bits)
+        recon = (planes * pw[:, None, None].astype(np.int64)).sum(axis=0)
+        np.testing.assert_array_equal(recon, w)
+
+    def test_int_bit_planes_range_check(self):
+        with pytest.raises(ValueError):
+            encoding.int_bit_planes(np.array([[5]]), 3)
+
+
+class TestFig6BitsPerWeight:
+    """Fig 6: the encoding is minimized at c=5 with 1.6 bits/weight."""
+
+    def test_c5_is_1_6(self):
+        assert encoding.bits_per_weight(5) == pytest.approx(1.6)
+
+    def test_c5_is_argmin_up_to_10(self):
+        vals = {c: encoding.bits_per_weight(c) for c in range(1, 11)}
+        assert min(vals, key=vals.get) == 5
+
+    def test_always_above_entropy(self):
+        for c in range(1, 11):
+            assert encoding.bits_per_weight(c) >= np.log2(3)
+
+    def test_lut_entry_counts(self):
+        assert encoding.lut_entries(5) == 122  # fits the 128-entry buffer
+        assert encoding.index_bits(5) == 7  # 7-bit index + sign = 1 byte

@@ -1,0 +1,160 @@
+"""Pallas kernel vs pure-jnp oracle — the L1 correctness gate.
+
+Hypothesis sweeps shapes and value ranges; every case asserts exact int32
+equality (LUT arithmetic is exact, so no tolerance)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import bitserial, encoding, lut_mpgemm, pathgen, ref
+
+TPATH = pathgen.ternary_path(encoding.TERNARY_C)
+BPATH = pathgen.binary_path(encoding.BINARY_C)
+
+
+def run_ternary(w, x, c=encoding.TERNARY_C, path=None):
+    packed = encoding.pack_ternary(w, c)
+    acts = lut_mpgemm.chunk_acts(jnp.asarray(x, jnp.int32), c)
+    path = TPATH if path is None else path
+    out = lut_mpgemm.lut_mpgemm(
+        jnp.asarray(packed), acts, jnp.asarray(path), c=c, interpret=True
+    )
+    return np.asarray(out)
+
+
+class TestTernaryKernel:
+    def test_small_exact(self):
+        rng = np.random.default_rng(0)
+        w = rng.integers(-1, 2, size=(16, 20)).astype(np.int32)
+        x = rng.integers(-127, 128, size=(20, 4)).astype(np.int32)
+        np.testing.assert_array_equal(run_ternary(w, x), ref.ternary_mpgemm_ref(w, x))
+
+    def test_paper_shape_slice(self):
+        """A slice of the paper's tile: m=1080 rows, one chunk group."""
+        rng = np.random.default_rng(1)
+        w = rng.integers(-1, 2, size=(1080, 260)).astype(np.int32)
+        x = rng.integers(-127, 128, size=(260, 8)).astype(np.int32)  # n_cols=8
+        np.testing.assert_array_equal(run_ternary(w, x), ref.ternary_mpgemm_ref(w, x))
+
+    def test_k_not_multiple_of_c(self):
+        rng = np.random.default_rng(2)
+        w = rng.integers(-1, 2, size=(8, 13)).astype(np.int32)
+        x = rng.integers(-127, 128, size=(13, 3)).astype(np.int32)
+        np.testing.assert_array_equal(run_ternary(w, x), ref.ternary_mpgemm_ref(w, x))
+
+    def test_all_zero_weights(self):
+        w = np.zeros((4, 10), np.int32)
+        x = np.arange(30, dtype=np.int32).reshape(10, 3)
+        assert (run_ternary(w, x) == 0).all()
+
+    def test_all_negative_weights(self):
+        """Exercises every sign bit set (mirror consolidation)."""
+        w = -np.ones((4, 10), np.int32)
+        x = np.arange(30, dtype=np.int32).reshape(10, 3)
+        np.testing.assert_array_equal(run_ternary(w, x), ref.ternary_mpgemm_ref(w, x))
+
+    def test_int8_extremes(self):
+        w = np.tile(np.array([[1, -1, 0, 1, -1]], np.int32), (3, 2))
+        x = np.full((10, 2), 127, np.int32)
+        x[::2] = -128
+        np.testing.assert_array_equal(run_ternary(w, x), ref.ternary_mpgemm_ref(w, x))
+
+    @pytest.mark.parametrize("c", [2, 3, 4, 5])
+    def test_other_chunk_sizes(self, c):
+        rng = np.random.default_rng(c)
+        w = rng.integers(-1, 2, size=(12, 4 * c)).astype(np.int32)
+        x = rng.integers(-127, 128, size=(4 * c, 5)).astype(np.int32)
+        path = pathgen.ternary_path(c)
+        np.testing.assert_array_equal(
+            run_ternary(w, x, c=c, path=path), ref.ternary_mpgemm_ref(w, x)
+        )
+
+    def test_matches_packing_oracle(self):
+        rng = np.random.default_rng(3)
+        w = rng.integers(-1, 2, size=(32, 40)).astype(np.int32)
+        x = rng.integers(-127, 128, size=(40, 6)).astype(np.int32)
+        packed = encoding.pack_ternary(w)
+        np.testing.assert_array_equal(
+            run_ternary(w, x), ref.lut_mpgemm_ref(packed, x)
+        )
+
+    @given(
+        m=st.integers(1, 40),
+        kc=st.integers(1, 12),
+        n=st.integers(1, 9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_hypothesis_shape_sweep(self, m, kc, n, seed):
+        rng = np.random.default_rng(seed)
+        k = kc * encoding.TERNARY_C
+        w = rng.integers(-1, 2, size=(m, k)).astype(np.int32)
+        x = rng.integers(-127, 128, size=(k, n)).astype(np.int32)
+        np.testing.assert_array_equal(run_ternary(w, x), ref.ternary_mpgemm_ref(w, x))
+
+
+class TestBitserialKernel:
+    def run(self, planes, pw, x, c=encoding.BINARY_C):
+        packed = np.stack([encoding.pack_binary(p, c) for p in planes])
+        acts = lut_mpgemm.chunk_acts(jnp.asarray(x, jnp.int32), c)
+        out = bitserial.bitserial_mpgemm(
+            jnp.asarray(packed),
+            acts,
+            jnp.asarray(BPATH),
+            jnp.asarray(pw, jnp.int32),
+            c=c,
+            interpret=True,
+        )
+        return np.asarray(out)
+
+    def test_ternary_two_pass(self):
+        """The SNN-baseline execution mode: ternary as (+1, −1) planes."""
+        rng = np.random.default_rng(4)
+        w = rng.integers(-1, 2, size=(24, 35)).astype(np.int32)
+        x = rng.integers(-127, 128, size=(35, 4)).astype(np.int32)
+        pos, neg = encoding.ternary_planes(w)
+        out = self.run(np.stack([pos, neg]), [1, -1], x)
+        np.testing.assert_array_equal(out, ref.ternary_mpgemm_ref(w, x))
+
+    @pytest.mark.parametrize("bits", [2, 3, 4])
+    def test_int_weights(self, bits):
+        """General b-bit two's-complement weights (mpGEMM beyond ternary)."""
+        rng = np.random.default_rng(bits)
+        lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+        w = rng.integers(lo, hi + 1, size=(10, 28)).astype(np.int64)
+        x = rng.integers(-127, 128, size=(28, 3)).astype(np.int32)
+        planes, pw = encoding.int_bit_planes(w, bits)
+        out = self.run(planes, pw, x)
+        np.testing.assert_array_equal(out, w @ x.astype(np.int64))
+
+    @given(
+        m=st.integers(1, 24),
+        kc=st.integers(1, 6),
+        n=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_hypothesis_ternary_sweep(self, m, kc, n, seed):
+        rng = np.random.default_rng(seed)
+        k = kc * encoding.BINARY_C
+        w = rng.integers(-1, 2, size=(m, k)).astype(np.int32)
+        x = rng.integers(-127, 128, size=(k, n)).astype(np.int32)
+        pos, neg = encoding.ternary_planes(w)
+        out = self.run(np.stack([pos, neg]), [1, -1], x)
+        np.testing.assert_array_equal(out, ref.ternary_mpgemm_ref(w, x))
+
+
+class TestCrossPath:
+    def test_ternary_equals_bitserial(self):
+        """Platinum vs Platinum-bs must agree functionally — only the path
+        (and cost) differ (§V-C)."""
+        rng = np.random.default_rng(5)
+        w = rng.integers(-1, 2, size=(20, 70)).astype(np.int32)
+        x = rng.integers(-127, 128, size=(70, 5)).astype(np.int32)
+        tern = run_ternary(w, x)
+        pos, neg = encoding.ternary_planes(w)
+        bs = TestBitserialKernel().run(np.stack([pos, neg]), [1, -1], x)
+        np.testing.assert_array_equal(tern, bs)

@@ -1,0 +1,78 @@
+//! Hot-path microbenchmarks (real wallclock on this machine) — the
+//! §Perf substrate: offline toolchain throughput, golden-datapath
+//! throughput, the real T-MAC CPU kernel, simulator speed, and manifest
+//! parsing.  Regenerated before/after every optimization iteration.
+
+use platinum::analysis::Gemm;
+use platinum::baselines::tmac::TMacCpu;
+use platinum::config::{ExecMode, PlatinumConfig};
+use platinum::encoding::pack_ternary;
+use platinum::lut::{naive_mpgemm, ternary_mpgemm};
+use platinum::models::B158_3B;
+use platinum::pathgen;
+use platinum::sim::{simulate_gemm, simulate_model};
+use platinum::util::bench::{bench, fmt_rate, report};
+use platinum::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let mut rng = Rng::seed_from(0xBE);
+
+    // --- offline toolchain -------------------------------------------------
+    let s = bench(2, budget, || pathgen::ternary_path(5));
+    report("pathgen/ternary_c5", &s, "");
+    let s = bench(2, budget, || pathgen::binary_path(7));
+    report("pathgen/binary_c7", &s, "");
+
+    let (m, k) = (1080, 520);
+    let w = rng.ternary_vec(m * k);
+    let s = bench(2, budget, || pack_ternary(&w, m, k, 5));
+    let rate = (m * k) as f64 / (s.per_iter_ns() * 1e-9);
+    report("encode/pack_ternary_1080x520", &s, &fmt_rate(rate, "wt"));
+
+    // --- golden datapath vs naive vs real T-MAC ----------------------------
+    let (gm, gk, gn) = (512, 520, 8);
+    let gw = rng.ternary_vec(gm * gk);
+    let gx = rng.act_vec(gk * gn);
+    let packed = pack_ternary(&gw, gm, gk, 5);
+    let cfg = PlatinumConfig::default();
+    let ops = (gm * gk * gn) as f64;
+
+    let s = bench(2, budget, || ternary_mpgemm(&cfg, &packed, &gx, gn));
+    report("golden/lut_mpgemm_512x520x8", &s, &fmt_rate(ops / (s.per_iter_ns() * 1e-9), "op"));
+
+    let s = bench(2, budget, || naive_mpgemm(&gw, gm, gk, &gx, gn));
+    report("golden/naive_512x520x8", &s, &fmt_rate(ops / (s.per_iter_ns() * 1e-9), "op"));
+
+    let tm = TMacCpu::new(&gw, gm, gk);
+    let mut out = vec![0i32; gm * gn];
+    let s = bench(2, budget, || tm.gemm(&gx, gn, &mut out, 1));
+    report("tmac_cpu/gemm_512x520x8_1T", &s, &fmt_rate(ops / (s.per_iter_ns() * 1e-9), "op"));
+
+    let gx1 = rng.act_vec(gk);
+    let mut out1 = vec![0i32; gm];
+    let s = bench(2, budget, || tm.gemv(&gx1, &mut out1));
+    report("tmac_cpu/gemv_512x520", &s, &fmt_rate((gm * gk) as f64 / (s.per_iter_ns() * 1e-9), "op"));
+
+    // --- simulator speed ----------------------------------------------------
+    let g = Gemm::new(3200, 3200, 1024);
+    let s = bench(1, budget, || simulate_gemm(&cfg, ExecMode::Ternary, g));
+    let r = simulate_gemm(&cfg, ExecMode::Ternary, g);
+    report(
+        "sim/kernel_3200x3200x1024",
+        &s,
+        &fmt_rate(r.cycles as f64 / (s.per_iter_ns() * 1e-9), "simcycle"),
+    );
+
+    let s = bench(1, budget, || simulate_model(&cfg, ExecMode::Ternary, &B158_3B, 1024));
+    report("sim/model_3B_prefill", &s, "");
+
+    // --- manifest / json ----------------------------------------------------
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let s = bench(2, budget, || platinum::util::json::Json::parse(&text).unwrap());
+        report("json/manifest_parse", &s, &fmt_rate(text.len() as f64 / (s.per_iter_ns() * 1e-9), "B"));
+    }
+}

@@ -1,0 +1,53 @@
+//! Table I — accelerator specifications: type, frequency, technology,
+//! PE count, area, and throughput (GOP/s, naive-adds normalization on
+//! b1.58-3B prefill N=1024).
+
+use platinum::baselines::{eyeriss, model_report, prosperity, tmac};
+use platinum::config::{ExecMode, PlatinumConfig};
+use platinum::energy::AreaModel;
+use platinum::models::{B158_3B, PREFILL_N};
+use platinum::sim::simulate_model;
+
+fn main() {
+    let cfg = PlatinumConfig::default();
+    let plat = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, PREFILL_N);
+    let area = AreaModel::platinum(&cfg).breakdown().total();
+    let eye = model_report(&B158_3B, PREFILL_N, |g| eyeriss::simulate(g, PREFILL_N));
+    let pro = model_report(&B158_3B, PREFILL_N, |g| prosperity::simulate(g, PREFILL_N));
+    let tm = model_report(&B158_3B, PREFILL_N, |g| tmac::simulate_m2pro(g));
+
+    println!("Table I: accelerator specifications (throughput on b1.58-3B, N=1024)");
+    println!(
+        "{:<16} {:>6} {:>11} {:>10} {:>8} {:>12} {:>14} {:>12}",
+        "", "type", "freq (MHz)", "tech (nm)", "#PEs", "area (mm2)", "GOP/s (ours)", "paper"
+    );
+    println!(
+        "{:<16} {:>6} {:>11} {:>10} {:>8} {:>12} {:>14.1} {:>12}",
+        "Eyeriss", "ASIC", 500, 28, 168, "1.07", eye.throughput_gops, "20.8"
+    );
+    println!(
+        "{:<16} {:>6} {:>11} {:>10} {:>8} {:>12} {:>14.1} {:>12}",
+        "Prosperity", "ASIC", 500, 28, 256, "1.06*", pro.throughput_gops, "375"
+    );
+    println!(
+        "{:<16} {:>6} {:>11} {:>10} {:>8} {:>12} {:>14.1} {:>12}",
+        "T-MAC", "CPU", 3490, 5, "-", "289", tm.throughput_gops, "715"
+    );
+    println!(
+        "{:<16} {:>6} {:>11} {:>10} {:>8} {:>12.3} {:>14.1} {:>12}",
+        "Platinum (ours)", "ASIC", 500, 28, cfg.num_pes(), area, plat.throughput_gops, "1534"
+    );
+    println!("\n* Prosperity scaled for fair comparison (as in the paper)");
+    println!("#PEs Platinum = L x n_cols = 52 x 8 = {}", cfg.num_pes());
+
+    // residuals vs paper
+    for (name, ours, paper) in [
+        ("Eyeriss", eye.throughput_gops, 20.8),
+        ("Prosperity", pro.throughput_gops, 375.0),
+        ("T-MAC", tm.throughput_gops, 715.0),
+        ("Platinum", plat.throughput_gops, 1534.0),
+    ] {
+        println!("residual {:<12} {:>+7.1}%", name, (ours / paper - 1.0) * 100.0);
+    }
+    println!("area residual Platinum {:>+7.1}% (ours {:.3} vs paper 0.955)", (area / 0.955 - 1.0) * 100.0, area);
+}

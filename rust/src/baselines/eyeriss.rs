@@ -1,0 +1,106 @@
+//! SpikingEyeriss baseline (§V-A): Eyeriss's 12×14 row-stationary PE
+//! array (168 PEs, 500 MHz, 28 nm — Table I) executing ternary mpGEMM
+//! bit-serially in two passes ('+1' plane, '−1' plane, then merge).
+//!
+//! Timing model: the array folds the output space over the PE grid.  Two
+//! mappings are available and the better one is chosen per kernel (the
+//! compiler would do the same):
+//!
+//! * `mn-grid` — 12 rows of M × 14 columns of N spatially, K temporal:
+//!   `⌈M/12⌉·⌈N/14⌉·K` cycles per pass.
+//! * `m-flat` — all 168 PEs on M, N temporal (the decode-friendly
+//!   mapping): `⌈M/168⌉·K·N` cycles per pass.
+//!
+//! A dataflow efficiency factor `ETA` (0.5) accounts for the
+//! row-stationary array's psum-forwarding and fold-edge losses when
+//! running GEMM instead of conv — calibrated so b1.58-3B prefill lands at
+//! Table I's 20.8 GOP/s (the paper publishes no per-baseline breakdown).
+
+use super::BaselineReport;
+use crate::analysis::Gemm;
+use crate::energy::DRAM_PJ_PER_BIT;
+
+pub const PES_ROWS: usize = 12;
+pub const PES_COLS: usize = 14;
+pub const FREQ_HZ: f64 = 500e6;
+/// GEMM-on-RS dataflow efficiency (see module doc).
+pub const ETA: f64 = 0.5;
+/// Passes for ternary bit-serial execution (+1 plane, −1 plane).
+pub const PASSES: u64 = 2;
+/// Average active chip power (array clocks + GLB + NoC), W.
+pub const CHIP_ACTIVE_W: f64 = 0.7;
+
+/// Simulate one kernel; `_n_model` is the batch·seq the kernel came from
+/// (unused — kept for interface symmetry with prosperity).
+pub fn simulate(g: Gemm, _n_model: usize) -> BaselineReport {
+    let (m, k, n) = (g.m as u64, g.k as u64, g.n as u64);
+    // mapping 1: M×N over the grid, K temporal
+    let folds_mn = m.div_ceil(PES_ROWS as u64) * n.div_ceil(PES_COLS as u64);
+    let cyc_mn = folds_mn * k;
+    // mapping 2: M over all PEs, N temporal
+    let cyc_mflat = m.div_ceil((PES_ROWS * PES_COLS) as u64) * k * n;
+    let cyc_pass = cyc_mn.min(cyc_mflat);
+    // merge pass: subtract the two plane results
+    let merge = (m * n).div_ceil((PES_ROWS * PES_COLS) as u64);
+    let compute_cycles = (PASSES * cyc_pass + merge) as f64 / ETA;
+
+    // DRAM: byte-per-weight storage (no compact ternary encoding in the
+    // spiking baseline), weights re-streamed per output fold column;
+    // activations loaded once per pass.
+    let n_reloads = n.div_ceil(PES_COLS as u64).min(n); // per N-fold
+    let weight_bytes = m * k * n_reloads.max(1);
+    let act_bytes = k * n * PASSES;
+    let out_bytes = m * n;
+    let dram_bytes = weight_bytes + act_bytes + out_bytes;
+    let dram_cycles = dram_bytes as f64 / (57.6e9 / FREQ_HZ); // 64 GB/s × 0.9
+
+    let cycles = compute_cycles.max(dram_cycles);
+
+    // Energy: DRAM + active chip power.  Eyeriss's array clocks, GLB and
+    // NoC burn near-constant power regardless of useful work — at the
+    // poor GEMM utilization above, wall-clock dominates energy (the
+    // reason the paper's 32.4× prefill energy gap is even larger than
+    // the 73.6× speedup would scale to).  0.7 W ≈ the original Eyeriss's
+    // 278 mW @ 200 MHz scaled to 500 MHz/28 nm, plus DRAM background.
+    let accs = (2.0 / 3.0) * g.naive_adds() as f64;
+    let e_dram = dram_bytes as f64 * 8.0 * DRAM_PJ_PER_BIT * 1e-12;
+    let e_mac = accs * 0.9e-12; // 16-bit MAC datapath, 28 nm
+    let latency = cycles / FREQ_HZ;
+    let e_active = (CHIP_ACTIVE_W + 0.15) * latency; // chip + DRAM bkgd
+    let energy = e_dram + e_mac + e_active;
+    BaselineReport::from_cycles(cycles, FREQ_HZ, energy, g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::model_report;
+    use crate::models::{B158_3B, PREFILL_N};
+
+    #[test]
+    fn table1_prefill_throughput() {
+        let r = model_report(&B158_3B, PREFILL_N, |g| simulate(g, PREFILL_N));
+        assert!(
+            (r.throughput_gops - 20.8).abs() / 20.8 < 0.3,
+            "{:.1} GOP/s vs Table I 20.8",
+            r.throughput_gops
+        );
+    }
+
+    #[test]
+    fn decode_mapping_prefers_m_flat() {
+        // with N=8 the mn-grid wastes 6/14 columns; m-flat must win
+        let g = Gemm::new(3200, 3200, 8);
+        let r = simulate(g, 8);
+        // m-flat pass cycles = ceil(3200/168)·3200·8·2/η + merge
+        let expect = (20u64 * 3200 * 8 * 2) as f64 / ETA;
+        assert!((r.latency_s * FREQ_HZ - expect).abs() / expect < 0.2);
+    }
+
+    #[test]
+    fn energy_scales_with_work() {
+        let small = simulate(Gemm::new(512, 512, 64), 64);
+        let big = simulate(Gemm::new(1024, 1024, 64), 64);
+        assert!(big.energy_j > small.energy_j * 3.0);
+    }
+}

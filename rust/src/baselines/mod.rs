@@ -1,0 +1,134 @@
+//! Baseline accelerators (S8) — the paper's comparison points (§V-A):
+//!
+//! * [`eyeriss`] — SpikingEyeriss: a 168-PE row-stationary ASIC run in
+//!   bit-serial two-pass mode for ternary weights.
+//! * [`prosperity`] — Prosperity (HPCA'25): 256-PE product-sparsity
+//!   accelerator with *runtime* shortcut scheduling (the dynamic-hardware
+//!   overhead Platinum disaggregates away: +24 % area, 32.3 % power).
+//! * [`tmac`] — T-MAC: CPU LUT-based mpGEMM.  Two forms: a calibrated
+//!   analytical model of the paper's Apple-M2-Pro/16-thread setup, and a
+//!   **real multithreaded implementation** measured on this machine
+//!   (`tmac::TMacCpu`), used by the hotpath bench and the examples.
+//!
+//! Every baseline returns the same [`BaselineReport`] so Fig 8/9/10 can
+//! tabulate all systems uniformly.
+
+pub mod eyeriss;
+pub mod prosperity;
+pub mod tmac;
+
+use crate::analysis::Gemm;
+use crate::models::BitNetModel;
+
+/// Uniform result row for baseline comparisons.
+#[derive(Debug, Clone, Copy)]
+pub struct BaselineReport {
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub throughput_gops: f64,
+}
+
+impl BaselineReport {
+    pub fn from_cycles(cycles: f64, freq_hz: f64, energy_j: f64, g: Gemm) -> Self {
+        let latency_s = cycles / freq_hz;
+        BaselineReport {
+            latency_s,
+            energy_j,
+            throughput_gops: g.naive_adds() as f64 / latency_s / 1e9,
+        }
+    }
+}
+
+/// Aggregate a per-kernel baseline over a full model pass.
+pub fn model_report<F: Fn(Gemm) -> BaselineReport>(
+    model: &BitNetModel,
+    n: usize,
+    f: F,
+) -> BaselineReport {
+    let mut lat = 0.0;
+    let mut en = 0.0;
+    let mut ops: u64 = 0;
+    for (g, count) in model.model_gemms(n) {
+        let r = f(g);
+        lat += r.latency_s * count as f64;
+        en += r.energy_j * count as f64;
+        ops += g.naive_adds() * count as u64;
+    }
+    BaselineReport { latency_s: lat, energy_j: en, throughput_gops: ops as f64 / lat / 1e9 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExecMode, PlatinumConfig};
+    use crate::models::{B158_3B, DECODE_N, PREFILL_N};
+    use crate::sim::simulate_model;
+
+    /// E9 / Fig 10 — the paper's headline model-level comparisons.
+    /// Our substitute models must land in the same bands ("who wins, by
+    /// roughly what factor").
+    #[test]
+    fn fig10_prefill_speedups_hold() {
+        let cfg = PlatinumConfig::default();
+        let plat = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, PREFILL_N);
+        let eye = model_report(&B158_3B, PREFILL_N, |g| eyeriss::simulate(g, PREFILL_N));
+        let pro = model_report(&B158_3B, PREFILL_N, |g| prosperity::simulate(g, PREFILL_N));
+        let tm = model_report(&B158_3B, PREFILL_N, |g| tmac::simulate_m2pro(g));
+
+        let s_eye = eye.latency_s / plat.latency_s;
+        let s_pro = pro.latency_s / plat.latency_s;
+        let s_tm = tm.latency_s / plat.latency_s;
+        // paper: 73.6×, 4.09×, 2.15× — accept ±40 % bands on the ratios
+        assert!((44.0..=110.0).contains(&s_eye), "Eyeriss speedup {s_eye:.1}");
+        assert!((2.4..=5.8).contains(&s_pro), "Prosperity speedup {s_pro:.2}");
+        assert!((1.3..=3.1).contains(&s_tm), "T-MAC speedup {s_tm:.2}");
+    }
+
+    #[test]
+    fn fig10_decode_speedups_hold() {
+        let cfg = PlatinumConfig::default();
+        let plat = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, DECODE_N);
+        let eye = model_report(&B158_3B, DECODE_N, |g| eyeriss::simulate(g, DECODE_N));
+        let pro = model_report(&B158_3B, DECODE_N, |g| prosperity::simulate(g, DECODE_N));
+        let tm = model_report(&B158_3B, DECODE_N, |g| tmac::simulate_m2pro(g));
+        let s_eye = eye.latency_s / plat.latency_s;
+        let s_pro = pro.latency_s / plat.latency_s;
+        let s_tm = tm.latency_s / plat.latency_s;
+        // paper: 47.6×, 28.4×, 1.75× — Eyeriss gets a wider band: its
+        // decode mapping is the least-documented baseline configuration
+        assert!((28.0..=95.0).contains(&s_eye), "Eyeriss decode {s_eye:.1}");
+        assert!((17.0..=43.0).contains(&s_pro), "Prosperity decode {s_pro:.1}");
+        assert!((1.0..=2.7).contains(&s_tm), "T-MAC decode {s_tm:.2}");
+    }
+
+    #[test]
+    fn fig10_energy_ratios_hold() {
+        let cfg = PlatinumConfig::default();
+        let plat = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, PREFILL_N);
+        let eye = model_report(&B158_3B, PREFILL_N, |g| eyeriss::simulate(g, PREFILL_N));
+        let pro = model_report(&B158_3B, PREFILL_N, |g| prosperity::simulate(g, PREFILL_N));
+        let tm = model_report(&B158_3B, PREFILL_N, |g| tmac::simulate_m2pro(g));
+        let e_plat = plat.energy_j();
+        // paper prefill energy ratios: 32.4× (Eyeriss), 3.23× (Prosperity),
+        // 20.9× (T-MAC) — shape: Eyeriss ≫ T-MAC ≫ Prosperity > Platinum
+        let r_eye = eye.energy_j / e_plat;
+        let r_pro = pro.energy_j / e_plat;
+        let r_tm = tm.energy_j / e_plat;
+        assert!((19.0..=49.0).contains(&r_eye), "Eyeriss energy {r_eye:.1}");
+        assert!((1.9..=4.9).contains(&r_pro), "Prosperity energy {r_pro:.2}");
+        assert!((12.0..=32.0).contains(&r_tm), "T-MAC energy {r_tm:.1}");
+        assert!(r_eye > r_tm && r_tm > r_pro && r_pro > 1.0);
+    }
+
+    #[test]
+    fn table1_throughputs_hold() {
+        // Table I GOP/s on 3B prefill: Eyeriss 20.8, Prosperity 375,
+        // T-MAC 715 (±35 %)
+        let eye = model_report(&B158_3B, PREFILL_N, |g| eyeriss::simulate(g, PREFILL_N));
+        let pro = model_report(&B158_3B, PREFILL_N, |g| prosperity::simulate(g, PREFILL_N));
+        let tm = model_report(&B158_3B, PREFILL_N, |g| tmac::simulate_m2pro(g));
+        assert!((eye.throughput_gops - 20.8).abs() / 20.8 < 0.35, "{}", eye.throughput_gops);
+        assert!((pro.throughput_gops - 375.0).abs() / 375.0 < 0.35, "{}", pro.throughput_gops);
+        assert!((tm.throughput_gops - 715.0).abs() / 715.0 < 0.35, "{}", tm.throughput_gops);
+    }
+}

@@ -1,0 +1,248 @@
+//! T-MAC baseline (§V-A): CPU LUT-based mpGEMM.
+//!
+//! Two forms:
+//!
+//! 1. [`simulate_m2pro`] — an analytical model of the paper's strong
+//!    baseline: 16 threads on an Apple M2 Pro at 3.49 GHz, using NEON
+//!    `tbl` table lookups (16 parallel 8-bit lookups per instruction)
+//!    over 4-bit weight groups, calibrated to Table I's 715 GOP/s and a
+//!    package power typical of an M2 Pro under all-core integer load.
+//!
+//! 2. [`TMacCpu`] — a **real, runnable** T-MAC-style implementation:
+//!    per 4-wide binary weight group, a 16-entry LUT of activation sums
+//!    is built per column block and queried per row; ternary runs as two
+//!    passes.  Multithreaded over row stripes with `std::thread::scope`.
+//!    This is what the hotpath bench measures and what the examples use
+//!    as the CPU reference; it is validated against the golden model.
+
+use super::BaselineReport;
+use crate::analysis::Gemm;
+
+/// T-MAC group width (4 binary weights → 16-entry LUT).
+pub const GROUP: usize = 4;
+
+// --- analytical M2 Pro model ---------------------------------------------
+
+pub const M2_FREQ_HZ: f64 = 3.49e9;
+pub const M2_THREADS: f64 = 16.0;
+/// Effective naive-adds retired per core-cycle per thread: NEON tbl does
+/// 16 byte-lookups/instr, each lookup covering a 4-weight group, but
+/// table setup, accumulation and int8→int16 widening cost issue slots;
+/// T-MAC's published numbers imply ~12.8 adds/cycle/thread on M2-class
+/// cores.  Calibrated to Table I's 715 GOP/s on b1.58-3B prefill.
+pub const ADDS_PER_CYCLE_THREAD: f64 = 12.8;
+/// Package power under sustained all-core SIMD integer load (W).
+pub const M2_PKG_POWER_W: f64 = 32.0;
+/// Unified-memory bandwidth available to the CPU cluster (bytes/s).
+pub const M2_MEM_BW: f64 = 100e9;
+
+/// Analytical T-MAC latency/energy on the paper's CPU setup.
+pub fn simulate_m2pro(g: Gemm) -> BaselineReport {
+    let ops = g.naive_adds() as f64;
+    let compute_s = ops / (ADDS_PER_CYCLE_THREAD * M2_THREADS * M2_FREQ_HZ);
+    // memory: 2-bit weights + activations + outputs, streamed per pass
+    let bytes = (g.m * g.k) as f64 / 4.0 + (g.k * g.n) as f64 + (g.m * g.n) as f64;
+    let mem_s = bytes / M2_MEM_BW;
+    let latency = compute_s.max(mem_s);
+    // decode-shaped kernels leave some cores starved; T-MAC's published
+    // decode scaling shows ~85 % efficiency at N=8
+    let latency = if g.n <= 16 { latency / 0.85 } else { latency };
+    BaselineReport {
+        latency_s: latency,
+        energy_j: latency * M2_PKG_POWER_W,
+        throughput_gops: ops / latency / 1e9,
+    }
+}
+
+// --- real CPU implementation ----------------------------------------------
+
+/// A T-MAC-style CPU kernel instance: pre-grouped binary plane indices.
+pub struct TMacCpu {
+    /// Per plane: (m × groups) 4-bit LUT indices.
+    planes: Vec<Vec<u8>>,
+    plane_signs: Vec<i32>,
+    m: usize,
+    k: usize,
+    groups: usize,
+}
+
+impl TMacCpu {
+    /// Prepare from a ternary weight matrix (row-major m×k).
+    pub fn new(w: &[i8], m: usize, k: usize) -> Self {
+        assert_eq!(w.len(), m * k);
+        let groups = k.div_ceil(GROUP);
+        let mut pos = vec![0u8; m * groups];
+        let mut neg = vec![0u8; m * groups];
+        for row in 0..m {
+            for gidx in 0..groups {
+                let mut pb = 0u8;
+                let mut nb = 0u8;
+                for i in 0..GROUP {
+                    let kk = gidx * GROUP + i;
+                    if kk < k {
+                        match w[row * k + kk] {
+                            1 => pb |= 1 << i,
+                            -1 => nb |= 1 << i,
+                            _ => {}
+                        }
+                    }
+                }
+                pos[row * groups + gidx] = pb;
+                neg[row * groups + gidx] = nb;
+            }
+        }
+        TMacCpu { planes: vec![pos, neg], plane_signs: vec![1, -1], m, k, groups }
+    }
+
+    /// Compute y = W · x for a single activation column (the
+    /// decode-shaped hot path).  `x` is int8-range int32s, length k.
+    pub fn gemv(&self, x: &[i32], out: &mut [i32]) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(out.len(), self.m);
+        // build one 16-entry LUT per group: lut[t] = Σ_{i∈t} x[g·4+i]
+        let mut luts = vec![0i32; self.groups * 16];
+        for gidx in 0..self.groups {
+            let base = gidx * GROUP;
+            let lut = &mut luts[gidx * 16..(gidx + 1) * 16];
+            // incremental construction: lut[t] = lut[t & (t-1)] + x[lsb]
+            for t in 1..16usize {
+                let j = t.trailing_zeros() as usize;
+                let xv = if base + j < self.k { x[base + j] } else { 0 };
+                lut[t] = lut[t & (t - 1)] + xv;
+            }
+        }
+        // §Perf iteration 4: single pass over rows with both planes
+        // fused (pos − neg per group) — halves the row-loop overhead and
+        // keeps each group's 16-entry LUT line hot across both lookups.
+        let pos = &self.planes[0];
+        let neg = &self.planes[1];
+        for (row, o) in out.iter_mut().enumerate() {
+            let base = row * self.groups;
+            let pi = &pos[base..base + self.groups];
+            let ni = &neg[base..base + self.groups];
+            let mut acc = 0i32;
+            for gidx in 0..self.groups {
+                let lut = &luts[gidx * 16..gidx * 16 + 16];
+                acc += lut[pi[gidx] as usize] - lut[ni[gidx] as usize];
+            }
+            *o = acc;
+        }
+    }
+
+    /// Multithreaded GEMM y = W · X over row stripes.
+    /// `x` is (k × n) row-major; `out` is (m × n) row-major.
+    pub fn gemm(&self, x: &[i32], n: usize, out: &mut [i32], threads: usize) {
+        assert_eq!(x.len(), self.k * n);
+        assert_eq!(out.len(), self.m * n);
+        let threads = threads.max(1);
+        let stripe = self.m.div_ceil(threads);
+        // per-column-group LUTs are built per thread to stay cache-local
+        std::thread::scope(|scope| {
+            for (tid, chunk) in out.chunks_mut(stripe * n).enumerate() {
+                let row0 = tid * stripe;
+                scope.spawn(move || {
+                    self.gemm_stripe(x, n, row0, chunk);
+                });
+            }
+        });
+    }
+
+    fn gemm_stripe(&self, x: &[i32], n: usize, row0: usize, out: &mut [i32]) {
+        let rows = out.len() / n;
+        out.fill(0);
+        // process columns one at a time (decode) or in blocks; LUT per
+        // (group, column) is rebuilt per column — T-MAC's act-major order
+        let mut luts = vec![0i32; self.groups * 16];
+        for col in 0..n {
+            for gidx in 0..self.groups {
+                let base = gidx * GROUP;
+                let lut = &mut luts[gidx * 16..(gidx + 1) * 16];
+                for t in 1..16usize {
+                    let j = t.trailing_zeros() as usize;
+                    let xv = if base + j < self.k { x[(base + j) * n + col] } else { 0 };
+                    lut[t] = lut[t & (t - 1)] + xv;
+                }
+            }
+            for r in 0..rows {
+                let row = row0 + r;
+                if row >= self.m {
+                    break;
+                }
+                let mut acc = 0i32;
+                for (plane, &sign) in self.planes.iter().zip(&self.plane_signs) {
+                    let idxs = &plane[row * self.groups..(row + 1) * self.groups];
+                    let mut pacc = 0i32;
+                    for (gidx, &t) in idxs.iter().enumerate() {
+                        pacc += luts[gidx * 16 + t as usize];
+                    }
+                    acc += sign * pacc;
+                }
+                out[r * n + col] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::model_report;
+    use crate::lut::naive_mpgemm;
+    use crate::models::{B158_3B, PREFILL_N};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn table1_m2pro_throughput() {
+        let r = model_report(&B158_3B, PREFILL_N, |g| simulate_m2pro(g));
+        assert!(
+            (r.throughput_gops - 715.0).abs() / 715.0 < 0.25,
+            "{:.0} GOP/s vs Table I 715",
+            r.throughput_gops
+        );
+    }
+
+    #[test]
+    fn real_gemv_matches_naive() {
+        let mut rng = Rng::seed_from(1);
+        let (m, k) = (64, 57);
+        let w = rng.ternary_vec(m * k);
+        let x = rng.act_vec(k);
+        let tm = TMacCpu::new(&w, m, k);
+        let mut out = vec![0i32; m];
+        tm.gemv(&x, &mut out);
+        let want = naive_mpgemm(&w, m, k, &x, 1);
+        for i in 0..m {
+            assert_eq!(out[i] as i64, want[i], "row {i}");
+        }
+    }
+
+    #[test]
+    fn real_gemm_matches_naive_multithreaded() {
+        let mut rng = Rng::seed_from(2);
+        let (m, k, n) = (33, 29, 7);
+        let w = rng.ternary_vec(m * k);
+        let x = rng.act_vec(k * n);
+        let tm = TMacCpu::new(&w, m, k);
+        let mut out = vec![0i32; m * n];
+        tm.gemm(&x, n, &mut out, 4);
+        let want = naive_mpgemm(&w, m, k, &x, n);
+        for i in 0..m * n {
+            assert_eq!(out[i] as i64, want[i]);
+        }
+    }
+
+    #[test]
+    fn gemm_single_thread_same_as_gemv_columns() {
+        let mut rng = Rng::seed_from(3);
+        let (m, k) = (16, 20);
+        let w = rng.ternary_vec(m * k);
+        let tm = TMacCpu::new(&w, m, k);
+        let x_col = rng.act_vec(k);
+        let x_mat: Vec<i32> = x_col.clone(); // n = 1
+        let mut a = vec![0i32; m];
+        let mut b = vec![0i32; m];
+        tm.gemv(&x_col, &mut a);
+        tm.gemm(&x_mat, 1, &mut b, 1);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,213 @@
+//! Accelerator and tiling configuration (paper §III-A, §IV).
+//!
+//! The defaults are the paper's shipped design point: L=52 PPEs ×
+//! n_cols=8 (416 PEs), ternary chunk c=5 (128-entry LUT), bit-serial
+//! chunk c=7, 500 MHz @ 28 nm, 64 GB/s DDR4-2133, and the Fig-7 chosen
+//! tiling (m=1080, k=520, n=32, mnk-stationary).
+
+/// Which build path (and thus execution mode) the datapath runs.
+///
+/// Path adaptability is the paper's headline mechanism: the same PPE
+/// array executes either mode purely by loading a different offline
+/// build path and weight stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecMode {
+    /// Ternary LUT, mirror-consolidated (c = 5, 122 live entries).
+    Ternary,
+    /// Binary LUT bit-serial (c = 7, 128 entries); `planes` passes per
+    /// weight matrix (2 for ternary two-pass, b for b-bit integers).
+    BitSerial { planes: u32 },
+}
+
+impl ExecMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::Ternary => "Platinum",
+            ExecMode::BitSerial { .. } => "Platinum-bs",
+        }
+    }
+}
+
+/// Loop-nest stationarity for the tiling scheduler (§IV-C, Fig 7).
+///
+/// The name lists loop levels outermost→innermost over tile indices;
+/// e.g. `Mnk` keeps the output tile live across the innermost k loop
+/// (output-stationary in k) while the weight tile changes per k step and
+/// the m tile is reused longest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stationarity {
+    Mnk,
+    Mkn,
+    Nmk,
+    Nkm,
+    Kmn,
+    Knm,
+}
+
+impl Stationarity {
+    pub const ALL: [Stationarity; 6] = [
+        Stationarity::Mnk,
+        Stationarity::Mkn,
+        Stationarity::Nmk,
+        Stationarity::Nkm,
+        Stationarity::Kmn,
+        Stationarity::Knm,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Stationarity::Mnk => "mnk",
+            Stationarity::Mkn => "mkn",
+            Stationarity::Nmk => "nmk",
+            Stationarity::Nkm => "nkm",
+            Stationarity::Kmn => "kmn",
+            Stationarity::Knm => "knm",
+        }
+    }
+}
+
+/// Tile sizes for one GEMM dispatch (§IV-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tiling {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub order: Stationarity,
+}
+
+impl Default for Tiling {
+    /// The paper's chosen point (red marker in Fig 7).
+    fn default() -> Self {
+        Tiling { m: 1080, k: 520, n: 32, order: Stationarity::Mnk }
+    }
+}
+
+/// Full accelerator configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatinumConfig {
+    /// Number of Platinum Processing Elements (L). Each PPE owns one LUT
+    /// buffer and processes one c-element input chunk per round.
+    pub num_ppes: usize,
+    /// LUT block size: input columns processed per query (§IV-A).
+    pub n_cols: usize,
+    /// Ternary chunk size (5 → 122-entry mirror-consolidated LUT).
+    pub c_ternary: usize,
+    /// Bit-serial chunk size (7 → 128-entry binary LUT).
+    pub c_binary: usize,
+    /// Construction pipeline depth (Fig 4: fetch/read/add/write).
+    pub pipeline_depth: usize,
+    /// LUT buffer read ports usable for queries per cycle (§IV-B).
+    pub lut_ports: usize,
+    /// Clock frequency in Hz.
+    pub freq_hz: f64,
+    /// Peak DRAM bandwidth in bytes/s (DDR4-2133, 64 GB/s in the paper).
+    pub dram_bw: f64,
+    /// LUT entry width in bits (8, aligned to BitNet's int8 activations).
+    pub lut_entry_bits: usize,
+    /// Output accumulator width in bits.
+    pub acc_bits: usize,
+    /// Tiling configuration.
+    pub tiling: Tiling,
+}
+
+impl Default for PlatinumConfig {
+    fn default() -> Self {
+        PlatinumConfig {
+            num_ppes: 52,
+            n_cols: 8,
+            c_ternary: 5,
+            c_binary: 7,
+            pipeline_depth: 4,
+            lut_ports: 2,
+            freq_hz: 500e6,
+            dram_bw: 64e9,
+            lut_entry_bits: 8,
+            acc_bits: 32,
+            tiling: Tiling::default(),
+        }
+    }
+}
+
+impl PlatinumConfig {
+    /// Total PE count as the paper reports it (#adders = L × n_cols).
+    pub fn num_pes(&self) -> usize {
+        self.num_ppes * self.n_cols
+    }
+
+    /// K-dim elements consumed per construction round (L · c).
+    pub fn k_per_round(&self, c: usize) -> usize {
+        self.num_ppes * c
+    }
+
+    /// Live LUT entries for a mode (122 ternary / 128 binary).
+    pub fn lut_entries(&self, mode: ExecMode) -> usize {
+        match mode {
+            ExecMode::Ternary => (3usize.pow(self.c_ternary as u32) + 1) / 2,
+            ExecMode::BitSerial { .. } => 1 << self.c_binary,
+        }
+    }
+
+    /// Physical LUT buffer capacity per PPE in bytes
+    /// (entries rounded to a power of two × n_cols × entry bytes).
+    pub fn lut_bytes_per_ppe(&self) -> usize {
+        let entries = (3usize.pow(self.c_ternary as u32) + 1) / 2;
+        let rounded = entries.next_power_of_two(); // 122 → 128
+        rounded * self.n_cols * self.lut_entry_bits / 8
+    }
+
+    /// Total LUT SRAM in bytes (52 KB at the default design point).
+    pub fn total_lut_bytes(&self) -> usize {
+        self.num_ppes * self.lut_bytes_per_ppe()
+    }
+
+    /// Chunk size for a mode.
+    pub fn chunk(&self, mode: ExecMode) -> usize {
+        match mode {
+            ExecMode::Ternary => self.c_ternary,
+            ExecMode::BitSerial { .. } => self.c_binary,
+        }
+    }
+
+    /// Encoded bits per weight for a mode (1.6 ternary / 2·1 two-pass...).
+    pub fn weight_bits(&self, mode: ExecMode) -> f64 {
+        match mode {
+            ExecMode::Ternary => {
+                let ib = crate::encoding::index_bits(self.c_ternary);
+                (ib + 1) as f64 / self.c_ternary as f64
+            }
+            // bit-serial streams one LUT address (c bits) per plane chunk
+            ExecMode::BitSerial { planes } => {
+                planes as f64 * (self.c_binary as f64) / self.c_binary as f64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_design_point() {
+        let c = PlatinumConfig::default();
+        assert_eq!(c.num_pes(), 416); // Table I
+        assert_eq!(c.k_per_round(c.c_ternary), 260);
+        assert_eq!(c.lut_entries(ExecMode::Ternary), 122);
+        assert_eq!(c.lut_entries(ExecMode::BitSerial { planes: 2 }), 128);
+        assert_eq!(c.lut_bytes_per_ppe(), 1024); // 128 × 8 × 1B
+        assert_eq!(c.total_lut_bytes(), 52 * 1024); // 52 KB (§IV-C)
+    }
+
+    #[test]
+    fn ternary_weight_bits_is_1_6() {
+        let c = PlatinumConfig::default();
+        assert!((c.weight_bits(ExecMode::Ternary) - 1.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_tiling_is_fig7_choice() {
+        let t = Tiling::default();
+        assert_eq!((t.m, t.k, t.n), (1080, 520, 32));
+        assert_eq!(t.order, Stationarity::Mnk);
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator (S6, S12): the system layer that owns dispatch.
+//!
+//! * [`tiling`] — the tiled loop-nest scheduler: turns a GEMM and a
+//!   [`crate::config::Tiling`] into an ordered dispatch plan with exact
+//!   DRAM traffic accounting (the same walk the simulator charges).
+//! * [`serve`] — a batching request server for the end-to-end examples:
+//!   requests arrive, a batcher groups them to the accelerator's n_cols
+//!   granularity, the functional result is produced through the PJRT
+//!   artifacts (or the golden model), and timing/energy comes from the
+//!   cycle-accurate simulator — the standard performance-model +
+//!   functional-model split of architecture evaluation.
+
+pub mod serve;
+pub mod tiling;
+
+pub use tiling::{DispatchPlan, TileStep};

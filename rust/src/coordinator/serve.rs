@@ -1,0 +1,307 @@
+//! Serving layer (S12): a batching request loop for the end-to-end
+//! examples, shaped like an edge-LLM serving frontend.
+//!
+//! Requests (token sequences) arrive on a channel; the batcher groups
+//! them into accelerator-friendly batches (multiples of n_cols = 8, the
+//! paper's decode granularity), runs the functional forward through a
+//! pluggable [`Executor`] (PJRT artifacts in the examples, the golden
+//! model in tests), and attaches simulated accelerator timing/energy
+//! from the cycle-accurate model — the classic functional + performance
+//! model split.
+
+use crate::analysis::Gemm;
+use crate::config::{ExecMode, PlatinumConfig};
+use crate::sim::{simulate_gemm, SimReport};
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Sequence of token embeddings (flattened seq × d_model f32).
+    pub x: Vec<f32>,
+    pub seq: usize,
+    pub arrived: Instant,
+}
+
+/// Completed response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub y: Vec<f32>,
+    /// Wall-clock latency of the functional execution.
+    pub wall: Duration,
+    /// Simulated accelerator latency for this request's share.
+    pub sim_latency_s: f64,
+    pub sim_energy_j: f64,
+    /// Queueing delay before the batch launched.
+    pub queue_delay: Duration,
+}
+
+/// Pluggable functional executor: given a batch of (seq × d) inputs,
+/// produce outputs of the same shape.  (Deliberately not `Send`: the
+/// PJRT executable handle is a raw pointer; the server owns it on one
+/// thread and producers talk to it over channels.)
+pub trait Executor {
+    /// Feature dimension the executor expects.
+    fn d_model(&self) -> usize;
+    /// Run a batch: `xs` is a slice of per-request inputs.
+    fn run(&mut self, xs: &[&[f32]], seq: usize) -> anyhow::Result<Vec<Vec<f32>>>;
+    /// GEMMs executed per request forward (for simulation pricing).
+    fn gemms(&self, seq: usize) -> Vec<Gemm>;
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// How long the batcher waits for more requests before launching.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub completed: u64,
+    pub batches: u64,
+    pub total_wall: Duration,
+    pub total_queue: Duration,
+    pub sim_latency_s: f64,
+    pub sim_energy_j: f64,
+}
+
+impl ServeStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The serving coordinator: single-threaded batch loop (the accelerator
+/// is one device; concurrency lives in the request producers).
+pub struct Server<E: Executor> {
+    exec: E,
+    cfg: PlatinumConfig,
+    policy: BatchPolicy,
+    pub stats: ServeStats,
+}
+
+impl<E: Executor> Server<E> {
+    pub fn new(exec: E, cfg: PlatinumConfig, policy: BatchPolicy) -> Self {
+        Server { exec, cfg, policy, stats: ServeStats::default() }
+    }
+
+    /// Price one request's GEMMs on the simulator (per-batch share).
+    fn price(&self, seq: usize, batch: usize) -> (f64, f64) {
+        let mut lat = 0.0;
+        let mut en = 0.0;
+        for g in self.exec.gemms(seq) {
+            // the batch shares the N dimension: one dispatch serves all
+            let gb = Gemm::new(g.m, g.k, g.n * batch);
+            let r: SimReport = simulate_gemm(&self.cfg, ExecMode::Ternary, gb);
+            lat += r.latency_s;
+            en += r.energy_j();
+        }
+        (lat, en)
+    }
+
+    /// Drain the channel until it closes, batching and executing.
+    /// Responses are pushed to `out`.
+    pub fn run(
+        &mut self,
+        rx: mpsc::Receiver<Request>,
+        out: &mut Vec<Response>,
+    ) -> anyhow::Result<()> {
+        let mut pending: VecDeque<Request> = VecDeque::new();
+        let mut open = true;
+        while open || !pending.is_empty() {
+            // fill the batch window
+            let deadline = Instant::now() + self.policy.max_wait;
+            while open && pending.len() < self.policy.max_batch {
+                let timeout = deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(timeout) {
+                    Ok(r) => pending.push_back(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        open = false;
+                    }
+                }
+            }
+            if pending.is_empty() {
+                continue;
+            }
+            // group by equal sequence length (static-shape artifacts)
+            let seq = pending.front().unwrap().seq;
+            let take: Vec<Request> = {
+                let mut batch = Vec::new();
+                let mut rest = VecDeque::new();
+                while let Some(r) = pending.pop_front() {
+                    if r.seq == seq && batch.len() < self.policy.max_batch {
+                        batch.push(r);
+                    } else {
+                        rest.push_back(r);
+                    }
+                }
+                pending = rest;
+                batch
+            };
+            let launch = Instant::now();
+            let xs: Vec<&[f32]> = take.iter().map(|r| r.x.as_slice()).collect();
+            let t0 = Instant::now();
+            let ys = self.exec.run(&xs, seq)?;
+            let wall = t0.elapsed();
+            let (sim_lat, sim_en) = self.price(seq, take.len());
+            self.stats.batches += 1;
+            for (req, y) in take.into_iter().zip(ys) {
+                self.stats.completed += 1;
+                self.stats.total_wall += wall;
+                let qd = launch.duration_since(req.arrived);
+                self.stats.total_queue += qd;
+                self.stats.sim_latency_s += sim_lat / self.exec_batch_share();
+                self.stats.sim_energy_j += sim_en / self.exec_batch_share();
+                out.push(Response {
+                    id: req.id,
+                    y,
+                    wall,
+                    sim_latency_s: sim_lat,
+                    sim_energy_j: sim_en,
+                    queue_delay: qd,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_batch_share(&self) -> f64 {
+        self.policy.max_batch as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::pack_ternary;
+    use crate::lut::ternary_mpgemm;
+    use crate::util::rng::Rng;
+
+    /// Test executor: one BitLinear layer through the golden model.
+    struct GoldenExec {
+        packed: crate::encoding::PackedTernary,
+        d: usize,
+        m: usize,
+        cfg: PlatinumConfig,
+    }
+
+    impl GoldenExec {
+        fn new(d: usize, m: usize) -> Self {
+            let mut rng = Rng::seed_from(11);
+            let w = rng.ternary_vec(m * d);
+            GoldenExec {
+                packed: pack_ternary(&w, m, d, 5),
+                d,
+                m,
+                cfg: PlatinumConfig::default(),
+            }
+        }
+    }
+
+    impl Executor for GoldenExec {
+        fn d_model(&self) -> usize {
+            self.d
+        }
+
+        fn run(&mut self, xs: &[&[f32]], seq: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+            let n = xs.len() * seq;
+            // quantize to int8 grid, run the golden datapath, dequantize
+            let mut acts = vec![0i32; self.d * n];
+            for (r, x) in xs.iter().enumerate() {
+                for s in 0..seq {
+                    for f in 0..self.d {
+                        let col = r * seq + s;
+                        acts[f * n + col] = (x[s * self.d + f] * 127.0).round() as i32;
+                    }
+                }
+            }
+            let (y, _) = ternary_mpgemm(&self.cfg, &self.packed, &acts, n);
+            Ok(xs
+                .iter()
+                .enumerate()
+                .map(|(r, _)| {
+                    let mut o = vec![0f32; seq * self.m];
+                    for s in 0..seq {
+                        for mm in 0..self.m {
+                            let col = r * seq + s;
+                            o[s * self.m + mm] = y[mm * n + col] as f32 / 127.0;
+                        }
+                    }
+                    o
+                })
+                .collect())
+        }
+
+        fn gemms(&self, seq: usize) -> Vec<Gemm> {
+            vec![Gemm::new(self.m, self.d, seq)]
+        }
+    }
+
+    #[test]
+    fn serves_batched_requests() {
+        let exec = GoldenExec::new(40, 16);
+        let mut server = Server::new(
+            exec,
+            PlatinumConfig::default(),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        let (tx, rx) = mpsc::channel();
+        let mut rng = Rng::seed_from(3);
+        for id in 0..10u64 {
+            let x: Vec<f32> = (0..40).map(|_| (rng.f64() as f32 - 0.5)).collect();
+            tx.send(Request { id, x, seq: 1, arrived: Instant::now() }).unwrap();
+        }
+        drop(tx);
+        let mut out = Vec::new();
+        server.run(rx, &mut out).unwrap();
+        assert_eq!(out.len(), 10);
+        assert_eq!(server.stats.completed, 10);
+        assert!(server.stats.batches <= 10);
+        assert!(server.stats.mean_batch_size() >= 1.0);
+        assert!(out.iter().all(|r| r.y.len() == 16 && r.sim_latency_s > 0.0));
+    }
+
+    #[test]
+    fn batching_reduces_batches() {
+        // with a generous wait window all 8 requests coalesce
+        let exec = GoldenExec::new(20, 8);
+        let mut server = Server::new(
+            exec,
+            PlatinumConfig::default(),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) },
+        );
+        let (tx, rx) = mpsc::channel();
+        for id in 0..8u64 {
+            tx.send(Request {
+                id,
+                x: vec![0.1; 20],
+                seq: 1,
+                arrived: Instant::now(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        let mut out = Vec::new();
+        server.run(rx, &mut out).unwrap();
+        assert_eq!(server.stats.batches, 1, "all requests should share one batch");
+    }
+}

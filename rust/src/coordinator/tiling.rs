@@ -1,0 +1,203 @@
+//! Tiled loop-nest scheduler (§IV-C): produces the exact dispatch
+//! sequence the accelerator executes and accounts the DRAM transfers per
+//! step — the same walk the simulator prices, exposed as a plan so the
+//! serving layer, the DSE, and the tests all share one source of truth.
+
+use crate::analysis::Gemm;
+use crate::config::{Stationarity, Tiling};
+
+/// One tile dispatch: origin + extent + which buffers must be (re)filled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileStep {
+    pub m0: usize,
+    pub k0: usize,
+    pub n0: usize,
+    pub mt: usize,
+    pub kt: usize,
+    pub nt: usize,
+    /// Weight tile changed → DMA weights (m_t × k_t packed bytes).
+    pub load_weights: bool,
+    /// Input tile changed → DMA activations (k_t × n_t bytes).
+    pub load_inputs: bool,
+    /// Output tile completes after this step → write back.
+    pub store_outputs: bool,
+    /// Partial sums must spill (k is not innermost).
+    pub spill_partials: bool,
+}
+
+/// A complete dispatch plan for one GEMM.
+#[derive(Debug, Clone)]
+pub struct DispatchPlan {
+    pub gemm: Gemm,
+    pub tiling: Tiling,
+    pub steps: Vec<TileStep>,
+}
+
+impl DispatchPlan {
+    /// Build the plan: walk tile origins in the stationarity order,
+    /// tracking which operand tiles change between steps.
+    pub fn build(g: Gemm, t: Tiling) -> DispatchPlan {
+        let ms: Vec<usize> = (0..g.m).step_by(t.m).collect();
+        let ks: Vec<usize> = (0..g.k).step_by(t.k).collect();
+        let ns: Vec<usize> = (0..g.n).step_by(t.n).collect();
+        let k_inner = matches!(t.order, Stationarity::Mnk | Stationarity::Nmk);
+
+        let mut triples: Vec<(usize, usize, usize)> = Vec::new();
+        macro_rules! walk {
+            ($a:expr, $b:expr, $c:expr, $f:expr) => {
+                for &x in $a {
+                    for &y in $b {
+                        for &z in $c {
+                            triples.push($f(x, y, z));
+                        }
+                    }
+                }
+            };
+        }
+        match t.order {
+            Stationarity::Mnk => walk!(&ms, &ns, &ks, |m, n, k| (m, k, n)),
+            Stationarity::Mkn => walk!(&ms, &ks, &ns, |m, k, n| (m, k, n)),
+            Stationarity::Nmk => walk!(&ns, &ms, &ks, |n, m, k| (m, k, n)),
+            Stationarity::Nkm => walk!(&ns, &ks, &ms, |n, k, m| (m, k, n)),
+            Stationarity::Kmn => walk!(&ks, &ms, &ns, |k, m, n| (m, k, n)),
+            Stationarity::Knm => walk!(&ks, &ns, &ms, |k, n, m| (m, k, n)),
+        }
+
+        let mut steps = Vec::with_capacity(triples.len());
+        let mut prev_mk: Option<(usize, usize)> = None;
+        let mut prev_kn: Option<(usize, usize)> = None;
+        for (m0, k0, n0) in triples {
+            let mt = t.m.min(g.m - m0);
+            let kt = t.k.min(g.k - k0);
+            let nt = t.n.min(g.n - n0);
+            let last_k = k0 + kt >= g.k;
+            steps.push(TileStep {
+                m0,
+                k0,
+                n0,
+                mt,
+                kt,
+                nt,
+                load_weights: prev_mk != Some((m0, k0)),
+                load_inputs: prev_kn != Some((k0, n0)),
+                store_outputs: if k_inner { last_k } else { true },
+                spill_partials: !k_inner,
+            });
+            prev_mk = Some((m0, k0));
+            prev_kn = Some((k0, n0));
+        }
+        DispatchPlan { gemm: g, tiling: t, steps }
+    }
+
+    /// Total DRAM read bytes (weights at `wbits` b/w + int8 inputs +
+    /// partial-sum reloads).
+    pub fn dram_read_bytes(&self, wbits: f64) -> u64 {
+        let mut total = 0u64;
+        let mut first_k_seen = std::collections::HashSet::new();
+        for s in &self.steps {
+            if s.load_weights {
+                total += ((s.mt * s.kt) as f64 * wbits / 8.0).ceil() as u64;
+            }
+            if s.load_inputs {
+                total += (s.kt * s.nt) as u64;
+            }
+            if s.spill_partials && !first_k_seen.insert((s.m0, s.n0)) {
+                total += (s.mt * s.nt * 4) as u64;
+            }
+        }
+        total
+    }
+
+    /// Total DRAM write bytes (outputs once, or 4-byte partials per step).
+    pub fn dram_write_bytes(&self) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| {
+                if s.spill_partials {
+                    (s.mt * s.nt * 4) as u64
+                } else if s.store_outputs {
+                    (s.mt * s.nt) as u64
+                } else {
+                    0
+                }
+            })
+            .sum()
+    }
+
+    /// Every output element is covered exactly ⌈K/k_t⌉ times (validity).
+    pub fn validate_coverage(&self) -> bool {
+        let g = self.gemm;
+        let kt_tiles = g.k.div_ceil(self.tiling.k);
+        let mut cover = vec![0u32; g.m.div_ceil(self.tiling.m) * g.n.div_ceil(self.tiling.n)];
+        let nt_tiles = g.n.div_ceil(self.tiling.n);
+        for s in &self.steps {
+            let mi = s.m0 / self.tiling.m;
+            let ni = s.n0 / self.tiling.n;
+            cover[mi * nt_tiles + ni] += 1;
+        }
+        cover.iter().all(|&c| c == kt_tiles as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Tiling;
+
+    fn g() -> Gemm {
+        Gemm::new(3200, 3200, 1024)
+    }
+
+    #[test]
+    fn plan_covers_all_tiles_every_order() {
+        for order in Stationarity::ALL {
+            let t = Tiling { order, ..Tiling::default() };
+            let plan = DispatchPlan::build(g(), t);
+            assert!(plan.validate_coverage(), "{order:?}");
+            let expect =
+                3200usize.div_ceil(1080) * 3200usize.div_ceil(520) * 1024usize.div_ceil(32);
+            assert_eq!(plan.steps.len(), expect);
+        }
+    }
+
+    #[test]
+    fn mnk_loads_weights_per_k_step_but_writes_outputs_once() {
+        let plan = DispatchPlan::build(g(), Tiling::default());
+        let stores = plan.steps.iter().filter(|s| s.store_outputs).count();
+        let out_tiles = 3200usize.div_ceil(1080) * 1024usize.div_ceil(32);
+        assert_eq!(stores, out_tiles);
+        assert!(plan.steps.iter().all(|s| !s.spill_partials));
+    }
+
+    #[test]
+    fn kmn_spills_partials() {
+        let t = Tiling { order: Stationarity::Kmn, ..Tiling::default() };
+        let plan = DispatchPlan::build(g(), t);
+        assert!(plan.steps.iter().all(|s| s.spill_partials));
+        // spilling orders move strictly more DRAM than the mnk default
+        let mnk = DispatchPlan::build(g(), Tiling::default());
+        assert!(
+            plan.dram_write_bytes() > mnk.dram_write_bytes() * 4,
+            "kmn {} vs mnk {}",
+            plan.dram_write_bytes(),
+            mnk.dram_write_bytes()
+        );
+    }
+
+    #[test]
+    fn mkn_reuses_weights() {
+        // weight-stationary order: weights loaded exactly once per (m,k)
+        let t = Tiling { order: Stationarity::Mkn, ..Tiling::default() };
+        let plan = DispatchPlan::build(g(), t);
+        let weight_loads = plan.steps.iter().filter(|s| s.load_weights).count();
+        assert_eq!(weight_loads, 3200usize.div_ceil(1080) * 3200usize.div_ceil(520));
+    }
+
+    #[test]
+    fn edge_tiles_clipped() {
+        let plan = DispatchPlan::build(Gemm::new(1100, 530, 40), Tiling::default());
+        let last = plan.steps.iter().find(|s| s.m0 == 1080).unwrap();
+        assert_eq!(last.mt, 20);
+        assert!(plan.validate_coverage());
+    }
+}

@@ -1,0 +1,159 @@
+//! Design-space exploration over tiling sizes and stationarity (S7,
+//! Fig 7): for each candidate (m_t, k_t, n_t, order) evaluate the
+//! prefill stages of the three BitNet-b1.58 models with the simulator
+//! and the area model, and report (latency, energy, area) points.
+//!
+//! The paper's chosen point — m=1080, k=520, n=32, mnk-stationary —
+//! must lie on (or near) the Pareto frontier; a test pins this.
+
+use crate::config::{ExecMode, PlatinumConfig, Stationarity, Tiling};
+use crate::energy::AreaModel;
+use crate::models::{BitNetModel, ALL_MODELS, PREFILL_N};
+use crate::sim::simulate_model;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub tiling: Tiling,
+    /// Summed prefill latency across the evaluated models (s).
+    pub latency_s: f64,
+    /// Summed prefill energy across the evaluated models (J).
+    pub energy_j: f64,
+    /// Chip area at this buffer provisioning (mm²).
+    pub area_mm2: f64,
+    /// Total on-chip SRAM (KB).
+    pub sram_kb: f64,
+}
+
+impl DsePoint {
+    /// The latency·energy·area product the paper's "balance" implies.
+    pub fn eda_product(&self) -> f64 {
+        self.latency_s * self.energy_j * self.area_mm2
+    }
+}
+
+/// Default candidate grid (mirrors the Fig 7 sweep granularity).
+pub fn default_grid() -> Vec<Tiling> {
+    let ms = [540, 1080, 2160];
+    let ks = [260, 520, 1040];
+    let ns = [16, 32, 64];
+    let mut out = Vec::new();
+    for &m in &ms {
+        for &k in &ks {
+            for &n in &ns {
+                for order in Stationarity::ALL {
+                    out.push(Tiling { m, k, n, order });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate one tiling on the given models' prefill stages.
+pub fn evaluate(tiling: Tiling, models: &[BitNetModel]) -> DsePoint {
+    let mut cfg = PlatinumConfig::default();
+    cfg.tiling = tiling;
+    let area_model = AreaModel::platinum(&cfg);
+    let area = area_model.breakdown().total();
+    let mut latency = 0.0;
+    let mut energy = 0.0;
+    for model in models {
+        let r = simulate_model(&cfg, ExecMode::Ternary, model, PREFILL_N);
+        latency += r.latency_s;
+        energy += r.energy_j();
+    }
+    DsePoint { tiling, latency_s: latency, energy_j: energy, area_mm2: area, sram_kb: area_model.total_sram_kb() }
+}
+
+/// Run the full sweep (Fig 7). `models` defaults to all three b1.58
+/// sizes when empty.
+pub fn sweep(grid: &[Tiling], models: &[BitNetModel]) -> Vec<DsePoint> {
+    let models = if models.is_empty() { &ALL_MODELS[..] } else { models };
+    grid.iter().map(|&t| evaluate(t, models)).collect()
+}
+
+/// Pareto frontier under (latency, energy, area) minimization.
+pub fn pareto(points: &[DsePoint]) -> Vec<usize> {
+    let dominated = |a: &DsePoint, b: &DsePoint| {
+        // b dominates a
+        b.latency_s <= a.latency_s
+            && b.energy_j <= a.energy_j
+            && b.area_mm2 <= a.area_mm2
+            && (b.latency_s < a.latency_s || b.energy_j < a.energy_j || b.area_mm2 < a.area_mm2)
+    };
+    (0..points.len())
+        .filter(|&i| !points.iter().any(|b| dominated(&points[i], b)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::B158_3B;
+
+    fn small_grid() -> Vec<Tiling> {
+        // keep unit tests fast: single model, coarse grid
+        let mut g = Vec::new();
+        for &m in &[540, 1080] {
+            for &k in &[260, 520] {
+                for &n in &[16, 32] {
+                    for order in [Stationarity::Mnk, Stationarity::Kmn] {
+                        g.push(Tiling { m, k, n, order });
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn chosen_point_near_pareto() {
+        // E3: the paper's (1080, 520, 32, mnk) should not be badly
+        // dominated — its EDA product must be within 1.35× of the best.
+        let mut grid = small_grid();
+        grid.push(Tiling::default());
+        let pts = sweep(&grid, &[B158_3B]);
+        let best = pts.iter().map(DsePoint::eda_product).fold(f64::MAX, f64::min);
+        let chosen = pts
+            .iter()
+            .find(|p| p.tiling == Tiling::default())
+            .unwrap()
+            .eda_product();
+        assert!(chosen / best < 1.35, "chosen {:.3e} vs best {best:.3e}", chosen);
+    }
+
+    #[test]
+    fn pareto_is_nonempty_and_consistent() {
+        let pts = sweep(&small_grid(), &[B158_3B]);
+        let front = pareto(&pts);
+        assert!(!front.is_empty());
+        // frontier points must not dominate each other
+        for &i in &front {
+            for &j in &front {
+                if i != j {
+                    let (a, b) = (&pts[i], &pts[j]);
+                    assert!(
+                        !(b.latency_s < a.latency_s
+                            && b.energy_j < a.energy_j
+                            && b.area_mm2 < a.area_mm2)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_tiles_cost_area() {
+        let small = evaluate(
+            Tiling { m: 540, k: 260, n: 16, order: Stationarity::Mnk },
+            &[B158_3B],
+        );
+        let big = evaluate(
+            Tiling { m: 2160, k: 1040, n: 64, order: Stationarity::Mnk },
+            &[B158_3B],
+        );
+        assert!(big.area_mm2 > small.area_mm2 * 1.5);
+        assert!(big.sram_kb > small.sram_kb * 2.0);
+    }
+}

@@ -1,0 +1,353 @@
+//! Weight encodings (paper §III-C) — the rust mirror of
+//! `python/compile/kernels/encoding.py`; the two are cross-validated by
+//! the integration tests via `artifacts/paths/*.json`.
+//!
+//! * Ternary chunk `w ∈ {-1,0,1}^c` ↦ base-3 integer
+//!   `t = Σ (w_i+1)·3^i`; mirror `t ↦ 3^c−1−t`; encoded byte
+//!   `sign << idx_bits | idx` with `idx = min(t, 3^c−1−t)`,
+//!   `sign = t > (3^c−1)/2`.  c=5 → 1.6 bits/weight (Fig 6).
+//! * Binary chunk `b ∈ {0,1}^c` ↦ plain LUT address `Σ b_i·2^i`.
+
+/// Paper's ternary chunk size.
+pub const TERNARY_C: usize = 5;
+/// Paper's bit-serial chunk size.
+pub const BINARY_C: usize = 7;
+
+/// 3^c as usize (c ≤ 20).
+#[inline]
+pub fn pow3(c: usize) -> usize {
+    3usize.pow(c as u32)
+}
+
+/// Number of stored (canonical) ternary LUT entries: ⌈3^c/2⌉.
+#[inline]
+pub fn lut_entries(c: usize) -> usize {
+    (pow3(c) + 1) / 2
+}
+
+/// Canonical index of the all-zero chunk — the construction root.
+#[inline]
+pub fn zero_index(c: usize) -> usize {
+    (pow3(c) - 1) / 2
+}
+
+/// Index bits of the ternary encoding: ⌈log2 3^c⌉ − 1.
+#[inline]
+pub fn index_bits(c: usize) -> usize {
+    let mut bits = 0;
+    let mut v = pow3(c) - 1;
+    while v > 0 {
+        bits += 1;
+        v >>= 1;
+    }
+    bits - 1
+}
+
+/// Average encoded bits per ternary weight at pack size c (Fig 6).
+#[inline]
+pub fn bits_per_weight(c: usize) -> f64 {
+    (index_bits(c) + 1) as f64 / c as f64
+}
+
+/// A packed ternary weight matrix: the sign|index byte stream the weight
+/// buffer holds, plus its logical dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedTernary {
+    /// Row-major (m × chunks) encoded bytes.
+    pub data: Vec<u8>,
+    pub m: usize,
+    /// Logical K (pre-padding).
+    pub k: usize,
+    pub c: usize,
+}
+
+impl PackedTernary {
+    #[inline]
+    pub fn chunks(&self) -> usize {
+        self.k.div_ceil(self.c)
+    }
+
+    #[inline]
+    pub fn at(&self, row: usize, chunk: usize) -> u8 {
+        self.data[row * self.chunks() + chunk]
+    }
+
+    /// Split an encoded byte into (index, sign).
+    #[inline]
+    pub fn decode(&self, byte: u8) -> (usize, bool) {
+        let ib = index_bits(self.c);
+        ((byte as usize) & ((1 << ib) - 1), (byte as usize) >> ib == 1)
+    }
+}
+
+/// Pack a ternary row-major (m × k) matrix into the sign|index stream.
+///
+/// K is zero-padded to a multiple of c (zero chunks encode to the
+/// canonical zero index with sign clear).
+///
+/// # Panics
+/// If any weight is outside {-1, 0, 1}.
+pub fn pack_ternary(w: &[i8], m: usize, k: usize, c: usize) -> PackedTernary {
+    assert_eq!(w.len(), m * k, "weight slice/shape mismatch");
+    let nchunks = k.div_ceil(c);
+    let tz = zero_index(c);
+    let ib = index_bits(c);
+    assert!(ib < 8, "chunk size {c} does not fit the byte stream");
+    let mut data = vec![0u8; m * nchunks];
+    let full_chunks = k / c;
+    let p3max = pow3(c) - 1;
+    // §Perf iteration 2: slice-windowed hot loop for full chunks (the
+    // overwhelmingly common case) — Horner-style digit accumulation over
+    // a row slice lets the compiler drop bounds checks; the ragged tail
+    // chunk takes the general path.
+    for row in 0..m {
+        let wrow = &w[row * k..(row + 1) * k];
+        let drow = &mut data[row * nchunks..(row + 1) * nchunks];
+        for (ch, out) in drow.iter_mut().enumerate().take(full_chunks) {
+            let chunk = &wrow[ch * c..ch * c + c];
+            // Horner from the most significant digit downward:
+            // folding w_{c-1}..w_0 as t = t·3 + (w_i+1) yields exactly
+            // t = Σ (w_i+1)·3^i (little-endian digits, as the ISA defines).
+            let mut t: usize = 0;
+            for &v in chunk.iter().rev() {
+                assert!((-1..=1).contains(&v), "non-ternary weight {v}");
+                t = t * 3 + (v + 1) as usize;
+            }
+            let (idx, sign) = if t > tz { (p3max - t, 1usize) } else { (t, 0) };
+            *out = ((sign << ib) | idx) as u8;
+        }
+        if full_chunks < nchunks {
+            // ragged tail: zero-padded
+            let ch = full_chunks;
+            let mut t: usize = 0;
+            let mut p = 1usize;
+            for i in 0..c {
+                let kk = ch * c + i;
+                let v = if kk < k { wrow[kk] } else { 0 };
+                assert!((-1..=1).contains(&v), "non-ternary weight {v}");
+                t += (v + 1) as usize * p;
+                p *= 3;
+            }
+            let (idx, sign) = if t > tz { (p3max - t, 1usize) } else { (t, 0) };
+            drow[ch] = ((sign << ib) | idx) as u8;
+        }
+    }
+    PackedTernary { data, m, k, c }
+}
+
+/// Inverse of [`pack_ternary`]; returns row-major (m × k) ternary values.
+pub fn unpack_ternary(p: &PackedTernary) -> Vec<i8> {
+    let nchunks = p.chunks();
+    let ib = index_bits(p.c);
+    let mut w = vec![0i8; p.m * p.k];
+    for row in 0..p.m {
+        for ch in 0..nchunks {
+            let byte = p.data[row * nchunks + ch] as usize;
+            let sign = byte >> ib == 1;
+            let mut t = byte & ((1 << ib) - 1);
+            for i in 0..p.c {
+                let digit = (t % 3) as i8 - 1;
+                t /= 3;
+                let kk = ch * p.c + i;
+                if kk < p.k {
+                    w[row * p.k + kk] = if sign { -digit } else { digit };
+                }
+            }
+        }
+    }
+    w
+}
+
+/// Ternary chunk of a canonical index (length-c values in {-1,0,1}).
+pub fn chunk_of_index(idx: usize, c: usize) -> Vec<i8> {
+    let mut out = vec![0i8; c];
+    let mut t = idx;
+    for slot in out.iter_mut() {
+        *slot = (t % 3) as i8 - 1;
+        t /= 3;
+    }
+    out
+}
+
+/// A packed binary (bit-plane) matrix: plain LUT addresses per chunk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedBinary {
+    /// Row-major (m × chunks) addresses, each < 2^c.
+    pub data: Vec<u8>,
+    pub m: usize,
+    pub k: usize,
+    pub c: usize,
+}
+
+impl PackedBinary {
+    #[inline]
+    pub fn chunks(&self) -> usize {
+        self.k.div_ceil(self.c)
+    }
+
+    #[inline]
+    pub fn at(&self, row: usize, chunk: usize) -> u8 {
+        self.data[row * self.chunks() + chunk]
+    }
+}
+
+/// Pack a binary (m × k) matrix of {0,1} into LUT addresses.
+pub fn pack_binary(b: &[u8], m: usize, k: usize, c: usize) -> PackedBinary {
+    assert_eq!(b.len(), m * k);
+    assert!(c <= 8);
+    let nchunks = k.div_ceil(c);
+    let mut data = vec![0u8; m * nchunks];
+    for row in 0..m {
+        for ch in 0..nchunks {
+            let mut t = 0usize;
+            for i in 0..c {
+                let kk = ch * c + i;
+                if kk < k {
+                    let v = b[row * k + kk];
+                    assert!(v <= 1, "non-binary value {v}");
+                    t |= (v as usize) << i;
+                }
+            }
+            data[row * nchunks + ch] = t as u8;
+        }
+    }
+    PackedBinary { data, m, k, c }
+}
+
+/// Two-pass bit-serial decomposition of ternary weights: (+1 plane, −1
+/// plane) — the execution mode the SNN baselines and Platinum-bs use.
+pub fn ternary_planes(w: &[i8], m: usize, k: usize) -> (Vec<u8>, Vec<u8>) {
+    let pos = w.iter().map(|&v| (v == 1) as u8).collect();
+    let neg = w.iter().map(|&v| (v == -1) as u8).collect();
+    debug_assert_eq!(m * k, w.len());
+    (pos, neg)
+}
+
+/// Two's-complement bit planes for b-bit integer weights:
+/// (planes[b] each m×k of {0,1}, plane_weights[b] with MSB negative).
+pub fn int_bit_planes(w: &[i32], bits: usize) -> (Vec<Vec<u8>>, Vec<i32>) {
+    let lo = -(1i32 << (bits - 1));
+    let hi = (1i32 << (bits - 1)) - 1;
+    assert!(
+        w.iter().all(|&v| v >= lo && v <= hi),
+        "weights out of range for int{bits}"
+    );
+    let mask = (1u32 << bits) - 1;
+    let planes: Vec<Vec<u8>> = (0..bits)
+        .map(|b| w.iter().map(|&v| (((v as u32) & mask) >> b & 1) as u8).collect())
+        .collect();
+    let mut pw: Vec<i32> = (0..bits).map(|b| 1i32 << b).collect();
+    *pw.last_mut().unwrap() = -pw[bits - 1];
+    (planes, pw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+
+    #[test]
+    fn constants_match_paper() {
+        assert_eq!(lut_entries(5), 122);
+        assert_eq!(zero_index(5), 121);
+        assert_eq!(index_bits(5), 7);
+        assert!((bits_per_weight(5) - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig6_minimum_at_c5() {
+        let best = (1..=10).min_by(|&a, &b| {
+            bits_per_weight(a).partial_cmp(&bits_per_weight(b)).unwrap()
+        });
+        assert_eq!(best, Some(5));
+        for c in 1..=10 {
+            assert!(bits_per_weight(c) >= 3f64.log2());
+        }
+    }
+
+    #[test]
+    fn zero_chunk_encodes_to_root() {
+        let p = pack_ternary(&[0, 0, 0, 0, 0], 1, 5, 5);
+        assert_eq!(p.data[0] as usize, zero_index(5));
+    }
+
+    #[test]
+    fn mirror_symmetry_in_sign_bit() {
+        let w: Vec<i8> = vec![1, -1, 0, 1, 0, -1, -1, 0, 1, 1];
+        let wn: Vec<i8> = w.iter().map(|v| -v).collect();
+        let p = pack_ternary(&w, 1, 10, 5);
+        let pn = pack_ternary(&wn, 1, 10, 5);
+        for (a, b) in p.data.iter().zip(&pn.data) {
+            assert_eq!(a & 0x7f, b & 0x7f, "index must match");
+            assert_eq!((a >> 7) ^ (b >> 7), 1, "sign must flip");
+        }
+    }
+
+    #[test]
+    fn padded_roundtrip() {
+        let w: Vec<i8> = vec![1, -1, 0, 1, 0, -1, -1]; // k=7, pads to 10
+        let p = pack_ternary(&w, 1, 7, 5);
+        assert_eq!(p.chunks(), 2);
+        assert_eq!(unpack_ternary(&p), w);
+    }
+
+    #[test]
+    fn binary_pack_range() {
+        let b = vec![1u8; 7];
+        let p = pack_binary(&b, 1, 7, 7);
+        assert_eq!(p.data[0], 127);
+    }
+
+    #[test]
+    fn planes_reconstruct() {
+        let w: Vec<i8> = vec![1, -1, 0, 0, 1, -1];
+        let (pos, neg) = ternary_planes(&w, 2, 3);
+        for i in 0..6 {
+            assert_eq!(pos[i] as i8 - neg[i] as i8, w[i]);
+        }
+    }
+
+    #[test]
+    fn int_planes_reconstruct() {
+        let w = vec![-4i32, 3, -1, 0, 2, -3];
+        let (planes, pw) = int_bit_planes(&w, 3);
+        for i in 0..w.len() {
+            let mut acc = 0i32;
+            for b in 0..3 {
+                acc += planes[b][i] as i32 * pw[b];
+            }
+            assert_eq!(acc, w[i]);
+        }
+    }
+
+    #[test]
+    fn prop_ternary_roundtrip() {
+        crate::util::check_prop("ternary_roundtrip", 64, |seed| {
+            let mut rng = crate::util::rng::Rng::seed_from(seed);
+            let m = 1 + rng.below(8) as usize;
+            let k = 1 + rng.below(40) as usize;
+            let w = rng.ternary_vec(m * k);
+            let p = pack_ternary(&w, m, k, 5);
+            crate::ensure_prop!(
+                p.data.iter().all(|&b| (b & 0x7f) as usize <= zero_index(5)),
+                "index exceeds canonical range"
+            );
+            crate::ensure_prop!(unpack_ternary(&p) == w, "roundtrip mismatch m={m} k={k}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_pack_matches_index_decode() {
+        crate::util::check_prop("pack_matches_index_decode", 64, |seed| {
+            let mut rng = crate::util::rng::Rng::seed_from(seed);
+            let w = rng.ternary_vec(5);
+            let p = pack_ternary(&w, 1, 5, 5);
+            let (idx, sign) = p.decode(p.data[0]);
+            let chunk = chunk_of_index(idx, 5);
+            let recon: Vec<i8> = chunk.iter().map(|&v| if sign { -v } else { v }).collect();
+            crate::ensure_prop!(recon == w, "decode path disagrees with pack");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,356 @@
+//! Area / energy models at 28 nm (paper §V-A "Hardware Modeling").
+//!
+//! The paper synthesizes RTL with Synopsys DC against a commercial 28 nm
+//! library, models SRAM with CACTI 7.0, and DRAM with DRAMsim3
+//! (64 GB DDR4-2133R).  None of those tools exist in this environment,
+//! so this module substitutes *calibrated analytical models*:
+//!
+//! * [`SramMacro`] — a CACTI-shaped model: capacity/ports/banks →
+//!   area (mm²), read/write energy (pJ/byte), leakage (mW).  The fitted
+//!   constants reproduce the paper's published aggregates (§V-B: buffers
+//!   ≈ 65 % of 0.955 mm²; +LUT ≈ 83.3 %; weight-buffer ≈ 31.6 % of 3.2 W).
+//! * [`SynthTable`] — per-cell dynamic energies and areas for adders,
+//!   pipeline registers, and controllers at 28 nm / 500 MHz, in line
+//!   with public 28 nm characterization data.
+//! * [`DRAM_PJ_PER_BIT`] — an aggregate DDR4-2133 access energy
+//!   (activate + rd/wr + IO + refresh amortized), the quantity DRAMsim3
+//!   ultimately feeds into the paper's energy totals.
+//!
+//! Every constant is a *model parameter*, documented and unit-tested
+//! against the paper's breakdown; EXPERIMENTS.md records the residuals.
+
+use crate::config::PlatinumConfig;
+
+/// Aggregate DDR4-2133 energy per bit transferred (pJ/bit).
+///
+/// DRAMsim3-style decomposition at ~2133 MT/s: ACT/PRE ≈ 2–4, RD/WR core
+/// ≈ 6–8, IO/termination ≈ 7–10 pJ/bit ⇒ ~18 pJ/bit sustained.
+pub const DRAM_PJ_PER_BIT: f64 = 18.0;
+
+/// DRAM static/refresh power for the 64 GB DDR4 rank pool (mW).
+pub const DRAM_STATIC_MW: f64 = 150.0;
+
+/// One on-chip SRAM macro (CACTI-like analytical model).
+#[derive(Debug, Clone, Copy)]
+pub struct SramMacro {
+    pub kbytes: f64,
+    pub read_ports: u32,
+    pub write_ports: u32,
+    pub banks: u32,
+}
+
+impl SramMacro {
+    pub fn single_port(kbytes: f64, banks: u32) -> Self {
+        SramMacro { kbytes, read_ports: 1, write_ports: 1, banks }
+    }
+
+    /// Dual-ported macro (the per-PPE LUT buffer: 1RW + 1R, §III-A).
+    pub fn dual_port(kbytes: f64, banks: u32) -> Self {
+        SramMacro { kbytes, read_ports: 2, write_ports: 1, banks }
+    }
+
+    /// Area in mm² at 28 nm.
+    ///
+    /// Base density ~2.0 mm²/MB for single-port 28 nm SRAM incl.
+    /// periphery; each extra port costs ~50 % (CACTI multiport scaling);
+    /// each bank pays a periphery floor (decoders/sense amps).
+    pub fn area_mm2(&self) -> f64 {
+        let mb = self.kbytes / 1024.0;
+        let port_factor = 1.0 + 0.5 * ((self.read_ports + self.write_ports) as f64 - 2.0);
+        let periphery_floor = 0.0006 * self.banks as f64; // mm² per bank
+        2.0 * mb * port_factor + periphery_floor
+    }
+
+    /// Read energy for a *broadcast* macro whose outputs traverse the
+    /// whole PPE array (the weight buffer feeds all 52 PPEs every
+    /// cycle): wire energy dominates, so it scales with total macro
+    /// capacity rather than bank size.  Anchored to reproduce the
+    /// paper's §V-B weight-buffer power share (31.6 % of 3.2 W).
+    pub fn broadcast_read_pj_per_byte(&self) -> f64 {
+        2.2 * self.kbytes.sqrt()
+    }
+
+    /// Read energy in pJ per byte.
+    ///
+    /// CACTI-shaped capacity scaling: E/B grows ~√capacity of the *bank*;
+    /// anchored at ~1.1 pJ/B for a 1 KB bank and ~20 pJ/B for a ~300 KB
+    /// single-bank macro — which reproduces the paper's weight-buffer
+    /// power share (§V-B).
+    pub fn read_pj_per_byte(&self) -> f64 {
+        let bank_kb = (self.kbytes / self.banks as f64).max(0.25);
+        1.1 * bank_kb.sqrt().max(1.0)
+    }
+
+    /// Write energy in pJ per byte (~1.15× read for SRAM).
+    pub fn write_pj_per_byte(&self) -> f64 {
+        self.read_pj_per_byte() * 1.15
+    }
+
+    /// Leakage power in mW (≈0.09 mW/KB at 28 nm HVT periphery mix,
+    /// plus port overhead).
+    pub fn leakage_mw(&self) -> f64 {
+        let port_factor = 1.0 + 0.4 * ((self.read_ports + self.write_ports) as f64 - 2.0);
+        0.09 * self.kbytes * port_factor
+    }
+}
+
+/// Synthesized-logic unit costs at 28 nm, 500 MHz (DC-style estimates).
+#[derive(Debug, Clone, Copy)]
+pub struct SynthTable {
+    /// 8-bit adder dynamic energy (pJ/op).
+    pub add8_pj: f64,
+    /// 32-bit accumulator add (pJ/op).
+    pub add32_pj: f64,
+    /// 8-bit adder area (mm²).
+    pub add8_mm2: f64,
+    /// 32-bit adder area (mm²).
+    pub add32_mm2: f64,
+    /// Pipeline register bank per PPE (mm²).
+    pub ppe_regs_mm2: f64,
+    /// PPE controller (decode + addressing) area (mm²).
+    pub ppe_ctrl_mm2: f64,
+    /// Logic leakage per mm² (mW/mm²).
+    pub logic_leak_mw_per_mm2: f64,
+}
+
+impl Default for SynthTable {
+    fn default() -> Self {
+        SynthTable {
+            add8_pj: 0.03,
+            add32_pj: 0.1,
+            add8_mm2: 6.0e-5,
+            add32_mm2: 1.2e-4,
+            ppe_regs_mm2: 6.0e-4,
+            ppe_ctrl_mm2: 5.0e-4,
+            logic_leak_mw_per_mm2: 25.0,
+        }
+    }
+}
+
+/// Full-chip area model (→ §V-B area breakdown, Table I).
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    pub weight_buf: SramMacro,
+    pub input_buf: SramMacro,
+    pub output_buf: SramMacro,
+    pub path_buf: SramMacro,
+    pub lut_bufs: SramMacro, // aggregate of L dual-port macros
+    pub synth: SynthTable,
+    pub num_ppes: usize,
+    pub n_cols: usize,
+    /// Extra reduction adders provisioned per PPE (§IV-B).
+    pub extra_adders_per_ppe: usize,
+    /// SFU block (vector mul, activation funcs — §III-A: "serves as a
+    /// hardware overhead for fair comparison").
+    pub sfu_mm2: f64,
+}
+
+/// Component-wise area breakdown in mm².
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AreaBreakdown {
+    pub weight_buf: f64,
+    pub input_buf: f64,
+    pub output_buf: f64,
+    pub path_buf: f64,
+    pub lut_bufs: f64,
+    pub ppes: f64,
+    pub aggregator: f64,
+    pub sfu: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total(&self) -> f64 {
+        self.weight_buf
+            + self.input_buf
+            + self.output_buf
+            + self.path_buf
+            + self.lut_bufs
+            + self.ppes
+            + self.aggregator
+            + self.sfu
+    }
+
+    /// Data buffers excluding LUT (the paper's "weights and activations
+    /// ... approximately 65%").
+    pub fn data_buffers(&self) -> f64 {
+        self.weight_buf + self.input_buf + self.output_buf + self.path_buf
+    }
+}
+
+impl AreaModel {
+    /// The shipped Platinum floorplan (§IV-C: 272 KB buffers + 52 KB LUT).
+    pub fn platinum(cfg: &PlatinumConfig) -> Self {
+        let t = cfg.tiling;
+        // weight tile: m×k at 1.6 b/w (loads overlap via banked staging,
+        // so capacity is single-buffered — §IV-C quotes 272 KB total)
+        let wt_kb = (t.m * t.k) as f64 * 0.2 / 1024.0;
+        // output tile: m×n 32-bit accumulators
+        let out_kb = (t.m * t.n * 4) as f64 / 1024.0;
+        // input tile: k×n int8 ("minimal input buffering", §IV-C)
+        let in_kb = (t.k * t.n) as f64 / 1024.0;
+        let path_kb = 1.0;
+        AreaModel {
+            weight_buf: SramMacro::single_port(wt_kb, 16),
+            input_buf: SramMacro::single_port(in_kb, 4),
+            output_buf: SramMacro::single_port(out_kb, 8),
+            path_buf: SramMacro::single_port(path_kb, 1),
+            lut_bufs: SramMacro::dual_port(
+                cfg.total_lut_bytes() as f64 / 1024.0,
+                cfg.num_ppes as u32,
+            ),
+            synth: SynthTable::default(),
+            num_ppes: cfg.num_ppes,
+            n_cols: cfg.n_cols,
+            extra_adders_per_ppe: cfg.n_cols, // doubled for reduction (§IV-B)
+            sfu_mm2: 0.016,
+        }
+    }
+
+    /// Total on-chip SRAM capacity (KB) — §IV-C quotes 272 + 52 = 324 KB.
+    pub fn total_sram_kb(&self) -> f64 {
+        self.weight_buf.kbytes
+            + self.input_buf.kbytes
+            + self.output_buf.kbytes
+            + self.path_buf.kbytes
+            + self.lut_bufs.kbytes
+    }
+
+    pub fn breakdown(&self) -> AreaBreakdown {
+        let s = &self.synth;
+        // per PPE: n_cols construction adders (8-bit datapath) + regs + ctrl
+        let ppe = self.n_cols as f64 * s.add8_mm2 + s.ppe_regs_mm2 + s.ppe_ctrl_mm2;
+        // aggregator: pipelined adder tree over L PPEs × n_cols lanes at
+        // 32-bit, plus the extra reduction adders of §IV-B
+        let tree_adders = (self.num_ppes - 1) * self.n_cols;
+        let extra = self.extra_adders_per_ppe * self.num_ppes;
+        let agg = tree_adders as f64 * s.add32_mm2 + extra as f64 * s.add8_mm2;
+        AreaBreakdown {
+            weight_buf: self.weight_buf.area_mm2(),
+            input_buf: self.input_buf.area_mm2(),
+            output_buf: self.output_buf.area_mm2(),
+            path_buf: self.path_buf.area_mm2(),
+            lut_bufs: self.lut_bufs.area_mm2(),
+            ppes: ppe * self.num_ppes as f64,
+            aggregator: agg,
+            sfu: self.sfu_mm2,
+        }
+    }
+}
+
+/// Per-access energy table consumed by the simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyTable {
+    pub wbuf_read_pj_per_byte: f64,
+    pub wbuf_write_pj_per_byte: f64,
+    pub ibuf_read_pj_per_byte: f64,
+    pub ibuf_write_pj_per_byte: f64,
+    pub obuf_rw_pj_per_byte: f64,
+    pub lut_read_pj_per_byte: f64,
+    pub lut_write_pj_per_byte: f64,
+    pub path_read_pj_per_byte: f64,
+    pub add8_pj: f64,
+    pub add32_pj: f64,
+    pub dram_pj_per_bit: f64,
+    /// Total static power (SRAM + logic leakage + DRAM background), mW.
+    pub static_mw: f64,
+}
+
+impl EnergyTable {
+    pub fn from_area(model: &AreaModel) -> Self {
+        let b = model.breakdown();
+        let logic_mm2 = b.ppes + b.aggregator + b.sfu;
+        let static_mw = model.weight_buf.leakage_mw()
+            + model.input_buf.leakage_mw()
+            + model.output_buf.leakage_mw()
+            + model.path_buf.leakage_mw()
+            + model.lut_bufs.leakage_mw()
+            + logic_mm2 * model.synth.logic_leak_mw_per_mm2
+            + DRAM_STATIC_MW;
+        EnergyTable {
+            wbuf_read_pj_per_byte: model.weight_buf.broadcast_read_pj_per_byte(),
+            wbuf_write_pj_per_byte: model.weight_buf.write_pj_per_byte(),
+            ibuf_read_pj_per_byte: model.input_buf.read_pj_per_byte(),
+            ibuf_write_pj_per_byte: model.input_buf.write_pj_per_byte(),
+            obuf_rw_pj_per_byte: model.output_buf.read_pj_per_byte() * 1.07,
+            lut_read_pj_per_byte: model.lut_bufs.read_pj_per_byte(),
+            lut_write_pj_per_byte: model.lut_bufs.write_pj_per_byte(),
+            path_read_pj_per_byte: model.path_buf.read_pj_per_byte(),
+            add8_pj: model.synth.add8_pj,
+            add32_pj: model.synth.add32_pj,
+            dram_pj_per_bit: DRAM_PJ_PER_BIT,
+            static_mw,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn platinum_area() -> AreaBreakdown {
+        AreaModel::platinum(&PlatinumConfig::default()).breakdown()
+    }
+
+    #[test]
+    fn total_area_matches_paper() {
+        // Table I: 0.955 mm² (±15 % tolerance for the analytical model)
+        let total = platinum_area().total();
+        assert!(
+            (total - 0.955).abs() / 0.955 < 0.15,
+            "total area {total:.3} mm² vs paper 0.955"
+        );
+    }
+
+    #[test]
+    fn sram_capacity_matches_paper() {
+        let m = AreaModel::platinum(&PlatinumConfig::default());
+        // §IV-C: 272 KB buffers + 52 KB LUT = 324 KB (±15 %)
+        let total = m.total_sram_kb();
+        assert!((total - 324.0).abs() / 324.0 < 0.15, "{total} KB");
+        assert!((m.lut_bufs.kbytes - 52.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn buffer_share_matches_paper() {
+        // §V-B: weight/activation buffers ≈ 65 %, incl. LUT ≈ 83.3 %
+        let b = platinum_area();
+        let data_share = b.data_buffers() / b.total();
+        let with_lut = (b.data_buffers() + b.lut_bufs) / b.total();
+        assert!((data_share - 0.65).abs() < 0.08, "data buffers {data_share:.3}");
+        assert!((with_lut - 0.833).abs() < 0.08, "buffers+LUT {with_lut:.3}");
+    }
+
+    #[test]
+    fn compute_share_matches_paper() {
+        // §V-B: aggregator + PPEs ≈ 15 %
+        let b = platinum_area();
+        let compute = (b.ppes + b.aggregator) / b.total();
+        assert!((compute - 0.15).abs() < 0.06, "compute share {compute:.3}");
+    }
+
+    #[test]
+    fn lut_reads_cheaper_than_weight_reads() {
+        // §V-B: "the LUT buffer exhibits lower power usage compared to
+        // the weight buffer" — per-access energy must reflect the small
+        // per-PPE banks.
+        let m = AreaModel::platinum(&PlatinumConfig::default());
+        let t = EnergyTable::from_area(&m);
+        assert!(t.lut_read_pj_per_byte < t.wbuf_read_pj_per_byte / 3.0);
+    }
+
+    #[test]
+    fn sram_model_monotonic_in_capacity() {
+        let small = SramMacro::single_port(16.0, 1);
+        let big = SramMacro::single_port(256.0, 1);
+        assert!(big.area_mm2() > small.area_mm2() * 8.0);
+        assert!(big.read_pj_per_byte() > small.read_pj_per_byte());
+        assert!(big.leakage_mw() > small.leakage_mw());
+    }
+
+    #[test]
+    fn dual_port_costs_more() {
+        let sp = SramMacro::single_port(52.0, 52);
+        let dp = SramMacro::dual_port(52.0, 52);
+        assert!(dp.area_mm2() > sp.area_mm2() * 1.3);
+    }
+}

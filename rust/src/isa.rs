@@ -1,0 +1,195 @@
+//! On-chip binary formats: the build-path instruction stream the
+//! construction pipeline fetches, and the packed weight stream layout.
+//!
+//! A path entry occupies one 32-bit word in the build-path buffer:
+//!
+//! ```text
+//!  31           24 23           16 15      12 11  9  8   7..1   0
+//! ┌───────────────┬───────────────┬──────────┬──────┬────┬──────┐
+//! │   dst (8b)    │   src (8b)    │ reserved │ j(3b)│sign│ rsvd │
+//! └───────────────┴───────────────┴──────────┴──────┴────┴──────┘
+//! ```
+//!
+//! The stream terminates with the `FINISH` token (all ones), which the
+//! controller recognizes in the fetch stage (Algorithm 2's sentinel).
+//! This module also cross-loads the JSON paths emitted by the python
+//! toolchain (`artifacts/paths/*.json`) so the two generators can be
+//! verified against each other.
+
+use crate::pathgen::{BuildPath, PathEntry, PathKind};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Stream terminator ("Finish" token in Algorithm 2).
+pub const FINISH: u32 = u32::MAX;
+
+/// Encode one path entry into its 32-bit instruction word.
+pub fn encode_entry(e: &PathEntry) -> u32 {
+    assert!(e.dst < 256 && e.src < 256, "dst/src exceed 8-bit field");
+    assert!(e.j < 8, "coordinate exceeds 3-bit field");
+    ((e.dst as u32) << 24) | ((e.src as u32) << 16) | ((e.j as u32) << 9) | ((e.sign as u32) << 8)
+}
+
+/// Decode a 32-bit instruction word (None for FINISH).
+pub fn decode_entry(word: u32) -> Option<PathEntry> {
+    if word == FINISH {
+        return None;
+    }
+    Some(PathEntry {
+        dst: ((word >> 24) & 0xff) as u16,
+        src: ((word >> 16) & 0xff) as u16,
+        j: ((word >> 9) & 0x7) as u8,
+        sign: (word >> 8) & 1 == 1,
+    })
+}
+
+/// Serialize a build path into the instruction stream (with FINISH).
+pub fn encode_path(path: &BuildPath) -> Vec<u32> {
+    let mut words: Vec<u32> = path.entries.iter().map(encode_entry).collect();
+    words.push(FINISH);
+    words
+}
+
+/// Deserialize an instruction stream (stops at FINISH).
+pub fn decode_stream(words: &[u32]) -> Vec<PathEntry> {
+    words.iter().map_while(|&w| decode_entry(w)).collect()
+}
+
+/// Size in bytes of the build-path buffer a path needs.
+pub fn path_buffer_bytes(path: &BuildPath) -> usize {
+    (path.entries.len() + 1) * 4
+}
+
+/// Load a build path emitted by `python -m compile.aot`
+/// (`artifacts/paths/*.json`) into the shared representation.
+pub fn load_path_json(path: &std::path::Path) -> Result<BuildPath> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text).context("parsing path json")?;
+    let kind = match j.req("kind")?.as_str() {
+        Some("ternary") => PathKind::Ternary,
+        Some("binary") => PathKind::Binary,
+        other => bail!("unknown path kind {other:?}"),
+    };
+    let c = j.req("c")?.as_usize().ok_or_else(|| anyhow!("c must be a number"))?;
+    let min_raw = j
+        .req("min_raw_distance")?
+        .as_usize()
+        .ok_or_else(|| anyhow!("min_raw_distance must be a number"))?;
+    let root = match kind {
+        PathKind::Ternary => crate::encoding::zero_index(c),
+        PathKind::Binary => 0,
+    };
+    let entries = j
+        .req("entries")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("entries must be an array"))?
+        .iter()
+        .map(|row| -> Result<PathEntry> {
+            let r = row.as_arr().ok_or_else(|| anyhow!("entry must be an array"))?;
+            if r.len() != 4 {
+                bail!("entry must have 4 fields");
+            }
+            let get = |i: usize| r[i].as_i64().ok_or_else(|| anyhow!("field {i} not a number"));
+            Ok(PathEntry {
+                dst: get(0)? as u16,
+                src: get(1)? as u16,
+                j: get(2)? as u8,
+                sign: get(3)? == 1,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(BuildPath { kind, c, root, entries, min_raw_distance: min_raw })
+}
+
+/// Final encoded weight stream (§III-C): the offline encoder emits the
+/// packed bytes in the order the PPE array consumes them — chunk-major
+/// round groups (each round covers `num_ppes` consecutive chunks, one
+/// per PPE bank) with rows streaming inside a round — so the weight
+/// buffer banks are read strictly sequentially at runtime and need no
+/// address generation beyond an incrementing pointer.
+///
+/// Layout: for each n-independent round group g (chunks `g·L .. g·L+L`),
+/// for each row r, L bytes — one per PPE — padded with the canonical
+/// zero byte for absent chunks so every round has a full L-byte beat.
+pub fn weight_stream(packed: &crate::encoding::PackedTernary, num_ppes: usize) -> Vec<u8> {
+    let chunks = packed.chunks();
+    let zero_byte = crate::encoding::zero_index(packed.c) as u8;
+    let groups = chunks.div_ceil(num_ppes);
+    let mut out = Vec::with_capacity(groups * packed.m * num_ppes);
+    for g in 0..groups {
+        for row in 0..packed.m {
+            for lane in 0..num_ppes {
+                let ch = g * num_ppes + lane;
+                out.push(if ch < chunks { packed.at(row, ch) } else { zero_byte });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pathgen;
+
+    #[test]
+    fn entry_roundtrip() {
+        let e = PathEntry { dst: 121, src: 40, j: 3, sign: true };
+        assert_eq!(decode_entry(encode_entry(&e)), Some(e));
+    }
+
+    #[test]
+    fn finish_terminates() {
+        assert_eq!(decode_entry(FINISH), None);
+    }
+
+    #[test]
+    fn stream_roundtrip_full_paths() {
+        for path in [pathgen::ternary_path(5), pathgen::binary_path(7)] {
+            let words = encode_path(&path);
+            assert_eq!(*words.last().unwrap(), FINISH);
+            assert_eq!(decode_stream(&words), path.entries);
+        }
+    }
+
+    #[test]
+    fn weight_stream_is_sequential_and_complete() {
+        use crate::encoding::pack_ternary;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from(3);
+        let (m, k, l) = (6, 37, 4); // 8 chunks over 4 PPEs → 2 round groups
+        let w = rng.ternary_vec(m * k);
+        let packed = pack_ternary(&w, m, k, 5);
+        let stream = weight_stream(&packed, l);
+        assert_eq!(stream.len(), 2 * m * l);
+        // beat (g=0, row=0) holds chunks 0..4 of row 0, in lane order
+        for lane in 0..l {
+            assert_eq!(stream[lane], packed.at(0, lane));
+        }
+        // second group's lanes hold chunks 4..8
+        let base = m * l;
+        for lane in 0..l {
+            assert_eq!(stream[base + lane], packed.at(0, 4 + lane));
+        }
+    }
+
+    #[test]
+    fn weight_stream_pads_with_zero_chunk() {
+        use crate::encoding::pack_ternary;
+        let w = vec![1i8; 5]; // 1 chunk, stream over 52 PPEs
+        let packed = pack_ternary(&w, 1, 5, 5);
+        let stream = weight_stream(&packed, 52);
+        assert_eq!(stream.len(), 52);
+        assert_eq!(stream[0], packed.at(0, 0));
+        // padding lanes carry the canonical zero (queries return 0)
+        assert!(stream[1..].iter().all(|&b| b as usize == crate::encoding::zero_index(5)));
+    }
+
+    #[test]
+    fn path_buffer_fits_onchip_budget() {
+        // both shipped paths fit comfortably in a 1 KB path buffer bank
+        assert!(path_buffer_bytes(&pathgen::ternary_path(5)) <= 1024);
+        assert!(path_buffer_bytes(&pathgen::binary_path(7)) <= 1024);
+    }
+}

@@ -1,0 +1,52 @@
+//! # Platinum — path-adaptable LUT-based accelerator for low-bit mpGEMM
+//!
+//! Full-system reproduction of *"Platinum: Path-Adaptable LUT-Based
+//! Accelerator Tailored for Low-Bit Weight Matrix Multiplication"*
+//! (Shan et al., 2025).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) implement the
+//!   LUT construct/query datapath; AOT-lowered, never imported at runtime.
+//! * **L2** — a JAX BitNet-style model (`python/compile/model.py`) calling
+//!   the kernels; lowered once to `artifacts/*.hlo.txt`.
+//! * **L3** — this crate: the offline toolchain (build-path generation,
+//!   weight encoding), the cycle-accurate accelerator simulator with
+//!   area/energy models, the baseline accelerators, the design-space
+//!   explorer, a PJRT runtime that executes the L2 artifacts, and a tokio
+//!   serving coordinator.
+//!
+//! Module map (↔ DESIGN.md system inventory):
+//!
+//! | module | system |
+//! |---|---|
+//! | [`config`] | accelerator + tiling configuration (S4, S6) |
+//! | [`encoding`] | ternary/binary packing, mirror symmetry (S1) |
+//! | [`pathgen`] | offline MST build paths + hazard scheduling (S2) |
+//! | [`isa`] | path-entry / weight-stream binary formats (S2) |
+//! | [`lut`] | functional golden model of Algorithms 1 & 2 (S3) |
+//! | [`analysis`] | Eq (1)–(3) cost model, bits/weight (S10) |
+//! | [`models`] | BitNet b1.58 layer shapes + kernel extraction (S9) |
+//! | [`energy`] | 28nm synthesis / SRAM / DRAM area+energy models (S5) |
+//! | [`sim`] | cycle-accurate Platinum simulator (S4) |
+//! | [`baselines`] | SpikingEyeriss, Prosperity, T-MAC, naive (S8) |
+//! | [`dse`] | design-space exploration over tiling (S7) |
+//! | [`runtime`] | PJRT artifact load/execute (S11) |
+//! | [`coordinator`] | tiling scheduler + serving loop (S6, S12) |
+
+pub mod analysis;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod dse;
+pub mod encoding;
+pub mod energy;
+pub mod isa;
+pub mod lut;
+pub mod models;
+pub mod pathgen;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use config::PlatinumConfig;

@@ -1,0 +1,347 @@
+//! Functional golden model of the Platinum datapath (Algorithms 1 & 2).
+//!
+//! This is the bit-exact software twin of the PPE array: path-replay LUT
+//! construction, sign|index queries via `Flip(LUT[index[6:0]], index[7])`,
+//! and aggregator reduction.  The cycle-accurate simulator ([`crate::sim`])
+//! charges time/energy for exactly the operations this model performs;
+//! a property test pins the two op counts to each other, and the L1
+//! Pallas kernel plus the PJRT artifacts are validated against this model
+//! by the integration tests.
+
+use crate::config::PlatinumConfig;
+use crate::encoding::{self, PackedBinary, PackedTernary};
+use crate::pathgen::BuildPath;
+
+/// Operation counters for cross-checking against the analytical model
+/// (Eq 1–3) and the simulator's activity-based energy accounting.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct OpCounts {
+    /// Adder operations during LUT construction.
+    pub construct_adds: u64,
+    /// LUT read accesses during the query phase.
+    pub queries: u64,
+    /// Adder operations in the aggregation/merge tree (incl. partial-sum
+    /// accumulation across chunks).
+    pub reduce_adds: u64,
+}
+
+impl OpCounts {
+    pub fn total_adds(&self) -> u64 {
+        self.construct_adds + self.reduce_adds
+    }
+}
+
+/// One PPE's LUT storage: `entries × n_cols` accumulators.
+pub struct LutBuffer {
+    data: Vec<i32>,
+    pub entries: usize,
+    pub n_cols: usize,
+}
+
+impl LutBuffer {
+    pub fn new(entries: usize, n_cols: usize) -> Self {
+        LutBuffer { data: vec![0; entries * n_cols], entries, n_cols }
+    }
+
+    /// Algorithm 2: replay the build path for one activation chunk.
+    /// `acts` is (c × n_cols) row-major. Returns adds performed.
+    pub fn construct(&mut self, path: &BuildPath, acts: &[i32]) -> u64 {
+        debug_assert_eq!(acts.len(), path.c * self.n_cols);
+        self.data[..].fill(0); // root (and padding) entries read as zero
+        let n = self.n_cols;
+        for e in &path.entries {
+            let (dst, src, j) = (e.dst as usize * n, e.src as usize * n, e.j as usize * n);
+            // split_at_mut-free: src and dst rows never alias (tree edges)
+            for col in 0..n {
+                let a = acts[j + col];
+                let v = self.data[src + col] + if e.sign { -a } else { a };
+                self.data[dst + col] = v;
+            }
+        }
+        (path.entries.len() * n) as u64
+    }
+
+    /// Algorithm 1's PPE.QUERY: `Flip(LUT[idx], sign)` for one column.
+    #[inline]
+    pub fn query(&self, idx: usize, sign: bool, col: usize) -> i32 {
+        let v = self.data[idx * self.n_cols + col];
+        if sign {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// Borrow one LUT entry's n_cols-wide row (one port's read data).
+    #[inline]
+    pub fn row(&self, idx: usize) -> &[i32] {
+        &self.data[idx * self.n_cols..(idx + 1) * self.n_cols]
+    }
+
+    /// Vector query across all n_cols (what one LUT port returns).
+    #[inline]
+    pub fn query_row(&self, idx: usize, sign: bool, out: &mut [i32]) {
+        let row = &self.data[idx * self.n_cols..(idx + 1) * self.n_cols];
+        if sign {
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o = -v;
+            }
+        } else {
+            out.copy_from_slice(row);
+        }
+    }
+}
+
+/// Golden ternary mpGEMM through the full Platinum datapath:
+/// rounds of (construct L LUTs → query m rows → aggregate).
+///
+/// `acts` is (k × n) row-major int (activations); output is (m × n) i64.
+pub fn ternary_mpgemm(
+    cfg: &PlatinumConfig,
+    weights: &PackedTernary,
+    acts: &[i32],
+    n: usize,
+) -> (Vec<i64>, OpCounts) {
+    let c = weights.c;
+    let k = weights.k;
+    let m = weights.m;
+    assert_eq!(acts.len(), k * n);
+    let path = crate::pathgen::ternary_path_cached(c);
+    let entries = encoding::lut_entries(c);
+    let nchunks = weights.chunks();
+    let mut out = vec![0i64; m * n];
+    let mut ops = OpCounts::default();
+
+    // process n in blocks of n_cols, chunks in groups of L (one "round")
+    let ncols = cfg.n_cols.min(n.max(1));
+    let mut lut = LutBuffer::new(entries, ncols);
+    // §Perf iteration 3: hoisted activation staging buffer + sliced query
+    // accumulation (row windows let the compiler elide bounds checks and
+    // keep the idx·n_cols address math out of the column loop).
+    let mut a = vec![0i32; c * ncols];
+    let ib_mask = (1usize << encoding::index_bits(c)) - 1;
+    let ib = encoding::index_bits(c);
+    for n0 in (0..n).step_by(ncols) {
+        let nb = ncols.min(n - n0);
+        for ch_group in (0..nchunks).step_by(cfg.num_ppes) {
+            let gsz = cfg.num_ppes.min(nchunks - ch_group);
+            for g in 0..gsz {
+                let ch = ch_group + g;
+                // gather this chunk's activation block (c × nb, padded)
+                a.fill(0);
+                for i in 0..c {
+                    let kk = ch * c + i;
+                    if kk < k {
+                        let src = &acts[kk * n + n0..kk * n + n0 + nb];
+                        a[i * ncols..i * ncols + nb].copy_from_slice(src);
+                    }
+                }
+                ops.construct_adds += lut.construct(path, &a);
+                // query phase: every output row queries this PPE's LUT
+                for row in 0..m {
+                    let byte = weights.at(row, ch) as usize;
+                    let idx = byte & ib_mask;
+                    let sign = byte >> ib == 1;
+                    let lrow = lut.row(idx);
+                    let orow = &mut out[row * n + n0..row * n + n0 + nb];
+                    if sign {
+                        for (o, &v) in orow.iter_mut().zip(lrow) {
+                            *o -= v as i64;
+                        }
+                    } else {
+                        for (o, &v) in orow.iter_mut().zip(lrow) {
+                            *o += v as i64;
+                        }
+                    }
+                }
+                ops.queries += m as u64;
+                ops.reduce_adds += (m * nb) as u64;
+            }
+        }
+    }
+    (out, ops)
+}
+
+/// Golden bit-serial mpGEMM (Platinum-bs / SNN-baseline execution):
+/// binary LUT shared across planes, merged with plane weights.
+pub fn bitserial_mpgemm(
+    cfg: &PlatinumConfig,
+    planes: &[PackedBinary],
+    plane_weights: &[i32],
+    acts: &[i32],
+    n: usize,
+) -> (Vec<i64>, OpCounts) {
+    assert_eq!(planes.len(), plane_weights.len());
+    assert!(!planes.is_empty());
+    let c = planes[0].c;
+    let k = planes[0].k;
+    let m = planes[0].m;
+    assert_eq!(acts.len(), k * n);
+    let path = crate::pathgen::binary_path_cached(c);
+    let entries = 1usize << c;
+    let nchunks = planes[0].chunks();
+    let mut out = vec![0i64; m * n];
+    let mut ops = OpCounts::default();
+
+    let ncols = cfg.n_cols.min(n.max(1));
+    let mut lut = LutBuffer::new(entries, ncols);
+    for n0 in (0..n).step_by(ncols) {
+        let nb = ncols.min(n - n0);
+        for ch in 0..nchunks {
+            let mut a = vec![0i32; c * ncols];
+            for i in 0..c {
+                let kk = ch * c + i;
+                if kk < k {
+                    for col in 0..nb {
+                        a[i * ncols + col] = acts[kk * n + n0 + col];
+                    }
+                }
+            }
+            ops.construct_adds += lut.construct(path, &a);
+            for row in 0..m {
+                for (p, &pw) in planes.iter().zip(plane_weights) {
+                    let idx = p.at(row, ch) as usize;
+                    ops.queries += 1;
+                    for col in 0..nb {
+                        let v = lut.query(idx, false, col) as i64;
+                        out[row * n + n0 + col] += pw as i64 * v;
+                        ops.reduce_adds += 1;
+                    }
+                }
+            }
+        }
+    }
+    (out, ops)
+}
+
+/// Naive reference mpGEMM for validation: (m×k) i8 × (k×n) i32 → i64.
+pub fn naive_mpgemm(w: &[i8], m: usize, k: usize, acts: &[i32], n: usize) -> Vec<i64> {
+    let mut out = vec![0i64; m * n];
+    for row in 0..m {
+        for kk in 0..k {
+            let wv = w[row * k + kk] as i64;
+            if wv == 0 {
+                continue;
+            }
+            for col in 0..n {
+                out[row * n + col] += wv * acts[kk * n + col] as i64;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::{pack_binary, pack_ternary, ternary_planes};
+    use crate::util::rng::Rng;
+
+    fn rand_case(seed: u64, m: usize, k: usize, n: usize) -> (Vec<i8>, Vec<i32>) {
+        let mut rng = Rng::seed_from(seed);
+        (rng.ternary_vec(m * k), rng.act_vec(k * n))
+    }
+
+    #[test]
+    fn golden_ternary_matches_naive() {
+        let cfg = PlatinumConfig::default();
+        let (m, k, n) = (64, 75, 12);
+        let (w, x) = rand_case(1, m, k, n);
+        let packed = pack_ternary(&w, m, k, 5);
+        let (out, ops) = ternary_mpgemm(&cfg, &packed, &x, n);
+        assert_eq!(out, naive_mpgemm(&w, m, k, &x, n));
+        assert!(ops.construct_adds > 0 && ops.queries > 0);
+    }
+
+    #[test]
+    fn golden_ternary_padded_k() {
+        let cfg = PlatinumConfig::default();
+        let (m, k, n) = (9, 23, 3); // k not a multiple of 5
+        let (w, x) = rand_case(2, m, k, n);
+        let packed = pack_ternary(&w, m, k, 5);
+        let (out, _) = ternary_mpgemm(&cfg, &packed, &x, n);
+        assert_eq!(out, naive_mpgemm(&w, m, k, &x, n));
+    }
+
+    #[test]
+    fn golden_bitserial_two_pass_matches_naive() {
+        let cfg = PlatinumConfig::default();
+        let (m, k, n) = (40, 49, 9);
+        let (w, x) = rand_case(3, m, k, n);
+        let (pos, neg) = ternary_planes(&w, m, k);
+        let planes = vec![pack_binary(&pos, m, k, 7), pack_binary(&neg, m, k, 7)];
+        let (out, _) = bitserial_mpgemm(&cfg, &planes, &[1, -1], &x, n);
+        assert_eq!(out, naive_mpgemm(&w, m, k, &x, n));
+    }
+
+    #[test]
+    fn bitserial_int_weights() {
+        let cfg = PlatinumConfig::default();
+        let (m, k, n) = (12, 21, 4);
+        let mut rng = Rng::seed_from(4);
+        let w: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-4, 3) as i32).collect();
+        let x: Vec<i32> = rng.act_vec(k * n);
+        let (bitplanes, pw) = crate::encoding::int_bit_planes(&w, 3);
+        let planes: Vec<PackedBinary> =
+            bitplanes.iter().map(|p| pack_binary(p, m, k, 7)).collect();
+        let (out, _) = bitserial_mpgemm(&cfg, &planes, &pw, &x, n);
+        // int3 reference
+        let mut want = vec![0i64; m * n];
+        for row in 0..m {
+            for kk in 0..k {
+                for col in 0..n {
+                    want[row * n + col] += w[row * k + kk] as i64 * x[kk * n + col] as i64;
+                }
+            }
+        }
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn ternary_and_bitserial_paths_agree() {
+        // §V-C: Platinum vs Platinum-bs — same function, different path.
+        let cfg = PlatinumConfig::default();
+        let (m, k, n) = (30, 70, 5);
+        let (w, x) = rand_case(5, m, k, n);
+        let packed = pack_ternary(&w, m, k, 5);
+        let (t, _) = ternary_mpgemm(&cfg, &packed, &x, n);
+        let (pos, neg) = ternary_planes(&w, m, k);
+        let planes = vec![pack_binary(&pos, m, k, 7), pack_binary(&neg, m, k, 7)];
+        let (b, _) = bitserial_mpgemm(&cfg, &planes, &[1, -1], &x, n);
+        assert_eq!(t, b);
+    }
+
+    #[test]
+    fn op_counts_match_eq3_structure() {
+        // construct adds = ⌈K/c⌉ · (⌈3^c/2⌉−1) · min(n_cols, N) · ⌈N/n_cols⌉-ish;
+        // with N == n_cols exactly one n-block:
+        let cfg = PlatinumConfig::default();
+        let (m, k, n) = (16, 50, 8);
+        let (w, x) = rand_case(6, m, k, n);
+        let packed = pack_ternary(&w, m, k, 5);
+        let (_, ops) = ternary_mpgemm(&cfg, &packed, &x, n);
+        let chunks = 10u64;
+        assert_eq!(ops.construct_adds, chunks * 121 * 8);
+        assert_eq!(ops.queries, chunks * m as u64);
+        assert_eq!(ops.reduce_adds, chunks * (m as u64) * 8);
+    }
+
+    #[test]
+    fn prop_golden_matches_naive() {
+        crate::util::check_prop("golden_matches_naive", 16, |seed| {
+            let mut rng = Rng::seed_from(seed);
+            let m = 1 + rng.below(32) as usize;
+            let k = 1 + rng.below(64) as usize;
+            let n = 1 + rng.below(11) as usize;
+            let cfg = PlatinumConfig::default();
+            let (w, x) = rand_case(seed ^ 0xabc, m, k, n);
+            let packed = pack_ternary(&w, m, k, 5);
+            let (out, _) = ternary_mpgemm(&cfg, &packed, &x, n);
+            crate::ensure_prop!(
+                out == naive_mpgemm(&w, m, k, &x, n),
+                "mismatch at m={m} k={k} n={n}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,284 @@
+//! `platinum` CLI — the leader entrypoint of the L3 coordinator.
+//!
+//! Subcommands:
+//!   simulate   — cycle-accurate simulation of a kernel or model pass
+//!   report     — area / power / utilization breakdowns (E5, E6, E11)
+//!   dse        — the Fig 7 tiling sweep
+//!   paths      — generate + inspect offline build paths (ISA dump)
+//!   baselines  — Table I throughput comparison
+//!   runtime    — list / smoke-run the PJRT artifacts
+
+use anyhow::{anyhow, bail, Result};
+use platinum::analysis::Gemm;
+use platinum::baselines::{eyeriss, model_report, prosperity, tmac};
+use platinum::config::{ExecMode, PlatinumConfig, Tiling};
+use platinum::energy::{AreaModel, EnergyTable};
+use platinum::models::{ALL_MODELS, B158_3B, DECODE_N, PREFILL_N};
+use platinum::runtime::{HostTensor, Runtime};
+use platinum::sim::{simulate_gemm, simulate_model};
+use platinum::util::cli;
+use platinum::{dse, encoding, isa, pathgen};
+
+fn main() -> Result<()> {
+    let args = cli::parse(std::env::args().skip(1))?;
+    match args.command.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("report") => cmd_report(&args),
+        Some("dse") => cmd_dse(&args),
+        Some("paths") => cmd_paths(&args),
+        Some("baselines") => cmd_baselines(&args),
+        Some("runtime") => cmd_runtime(&args),
+        Some(other) => bail!("unknown command {other:?}; run without args for help"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "platinum — path-adaptable LUT-based accelerator (paper reproduction)\n\
+         \n\
+         USAGE: platinum <command> [flags]\n\
+         \n\
+         COMMANDS:\n\
+           simulate   --model {{700m|1.3b|3b}} --n <batch·seq> [--mode ternary|bitserial]\n\
+                      or --m --k --n for a single kernel\n\
+           report     --area --power --util   breakdowns vs paper §V-B\n\
+           dse        [--full]                Fig 7 tiling sweep\n\
+           paths      [--kind ternary|binary] [--c <chunk>] [--dump] ISA dump\n\
+           baselines  Table I comparison on b1.58-3B\n\
+           runtime    [--artifacts <dir>] [--run <name>] PJRT artifacts"
+    );
+}
+
+fn model_by_name(name: &str) -> Result<&'static platinum::models::BitNetModel> {
+    let lname = name.to_ascii_lowercase();
+    ALL_MODELS
+        .iter()
+        .find(|m| {
+            m.params.eq_ignore_ascii_case(&lname)
+                || m.name.eq_ignore_ascii_case(&lname)
+                || (lname == "3b" && m.params == "3B")
+                || (lname == "700m" && m.params == "700M")
+                || (lname == "1.3b" && m.params == "1.3B")
+        })
+        .ok_or_else(|| anyhow!("unknown model {name:?} (700m, 1.3b, 3b)"))
+}
+
+fn mode_from(args: &cli::Args) -> ExecMode {
+    match args.get_str("mode", "ternary") {
+        "bitserial" => ExecMode::BitSerial { planes: 2 },
+        _ => ExecMode::Ternary,
+    }
+}
+
+fn cmd_simulate(args: &cli::Args) -> Result<()> {
+    let cfg = PlatinumConfig::default();
+    let mode = mode_from(args);
+    if let Some(mname) = args.get("model") {
+        let model = model_by_name(mname)?;
+        let n = args.get_usize("n", PREFILL_N)?;
+        let r = simulate_model(&cfg, mode, model, n);
+        println!(
+            "model {} ({} params)  N={n}  mode={}",
+            model.name,
+            model.params,
+            mode.label()
+        );
+        print_sim(&r, model.total_naive_adds(n));
+    } else {
+        let m = args.get_usize("m", 3200)?;
+        let k = args.get_usize("k", 3200)?;
+        let n = args.get_usize("n", PREFILL_N)?;
+        let g = Gemm::new(m, k, n);
+        let r = simulate_gemm(&cfg, mode, g);
+        println!("kernel {m}x{k}x{n}  mode={}", mode.label());
+        print_sim(&r, g.naive_adds());
+    }
+    Ok(())
+}
+
+fn print_sim(r: &platinum::sim::SimReport, ops: u64) {
+    println!("  cycles       {:>14}", r.cycles);
+    println!("  latency      {:>14.6} s", r.latency_s);
+    println!("  throughput   {:>14.1} GOP/s (naive-adds)", r.throughput_gops);
+    println!("  energy       {:>14.4} J", r.energy_j());
+    println!("  power        {:>14.2} W", r.power_w());
+    println!("  ops          {:>14}", ops);
+    println!(
+        "  phases: construct {} query {} drain {} dram-stall {}",
+        r.phases.construct, r.phases.query, r.phases.drain, r.phases.dram_stall
+    );
+    println!(
+        "  util: adders {:.1}%  lut-ports {:.1}%  dram {:.1}%",
+        r.utilization.adders * 100.0,
+        r.utilization.lut_ports * 100.0,
+        r.utilization.dram_bw * 100.0
+    );
+}
+
+fn cmd_report(args: &cli::Args) -> Result<()> {
+    let cfg = PlatinumConfig::default();
+    let all = !(args.flag("area") || args.flag("power") || args.flag("util"));
+    if args.flag("area") || all {
+        let b = AreaModel::platinum(&cfg).breakdown();
+        let t = b.total();
+        println!("== area breakdown (paper §V-B: 0.955 mm²; buffers 65%, +LUT 83.3%, compute 15%) ==");
+        println!("  weight buffer   {:>7.4} mm²  {:>5.1}%", b.weight_buf, 100.0 * b.weight_buf / t);
+        println!("  input buffer    {:>7.4} mm²  {:>5.1}%", b.input_buf, 100.0 * b.input_buf / t);
+        println!("  output buffer   {:>7.4} mm²  {:>5.1}%", b.output_buf, 100.0 * b.output_buf / t);
+        println!("  path buffer     {:>7.4} mm²  {:>5.1}%", b.path_buf, 100.0 * b.path_buf / t);
+        println!("  LUT buffers     {:>7.4} mm²  {:>5.1}%", b.lut_bufs, 100.0 * b.lut_bufs / t);
+        println!("  PPEs            {:>7.4} mm²  {:>5.1}%", b.ppes, 100.0 * b.ppes / t);
+        println!("  aggregator      {:>7.4} mm²  {:>5.1}%", b.aggregator, 100.0 * b.aggregator / t);
+        println!("  SFU             {:>7.4} mm²  {:>5.1}%", b.sfu, 100.0 * b.sfu / t);
+        println!("  TOTAL           {t:>7.4} mm²   (paper: 0.955)");
+        println!(
+            "  data buffers {:.1}%  +LUT {:.1}%  compute {:.1}%",
+            100.0 * b.data_buffers() / t,
+            100.0 * (b.data_buffers() + b.lut_bufs) / t,
+            100.0 * (b.ppes + b.aggregator) / t
+        );
+    }
+    if args.flag("power") || all {
+        let r = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, PREFILL_N);
+        let e = r.energy;
+        let t = e.total();
+        println!("== power breakdown, b1.58-3B prefill (paper §V-B: 3.2 W; DRAM 53.5%, wbuf 31.6%) ==");
+        println!("  total power     {:>7.2} W", r.power_w());
+        println!("  DRAM            {:>5.1}%", 100.0 * e.dram / t);
+        println!("  weight buffer   {:>5.1}%", 100.0 * e.weight_buf / t);
+        println!("  LUT buffers     {:>5.1}%", 100.0 * e.lut_buf / t);
+        println!("  output buffer   {:>5.1}%", 100.0 * e.output_buf / t);
+        println!("  input buffer    {:>5.1}%", 100.0 * e.input_buf / t);
+        println!("  adders          {:>5.1}%", 100.0 * e.adders / t);
+        println!("  static          {:>5.1}%", 100.0 * e.static_leak / t);
+        let etab = EnergyTable::from_area(&AreaModel::platinum(&cfg));
+        println!(
+            "  (model: wbuf {:.1} pJ/B, LUT {:.1} pJ/B, DRAM {:.0} pJ/bit)",
+            etab.wbuf_read_pj_per_byte, etab.lut_read_pj_per_byte, etab.dram_pj_per_bit
+        );
+    }
+    if args.flag("util") || all {
+        let g = Gemm::new(1080, 520, 32);
+        let r = simulate_gemm(&cfg, ExecMode::Ternary, g);
+        println!("== utilization, steady-state tile (paper §IV-B: adders 90.5%, LUT ports ~100%) ==");
+        println!("  adders          {:>5.1}%", 100.0 * r.utilization.adders);
+        println!("  LUT ports       {:>5.1}%", 100.0 * r.utilization.lut_ports);
+    }
+    Ok(())
+}
+
+fn cmd_dse(args: &cli::Args) -> Result<()> {
+    let grid = dse::default_grid();
+    let models: Vec<platinum::models::BitNetModel> =
+        if args.flag("full") { ALL_MODELS.to_vec() } else { vec![B158_3B] };
+    let pts = dse::sweep(&grid, &models);
+    let front = dse::pareto(&pts);
+    println!("== Fig 7 DSE: {} points, {} on the Pareto frontier ==", pts.len(), front.len());
+    println!(
+        "{:<22} {:>12} {:>12} {:>9} {:>9}  pareto",
+        "tiling", "latency(s)", "energy(J)", "mm²", "KB"
+    );
+    for (i, p) in pts.iter().enumerate() {
+        let tag = format!("m{} k{} n{} {}", p.tiling.m, p.tiling.k, p.tiling.n, p.tiling.order.label());
+        let chosen = p.tiling == Tiling::default();
+        println!(
+            "{:<22} {:>12.4} {:>12.3} {:>9.3} {:>9.0}  {}{}",
+            tag,
+            p.latency_s,
+            p.energy_j,
+            p.area_mm2,
+            p.sram_kb,
+            if front.contains(&i) { "*" } else { "" },
+            if chosen { "  <-- paper's choice" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_paths(args: &cli::Args) -> Result<()> {
+    let kind = args.get_str("kind", "ternary");
+    let path = match kind {
+        "ternary" => pathgen::ternary_path(args.get_usize("c", encoding::TERNARY_C)?),
+        "binary" => pathgen::binary_path(args.get_usize("c", encoding::BINARY_C)?),
+        other => bail!("unknown path kind {other:?}"),
+    };
+    println!(
+        "{kind} path c={}: {} entries, min RAW distance {} (pipeline depth {}), hazard-free: {}",
+        path.c,
+        path.entries.len(),
+        path.min_raw_distance,
+        pathgen::PIPELINE_DEPTH,
+        path.hazard_free()
+    );
+    if args.flag("dump") {
+        for (i, e) in path.entries.iter().enumerate() {
+            println!(
+                "{i:4}: LUT[{:3}] = LUT[{:3}] {} a[{}]   (word {:#010x})",
+                e.dst,
+                e.src,
+                if e.sign { "-" } else { "+" },
+                e.j,
+                isa::encode_entry(e)
+            );
+        }
+        println!("FINISH {:#010x}", isa::FINISH);
+    }
+    Ok(())
+}
+
+fn cmd_baselines(_args: &cli::Args) -> Result<()> {
+    let cfg = PlatinumConfig::default();
+    println!("== Table I reproduction: b1.58-3B, prefill N={PREFILL_N} / decode N={DECODE_N} ==");
+    println!(
+        "{:<16} {:>8} {:>8} {:>14} {:>14}",
+        "system", "PEs", "mm²", "prefill GOP/s", "decode GOP/s"
+    );
+    let plat_p = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, PREFILL_N);
+    let plat_d = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, DECODE_N);
+    let area = AreaModel::platinum(&cfg).breakdown().total();
+    let eye_p = model_report(&B158_3B, PREFILL_N, |g| eyeriss::simulate(g, PREFILL_N));
+    let eye_d = model_report(&B158_3B, DECODE_N, |g| eyeriss::simulate(g, DECODE_N));
+    let pro_p = model_report(&B158_3B, PREFILL_N, |g| prosperity::simulate(g, PREFILL_N));
+    let pro_d = model_report(&B158_3B, DECODE_N, |g| prosperity::simulate(g, DECODE_N));
+    let tm_p = model_report(&B158_3B, PREFILL_N, |g| tmac::simulate_m2pro(g));
+    let tm_d = model_report(&B158_3B, DECODE_N, |g| tmac::simulate_m2pro(g));
+    println!("{:<16} {:>8} {:>8.3} {:>14.1} {:>14.1}", "SpikingEyeriss", 168, 1.07, eye_p.throughput_gops, eye_d.throughput_gops);
+    println!("{:<16} {:>8} {:>8.3} {:>14.1} {:>14.1}", "Prosperity", 256, 1.06, pro_p.throughput_gops, pro_d.throughput_gops);
+    println!("{:<16} {:>8} {:>8} {:>14.1} {:>14.1}", "T-MAC (M2 Pro)", "-", "289", tm_p.throughput_gops, tm_d.throughput_gops);
+    println!("{:<16} {:>8} {:>8.3} {:>14.1} {:>14.1}", "Platinum", cfg.num_pes(), area, plat_p.throughput_gops, plat_d.throughput_gops);
+    println!("(paper Table I: Eyeriss 20.8, Prosperity 375, T-MAC 715, Platinum 1534 GOP/s prefill)");
+    Ok(())
+}
+
+fn cmd_runtime(args: &cli::Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let mut rt = Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts:");
+    for a in &rt.manifest().artifacts {
+        println!("  {:<28} inputs: {}  output: {:?}", a.name, a.inputs.len(), a.outputs[0].shape);
+    }
+    if let Some(name) = args.get("run").map(String::from) {
+        let spec = rt
+            .manifest()
+            .find(&name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not found"))?
+            .clone();
+        let inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|t| match t.dtype {
+                platinum::runtime::DType::I32 => HostTensor::I32(vec![0; t.elements()]),
+                platinum::runtime::DType::F32 => HostTensor::F32(vec![0.0; t.elements()]),
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = rt.execute(&name, &inputs)?;
+        println!("ran {name} in {:?}; output elems {}", t0.elapsed(), out.len());
+    }
+    Ok(())
+}

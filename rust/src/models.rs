@@ -1,0 +1,185 @@
+//! BitNet b1.58 model zoo (§V-A "Model and Kernel Extraction").
+//!
+//! The paper extracts the (K, M) feature dimensions of every BitLinear
+//! layer in the b1.58 suite {700M (b1.58-l), 1.3B (b1.58-xl), 3B} and
+//! varies N (batch × sequence) for prefill (N=1024) and decode (N=8).
+//! The architecture hyper-parameters below follow the public BitNet
+//! b1.58 reproductions (LLaMA-shaped: fused-less QKV/out projections and
+//! a gated FFN with 8/3·h inner width, rounded to hardware-friendly
+//! multiples).
+
+use crate::analysis::Gemm;
+
+/// Architecture description of one BitNet b1.58 model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitNetModel {
+    pub name: &'static str,
+    pub params: &'static str,
+    pub hidden: usize,
+    pub ffn: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub layers: usize,
+}
+
+/// The three evaluated models (public b1.58 suite shapes).
+pub const B158_700M: BitNetModel = BitNetModel {
+    name: "b1.58-l",
+    params: "700M",
+    hidden: 1536,
+    ffn: 4096,
+    heads: 16,
+    kv_heads: 16,
+    layers: 24,
+};
+
+pub const B158_1_3B: BitNetModel = BitNetModel {
+    name: "b1.58-xl",
+    params: "1.3B",
+    hidden: 2048,
+    ffn: 5460,
+    heads: 32,
+    kv_heads: 32,
+    layers: 24,
+};
+
+pub const B158_3B: BitNetModel = BitNetModel {
+    name: "b1.58-3B",
+    params: "3B",
+    hidden: 3200,
+    ffn: 8640,
+    heads: 32,
+    kv_heads: 32,
+    layers: 26,
+};
+
+pub const ALL_MODELS: [BitNetModel; 3] = [B158_700M, B158_1_3B, B158_3B];
+
+/// Paper's evaluation batch·seq products.
+pub const PREFILL_N: usize = 1024;
+pub const DECODE_N: usize = 8;
+
+/// One extracted BitLinear kernel (weights M×K) with an occurrence count
+/// per transformer layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Kernel {
+    pub name: &'static str,
+    pub m: usize,
+    pub k: usize,
+    /// Instances per layer (e.g. Q, K, V are three m=h,k=h kernels).
+    pub count: usize,
+}
+
+impl BitNetModel {
+    /// The distinct BitLinear kernels of one transformer layer.
+    ///
+    /// LLaMA-shaped BitNet block: Wq/Wk/Wv (h→h), Wo (h→h),
+    /// W_gate/W_up (h→ffn), W_down (ffn→h).
+    pub fn kernels(&self) -> Vec<Kernel> {
+        vec![
+            Kernel { name: "qkv", m: self.hidden, k: self.hidden, count: 3 },
+            Kernel { name: "out", m: self.hidden, k: self.hidden, count: 1 },
+            Kernel { name: "gate_up", m: self.ffn, k: self.hidden, count: 2 },
+            Kernel { name: "down", m: self.hidden, k: self.ffn, count: 1 },
+        ]
+    }
+
+    /// Unique (m, k) kernel shapes for kernel-level evaluation (Fig 8/9).
+    pub fn unique_shapes(&self) -> Vec<(usize, usize)> {
+        let mut shapes: Vec<(usize, usize)> = self
+            .kernels()
+            .iter()
+            .map(|kr| (kr.m, kr.k))
+            .collect();
+        shapes.sort_unstable();
+        shapes.dedup();
+        shapes
+    }
+
+    /// All GEMMs of a full forward pass at batch·seq = n
+    /// (kernel × count × layers).
+    pub fn model_gemms(&self, n: usize) -> Vec<(Gemm, usize)> {
+        self.kernels()
+            .iter()
+            .map(|kr| (Gemm::new(kr.m, kr.k, n), kr.count * self.layers))
+            .collect()
+    }
+
+    /// Total naive additions for one forward pass at batch·seq = n —
+    /// the paper's op normalization for GOP/s (Table I footnote ‡).
+    pub fn total_naive_adds(&self, n: usize) -> u64 {
+        self.model_gemms(n)
+            .iter()
+            .map(|(g, cnt)| g.naive_adds() * *cnt as u64)
+            .sum()
+    }
+
+    /// Ternary weight bytes of one layer stack at 1.6 b/w.
+    pub fn weight_bytes_ternary(&self) -> u64 {
+        let per_layer: u64 = self
+            .kernels()
+            .iter()
+            .map(|kr| (kr.m * kr.k * kr.count) as u64)
+            .sum();
+        per_layer * self.layers as u64 / 5 // 1 byte per 5 weights
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_counts_are_plausible() {
+        // BitLinear params ≈ advertised scale (within 2×; embeddings and
+        // norms excluded).
+        for (model, lo, hi) in [
+            (B158_700M, 0.3e9, 1.4e9),
+            (B158_1_3B, 0.6e9, 2.6e9),
+            (B158_3B, 1.5e9, 6.0e9),
+        ] {
+            let p: u64 = model
+                .kernels()
+                .iter()
+                .map(|kr| (kr.m * kr.k * kr.count) as u64)
+                .sum::<u64>()
+                * model.layers as u64;
+            assert!(
+                (p as f64) > lo && (p as f64) < hi,
+                "{}: {}B params",
+                model.name,
+                p as f64 / 1e9
+            );
+        }
+    }
+
+    #[test]
+    fn three_b_kernel_dims_match_paper_tiling() {
+        // the chosen tile m=1080 divides into 8640 (ffn) and k=520·c
+        // grouping covers 3200 — the §IV-A claim that L=52 "facilitates
+        // tiling for BitNet-b1.58 models".
+        assert_eq!(B158_3B.hidden, 3200);
+        assert_eq!(B158_3B.ffn, 8640);
+        assert_eq!(B158_3B.ffn % 1080, 0);
+        // k=520 → 104 chunks of 5 → exactly 2 rounds of 52 PPEs
+        assert_eq!(520 / 5 % 52, 0);
+    }
+
+    #[test]
+    fn kernel_extraction_counts() {
+        let ks = B158_3B.kernels();
+        assert_eq!(ks.iter().map(|k| k.count).sum::<usize>(), 7);
+        assert_eq!(B158_3B.unique_shapes().len(), 3); // h→h, h→ffn, ffn→h
+    }
+
+    #[test]
+    fn prefill_ops_scale() {
+        let total = B158_3B.total_naive_adds(PREFILL_N);
+        // ~2 × params × N: 3B-ish params × 1024 ≈ 2-6 T adds
+        assert!(total > 1e12 as u64 && total < 1e13 as u64, "{total}");
+        assert_eq!(
+            B158_3B.total_naive_adds(DECODE_N) * (PREFILL_N / DECODE_N) as u64,
+            total
+        );
+    }
+}

@@ -1,0 +1,280 @@
+//! PJRT runtime (S11): loads the HLO-text artifacts emitted by
+//! `python/compile/aot.py` (`make artifacts`), compiles them on the PJRT
+//! CPU client, and executes them from the coordinator's request path.
+//!
+//! Python never runs here — the interchange is HLO **text** (not a
+//! serialized HloModuleProto: jax ≥ 0.5 emits 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! The manifest (`artifacts/manifest.json`) drives everything: input
+//! names/shapes/dtypes per artifact, so the coordinator can bind packed
+//! weights, activations and build paths positionally.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor spec from the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    I32,
+    F32,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: BTreeMap<String, f64>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub c_ternary: usize,
+    pub c_binary: usize,
+}
+
+fn parse_tensor(j: &Json) -> Result<TensorSpec> {
+    let name = j.get("name").and_then(Json::as_str).unwrap_or("out").to_string();
+    let shape = j
+        .req("shape")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("shape must be array"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = match j.req("dtype")?.as_str() {
+        Some("i32") => DType::I32,
+        Some("f32") => DType::F32,
+        other => bail!("unsupported dtype {other:?}"),
+    };
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    /// Load `artifacts/manifest.json` (dir = artifacts root).
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let j = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts")?.as_arr().ok_or_else(|| anyhow!("artifacts not array"))? {
+            let name = a.req("name")?.as_str().unwrap_or_default().to_string();
+            let file = dir.join(a.req("file")?.as_str().unwrap_or_default());
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(parse_tensor)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(parse_tensor)
+                .collect::<Result<Vec<_>>>()?;
+            let mut meta = BTreeMap::new();
+            if let Some(Json::Obj(m)) = a.get("meta") {
+                for (k, v) in m {
+                    if let Some(f) = v.as_f64() {
+                        meta.insert(k.clone(), f);
+                    }
+                }
+            }
+            artifacts.push(ArtifactSpec { name, file, inputs, outputs, meta });
+        }
+        Ok(Manifest {
+            artifacts,
+            c_ternary: j.get("c_ternary").and_then(Json::as_usize).unwrap_or(5),
+            c_binary: j.get("c_binary").and_then(Json::as_usize).unwrap_or(7),
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the first artifact whose name starts with `prefix`.
+    pub fn find_prefix(&self, prefix: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name.starts_with(prefix))
+    }
+}
+
+/// Host-side tensor value bound to an artifact input.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::I32(v) => v.len(),
+            HostTensor::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A compiled artifact ready to execute on the PJRT CPU client.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, artifacts compiled once and cached.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    loaded: BTreeMap<String, LoadedArtifact>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and parse the manifest (lazy compile).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime { client, manifest, loaded: BTreeMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return the artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedArtifact> {
+        if !self.loaded.contains_key(name) {
+            let spec = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).context("PJRT compile")?;
+            self.loaded.insert(name.to_string(), LoadedArtifact { spec, exe });
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Execute an artifact with positional inputs; returns the first
+    /// output as a host tensor (artifacts are lowered with
+    /// `return_tuple=True`, so the result is a 1-tuple).
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<HostTensor> {
+        let art = self.load(name)?;
+        if inputs.len() != art.spec.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                art.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (h, spec) in inputs.iter().zip(&art.spec.inputs) {
+            if h.len() != spec.elements() {
+                bail!(
+                    "input {:?}: expected {} elements ({:?}), got {}",
+                    spec.name,
+                    spec.elements(),
+                    spec.shape,
+                    h.len()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (h, spec.dtype) {
+                (HostTensor::I32(v), DType::I32) => {
+                    xla::Literal::vec1(v).reshape(&dims).context("reshape i32 input")?
+                }
+                (HostTensor::F32(v), DType::F32) => {
+                    xla::Literal::vec1(v).reshape(&dims).context("reshape f32 input")?
+                }
+                _ => bail!("input {:?}: dtype mismatch", spec.name),
+            };
+            literals.push(lit);
+        }
+        let result = art.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("device→host transfer")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        let spec = &art.spec.outputs[0];
+        Ok(match spec.dtype {
+            DType::I32 => HostTensor::I32(out.to_vec::<i32>()?),
+            DType::F32 => HostTensor::F32(out.to_vec::<f32>()?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_shapes() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 4);
+        assert_eq!(m.c_ternary, 5);
+        let lut = m.find_prefix("lut_gemm").expect("lut_gemm artifact");
+        assert_eq!(lut.inputs.len(), 3);
+        assert_eq!(lut.inputs[0].dtype, DType::I32);
+        assert!(lut.meta.contains_key("m"));
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { name: "x".into(), shape: vec![3, 4, 5], dtype: DType::F32 };
+        assert_eq!(t.elements(), 60);
+    }
+}

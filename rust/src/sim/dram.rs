@@ -1,0 +1,74 @@
+//! Bandwidth-constrained DRAM channel model (the DRAMsim3 substitute).
+//!
+//! The paper uses DRAMsim3 for energy and a 64 GB/s DDR4-2133 cap for
+//! timing.  We model the channel as a shared-bandwidth pipe with a fixed
+//! access granularity (64 B bursts) and a small per-burst overhead to
+//! mimic row-activation/refresh interference at high utilization.
+
+/// DDR4 burst granularity in bytes (BL8 × 64-bit channel).
+pub const BURST_BYTES: u64 = 64;
+
+#[derive(Debug, Clone)]
+pub struct DramChannel {
+    /// Peak bandwidth in bytes/second.
+    pub peak_bw: f64,
+    /// Core clock frequency (cycles/second) used to express transfer
+    /// time in accelerator cycles.
+    pub freq_hz: f64,
+    /// Sustained/peak efficiency (bank conflicts, refresh, rd/wr turn).
+    pub efficiency: f64,
+}
+
+impl DramChannel {
+    pub fn new(peak_bw: f64, freq_hz: f64) -> Self {
+        DramChannel { peak_bw, freq_hz, efficiency: 0.9 }
+    }
+
+    /// Bytes transferable per accelerator cycle (sustained).
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.peak_bw * self.efficiency / self.freq_hz
+    }
+
+    /// Cycles to transfer `bytes` (rounded up to bursts).
+    pub fn transfer_cycles(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let bursts = bytes.div_ceil(BURST_BYTES);
+        let padded = bursts * BURST_BYTES;
+        (padded as f64 / self.bytes_per_cycle()).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_linearly() {
+        let d = DramChannel::new(64e9, 500e6);
+        let one = d.transfer_cycles(64 * 1024);
+        let four = d.transfer_cycles(256 * 1024);
+        assert!((four as f64 / one as f64 - 4.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn sixty_four_gbs_at_500mhz_is_115_bytes_per_cycle() {
+        let d = DramChannel::new(64e9, 500e6);
+        let bpc = d.bytes_per_cycle();
+        assert!((bpc - 115.2).abs() < 0.5, "{bpc}");
+    }
+
+    #[test]
+    fn small_transfers_round_to_burst() {
+        let d = DramChannel::new(64e9, 500e6);
+        assert_eq!(d.transfer_cycles(1), d.transfer_cycles(64));
+        assert!(d.transfer_cycles(65) > d.transfer_cycles(64));
+    }
+
+    #[test]
+    fn zero_bytes_zero_cycles() {
+        let d = DramChannel::new(64e9, 500e6);
+        assert_eq!(d.transfer_cycles(0), 0);
+    }
+}

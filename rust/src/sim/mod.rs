@@ -1,0 +1,148 @@
+//! Cycle-accurate Platinum simulator (S4) — the substitute for the
+//! paper's Prosperity-derived simulator (§V-A).
+//!
+//! The engine walks the exact tiled loop nest the coordinator would
+//! dispatch, charging cycles per pipeline phase (construct / query /
+//! reduce / drain), modelling DRAM as a bandwidth-constrained channel
+//! overlapped with compute via double buffering, and counting every
+//! buffer access and adder operation so the energy model can price them.
+//!
+//! Phase cycle laws (verified against §IV-B's published utilizations):
+//!
+//! * construct: `path_len + pipeline_depth` cycles per round — one path
+//!   entry per cycle through the 4-stage pipeline (Fig 4), no hazards
+//!   because the offline schedule guarantees RAW distance ≥ depth.
+//! * query: both LUT ports stream queries — `⌈m_t · q_row / ports⌉`
+//!   cycles per round, where q_row = queries per row (1 ternary,
+//!   `planes` for bit-serial) — plus the aggregator tree drain.
+//! * DRAM: transfers for the *next* tile overlap the current tile's
+//!   compute; stall = max(0, load_cycles − compute_cycles).
+
+mod dram;
+mod platinum;
+
+pub use dram::DramChannel;
+pub use platinum::{simulate_gemm, simulate_model, SimReport};
+
+use crate::config::ExecMode;
+
+/// Activity counters accumulated by the engine (inputs to the energy
+/// model and the §IV-B utilization checks).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct Activity {
+    /// 8-bit construction adds (one per path entry per lane).
+    pub construct_adds: u64,
+    /// 32-bit reduce/aggregate adds.
+    pub reduce_adds: u64,
+    /// LUT bytes written during construction.
+    pub lut_write_bytes: u64,
+    /// LUT bytes read (construction sources + queries).
+    pub lut_read_bytes: u64,
+    /// Weight buffer bytes read (query stream).
+    pub wbuf_read_bytes: u64,
+    /// Weight buffer bytes written (DRAM fills).
+    pub wbuf_write_bytes: u64,
+    /// Input buffer bytes read (construction operands).
+    pub ibuf_read_bytes: u64,
+    /// Input buffer bytes written (DRAM fills).
+    pub ibuf_write_bytes: u64,
+    /// Output buffer bytes accessed (accumulator read+write).
+    pub obuf_bytes: u64,
+    /// Build-path buffer bytes fetched.
+    pub path_read_bytes: u64,
+    /// DRAM bytes read (weights + inputs + output spills).
+    pub dram_read_bytes: u64,
+    /// DRAM bytes written (outputs + spills).
+    pub dram_write_bytes: u64,
+}
+
+impl Activity {
+    pub fn add(&mut self, o: &Activity) {
+        self.construct_adds += o.construct_adds;
+        self.reduce_adds += o.reduce_adds;
+        self.lut_write_bytes += o.lut_write_bytes;
+        self.lut_read_bytes += o.lut_read_bytes;
+        self.wbuf_read_bytes += o.wbuf_read_bytes;
+        self.wbuf_write_bytes += o.wbuf_write_bytes;
+        self.ibuf_read_bytes += o.ibuf_read_bytes;
+        self.ibuf_write_bytes += o.ibuf_write_bytes;
+        self.obuf_bytes += o.obuf_bytes;
+        self.path_read_bytes += o.path_read_bytes;
+        self.dram_read_bytes += o.dram_read_bytes;
+        self.dram_write_bytes += o.dram_write_bytes;
+    }
+
+    pub fn dram_total_bytes(&self) -> u64 {
+        self.dram_read_bytes + self.dram_write_bytes
+    }
+}
+
+/// Per-component dynamic + static energy in joules (→ Fig 9, §V-B).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct EnergyBreakdown {
+    pub dram: f64,
+    pub weight_buf: f64,
+    pub input_buf: f64,
+    pub output_buf: f64,
+    pub lut_buf: f64,
+    pub path_buf: f64,
+    pub adders: f64,
+    pub static_leak: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.dram
+            + self.weight_buf
+            + self.input_buf
+            + self.output_buf
+            + self.lut_buf
+            + self.path_buf
+            + self.adders
+            + self.static_leak
+    }
+
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.dram += o.dram;
+        self.weight_buf += o.weight_buf;
+        self.input_buf += o.input_buf;
+        self.output_buf += o.output_buf;
+        self.lut_buf += o.lut_buf;
+        self.path_buf += o.path_buf;
+        self.adders += o.adders;
+        self.static_leak += o.static_leak;
+    }
+}
+
+/// Cycle occupancy per phase (→ utilization report, E11).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct PhaseCycles {
+    pub construct: u64,
+    pub query: u64,
+    pub drain: u64,
+    pub dram_stall: u64,
+}
+
+impl PhaseCycles {
+    pub fn busy(&self) -> u64 {
+        self.construct + self.query + self.drain
+    }
+
+    pub fn total(&self) -> u64 {
+        self.busy() + self.dram_stall
+    }
+}
+
+/// Hardware utilization summary (E11: §IV-B claims ~100 % LUT ports in
+/// query, 90.5 % average adder utilization).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Utilization {
+    pub adders: f64,
+    pub lut_ports: f64,
+    pub dram_bw: f64,
+}
+
+/// Label helper for reports.
+pub fn mode_label(mode: ExecMode) -> &'static str {
+    mode.label()
+}

@@ -1,0 +1,102 @@
+//! Micro-benchmark harness — replacement for `criterion`.
+//!
+//! Warmup + timed iterations with median/mean/min reporting, used by the
+//! `rust/benches/*.rs` targets (all `harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Run `f` repeatedly for roughly `budget` (after `warmup` iterations)
+/// and report timing statistics.  `f`'s return value is black-boxed.
+pub fn bench<T, F: FnMut() -> T>(warmup: u32, budget: Duration, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_unstable();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    Stats { iters: n as u32, mean, median: samples[n / 2], min: samples[0] }
+}
+
+/// Format a duration human-readably (ns/µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a rate (x/s) with SI prefixes.
+pub fn fmt_rate(per_sec: f64, unit: &str) -> String {
+    if per_sec >= 1e12 {
+        format!("{:.2} T{unit}/s", per_sec / 1e12)
+    } else if per_sec >= 1e9 {
+        format!("{:.2} G{unit}/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M{unit}/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K{unit}/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} {unit}/s")
+    }
+}
+
+/// Print one result row in a stable, grep-friendly format.
+pub fn report(name: &str, stats: &Stats, extra: &str) {
+    println!(
+        "bench {name:<44} median {:>10}  mean {:>10}  min {:>10}  iters {:>5}  {extra}",
+        fmt_duration(stats.median),
+        fmt_duration(stats.mean),
+        fmt_duration(stats.min),
+        stats.iters,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = bench(2, Duration::from_millis(10), || 2u64 + 2);
+        assert!(s.iters >= 5);
+        assert!(s.min <= s.median && s.median <= s.mean * 10);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50 ms");
+        assert!(fmt_rate(1.5e9, "op").contains("Gop/s"));
+    }
+}

@@ -1,0 +1,106 @@
+//! Tiny CLI argument parser — replacement for `clap`.
+//!
+//! Supports `command --flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed getters and usage errors.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+/// Parse process args (everything after argv[0]); the first bare token
+/// becomes the subcommand.
+pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+    let mut out = Args::default();
+    let mut iter = argv.into_iter().peekable();
+    while let Some(tok) = iter.next() {
+        if let Some(stripped) = tok.strip_prefix("--") {
+            if stripped.is_empty() {
+                bail!("bare '--' is not supported");
+            }
+            if let Some((k, v)) = stripped.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                let v = iter.next().unwrap();
+                out.flags.insert(stripped.to_string(), v);
+            } else {
+                out.flags.insert(stripped.to_string(), "true".to_string());
+            }
+        } else if out.command.is_none() {
+            out.command = Some(tok);
+        } else {
+            out.positional.push(tok);
+        }
+    }
+    Ok(out)
+}
+
+impl Args {
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = p("simulate --model 3b --n 1024 --verbose");
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.get("model"), Some("3b"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 1024);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_positional() {
+        let a = p("dse --points=4 out.json");
+        assert_eq!(a.get_usize("points", 0).unwrap(), 4);
+        assert_eq!(a.positional, vec!["out.json"]);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = p("x --bias -3");
+        assert_eq!(a.get("bias"), Some("-3"));
+    }
+
+    #[test]
+    fn type_errors() {
+        assert!(p("x --n abc").get_usize("n", 0).is_err());
+    }
+}

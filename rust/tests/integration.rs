@@ -1,0 +1,242 @@
+//! Cross-layer integration tests: the L1/L2 PJRT artifacts must agree
+//! bit-for-bit with the L3 golden model, and the Python and Rust offline
+//! toolchains must be interchangeable (shared path ISA).
+//!
+//! Requires `make artifacts` (skips politely if missing so `cargo test`
+//! stays runnable on a fresh checkout).
+
+use platinum::config::PlatinumConfig;
+use platinum::encoding::{self, pack_binary, pack_ternary, ternary_planes};
+use platinum::lut::{bitserial_mpgemm, naive_mpgemm, ternary_mpgemm};
+use platinum::pathgen;
+use platinum::runtime::{HostTensor, Runtime};
+use platinum::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Path entries as the kernel artifacts expect them: (P, 4) i32 rows.
+fn path_rows(path: &pathgen::BuildPath) -> Vec<i32> {
+    path.entries
+        .iter()
+        .flat_map(|e| [e.dst as i32, e.src as i32, e.j as i32, e.sign as i32])
+        .collect()
+}
+
+/// Group a (k × n) activation matrix into the kernel's (C, c, n) layout.
+fn chunk_acts(acts: &[i32], k: usize, n: usize, c: usize) -> Vec<i32> {
+    let nchunks = k.div_ceil(c);
+    let mut out = vec![0i32; nchunks * c * n];
+    for kk in 0..k {
+        for col in 0..n {
+            out[kk * n + col] = acts[kk * n + col];
+        }
+    }
+    out
+}
+
+#[test]
+fn pjrt_lut_gemm_matches_golden_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let spec = rt.manifest().find_prefix("lut_gemm").unwrap().clone();
+    let (m, k, n) = (
+        spec.meta["m"] as usize,
+        spec.meta["k"] as usize,
+        spec.meta["n"] as usize,
+    );
+    let c = spec.meta["c"] as usize;
+
+    let mut rng = Rng::seed_from(0xA11CE);
+    let w = rng.ternary_vec(m * k);
+    let acts = rng.act_vec(k * n);
+    let packed = pack_ternary(&w, m, k, c);
+    // the RUST-generated path drives the PYTHON-lowered kernel — the
+    // cross-language ISA compatibility check
+    let path = pathgen::ternary_path(c);
+
+    let inputs = vec![
+        HostTensor::I32(packed.data.iter().map(|&b| b as i32).collect()),
+        HostTensor::I32(chunk_acts(&acts, k, n, c)),
+        HostTensor::I32(path_rows(&path)),
+    ];
+    let out = rt.execute(&spec.name, &inputs).unwrap();
+    let got = out.as_i32().expect("i32 output");
+
+    let want = naive_mpgemm(&w, m, k, &acts, n);
+    let cfg = PlatinumConfig::default();
+    let (golden, _) = ternary_mpgemm(&cfg, &packed, &acts, n);
+    assert_eq!(golden, want, "golden model sanity");
+    for i in 0..m * n {
+        assert_eq!(got[i] as i64, want[i], "PJRT vs naive at {i}");
+    }
+}
+
+#[test]
+fn pjrt_bitserial_matches_golden_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let spec = rt.manifest().find_prefix("bitserial").unwrap().clone();
+    let (m, k, n) = (
+        spec.meta["m"] as usize,
+        spec.meta["k"] as usize,
+        spec.meta["n"] as usize,
+    );
+    let c = spec.meta["c"] as usize;
+
+    let mut rng = Rng::seed_from(0xB0B);
+    let w = rng.ternary_vec(m * k);
+    let acts = rng.act_vec(k * n);
+    let (pos, neg) = ternary_planes(&w, m, k);
+    let planes = [pack_binary(&pos, m, k, c), pack_binary(&neg, m, k, c)];
+    let path = pathgen::binary_path(c);
+
+    let mut planes_i32 = Vec::with_capacity(2 * m * planes[0].chunks());
+    for p in &planes {
+        planes_i32.extend(p.data.iter().map(|&b| b as i32));
+    }
+    let inputs = vec![
+        HostTensor::I32(planes_i32),
+        HostTensor::I32(chunk_acts(&acts, k, n, c)),
+        HostTensor::I32(path_rows(&path)),
+        HostTensor::I32(vec![1, -1]),
+    ];
+    let out = rt.execute(&spec.name, &inputs).unwrap();
+    let got = out.as_i32().unwrap();
+
+    let cfg = PlatinumConfig::default();
+    let (golden, _) = bitserial_mpgemm(&cfg, &planes, &[1, -1], &acts, n);
+    for i in 0..m * n {
+        assert_eq!(got[i] as i64, golden[i], "PJRT vs golden at {i}");
+    }
+}
+
+#[test]
+fn python_paths_replay_identically_in_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    for (tag, c, entries) in [
+        ("ternary_c5", 5usize, encoding::lut_entries(5)),
+        ("binary_c7", 7, 128),
+    ] {
+        let p = platinum::isa::load_path_json(&dir.join("paths").join(format!("{tag}.json")))
+            .unwrap();
+        assert_eq!(p.c, c);
+        assert!(p.min_raw_distance >= pathgen::PIPELINE_DEPTH, "{tag} not hazard-free");
+        // python-generated path must compute the same LUT as the rust one
+        let mut rng = Rng::seed_from(42);
+        let acts: Vec<i32> = (0..c).map(|_| rng.range_i64(-127, 127) as i32).collect();
+        let rust_path = match p.kind {
+            pathgen::PathKind::Ternary => pathgen::ternary_path(c),
+            pathgen::PathKind::Binary => pathgen::binary_path(c),
+        };
+        let lut_py = pathgen::replay(&p, &acts, 1, entries);
+        let lut_rs = pathgen::replay(&rust_path, &acts, 1, entries);
+        assert_eq!(lut_py, lut_rs, "{tag}: python and rust paths disagree");
+    }
+}
+
+#[test]
+fn pjrt_bitlinear_dequantizes_correctly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let spec = rt.manifest().find_prefix("bitlinear").unwrap().clone();
+    let s = spec.meta["s"] as usize;
+    let k = spec.meta["k"] as usize;
+    let m = spec.meta["m"] as usize;
+    let c = spec.meta["c"] as usize;
+
+    let mut rng = Rng::seed_from(7);
+    let w = rng.ternary_vec(m * k);
+    let packed = pack_ternary(&w, m, k, c);
+    let x: Vec<f32> = (0..s * k).map(|_| (rng.f64() as f32 - 0.5)).collect();
+    let beta = 0.03f32;
+    let path = pathgen::ternary_path(c);
+
+    let inputs = vec![
+        HostTensor::F32(x.clone()),
+        HostTensor::I32(packed.data.iter().map(|&b| b as i32).collect()),
+        HostTensor::F32(vec![beta]),
+        HostTensor::I32(path_rows(&path)),
+    ];
+    let out = rt.execute(&spec.name, &inputs).unwrap();
+    let y = out.as_f32().unwrap();
+    assert_eq!(y.len(), s * m);
+
+    // reference: absmax-quantize per row, int matmul, dequant
+    for row in 0..s {
+        let xr = &x[row * k..(row + 1) * k];
+        let amax = xr.iter().fold(1e-5f32, |a, &v| a.max(v.abs()));
+        let scale = 127.0 / amax;
+        let xq: Vec<i64> = xr.iter().map(|&v| (v * scale).round().clamp(-127.0, 127.0) as i64).collect();
+        for col in (0..m).step_by(97) {
+            let dot: i64 = (0..k).map(|i| w[col * k + i] as i64 * xq[i]).sum();
+            let want = dot as f32 * beta / scale;
+            let got = y[row * m + col];
+            assert!(
+                (got - want).abs() <= want.abs() * 1e-4 + 1e-4,
+                "({row},{col}): {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_block_runs_and_is_causal() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let spec = rt.manifest().find("block_s8").unwrap().clone();
+    let d = spec.meta["d_model"] as usize;
+    let f = spec.meta["d_ffn"] as usize;
+    let s = spec.meta["s"] as usize;
+    let c = spec.meta["c"] as usize;
+
+    let mut rng = Rng::seed_from(99);
+    let path = pathgen::ternary_path(c);
+    let mk_packed = |m: usize, k: usize, rng: &mut Rng| -> HostTensor {
+        let w = rng.ternary_vec(m * k);
+        HostTensor::I32(pack_ternary(&w, m, k, c).data.iter().map(|&b| b as i32).collect())
+    };
+    let x: Vec<f32> = (0..s * d).map(|_| (rng.f64() as f32 - 0.5) * 0.6).collect();
+    let mut inputs = vec![HostTensor::F32(x.clone())];
+    inputs.push(mk_packed(3 * d, d, &mut rng)); // wqkv
+    inputs.push(HostTensor::F32(vec![0.02]));
+    inputs.push(mk_packed(d, d, &mut rng)); // wo
+    inputs.push(HostTensor::F32(vec![0.02]));
+    inputs.push(mk_packed(f, d, &mut rng)); // wup
+    inputs.push(HostTensor::F32(vec![0.02]));
+    inputs.push(mk_packed(d, f, &mut rng)); // wdown
+    inputs.push(HostTensor::F32(vec![0.02]));
+    inputs.push(HostTensor::F32(vec![1.0; d])); // g_attn
+    inputs.push(HostTensor::F32(vec![1.0; d])); // g_ffn
+    inputs.push(HostTensor::I32(path_rows(&path)));
+
+    let y1 = rt.execute("block_s8", &inputs).unwrap();
+    let y1 = y1.as_f32().unwrap().to_vec();
+    assert_eq!(y1.len(), s * d);
+    assert!(y1.iter().all(|v| v.is_finite()), "block produced non-finite values");
+
+    // causality: perturb the last token, earlier outputs unchanged
+    let mut x2 = x.clone();
+    x2[(s - 1) * d] += 1.0;
+    inputs[0] = HostTensor::F32(x2);
+    let y2 = rt.execute("block_s8", &inputs).unwrap();
+    let y2 = y2.as_f32().unwrap();
+    for i in 0..(s - 1) * d {
+        assert!(
+            (y1[i] - y2[i]).abs() < 1e-5,
+            "causality violated at {i}: {} vs {}",
+            y1[i],
+            y2[i]
+        );
+    }
+    let last_changed = (0..d).any(|i| (y1[(s - 1) * d + i] - y2[(s - 1) * d + i]).abs() > 1e-6);
+    assert!(last_changed, "perturbation had no effect");
+}
