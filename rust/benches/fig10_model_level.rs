@@ -1,30 +1,34 @@
 //! Fig 10 — model-level speedup and energy-efficiency improvements of
 //! Platinum on BitNet b1.58-3B (prefill N=1024 / decode N=8), vs
-//! SpikingEyeriss, Prosperity, 16-thread T-MAC, and Platinum-bs.
+//! SpikingEyeriss, Prosperity, 16-thread T-MAC, and Platinum-bs — every
+//! system selected from the engine registry and run through
+//! `Backend::run` on the same `Workload::ModelPass`.
 //!
 //! Paper values: prefill speedups 73.6x / 4.09x / 2.15x; decode 47.6x /
 //! 28.4x / 1.75x; prefill energy 32.4x / 3.23x / 20.9x / 1.34x(bs);
 //! decode energy 18.4x / 15.3x / 15.0x / 1.31x(bs).
 
-use platinum::baselines::{eyeriss, model_report, prosperity, tmac};
-use platinum::config::{ExecMode, PlatinumConfig};
+use platinum::engine::{Backend, Registry, Workload};
 use platinum::models::{B158_3B, DECODE_N, PREFILL_N};
-use platinum::sim::simulate_model;
 
 fn main() {
-    let cfg = PlatinumConfig::default();
-    let mut cfg_bs = cfg.clone();
-    cfg_bs.tiling.k = 728; // Platinum-bs retiles k to 2 rounds of 52x7
+    let registry = Registry::with_defaults();
+    let plat = registry.build("platinum-ternary").unwrap();
+    let bs = registry.build("platinum-bitserial").unwrap();
+    let eye = registry.build("eyeriss").unwrap();
+    let pro = registry.build("prosperity").unwrap();
+    let tm = registry.build("tmac").unwrap();
 
     for (stage, n, paper_spd, paper_en) in [
         ("prefill", PREFILL_N, [73.6, 4.09, 2.15], [32.4, 3.23, 20.9]),
         ("decode", DECODE_N, [47.6, 28.4, 1.75], [18.4, 15.3, 15.0]),
     ] {
-        let plat = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, n);
-        let bs = simulate_model(&cfg_bs, ExecMode::BitSerial { planes: 2 }, &B158_3B, n);
-        let eye = model_report(&B158_3B, n, |g| eyeriss::simulate(g, n));
-        let pro = model_report(&B158_3B, n, |g| prosperity::simulate(g, n));
-        let tm = model_report(&B158_3B, n, |g| tmac::simulate_m2pro(g));
+        let w = Workload::model_pass(B158_3B, n);
+        let r_plat = plat.run(&w);
+        let r_bs = bs.run(&w);
+        let r_eye = eye.run(&w);
+        let r_pro = pro.run(&w);
+        let r_tm = tm.run(&w);
 
         println!("\n== {stage} (N = {n}) — b1.58-3B ==");
         println!(
@@ -32,21 +36,21 @@ fn main() {
             "vs", "speedup", "paper", "energy sav", "paper"
         );
         for (name, lat, en, ps, pe) in [
-            ("SpikingEyeriss", eye.latency_s, eye.energy_j, paper_spd[0], paper_en[0]),
-            ("Prosperity", pro.latency_s, pro.energy_j, paper_spd[1], paper_en[1]),
-            ("T-MAC 16T", tm.latency_s, tm.energy_j, paper_spd[2], paper_en[2]),
+            ("SpikingEyeriss", r_eye.latency_s, r_eye.energy_j, paper_spd[0], paper_en[0]),
+            ("Prosperity", r_pro.latency_s, r_pro.energy_j, paper_spd[1], paper_en[1]),
+            ("T-MAC 16T", r_tm.latency_s, r_tm.energy_j, paper_spd[2], paper_en[2]),
         ] {
             println!(
                 "{:<16} {:>11.2}x {:>11.2}x {:>13.2}x {:>13.2}x",
                 name,
-                lat / plat.latency_s,
+                lat / r_plat.latency_s,
                 ps,
-                en / plat.energy_j(),
+                en / r_plat.energy_j,
                 pe
             );
         }
-        let bs_spd = bs.latency_s / plat.latency_s;
-        let bs_en = bs.energy_j() / plat.energy_j();
+        let bs_spd = r_bs.latency_s / r_plat.latency_s;
+        let bs_en = r_bs.energy_j / r_plat.energy_j;
         let paper_bs_en = if stage == "prefill" { 1.34 } else { 1.31 };
         println!(
             "{:<16} {:>11.2}x {:>11} {:>13.2}x {:>13.2}x",
@@ -54,9 +58,9 @@ fn main() {
         );
         println!(
             "Platinum absolute: {:.0} GOP/s, {:.3} J, {:.2} W",
-            plat.throughput_gops,
-            plat.energy_j(),
-            plat.power_w()
+            r_plat.throughput_gops,
+            r_plat.energy_j,
+            r_plat.power_w()
         );
     }
     println!("\npaper shape (who wins, roughly what factor): HOLDS (see asserts in `cargo test`)");

@@ -1,16 +1,19 @@
 //! Fig 8 — kernel-level latency across Platinum, T-MAC (CPU),
 //! SpikingEyeriss and Prosperity, on every unique BitLinear kernel shape
 //! of the three BitNet-b1.58 models, for prefill (N=1024) and decode
-//! (N=8) — the same grid the paper plots.
+//! (N=8) — the same grid the paper plots.  All systems run through the
+//! engine registry.
 
 use platinum::analysis::Gemm;
-use platinum::baselines::{eyeriss, prosperity, tmac};
-use platinum::config::{ExecMode, PlatinumConfig};
+use platinum::engine::{Backend, Registry, Workload};
 use platinum::models::{ALL_MODELS, DECODE_N, PREFILL_N};
-use platinum::sim::simulate_gemm;
 
 fn main() {
-    let cfg = PlatinumConfig::default();
+    let registry = Registry::with_defaults();
+    let eye = registry.build("eyeriss").unwrap();
+    let pro = registry.build("prosperity").unwrap();
+    let tm = registry.build("tmac").unwrap();
+    let plat = registry.build("platinum-ternary").unwrap();
     println!("Fig 8: kernel latency (ms) — lower is better");
     for (stage, n) in [("prefill", PREFILL_N), ("decode", DECODE_N)] {
         println!("\n== {stage} (N = {n}) ==");
@@ -20,23 +23,23 @@ fn main() {
         );
         for model in &ALL_MODELS {
             for (m, k) in model.unique_shapes() {
-                let g = Gemm::new(m, k, n);
-                let eye = eyeriss::simulate(g, n).latency_s * 1e3;
-                let pro = prosperity::simulate(g, n).latency_s * 1e3;
-                let tm = tmac::simulate_m2pro(g).latency_s * 1e3;
-                let plat = simulate_gemm(&cfg, ExecMode::Ternary, g).latency_s * 1e3;
-                let best_base = pro.min(tm);
+                let w = Workload::Kernel(Gemm::new(m, k, n));
+                let r_eye = eye.run(&w).latency_s * 1e3;
+                let r_pro = pro.run(&w).latency_s * 1e3;
+                let r_tm = tm.run(&w).latency_s * 1e3;
+                let r_plat = plat.run(&w).latency_s * 1e3;
+                let best_base = r_pro.min(r_tm);
                 println!(
                     "{:<10} {:<14} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>9.2}x",
                     model.name,
                     format!("{m}x{k}"),
-                    eye,
-                    pro,
-                    tm,
-                    plat,
-                    best_base / plat
+                    r_eye,
+                    r_pro,
+                    r_tm,
+                    r_plat,
+                    best_base / r_plat
                 );
-                assert!(plat < eye && plat < pro, "Platinum must beat the ASIC baselines");
+                assert!(r_plat < r_eye && r_plat < r_pro, "Platinum must beat the ASIC baselines");
             }
         }
     }

@@ -1,14 +1,17 @@
 //! Fig 9 — kernel-level energy across Platinum, T-MAC (CPU),
-//! SpikingEyeriss and Prosperity, same kernel grid as Fig 8.
+//! SpikingEyeriss and Prosperity, same kernel grid as Fig 8, all
+//! systems through the engine registry.
 
 use platinum::analysis::Gemm;
-use platinum::baselines::{eyeriss, prosperity, tmac};
-use platinum::config::{ExecMode, PlatinumConfig};
+use platinum::engine::{Backend, Registry, Workload};
 use platinum::models::{ALL_MODELS, DECODE_N, PREFILL_N};
-use platinum::sim::simulate_gemm;
 
 fn main() {
-    let cfg = PlatinumConfig::default();
+    let registry = Registry::with_defaults();
+    let eye = registry.build("eyeriss").unwrap();
+    let pro = registry.build("prosperity").unwrap();
+    let tm = registry.build("tmac").unwrap();
+    let plat = registry.build("platinum-ternary").unwrap();
     println!("Fig 9: kernel energy (mJ) — lower is better");
     for (stage, n) in [("prefill", PREFILL_N), ("decode", DECODE_N)] {
         println!("\n== {stage} (N = {n}) ==");
@@ -18,23 +21,23 @@ fn main() {
         );
         for model in &ALL_MODELS {
             for (m, k) in model.unique_shapes() {
-                let g = Gemm::new(m, k, n);
-                let eye = eyeriss::simulate(g, n).energy_j * 1e3;
-                let pro = prosperity::simulate(g, n).energy_j * 1e3;
-                let tm = tmac::simulate_m2pro(g).energy_j * 1e3;
-                let plat = simulate_gemm(&cfg, ExecMode::Ternary, g).energy_j() * 1e3;
-                let best_base = pro.min(tm).min(eye);
+                let w = Workload::Kernel(Gemm::new(m, k, n));
+                let e_eye = eye.run(&w).energy_j * 1e3;
+                let e_pro = pro.run(&w).energy_j * 1e3;
+                let e_tm = tm.run(&w).energy_j * 1e3;
+                let e_plat = plat.run(&w).energy_j * 1e3;
+                let best_base = e_pro.min(e_tm).min(e_eye);
                 println!(
                     "{:<10} {:<14} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>9.2}x",
                     model.name,
                     format!("{m}x{k}"),
-                    eye,
-                    pro,
-                    tm,
-                    plat,
-                    best_base / plat
+                    e_eye,
+                    e_pro,
+                    e_tm,
+                    e_plat,
+                    best_base / e_plat
                 );
-                assert!(plat < eye && plat < tm, "Platinum must beat Eyeriss and T-MAC energy");
+                assert!(e_plat < e_eye && e_plat < e_tm, "Platinum must beat Eyeriss/T-MAC");
             }
         }
     }

@@ -7,6 +7,7 @@ use platinum::analysis::Gemm;
 use platinum::baselines::tmac::TMacCpu;
 use platinum::config::{ExecMode, PlatinumConfig};
 use platinum::encoding::pack_ternary;
+use platinum::engine::{Backend, PlatinumBackend, Registry, Workload};
 use platinum::lut::{naive_mpgemm, ternary_mpgemm};
 use platinum::models::B158_3B;
 use platinum::pathgen;
@@ -67,6 +68,17 @@ fn main() {
 
     let s = bench(1, budget, || simulate_model(&cfg, ExecMode::Ternary, &B158_3B, 1024));
     report("sim/model_3B_prefill", &s, "");
+
+    // --- engine API overhead ------------------------------------------------
+    // the unified Backend surface must stay a zero-ish-cost wrapper over
+    // the raw simulator calls above
+    let be = PlatinumBackend::ternary();
+    let s = bench(1, budget, || be.run(&Workload::Kernel(g)));
+    report("engine/kernel_3200x3200x1024", &s, "");
+    let s = bench(1, budget, || be.run(&Workload::prefill(B158_3B)));
+    report("engine/model_3B_prefill", &s, "");
+    let s = bench(2, budget, || Registry::with_defaults().build("prosperity").unwrap());
+    report("engine/registry_build", &s, "");
 
     // --- manifest / json ----------------------------------------------------
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

@@ -1,53 +1,59 @@
 //! Table I — accelerator specifications: type, frequency, technology,
 //! PE count, area, and throughput (GOP/s, naive-adds normalization on
-//! b1.58-3B prefill N=1024).
+//! b1.58-3B prefill N=1024).  Specs come from each engine backend's
+//! `describe()`, throughput from `Backend::run` — the whole table is
+//! registry-driven.
 
-use platinum::baselines::{eyeriss, model_report, prosperity, tmac};
-use platinum::config::{ExecMode, PlatinumConfig};
-use platinum::energy::AreaModel;
-use platinum::models::{B158_3B, PREFILL_N};
-use platinum::sim::simulate_model;
+use platinum::engine::{Backend, Registry, Workload};
+use platinum::models::B158_3B;
 
 fn main() {
-    let cfg = PlatinumConfig::default();
-    let plat = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, PREFILL_N);
-    let area = AreaModel::platinum(&cfg).breakdown().total();
-    let eye = model_report(&B158_3B, PREFILL_N, |g| eyeriss::simulate(g, PREFILL_N));
-    let pro = model_report(&B158_3B, PREFILL_N, |g| prosperity::simulate(g, PREFILL_N));
-    let tm = model_report(&B158_3B, PREFILL_N, |g| tmac::simulate_m2pro(g));
+    let registry = Registry::with_defaults();
+    let systems = [
+        ("eyeriss", 20.8),
+        ("prosperity", 375.0),
+        ("tmac", 715.0),
+        ("platinum-ternary", 1534.0),
+    ];
+    let w = Workload::prefill(B158_3B);
 
     println!("Table I: accelerator specifications (throughput on b1.58-3B, N=1024)");
     println!(
-        "{:<16} {:>6} {:>11} {:>10} {:>8} {:>12} {:>14} {:>12}",
+        "{:<20} {:>6} {:>11} {:>10} {:>8} {:>12} {:>14} {:>12}",
         "", "type", "freq (MHz)", "tech (nm)", "#PEs", "area (mm2)", "GOP/s (ours)", "paper"
     );
-    println!(
-        "{:<16} {:>6} {:>11} {:>10} {:>8} {:>12} {:>14.1} {:>12}",
-        "Eyeriss", "ASIC", 500, 28, 168, "1.07", eye.throughput_gops, "20.8"
-    );
-    println!(
-        "{:<16} {:>6} {:>11} {:>10} {:>8} {:>12} {:>14.1} {:>12}",
-        "Prosperity", "ASIC", 500, 28, 256, "1.06*", pro.throughput_gops, "375"
-    );
-    println!(
-        "{:<16} {:>6} {:>11} {:>10} {:>8} {:>12} {:>14.1} {:>12}",
-        "T-MAC", "CPU", 3490, 5, "-", "289", tm.throughput_gops, "715"
-    );
-    println!(
-        "{:<16} {:>6} {:>11} {:>10} {:>8} {:>12.3} {:>14.1} {:>12}",
-        "Platinum (ours)", "ASIC", 500, 28, cfg.num_pes(), area, plat.throughput_gops, "1534"
-    );
-    println!("\n* Prosperity scaled for fair comparison (as in the paper)");
-    println!("#PEs Platinum = L x n_cols = 52 x 8 = {}", cfg.num_pes());
+    let mut rows = Vec::new();
+    let mut plat_area = None;
+    for (id, paper) in systems {
+        let be = registry.build(id).unwrap();
+        let info = be.describe();
+        let r = be.run(&w);
+        println!(
+            "{:<20} {:>6} {:>11.0} {:>10} {:>8} {:>12} {:>14.1} {:>12}",
+            info.name,
+            info.kind.label(),
+            info.freq_hz / 1e6,
+            info.tech_nm.map(|t| t.to_string()).unwrap_or_else(|| "-".to_string()),
+            info.pes.map(|p| p.to_string()).unwrap_or_else(|| "-".to_string()),
+            info.area_mm2.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".to_string()),
+            r.throughput_gops,
+            paper
+        );
+        rows.push((info.name, r.throughput_gops, paper));
+        if id == "platinum-ternary" {
+            plat_area = info.area_mm2;
+        }
+    }
+    println!("\n(Prosperity area scaled for fair comparison, as in the paper)");
 
     // residuals vs paper
-    for (name, ours, paper) in [
-        ("Eyeriss", eye.throughput_gops, 20.8),
-        ("Prosperity", pro.throughput_gops, 375.0),
-        ("T-MAC", tm.throughput_gops, 715.0),
-        ("Platinum", plat.throughput_gops, 1534.0),
-    ] {
-        println!("residual {:<12} {:>+7.1}%", name, (ours / paper - 1.0) * 100.0);
+    for (name, ours, paper) in rows {
+        println!("residual {:<16} {:>+7.1}%", name, (ours / paper - 1.0) * 100.0);
     }
-    println!("area residual Platinum {:>+7.1}% (ours {:.3} vs paper 0.955)", (area / 0.955 - 1.0) * 100.0, area);
+    let area = plat_area.expect("platinum-ternary models its area");
+    println!(
+        "area residual Platinum {:>+7.1}% (ours {:.3} vs paper 0.955)",
+        (area / 0.955 - 1.0) * 100.0,
+        area
+    );
 }

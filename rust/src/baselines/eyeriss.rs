@@ -74,12 +74,12 @@ pub fn simulate(g: Gemm, _n_model: usize) -> BaselineReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::model_report;
-    use crate::models::{B158_3B, PREFILL_N};
+    use crate::engine::{Backend, EyerissBackend, Workload};
+    use crate::models::B158_3B;
 
     #[test]
     fn table1_prefill_throughput() {
-        let r = model_report(&B158_3B, PREFILL_N, |g| simulate(g, PREFILL_N));
+        let r = EyerissBackend.run(&Workload::prefill(B158_3B));
         assert!(
             (r.throughput_gops - 20.8).abs() / 20.8 < 0.3,
             "{:.1} GOP/s vs Table I 20.8",

@@ -10,8 +10,10 @@
 //!   **real multithreaded implementation** measured on this machine
 //!   (`tmac::TMacCpu`), used by the hotpath bench and the examples.
 //!
-//! Every baseline returns the same [`BaselineReport`] so Fig 8/9/10 can
-//! tabulate all systems uniformly.
+//! Each baseline's `simulate` free function returns a [`BaselineReport`];
+//! the preferred surface is [`crate::engine`], whose backends wrap these
+//! functions and tabulate all systems through the unified
+//! [`crate::engine::Report`] (that is what Fig 8/9/10 and the CLI use).
 
 pub mod eyeriss;
 pub mod prosperity;
@@ -40,6 +42,10 @@ impl BaselineReport {
 }
 
 /// Aggregate a per-kernel baseline over a full model pass.
+#[deprecated(
+    note = "use engine::Backend::run with Workload::ModelPass — the engine \
+            aggregates identically and returns the unified Report"
+)]
 pub fn model_report<F: Fn(Gemm) -> BaselineReport>(
     model: &BitNetModel,
     n: usize,
@@ -59,21 +65,26 @@ pub fn model_report<F: Fn(Gemm) -> BaselineReport>(
 
 #[cfg(test)]
 mod tests {
-    use super::*;
-    use crate::config::{ExecMode, PlatinumConfig};
-    use crate::models::{B158_3B, DECODE_N, PREFILL_N};
-    use crate::sim::simulate_model;
+    use crate::engine::{Backend, Registry, Report, Workload};
+    use crate::models::B158_3B;
+
+    /// Run a backend id from the registry on a b1.58-3B model pass —
+    /// the fig 10 tests now exercise exactly the engine surface the CLI
+    /// and benches use.
+    fn run(id: &str, w: &Workload) -> Report {
+        Registry::with_defaults().build(id).unwrap().run(w)
+    }
 
     /// E9 / Fig 10 — the paper's headline model-level comparisons.
     /// Our substitute models must land in the same bands ("who wins, by
     /// roughly what factor").
     #[test]
     fn fig10_prefill_speedups_hold() {
-        let cfg = PlatinumConfig::default();
-        let plat = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, PREFILL_N);
-        let eye = model_report(&B158_3B, PREFILL_N, |g| eyeriss::simulate(g, PREFILL_N));
-        let pro = model_report(&B158_3B, PREFILL_N, |g| prosperity::simulate(g, PREFILL_N));
-        let tm = model_report(&B158_3B, PREFILL_N, |g| tmac::simulate_m2pro(g));
+        let w = Workload::prefill(B158_3B);
+        let plat = run("platinum-ternary", &w);
+        let eye = run("eyeriss", &w);
+        let pro = run("prosperity", &w);
+        let tm = run("tmac", &w);
 
         let s_eye = eye.latency_s / plat.latency_s;
         let s_pro = pro.latency_s / plat.latency_s;
@@ -86,11 +97,11 @@ mod tests {
 
     #[test]
     fn fig10_decode_speedups_hold() {
-        let cfg = PlatinumConfig::default();
-        let plat = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, DECODE_N);
-        let eye = model_report(&B158_3B, DECODE_N, |g| eyeriss::simulate(g, DECODE_N));
-        let pro = model_report(&B158_3B, DECODE_N, |g| prosperity::simulate(g, DECODE_N));
-        let tm = model_report(&B158_3B, DECODE_N, |g| tmac::simulate_m2pro(g));
+        let w = Workload::decode(B158_3B);
+        let plat = run("platinum-ternary", &w);
+        let eye = run("eyeriss", &w);
+        let pro = run("prosperity", &w);
+        let tm = run("tmac", &w);
         let s_eye = eye.latency_s / plat.latency_s;
         let s_pro = pro.latency_s / plat.latency_s;
         let s_tm = tm.latency_s / plat.latency_s;
@@ -103,12 +114,12 @@ mod tests {
 
     #[test]
     fn fig10_energy_ratios_hold() {
-        let cfg = PlatinumConfig::default();
-        let plat = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, PREFILL_N);
-        let eye = model_report(&B158_3B, PREFILL_N, |g| eyeriss::simulate(g, PREFILL_N));
-        let pro = model_report(&B158_3B, PREFILL_N, |g| prosperity::simulate(g, PREFILL_N));
-        let tm = model_report(&B158_3B, PREFILL_N, |g| tmac::simulate_m2pro(g));
-        let e_plat = plat.energy_j();
+        let w = Workload::prefill(B158_3B);
+        let plat = run("platinum-ternary", &w);
+        let eye = run("eyeriss", &w);
+        let pro = run("prosperity", &w);
+        let tm = run("tmac", &w);
+        let e_plat = plat.energy_j;
         // paper prefill energy ratios: 32.4× (Eyeriss), 3.23× (Prosperity),
         // 20.9× (T-MAC) — shape: Eyeriss ≫ T-MAC ≫ Prosperity > Platinum
         let r_eye = eye.energy_j / e_plat;
@@ -124,9 +135,10 @@ mod tests {
     fn table1_throughputs_hold() {
         // Table I GOP/s on 3B prefill: Eyeriss 20.8, Prosperity 375,
         // T-MAC 715 (±35 %)
-        let eye = model_report(&B158_3B, PREFILL_N, |g| eyeriss::simulate(g, PREFILL_N));
-        let pro = model_report(&B158_3B, PREFILL_N, |g| prosperity::simulate(g, PREFILL_N));
-        let tm = model_report(&B158_3B, PREFILL_N, |g| tmac::simulate_m2pro(g));
+        let w = Workload::prefill(B158_3B);
+        let eye = run("eyeriss", &w);
+        let pro = run("prosperity", &w);
+        let tm = run("tmac", &w);
         assert!((eye.throughput_gops - 20.8).abs() / 20.8 < 0.35, "{}", eye.throughput_gops);
         assert!((pro.throughput_gops - 375.0).abs() / 375.0 < 0.35, "{}", pro.throughput_gops);
         assert!((tm.throughput_gops - 715.0).abs() / 715.0 < 0.35, "{}", tm.throughput_gops);

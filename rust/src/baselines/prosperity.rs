@@ -128,8 +128,8 @@ pub fn simulate(g: Gemm, _n_model: usize) -> BaselineReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::model_report;
-    use crate::models::{B158_3B, DECODE_N, PREFILL_N};
+    use crate::engine::{Backend, ProsperityBackend, Workload};
+    use crate::models::B158_3B;
 
     #[test]
     fn reuse_factor_is_meaningful() {
@@ -140,7 +140,7 @@ mod tests {
 
     #[test]
     fn table1_prefill_throughput() {
-        let r = model_report(&B158_3B, PREFILL_N, |g| simulate(g, PREFILL_N));
+        let r = ProsperityBackend.run(&Workload::prefill(B158_3B));
         assert!(
             (r.throughput_gops - 375.0).abs() / 375.0 < 0.3,
             "{:.0} GOP/s vs Table I 375",
@@ -151,8 +151,8 @@ mod tests {
     #[test]
     fn decode_underutilizes_n_lanes() {
         // §V-C: Prosperity's decode throughput collapses (N=8 of 64 lanes)
-        let pre = model_report(&B158_3B, PREFILL_N, |g| simulate(g, PREFILL_N));
-        let dec = model_report(&B158_3B, DECODE_N, |g| simulate(g, DECODE_N));
+        let pre = ProsperityBackend.run(&Workload::prefill(B158_3B));
+        let dec = ProsperityBackend.run(&Workload::decode(B158_3B));
         let drop = pre.throughput_gops / dec.throughput_gops;
         assert!(drop > 4.0, "decode drop only {drop:.1}×");
     }

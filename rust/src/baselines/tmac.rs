@@ -186,14 +186,14 @@ impl TMacCpu {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::model_report;
+    use crate::engine::{Backend, TMacBackend, Workload};
     use crate::lut::naive_mpgemm;
-    use crate::models::{B158_3B, PREFILL_N};
+    use crate::models::B158_3B;
     use crate::util::rng::Rng;
 
     #[test]
     fn table1_m2pro_throughput() {
-        let r = model_report(&B158_3B, PREFILL_N, |g| simulate_m2pro(g));
+        let r = TMacBackend.run(&Workload::prefill(B158_3B));
         assert!(
             (r.throughput_gops - 715.0).abs() / 715.0 < 0.25,
             "{:.0} GOP/s vs Table I 715",

@@ -11,7 +11,7 @@
 
 use crate::analysis::Gemm;
 use crate::config::{ExecMode, PlatinumConfig};
-use crate::sim::{simulate_gemm, SimReport};
+use crate::engine::{Backend, PlatinumBackend, Workload};
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -91,30 +91,43 @@ impl ServeStats {
 
 /// The serving coordinator: single-threaded batch loop (the accelerator
 /// is one device; concurrency lives in the request producers).
+///
+/// Timing/energy pricing goes through a pluggable
+/// [`engine::Backend`](crate::engine::Backend) — Platinum by default,
+/// any registered system via [`Server::with_backend`].
 pub struct Server<E: Executor> {
     exec: E,
-    cfg: PlatinumConfig,
+    pricer: Box<dyn Backend>,
     policy: BatchPolicy,
     pub stats: ServeStats,
 }
 
 impl<E: Executor> Server<E> {
+    /// Price on the cycle-accurate Platinum model at `cfg` (ternary).
     pub fn new(exec: E, cfg: PlatinumConfig, policy: BatchPolicy) -> Self {
-        Server { exec, cfg, policy, stats: ServeStats::default() }
+        Server::with_backend(
+            exec,
+            Box::new(PlatinumBackend::with_config(cfg, ExecMode::Ternary)),
+            policy,
+        )
     }
 
-    /// Price one request's GEMMs on the simulator (per-batch share).
+    /// Price on an arbitrary engine backend.
+    pub fn with_backend(exec: E, pricer: Box<dyn Backend>, policy: BatchPolicy) -> Self {
+        Server { exec, pricer, policy, stats: ServeStats::default() }
+    }
+
+    /// Price one request batch's GEMMs on the engine backend.
     fn price(&self, seq: usize, batch: usize) -> (f64, f64) {
-        let mut lat = 0.0;
-        let mut en = 0.0;
-        for g in self.exec.gemms(seq) {
-            // the batch shares the N dimension: one dispatch serves all
-            let gb = Gemm::new(g.m, g.k, g.n * batch);
-            let r: SimReport = simulate_gemm(&self.cfg, ExecMode::Ternary, gb);
-            lat += r.latency_s;
-            en += r.energy_j();
-        }
-        (lat, en)
+        // the batch shares the N dimension: one dispatch serves all
+        let gemms: Vec<Gemm> = self
+            .exec
+            .gemms(seq)
+            .iter()
+            .map(|g| Gemm::new(g.m, g.k, g.n * batch))
+            .collect();
+        let r = self.pricer.run(&Workload::Batch(gemms));
+        (r.latency_s, r.energy_j)
     }
 
     /// Drain the channel until it closes, batching and executing.
@@ -278,6 +291,28 @@ mod tests {
         assert!(server.stats.batches <= 10);
         assert!(server.stats.mean_batch_size() >= 1.0);
         assert!(out.iter().all(|r| r.y.len() == 16 && r.sim_latency_s > 0.0));
+    }
+
+    #[test]
+    fn pricing_backend_is_pluggable() {
+        // same functional path, priced on a baseline instead of Platinum
+        let exec = GoldenExec::new(24, 8);
+        let mut server = Server::with_backend(
+            exec,
+            Box::new(crate::engine::EyerissBackend),
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+        );
+        let (tx, rx) = mpsc::channel();
+        let mut rng = Rng::seed_from(5);
+        for id in 0..4u64 {
+            let x: Vec<f32> = (0..24).map(|_| (rng.f64() as f32 - 0.5)).collect();
+            tx.send(Request { id, x, seq: 1, arrived: Instant::now() }).unwrap();
+        }
+        drop(tx);
+        let mut out = Vec::new();
+        server.run(rx, &mut out).unwrap();
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|r| r.sim_latency_s > 0.0 && r.sim_energy_j > 0.0));
     }
 
     #[test]

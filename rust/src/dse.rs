@@ -8,8 +8,8 @@
 
 use crate::config::{ExecMode, PlatinumConfig, Stationarity, Tiling};
 use crate::energy::AreaModel;
+use crate::engine::{Backend, PlatinumBackend, Workload};
 use crate::models::{BitNetModel, ALL_MODELS, PREFILL_N};
-use crate::sim::simulate_model;
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -50,18 +50,20 @@ pub fn default_grid() -> Vec<Tiling> {
     out
 }
 
-/// Evaluate one tiling on the given models' prefill stages.
+/// Evaluate one tiling on the given models' prefill stages (through the
+/// engine's Platinum backend — the sweep is itself an engine consumer).
 pub fn evaluate(tiling: Tiling, models: &[BitNetModel]) -> DsePoint {
     let mut cfg = PlatinumConfig::default();
     cfg.tiling = tiling;
     let area_model = AreaModel::platinum(&cfg);
     let area = area_model.breakdown().total();
+    let backend = PlatinumBackend::with_config(cfg, ExecMode::Ternary);
     let mut latency = 0.0;
     let mut energy = 0.0;
     for model in models {
-        let r = simulate_model(&cfg, ExecMode::Ternary, model, PREFILL_N);
+        let r = backend.run(&Workload::model_pass(*model, PREFILL_N));
         latency += r.latency_s;
-        energy += r.energy_j();
+        energy += r.energy_j;
     }
     DsePoint { tiling, latency_s: latency, energy_j: energy, area_mm2: area, sram_kb: area_model.total_sram_kb() }
 }

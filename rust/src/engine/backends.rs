@@ -1,0 +1,458 @@
+//! [`Backend`](super::Backend) implementations for every system the
+//! paper compares (§V-A): Platinum in both execution modes, the
+//! SpikingEyeriss and Prosperity ASIC baselines, the analytical T-MAC
+//! CPU model, and the real measured T-MAC CPU kernel.
+//!
+//! All backends share one aggregation routine ([`aggregate`]) for
+//! multi-kernel workloads; its scalar arithmetic (latency, energy,
+//! cycles, throughput, phases, activity) mirrors the legacy
+//! `sim::simulate_model` / `baselines::model_report` accumulation
+//! order exactly — those fields are pinned bit-identical by
+//! `tests/engine_api.rs`.  One deliberate divergence: multi-kernel
+//! `utilization.adders`/`dram_bw` are busy-/cycle-weighted averages
+//! across kernels, whereas `simulate_model` carried the first kernel's
+//! values through unchanged (the engine's number is the meaningful
+//! one for a model pass).
+
+use super::report::{BackendInfo, BackendKind, Report};
+use super::workload::Workload;
+use super::Backend;
+use crate::analysis::Gemm;
+use crate::baselines::{eyeriss, prosperity, tmac};
+use crate::config::{ExecMode, PlatinumConfig};
+use crate::energy::AreaModel;
+use crate::sim::{simulate_gemm, Activity, EnergyBreakdown, PhaseCycles, Utilization};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Aggregate per-kernel reports into one workload report.
+///
+/// Scalar metrics accumulate in kernel order with per-kernel `count`
+/// scaling — the exact float-op sequence of the legacy aggregators.
+/// Detail sections (cycles/phases/activity/energy breakdown) survive
+/// only when every kernel report carries them.
+pub(crate) fn aggregate<F>(
+    backend: &str,
+    label: String,
+    pairs: &[(Gemm, usize)],
+    mut run: F,
+) -> Report
+where
+    F: FnMut(Gemm) -> Report,
+{
+    let mut latency = 0.0f64;
+    let mut energy_scalar = 0.0f64;
+    let mut ops: u64 = 0;
+    let mut detail = true;
+    let mut cycles: u64 = 0;
+    let mut phases = PhaseCycles::default();
+    let mut activity = Activity::default();
+    let mut energy = EnergyBreakdown::default();
+    let mut adder_busy = 0.0f64;
+    let mut dram_busy = 0.0f64;
+
+    for &(g, count) in pairs {
+        let r = run(g);
+        let cf = count as f64;
+        let cu = count as u64;
+        latency += r.latency_s * cf;
+        energy_scalar += r.energy_j * cf;
+        ops += g.naive_adds() * cu;
+        if detail {
+            match (r.cycles, r.phases, r.activity, r.energy_breakdown) {
+                (Some(c), Some(p), Some(a), Some(e)) => {
+                    cycles += c * cu;
+                    let mut p2 = p;
+                    p2.scale(cu);
+                    phases.add(&p2);
+                    let mut a2 = a;
+                    a2.scale(cu);
+                    activity.add(&a2);
+                    let mut e2 = e;
+                    e2.scale(cf);
+                    energy.add(&e2);
+                    if let Some(u) = r.utilization {
+                        adder_busy += u.adders * (p2.busy() as f64);
+                        dram_busy += u.dram_bw * ((c * cu) as f64);
+                    }
+                }
+                _ => detail = false,
+            }
+        }
+    }
+
+    let mut out = Report {
+        backend: backend.to_string(),
+        workload: label,
+        latency_s: latency,
+        energy_j: energy_scalar,
+        throughput_gops: if latency > 0.0 { ops as f64 / latency / 1e9 } else { 0.0 },
+        ops,
+        ..Report::default()
+    };
+    if detail {
+        // totalling the summed breakdown reproduces simulate_model's
+        // energy exactly (components summed first, total last)
+        out.energy_j = energy.total();
+        out.cycles = Some(cycles);
+        out.phases = Some(phases);
+        out.activity = Some(activity);
+        out.energy_breakdown = Some(energy);
+        let busy = phases.busy();
+        out.utilization = Some(Utilization {
+            adders: if busy > 0 { adder_busy / busy as f64 } else { 0.0 },
+            lut_ports: if busy > 0 {
+                (phases.construct + phases.query) as f64 / busy as f64
+            } else {
+                0.0
+            },
+            dram_bw: if cycles > 0 { dram_busy / cycles as f64 } else { 0.0 },
+        });
+    }
+    out
+}
+
+/// Run a workload by mapping a per-kernel closure over its kernels.
+fn run_workload<F>(backend: &str, w: &Workload, run: F) -> Report
+where
+    F: FnMut(Gemm) -> Report,
+{
+    aggregate(backend, w.label(), &w.kernels(), run)
+}
+
+// ---------------------------------------------------------------------------
+// Platinum (cycle-accurate simulator, per ExecMode)
+// ---------------------------------------------------------------------------
+
+/// Cycle-accurate Platinum, in either execution mode.
+pub struct PlatinumBackend {
+    cfg: PlatinumConfig,
+    mode: ExecMode,
+}
+
+impl PlatinumBackend {
+    /// The shipped design point in ternary mode (the paper's headline
+    /// "Platinum" rows).
+    pub fn ternary() -> Self {
+        PlatinumBackend::with_config(PlatinumConfig::default(), ExecMode::Ternary)
+    }
+
+    /// The bit-serial configuration ("Platinum-bs"): same silicon, the
+    /// binary build path, k retiled to 728 = 2 rounds of 52×7 chunks.
+    pub fn bitserial() -> Self {
+        let mut cfg = PlatinumConfig::default();
+        cfg.tiling.k = 728;
+        PlatinumBackend::with_config(cfg, ExecMode::BitSerial { planes: 2 })
+    }
+
+    /// Arbitrary configuration (DSE sweeps, serving pricers).
+    pub fn with_config(cfg: PlatinumConfig, mode: ExecMode) -> Self {
+        PlatinumBackend { cfg, mode }
+    }
+
+    pub fn config(&self) -> &PlatinumConfig {
+        &self.cfg
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+}
+
+impl Backend for PlatinumBackend {
+    fn id(&self) -> &str {
+        match self.mode {
+            ExecMode::Ternary => "platinum-ternary",
+            ExecMode::BitSerial { .. } => "platinum-bitserial",
+        }
+    }
+
+    fn describe(&self) -> BackendInfo {
+        BackendInfo {
+            id: match self.mode {
+                ExecMode::Ternary => "platinum-ternary",
+                ExecMode::BitSerial { .. } => "platinum-bitserial",
+            },
+            name: self.mode.label(),
+            kind: BackendKind::Asic,
+            freq_hz: self.cfg.freq_hz,
+            pes: Some(self.cfg.num_pes()),
+            area_mm2: Some(AreaModel::platinum(&self.cfg).breakdown().total()),
+            tech_nm: Some(28),
+            notes: "cycle-accurate simulator, §IV phase laws (paper: 0.955 mm², 1534 GOP/s)",
+        }
+    }
+
+    fn run(&self, w: &Workload) -> Report {
+        let id = self.id().to_string();
+        run_workload(&id, w, |g| Report::from_sim(&id, &simulate_gemm(&self.cfg, self.mode, g)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpikingEyeriss
+// ---------------------------------------------------------------------------
+
+/// SpikingEyeriss: 168-PE row-stationary array, ternary bit-serial
+/// two-pass mapping (analytical model calibrated to Table I).
+pub struct EyerissBackend;
+
+impl Backend for EyerissBackend {
+    fn id(&self) -> &str {
+        "eyeriss"
+    }
+
+    fn describe(&self) -> BackendInfo {
+        BackendInfo {
+            id: "eyeriss",
+            name: "SpikingEyeriss",
+            kind: BackendKind::Asic,
+            freq_hz: eyeriss::FREQ_HZ,
+            pes: Some(eyeriss::PES_ROWS * eyeriss::PES_COLS),
+            area_mm2: Some(1.07),
+            tech_nm: Some(28),
+            notes: "row-stationary GEMM mapping, calibrated to Table I (20.8 GOP/s prefill)",
+        }
+    }
+
+    fn run(&self, w: &Workload) -> Report {
+        run_workload("eyeriss", w, |g| {
+            let r = eyeriss::simulate(g, g.n);
+            Report::from_scalars("eyeriss", g, r.latency_s, r.energy_j)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prosperity
+// ---------------------------------------------------------------------------
+
+/// Prosperity (HPCA'25): 256-PE product-sparsity accelerator with
+/// runtime shortcut scheduling (analytical model calibrated to Table I).
+pub struct ProsperityBackend;
+
+impl Backend for ProsperityBackend {
+    fn id(&self) -> &str {
+        "prosperity"
+    }
+
+    fn describe(&self) -> BackendInfo {
+        BackendInfo {
+            id: "prosperity",
+            name: "Prosperity",
+            kind: BackendKind::Asic,
+            freq_hz: prosperity::FREQ_HZ,
+            pes: Some(prosperity::NUM_PES),
+            area_mm2: Some(1.06),
+            tech_nm: Some(28),
+            notes: "product-sparsity model, 32.3% dynamic-scheduler power tax (Table I: 375 GOP/s)",
+        }
+    }
+
+    fn run(&self, w: &Workload) -> Report {
+        run_workload("prosperity", w, |g| {
+            let r = prosperity::simulate(g, g.n);
+            Report::from_scalars("prosperity", g, r.latency_s, r.energy_j)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// T-MAC (analytical M2 Pro model)
+// ---------------------------------------------------------------------------
+
+/// T-MAC on the paper's CPU setup: 16 threads on an Apple M2 Pro,
+/// analytical model calibrated to Table I's 715 GOP/s.
+pub struct TMacBackend;
+
+impl Backend for TMacBackend {
+    fn id(&self) -> &str {
+        "tmac"
+    }
+
+    fn describe(&self) -> BackendInfo {
+        BackendInfo {
+            id: "tmac",
+            name: "T-MAC (M2 Pro)",
+            kind: BackendKind::Cpu,
+            freq_hz: tmac::M2_FREQ_HZ,
+            pes: None,
+            area_mm2: Some(289.0),
+            tech_nm: Some(5),
+            notes: "analytical NEON-tbl LUT model, 16 threads, calibrated to Table I (715 GOP/s)",
+        }
+    }
+
+    fn run(&self, w: &Workload) -> Report {
+        run_workload("tmac", w, |g| {
+            let r = tmac::simulate_m2pro(g);
+            Report::from_scalars("tmac", g, r.latency_s, r.energy_j)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// T-MAC (real CPU kernel, measured on this machine)
+// ---------------------------------------------------------------------------
+
+/// The real multithreaded T-MAC-style CPU kernel
+/// ([`tmac::TMacCpu`]), measured wall-clock on this host with seeded
+/// synthetic ternary weights.  Energy is unmodelled (reported as 0):
+/// this backend exists for latency ground truth, not the energy axis.
+pub struct TMacCpuBackend {
+    threads: usize,
+    seed: u64,
+}
+
+impl TMacCpuBackend {
+    pub fn new() -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
+        TMacCpuBackend { threads, seed: 0x7AC }
+    }
+
+    pub fn with_threads(threads: usize) -> Self {
+        TMacCpuBackend { threads: threads.max(1), seed: 0x7AC }
+    }
+
+    fn measure(&self, g: Gemm) -> Report {
+        let mut rng = Rng::seed_from(
+            self.seed ^ (g.m as u64) ^ ((g.k as u64) << 20) ^ ((g.n as u64) << 40),
+        );
+        let w = rng.ternary_vec(g.m * g.k);
+        let x = rng.act_vec(g.k * g.n);
+        let kernel = tmac::TMacCpu::new(&w, g.m, g.k);
+        let mut out = vec![0i32; g.m * g.n];
+        // small kernels: warm up once and keep the best of two timed
+        // runs; large ones pay for a single cold run only
+        let runs = if g.naive_adds() < 100_000_000 { 2 } else { 1 };
+        if runs > 1 {
+            kernel.gemm(&x, g.n, &mut out, self.threads);
+        }
+        let mut best = f64::MAX;
+        for _ in 0..runs {
+            let t0 = Instant::now();
+            kernel.gemm(&x, g.n, &mut out, self.threads);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        let latency = best.max(1e-9);
+        Report::from_scalars("tmac-cpu", g, latency, 0.0)
+    }
+}
+
+impl Default for TMacCpuBackend {
+    fn default() -> Self {
+        TMacCpuBackend::new()
+    }
+}
+
+impl Backend for TMacCpuBackend {
+    fn id(&self) -> &str {
+        "tmac-cpu"
+    }
+
+    fn describe(&self) -> BackendInfo {
+        BackendInfo {
+            id: "tmac-cpu",
+            name: "T-MAC (this host)",
+            kind: BackendKind::Cpu,
+            freq_hz: 0.0,
+            pes: None,
+            area_mm2: None,
+            tech_nm: None,
+            notes: "real multithreaded LUT kernel, wall-clock on this machine; energy unmodelled",
+        }
+    }
+
+    fn run(&self, w: &Workload) -> Report {
+        // this backend executes every multiply-add for real; a 3B model
+        // pass is minutes of host CPU — say so up front rather than
+        // sitting silent (COMPARISON_IDS excludes this id for the same
+        // reason)
+        let unique_ops: u64 = {
+            let mut seen = BTreeMap::new();
+            for (g, _) in w.kernels() {
+                seen.insert((g.m, g.k, g.n), g.naive_adds());
+            }
+            seen.values().sum()
+        };
+        if unique_ops > 2_000_000_000 {
+            eprintln!(
+                "warning: tmac-cpu measures {unique_ops} real multiply-adds wall-clock \
+                 on this host; this may take minutes"
+            );
+        }
+        // model passes repeat shapes across layers — measure each unique
+        // (m,k,n) once and reuse the observation
+        let mut memo: BTreeMap<(usize, usize, usize), Report> = BTreeMap::new();
+        run_workload("tmac-cpu", w, |g| {
+            memo.entry((g.m, g.k, g.n)).or_insert_with(|| self.measure(g)).clone()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Stage;
+    use crate::models::{B158_3B, PREFILL_N};
+    use crate::sim::simulate_model;
+
+    #[test]
+    fn platinum_kernel_report_carries_detail() {
+        let be = PlatinumBackend::ternary();
+        let r = be.run(&Workload::Kernel(Gemm::new(1080, 520, 32)));
+        assert_eq!(r.backend, "platinum-ternary");
+        assert!(r.cycles.is_some() && r.phases.is_some());
+        assert!(r.energy_breakdown.is_some() && r.utilization.is_some());
+        assert!((r.energy_j - r.energy_breakdown.unwrap().total()).abs() < 1e-18);
+    }
+
+    #[test]
+    fn platinum_model_pass_matches_legacy_simulate_model() {
+        let be = PlatinumBackend::ternary();
+        let r = be.run(&Workload::ModelPass {
+            model: B158_3B,
+            n: PREFILL_N,
+            stage: Stage::Prefill,
+        });
+        let legacy =
+            simulate_model(&PlatinumConfig::default(), ExecMode::Ternary, &B158_3B, PREFILL_N);
+        assert_eq!(r.cycles, Some(legacy.cycles));
+        assert!((r.latency_s - legacy.latency_s).abs() <= legacy.latency_s * 1e-12);
+        assert!((r.energy_j - legacy.energy_j()).abs() <= legacy.energy_j() * 1e-12);
+        assert!(
+            (r.throughput_gops - legacy.throughput_gops).abs()
+                <= legacy.throughput_gops * 1e-12
+        );
+    }
+
+    #[test]
+    fn baseline_model_pass_has_no_phantom_detail() {
+        let r = EyerissBackend.run(&Workload::prefill(B158_3B));
+        assert!(r.cycles.is_none() && r.phases.is_none());
+        assert!(r.latency_s > 0.0 && r.energy_j > 0.0 && r.throughput_gops > 0.0);
+    }
+
+    #[test]
+    fn tmac_cpu_measures_real_time() {
+        let be = TMacCpuBackend::with_threads(2);
+        let r = be.run(&Workload::Kernel(Gemm::new(64, 40, 8)));
+        assert!(r.latency_s > 0.0);
+        assert_eq!(r.ops, 64 * 40 * 8);
+        assert_eq!(r.energy_j, 0.0, "energy is documented as unmodelled");
+    }
+
+    #[test]
+    fn batch_sums_kernels() {
+        let be = PlatinumBackend::ternary();
+        let g1 = Gemm::new(1080, 520, 32);
+        let g2 = Gemm::new(2160, 520, 32);
+        let batch = be.run(&Workload::Batch(vec![g1, g2]));
+        let a = be.run(&Workload::Kernel(g1));
+        let b = be.run(&Workload::Kernel(g2));
+        assert!((batch.latency_s - (a.latency_s + b.latency_s)).abs() <= batch.latency_s * 1e-12);
+        assert_eq!(batch.cycles, Some(a.cycles.unwrap() + b.cycles.unwrap()));
+        assert_eq!(batch.ops, a.ops + b.ops);
+    }
+}

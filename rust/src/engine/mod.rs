@@ -1,0 +1,54 @@
+//! The unified execution engine (S13): **one API for every system that
+//! can execute an mpGEMM workload**.
+//!
+//! Before this subsystem existed the crate had four unrelated execution
+//! surfaces: `sim::simulate_gemm`/`simulate_model` returning
+//! `SimReport`, per-baseline free functions returning `BaselineReport`,
+//! ad-hoc `model_report` closure plumbing at every call site, and the
+//! serving coordinator pricing requests straight against the simulator.
+//! The engine collapses them into:
+//!
+//! * [`Backend`] — anything that executes a [`Workload`]: Platinum in
+//!   either [`crate::config::ExecMode`], SpikingEyeriss, Prosperity,
+//!   the analytical T-MAC model, and the real measured CPU kernel.
+//! * [`Workload`] — kernel / model-pass / batch, with model-pass
+//!   expansion and aggregation implemented once inside the engine.
+//! * [`Report`] — one result shape (scalars always, cycle-accurate
+//!   detail when the backend produces it), JSON-serializable via
+//!   [`Report::to_json`].
+//! * [`Registry`] — string-keyed backend construction, so every
+//!   frontend (`--backend` CLI flags, DSE, benches, serving) selects
+//!   systems the same way and new accelerators plug in at one place.
+//!
+//! The legacy free functions remain as thin shims over the same
+//! arithmetic; `tests/engine_api.rs` pins the equivalence.
+
+pub mod backends;
+pub mod registry;
+pub mod report;
+pub mod workload;
+
+pub use backends::{
+    EyerissBackend, PlatinumBackend, ProsperityBackend, TMacBackend, TMacCpuBackend,
+};
+pub use registry::{Registry, COMPARISON_IDS};
+pub use report::{BackendInfo, BackendKind, Report};
+pub use workload::{Stage, Workload};
+
+/// A system that executes mpGEMM workloads.
+///
+/// Implementations must be deterministic given the workload (the
+/// measured CPU backend is the one deliberate exception: it reports
+/// real wall-clock time) and must fill every scalar field of the
+/// returned [`Report`].
+pub trait Backend {
+    /// Stable registry id (e.g. `"platinum-ternary"`).
+    fn id(&self) -> &str;
+
+    /// Static metadata (Table I's spec columns).
+    fn describe(&self) -> BackendInfo;
+
+    /// Execute a workload and report latency / energy / throughput,
+    /// plus cycle-accurate detail when the backend models it.
+    fn run(&self, workload: &Workload) -> Report;
+}

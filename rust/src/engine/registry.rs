@@ -1,0 +1,155 @@
+//! Name → backend construction: callers select execution systems with
+//! strings (`--backend platinum-ternary,prosperity,tmac-cpu`) and every
+//! frontend — CLI, DSE, benches, serving — goes through the same table.
+//!
+//! New accelerators plug in via [`Registry::register`]; nothing else in
+//! the crate needs to change to make them reachable from every surface.
+
+use super::backends::{
+    EyerissBackend, PlatinumBackend, ProsperityBackend, TMacBackend, TMacCpuBackend,
+};
+use super::Backend;
+use anyhow::{bail, Result};
+
+type Builder = fn() -> Box<dyn Backend>;
+
+fn build_platinum_ternary() -> Box<dyn Backend> {
+    Box::new(PlatinumBackend::ternary())
+}
+
+fn build_platinum_bitserial() -> Box<dyn Backend> {
+    Box::new(PlatinumBackend::bitserial())
+}
+
+fn build_eyeriss() -> Box<dyn Backend> {
+    Box::new(EyerissBackend)
+}
+
+fn build_prosperity() -> Box<dyn Backend> {
+    Box::new(ProsperityBackend)
+}
+
+fn build_tmac() -> Box<dyn Backend> {
+    Box::new(TMacBackend)
+}
+
+fn build_tmac_cpu() -> Box<dyn Backend> {
+    Box::new(TMacCpuBackend::new())
+}
+
+/// Backend ids used for paper-style cross-system comparisons (every
+/// modelled system; excludes `tmac-cpu`, whose wall-clock measurement of
+/// a full model pass is prohibitively slow and machine-dependent).
+pub const COMPARISON_IDS: &str = "platinum-ternary,platinum-bitserial,eyeriss,prosperity,tmac";
+
+/// Constructs [`Backend`]s by id string.
+pub struct Registry {
+    entries: Vec<(&'static str, Builder)>,
+}
+
+impl Registry {
+    /// Every system the repo models, under its canonical id.
+    pub fn with_defaults() -> Registry {
+        let mut r = Registry { entries: Vec::new() };
+        r.register("platinum-ternary", build_platinum_ternary);
+        r.register("platinum-bitserial", build_platinum_bitserial);
+        r.register("eyeriss", build_eyeriss);
+        r.register("prosperity", build_prosperity);
+        r.register("tmac", build_tmac);
+        r.register("tmac-cpu", build_tmac_cpu);
+        r
+    }
+
+    /// Add (or override) a backend constructor.
+    pub fn register(&mut self, id: &'static str, builder: Builder) {
+        if let Some(slot) = self.entries.iter_mut().find(|(eid, _)| *eid == id) {
+            slot.1 = builder;
+        } else {
+            self.entries.push((id, builder));
+        }
+    }
+
+    /// Registered ids, in registration order.
+    pub fn ids(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|(id, _)| *id).collect()
+    }
+
+    /// Construct one backend by id.
+    pub fn build(&self, id: &str) -> Result<Box<dyn Backend>> {
+        match self.entries.iter().find(|(eid, _)| *eid == id.trim()) {
+            Some((_, builder)) => Ok(builder()),
+            None => bail!(
+                "unknown backend {:?}; registered backends: {}",
+                id.trim(),
+                self.ids().join(", ")
+            ),
+        }
+    }
+
+    /// Construct several backends from a comma-separated selection
+    /// (`"all"` expands to every registered id).
+    pub fn build_selection(&self, spec: &str) -> Result<Vec<Box<dyn Backend>>> {
+        if spec.trim() == "all" {
+            return self.entries.iter().map(|(_, builder)| Ok(builder())).collect();
+        }
+        spec.split(',')
+            .map(str::trim)
+            .filter(|id| !id.is_empty())
+            .map(|id| self.build(id))
+            .collect()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::Gemm;
+    use crate::engine::Workload;
+
+    /// Every registered id constructs, self-identifies, and runs a small
+    /// kernel workload end to end.
+    #[test]
+    fn registry_roundtrip_every_id() {
+        let reg = Registry::with_defaults();
+        let g = Gemm::new(64, 40, 8);
+        for id in reg.ids() {
+            let be = reg.build(id).unwrap();
+            assert_eq!(be.id(), id, "backend id mismatch");
+            assert_eq!(be.describe().id, id, "describe() id mismatch");
+            let r = be.run(&Workload::Kernel(g));
+            assert_eq!(r.backend, id);
+            assert_eq!(r.ops, g.naive_adds());
+            assert!(r.latency_s > 0.0, "{id}: zero latency");
+        }
+    }
+
+    #[test]
+    fn unknown_id_lists_known_backends() {
+        let err = Registry::with_defaults().build("sparsecore").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("sparsecore") && msg.contains("platinum-ternary"), "{msg}");
+    }
+
+    #[test]
+    fn selection_parses_csv_and_all() {
+        let reg = Registry::with_defaults();
+        let sel = reg.build_selection(" platinum-ternary , tmac ").unwrap();
+        assert_eq!(sel.len(), 2);
+        assert_eq!(sel[1].id(), "tmac");
+        assert_eq!(reg.build_selection("all").unwrap().len(), reg.ids().len());
+        assert!(reg.build_selection("platinum-ternary,nope").is_err());
+    }
+
+    #[test]
+    fn comparison_ids_all_resolve() {
+        let reg = Registry::with_defaults();
+        let sel = reg.build_selection(COMPARISON_IDS).unwrap();
+        assert_eq!(sel.len(), 5);
+    }
+}

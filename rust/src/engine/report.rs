@@ -1,0 +1,263 @@
+//! The unified execution [`Report`] — one result shape for every
+//! backend, subsuming `sim::SimReport` (full detail) and
+//! `baselines::BaselineReport` (scalars only), plus [`BackendInfo`]
+//! static metadata.  Serializes via [`crate::util::json`].
+
+use crate::analysis::Gemm;
+use crate::sim::{Activity, EnergyBreakdown, PhaseCycles, SimReport, Utilization};
+use crate::util::json::{num, obj, s, Json};
+
+/// What kind of system a backend models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Cycle/analytically modelled ASIC.
+    Asic,
+    /// CPU software implementation (analytical or measured on this host).
+    Cpu,
+}
+
+impl BackendKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Asic => "asic",
+            BackendKind::Cpu => "cpu",
+        }
+    }
+}
+
+/// Static description of a backend (Table I's spec columns).
+#[derive(Debug, Clone)]
+pub struct BackendInfo {
+    /// Registry id, e.g. `"platinum-ternary"`.
+    pub id: &'static str,
+    /// Display name, e.g. `"Platinum"`.
+    pub name: &'static str,
+    pub kind: BackendKind,
+    /// Clock frequency in Hz (nominal for CPU backends).
+    pub freq_hz: f64,
+    /// Processing-element count, when the system has a meaningful one.
+    pub pes: Option<usize>,
+    /// Die/core area in mm², when modelled.
+    pub area_mm2: Option<f64>,
+    /// Process node in nm, when known.
+    pub tech_nm: Option<u32>,
+    /// One-line provenance note (calibration target, measurement caveat).
+    pub notes: &'static str,
+}
+
+impl BackendInfo {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", s(self.id)),
+            ("name", s(self.name)),
+            ("kind", s(self.kind.label())),
+            ("freq_hz", num(self.freq_hz)),
+            ("notes", s(self.notes)),
+        ];
+        if let Some(p) = self.pes {
+            pairs.push(("pes", num(p as f64)));
+        }
+        if let Some(a) = self.area_mm2 {
+            pairs.push(("area_mm2", num(a)));
+        }
+        if let Some(t) = self.tech_nm {
+            pairs.push(("tech_nm", num(t as f64)));
+        }
+        obj(pairs)
+    }
+}
+
+/// Unified result of running one [`super::Workload`] on one backend.
+///
+/// Scalar headline metrics are always present; the `Option` sections
+/// carry the cycle-accurate detail only the simulated Platinum backends
+/// produce (analytical baselines report scalars, the measured CPU
+/// backend reports wall-clock latency only).
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Backend id that produced this report.
+    pub backend: String,
+    /// Workload label (see [`super::Workload::label`]).
+    pub workload: String,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    /// Naive-equivalent throughput (the paper's GOP/s normalization).
+    pub throughput_gops: f64,
+    /// Naive addition count of the workload.
+    pub ops: u64,
+    pub cycles: Option<u64>,
+    pub phases: Option<PhaseCycles>,
+    pub activity: Option<Activity>,
+    pub energy_breakdown: Option<EnergyBreakdown>,
+    pub utilization: Option<Utilization>,
+}
+
+impl Report {
+    /// Average power over the workload (0 when latency or energy is
+    /// unmodelled).
+    pub fn power_w(&self) -> f64 {
+        if self.latency_s > 0.0 {
+            self.energy_j / self.latency_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Lift a cycle-accurate [`SimReport`] into the unified shape.
+    pub fn from_sim(backend: &str, r: &SimReport) -> Report {
+        Report {
+            backend: backend.to_string(),
+            workload: format!("gemm-{}x{}x{}", r.gemm.m, r.gemm.k, r.gemm.n),
+            latency_s: r.latency_s,
+            energy_j: r.energy.total(),
+            throughput_gops: r.throughput_gops,
+            ops: r.gemm.naive_adds(),
+            cycles: Some(r.cycles),
+            phases: Some(r.phases),
+            activity: Some(r.activity),
+            energy_breakdown: Some(r.energy),
+            utilization: Some(r.utilization),
+        }
+    }
+
+    /// Lift an analytical baseline result (scalars only).
+    pub fn from_scalars(backend: &str, g: Gemm, latency_s: f64, energy_j: f64) -> Report {
+        Report {
+            backend: backend.to_string(),
+            workload: format!("gemm-{}x{}x{}", g.m, g.k, g.n),
+            latency_s,
+            energy_j,
+            throughput_gops: if latency_s > 0.0 {
+                g.naive_adds() as f64 / latency_s / 1e9
+            } else {
+                0.0
+            },
+            ops: g.naive_adds(),
+            ..Report::default()
+        }
+    }
+
+    /// Machine-readable form (stable key order; `--json` CLI surface).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("backend", s(&self.backend)),
+            ("workload", s(&self.workload)),
+            ("latency_s", num(self.latency_s)),
+            ("energy_j", num(self.energy_j)),
+            ("power_w", num(self.power_w())),
+            ("throughput_gops", num(self.throughput_gops)),
+            ("ops", num(self.ops as f64)),
+        ];
+        if let Some(c) = self.cycles {
+            pairs.push(("cycles", num(c as f64)));
+        }
+        if let Some(p) = &self.phases {
+            pairs.push((
+                "phases",
+                obj(vec![
+                    ("construct", num(p.construct as f64)),
+                    ("query", num(p.query as f64)),
+                    ("drain", num(p.drain as f64)),
+                    ("dram_stall", num(p.dram_stall as f64)),
+                ]),
+            ));
+        }
+        if let Some(a) = &self.activity {
+            pairs.push((
+                "activity",
+                obj(vec![
+                    ("construct_adds", num(a.construct_adds as f64)),
+                    ("reduce_adds", num(a.reduce_adds as f64)),
+                    ("dram_read_bytes", num(a.dram_read_bytes as f64)),
+                    ("dram_write_bytes", num(a.dram_write_bytes as f64)),
+                    ("lut_read_bytes", num(a.lut_read_bytes as f64)),
+                    ("lut_write_bytes", num(a.lut_write_bytes as f64)),
+                    ("wbuf_read_bytes", num(a.wbuf_read_bytes as f64)),
+                    ("wbuf_write_bytes", num(a.wbuf_write_bytes as f64)),
+                    ("ibuf_read_bytes", num(a.ibuf_read_bytes as f64)),
+                    ("ibuf_write_bytes", num(a.ibuf_write_bytes as f64)),
+                    ("obuf_bytes", num(a.obuf_bytes as f64)),
+                    ("path_read_bytes", num(a.path_read_bytes as f64)),
+                ]),
+            ));
+        }
+        if let Some(e) = &self.energy_breakdown {
+            pairs.push((
+                "energy_breakdown_j",
+                obj(vec![
+                    ("dram", num(e.dram)),
+                    ("weight_buf", num(e.weight_buf)),
+                    ("input_buf", num(e.input_buf)),
+                    ("output_buf", num(e.output_buf)),
+                    ("lut_buf", num(e.lut_buf)),
+                    ("path_buf", num(e.path_buf)),
+                    ("adders", num(e.adders)),
+                    ("static_leak", num(e.static_leak)),
+                ]),
+            ));
+        }
+        if let Some(u) = &self.utilization {
+            pairs.push((
+                "utilization",
+                obj(vec![
+                    ("adders", num(u.adders)),
+                    ("lut_ports", num(u.lut_ports)),
+                    ("dram_bw", num(u.dram_bw)),
+                ]),
+            ));
+        }
+        obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_json_golden_scalar_report() {
+        let r = Report {
+            backend: "platinum-ternary".into(),
+            workload: "gemm-4x4x4".into(),
+            latency_s: 0.5,
+            energy_j: 2.0,
+            throughput_gops: 1.5,
+            ops: 64,
+            cycles: Some(1000),
+            ..Report::default()
+        };
+        assert_eq!(
+            r.to_json().to_string(),
+            "{\"backend\":\"platinum-ternary\",\"cycles\":1000,\"energy_j\":2,\
+             \"latency_s\":0.5,\"ops\":64,\"power_w\":4,\"throughput_gops\":1.5,\
+             \"workload\":\"gemm-4x4x4\"}"
+        );
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let mut r = Report {
+            backend: "eyeriss".into(),
+            workload: "b1.58-3B-prefill-n1024".into(),
+            latency_s: 1.25e-3,
+            energy_j: 3.5e-2,
+            throughput_gops: 20.8,
+            ops: 123_456,
+            ..Report::default()
+        };
+        r.phases = Some(PhaseCycles { construct: 1, query: 2, drain: 3, dram_stall: 4 });
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("backend").unwrap().as_str(), Some("eyeriss"));
+        assert_eq!(parsed.get("ops").unwrap().as_usize(), Some(123_456));
+        assert_eq!(
+            parsed.get("phases").unwrap().get("dram_stall").unwrap().as_usize(),
+            Some(4)
+        );
+    }
+
+    #[test]
+    fn power_guards_zero_latency() {
+        let r = Report::default();
+        assert_eq!(r.power_w(), 0.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! What a [`crate::engine::Backend`] executes: a single kernel, a full
+//! model forward pass, or an ordered batch of kernels.
+//!
+//! The model-pass case absorbs what used to be scattered call-site logic
+//! (`simulate_model`'s accumulation loop, `baselines::model_report`'s
+//! closure dance): callers describe the workload once and every backend
+//! aggregates it the same way inside the engine.
+
+use crate::analysis::Gemm;
+use crate::models::{BitNetModel, DECODE_N, PREFILL_N};
+
+/// Inference stage label for a model pass (the paper's two operating
+/// points: prefill N=1024, decode N=8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Prefill,
+    Decode,
+}
+
+impl Stage {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Stage::Prefill => "prefill",
+            Stage::Decode => "decode",
+        }
+    }
+
+    /// The paper's batch·seq product for this stage.
+    pub fn default_n(&self) -> usize {
+        match self {
+            Stage::Prefill => PREFILL_N,
+            Stage::Decode => DECODE_N,
+        }
+    }
+
+    /// Classify an arbitrary batch·seq product (decode-shaped ⇔ the
+    /// low-N regime where baselines underfill their lanes).
+    pub fn from_n(n: usize) -> Stage {
+        if n <= 16 {
+            Stage::Decode
+        } else {
+            Stage::Prefill
+        }
+    }
+}
+
+/// One unit of work submitted to a backend.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// A single mpGEMM kernel dispatch.
+    Kernel(Gemm),
+    /// A full forward pass of a BitNet model at batch·seq = n.
+    ModelPass { model: BitNetModel, n: usize, stage: Stage },
+    /// An ordered sequence of kernels executed back-to-back (the serving
+    /// coordinator prices a request batch this way).
+    Batch(Vec<Gemm>),
+}
+
+impl Workload {
+    /// Model pass at the paper's prefill operating point.
+    pub fn prefill(model: BitNetModel) -> Workload {
+        Workload::ModelPass { model, n: PREFILL_N, stage: Stage::Prefill }
+    }
+
+    /// Model pass at the paper's decode operating point.
+    pub fn decode(model: BitNetModel) -> Workload {
+        Workload::ModelPass { model, n: DECODE_N, stage: Stage::Decode }
+    }
+
+    /// Model pass at an arbitrary batch·seq product.
+    pub fn model_pass(model: BitNetModel, n: usize) -> Workload {
+        Workload::ModelPass { model, n, stage: Stage::from_n(n) }
+    }
+
+    /// Human/JSON label identifying the workload in a [`super::Report`].
+    pub fn label(&self) -> String {
+        match self {
+            Workload::Kernel(g) => format!("gemm-{}x{}x{}", g.m, g.k, g.n),
+            Workload::ModelPass { model, n, stage } => {
+                format!("{}-{}-n{}", model.name, stage.label(), n)
+            }
+            Workload::Batch(gs) => format!("batch-{}", gs.len()),
+        }
+    }
+
+    /// The constituent kernels with occurrence counts — the one place
+    /// model-pass expansion happens for every backend.
+    pub fn kernels(&self) -> Vec<(Gemm, usize)> {
+        match self {
+            Workload::Kernel(g) => vec![(*g, 1)],
+            Workload::ModelPass { model, n, .. } => model.model_gemms(*n),
+            Workload::Batch(gs) => gs.iter().map(|&g| (g, 1)).collect(),
+        }
+    }
+
+    /// Total naive additions (the paper's GOP/s normalization).
+    pub fn naive_adds(&self) -> u64 {
+        self.kernels().iter().map(|(g, c)| g.naive_adds() * *c as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::B158_3B;
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Workload::Kernel(Gemm::new(2, 3, 4)).label(), "gemm-2x3x4");
+        assert_eq!(Workload::prefill(B158_3B).label(), "b1.58-3B-prefill-n1024");
+        assert_eq!(Workload::decode(B158_3B).label(), "b1.58-3B-decode-n8");
+        assert_eq!(Workload::Batch(vec![Gemm::new(1, 1, 1)]).label(), "batch-1");
+    }
+
+    #[test]
+    fn model_pass_ops_match_model_zoo() {
+        let w = Workload::prefill(B158_3B);
+        assert_eq!(w.naive_adds(), B158_3B.total_naive_adds(PREFILL_N));
+    }
+
+    #[test]
+    fn stage_classification() {
+        assert_eq!(Stage::from_n(8), Stage::Decode);
+        assert_eq!(Stage::from_n(1024), Stage::Prefill);
+        assert_eq!(Stage::Prefill.default_n(), PREFILL_N);
+        assert_eq!(Stage::Decode.default_n(), DECODE_N);
+    }
+}

@@ -33,6 +33,13 @@
 //! | [`dse`] | design-space exploration over tiling (S7) |
 //! | [`runtime`] | PJRT artifact load/execute (S11) |
 //! | [`coordinator`] | tiling scheduler + serving loop (S6, S12) |
+//! | [`engine`] | unified Backend/Workload/Report execution API (S13) |
+//!
+//! All execution flows through [`engine`]: a [`engine::Registry`]
+//! constructs [`engine::Backend`]s by name, each runs
+//! [`engine::Workload`]s (kernel, model pass, batch) and returns the
+//! unified [`engine::Report`] — the CLI, DSE, benches and the serving
+//! coordinator are all thin frontends over that one API.
 
 pub mod analysis;
 pub mod baselines;
@@ -41,6 +48,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod encoding;
 pub mod energy;
+pub mod engine;
 pub mod isa;
 pub mod lut;
 pub mod models;

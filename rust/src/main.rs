@@ -1,22 +1,27 @@
 //! `platinum` CLI — the leader entrypoint of the L3 coordinator.
 //!
 //! Subcommands:
-//!   simulate   — cycle-accurate simulation of a kernel or model pass
+//!   simulate   — run a kernel or model pass on any engine backend
 //!   report     — area / power / utilization breakdowns (E5, E6, E11)
 //!   dse        — the Fig 7 tiling sweep
 //!   paths      — generate + inspect offline build paths (ISA dump)
-//!   baselines  — Table I throughput comparison
+//!   baselines  — Table I cross-system comparison via the engine registry
+//!   backends   — list registered engine backends
 //!   runtime    — list / smoke-run the PJRT artifacts
+//!
+//! Execution goes through `engine::Registry`/`engine::Backend`: pick a
+//! system with `--backend <id>` and emit machine-readable unified
+//! reports with `--json`.
 
 use anyhow::{anyhow, bail, Result};
 use platinum::analysis::Gemm;
-use platinum::baselines::{eyeriss, model_report, prosperity, tmac};
-use platinum::config::{ExecMode, PlatinumConfig, Tiling};
+use platinum::config::{PlatinumConfig, Tiling};
 use platinum::energy::{AreaModel, EnergyTable};
+use platinum::engine::{Backend, PlatinumBackend, Registry, Report, Workload, COMPARISON_IDS};
 use platinum::models::{ALL_MODELS, B158_3B, DECODE_N, PREFILL_N};
 use platinum::runtime::{HostTensor, Runtime};
-use platinum::sim::{simulate_gemm, simulate_model};
 use platinum::util::cli;
+use platinum::util::json::{arr, num, obj, Json};
 use platinum::{dse, encoding, isa, pathgen};
 
 fn main() -> Result<()> {
@@ -27,6 +32,7 @@ fn main() -> Result<()> {
         Some("dse") => cmd_dse(&args),
         Some("paths") => cmd_paths(&args),
         Some("baselines") => cmd_baselines(&args),
+        Some("backends") => cmd_backends(&args),
         Some("runtime") => cmd_runtime(&args),
         Some(other) => bail!("unknown command {other:?}; run without args for help"),
         None => {
@@ -44,12 +50,18 @@ fn print_help() {
          \n\
          COMMANDS:\n\
            simulate   --model {{700m|1.3b|3b}} --n <batch·seq> [--mode ternary|bitserial]\n\
-                      or --m --k --n for a single kernel\n\
-           report     --area --power --util   breakdowns vs paper §V-B\n\
+                      or --m --k --n for a single kernel;\n\
+                      [--backend <id>] runs any registered system, [--json] emits the report\n\
+                      (--mode bitserial ≡ --backend platinum-bitserial: k retiled to 728)\n\
+           report     --area --power --util   breakdowns vs paper §V-B  [--json]\n\
            dse        [--full]                Fig 7 tiling sweep\n\
            paths      [--kind ternary|binary] [--c <chunk>] [--dump] ISA dump\n\
-           baselines  Table I comparison on b1.58-3B\n\
-           runtime    [--artifacts <dir>] [--run <name>] PJRT artifacts"
+           baselines  [--backend <ids|all>] [--json]  Table I comparison on b1.58-3B\n\
+           backends   list engine backend ids with specs\n\
+           runtime    [--artifacts <dir>] [--run <name>] PJRT artifacts\n\
+         \n\
+         BACKENDS (see `platinum backends`):\n\
+           platinum-ternary, platinum-bitserial, eyeriss, prosperity, tmac, tmac-cpu"
     );
 }
 
@@ -67,106 +79,176 @@ fn model_by_name(name: &str) -> Result<&'static platinum::models::BitNetModel> {
         .ok_or_else(|| anyhow!("unknown model {name:?} (700m, 1.3b, 3b)"))
 }
 
-fn mode_from(args: &cli::Args) -> ExecMode {
+/// Map `--mode` to the registry-identical Platinum backend, so
+/// `--mode bitserial` and `--backend platinum-bitserial` produce the
+/// same configuration (and therefore the same numbers).
+fn platinum_from_mode(args: &cli::Args) -> Result<PlatinumBackend> {
     match args.get_str("mode", "ternary") {
-        "bitserial" => ExecMode::BitSerial { planes: 2 },
-        _ => ExecMode::Ternary,
+        "ternary" => Ok(PlatinumBackend::ternary()),
+        "bitserial" => Ok(PlatinumBackend::bitserial()),
+        other => bail!("unknown --mode {other:?}; valid modes: ternary, bitserial"),
     }
 }
 
 fn cmd_simulate(args: &cli::Args) -> Result<()> {
-    let cfg = PlatinumConfig::default();
-    let mode = mode_from(args);
-    if let Some(mname) = args.get("model") {
+    let backend: Box<dyn Backend> = match args.get("backend") {
+        Some(id) => {
+            if args.get("mode").is_some() {
+                bail!(
+                    "--mode only applies to the default Platinum surface; \
+                     with --backend, pick platinum-ternary or platinum-bitserial instead"
+                );
+            }
+            Registry::with_defaults().build(id)?
+        }
+        // default surface: Platinum, with --mode selecting the
+        // execution path (same config the registry ids construct)
+        None => Box::new(platinum_from_mode(args)?),
+    };
+    let workload = if let Some(mname) = args.get("model") {
         let model = model_by_name(mname)?;
-        let n = args.get_usize("n", PREFILL_N)?;
-        let r = simulate_model(&cfg, mode, model, n);
-        println!(
-            "model {} ({} params)  N={n}  mode={}",
-            model.name,
-            model.params,
-            mode.label()
-        );
-        print_sim(&r, model.total_naive_adds(n));
+        Workload::model_pass(*model, args.get_usize("n", PREFILL_N)?)
     } else {
         let m = args.get_usize("m", 3200)?;
         let k = args.get_usize("k", 3200)?;
         let n = args.get_usize("n", PREFILL_N)?;
-        let g = Gemm::new(m, k, n);
-        let r = simulate_gemm(&cfg, mode, g);
-        println!("kernel {m}x{k}x{n}  mode={}", mode.label());
-        print_sim(&r, g.naive_adds());
+        Workload::Kernel(Gemm::new(m, k, n))
+    };
+    let r = backend.run(&workload);
+    if args.flag("json") {
+        println!("{}", r.to_json().to_string());
+    } else {
+        println!("{}  on {} ({})", r.workload, backend.describe().name, r.backend);
+        print_report(&r);
     }
     Ok(())
 }
 
-fn print_sim(r: &platinum::sim::SimReport, ops: u64) {
-    println!("  cycles       {:>14}", r.cycles);
+fn print_report(r: &Report) {
     println!("  latency      {:>14.6} s", r.latency_s);
     println!("  throughput   {:>14.1} GOP/s (naive-adds)", r.throughput_gops);
-    println!("  energy       {:>14.4} J", r.energy_j());
+    println!("  energy       {:>14.4} J", r.energy_j);
     println!("  power        {:>14.2} W", r.power_w());
-    println!("  ops          {:>14}", ops);
-    println!(
-        "  phases: construct {} query {} drain {} dram-stall {}",
-        r.phases.construct, r.phases.query, r.phases.drain, r.phases.dram_stall
-    );
-    println!(
-        "  util: adders {:.1}%  lut-ports {:.1}%  dram {:.1}%",
-        r.utilization.adders * 100.0,
-        r.utilization.lut_ports * 100.0,
-        r.utilization.dram_bw * 100.0
-    );
+    println!("  ops          {:>14}", r.ops);
+    if let Some(c) = r.cycles {
+        println!("  cycles       {:>14}", c);
+    }
+    if let Some(p) = &r.phases {
+        println!(
+            "  phases: construct {} query {} drain {} dram-stall {}",
+            p.construct, p.query, p.drain, p.dram_stall
+        );
+    }
+    if let Some(u) = &r.utilization {
+        println!(
+            "  util: adders {:.1}%  lut-ports {:.1}%  dram {:.1}%",
+            u.adders * 100.0,
+            u.lut_ports * 100.0,
+            u.dram_bw * 100.0
+        );
+    }
 }
 
 fn cmd_report(args: &cli::Args) -> Result<()> {
     let cfg = PlatinumConfig::default();
+    let plat_backend = PlatinumBackend::ternary();
     let all = !(args.flag("area") || args.flag("power") || args.flag("util"));
+    let json = args.flag("json");
+    let mut out: Vec<(&str, Json)> = Vec::new();
     if args.flag("area") || all {
         let b = AreaModel::platinum(&cfg).breakdown();
         let t = b.total();
-        println!("== area breakdown (paper §V-B: 0.955 mm²; buffers 65%, +LUT 83.3%, compute 15%) ==");
-        println!("  weight buffer   {:>7.4} mm²  {:>5.1}%", b.weight_buf, 100.0 * b.weight_buf / t);
-        println!("  input buffer    {:>7.4} mm²  {:>5.1}%", b.input_buf, 100.0 * b.input_buf / t);
-        println!("  output buffer   {:>7.4} mm²  {:>5.1}%", b.output_buf, 100.0 * b.output_buf / t);
-        println!("  path buffer     {:>7.4} mm²  {:>5.1}%", b.path_buf, 100.0 * b.path_buf / t);
-        println!("  LUT buffers     {:>7.4} mm²  {:>5.1}%", b.lut_bufs, 100.0 * b.lut_bufs / t);
-        println!("  PPEs            {:>7.4} mm²  {:>5.1}%", b.ppes, 100.0 * b.ppes / t);
-        println!("  aggregator      {:>7.4} mm²  {:>5.1}%", b.aggregator, 100.0 * b.aggregator / t);
-        println!("  SFU             {:>7.4} mm²  {:>5.1}%", b.sfu, 100.0 * b.sfu / t);
-        println!("  TOTAL           {t:>7.4} mm²   (paper: 0.955)");
-        println!(
-            "  data buffers {:.1}%  +LUT {:.1}%  compute {:.1}%",
-            100.0 * b.data_buffers() / t,
-            100.0 * (b.data_buffers() + b.lut_bufs) / t,
-            100.0 * (b.ppes + b.aggregator) / t
-        );
+        if json {
+            out.push((
+                "area_mm2",
+                obj(vec![
+                    ("weight_buf", num(b.weight_buf)),
+                    ("input_buf", num(b.input_buf)),
+                    ("output_buf", num(b.output_buf)),
+                    ("path_buf", num(b.path_buf)),
+                    ("lut_bufs", num(b.lut_bufs)),
+                    ("ppes", num(b.ppes)),
+                    ("aggregator", num(b.aggregator)),
+                    ("sfu", num(b.sfu)),
+                    ("total", num(t)),
+                ]),
+            ));
+        } else {
+            println!("== area breakdown (paper §V-B: 0.955 mm²; buffers 65%, +LUT 83.3%, compute 15%) ==");
+            println!("  weight buffer   {:>7.4} mm²  {:>5.1}%", b.weight_buf, 100.0 * b.weight_buf / t);
+            println!("  input buffer    {:>7.4} mm²  {:>5.1}%", b.input_buf, 100.0 * b.input_buf / t);
+            println!("  output buffer   {:>7.4} mm²  {:>5.1}%", b.output_buf, 100.0 * b.output_buf / t);
+            println!("  path buffer     {:>7.4} mm²  {:>5.1}%", b.path_buf, 100.0 * b.path_buf / t);
+            println!("  LUT buffers     {:>7.4} mm²  {:>5.1}%", b.lut_bufs, 100.0 * b.lut_bufs / t);
+            println!("  PPEs            {:>7.4} mm²  {:>5.1}%", b.ppes, 100.0 * b.ppes / t);
+            println!("  aggregator      {:>7.4} mm²  {:>5.1}%", b.aggregator, 100.0 * b.aggregator / t);
+            println!("  SFU             {:>7.4} mm²  {:>5.1}%", b.sfu, 100.0 * b.sfu / t);
+            println!("  TOTAL           {t:>7.4} mm²   (paper: 0.955)");
+            println!(
+                "  data buffers {:.1}%  +LUT {:.1}%  compute {:.1}%",
+                100.0 * b.data_buffers() / t,
+                100.0 * (b.data_buffers() + b.lut_bufs) / t,
+                100.0 * (b.ppes + b.aggregator) / t
+            );
+        }
     }
     if args.flag("power") || all {
-        let r = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, PREFILL_N);
-        let e = r.energy;
-        let t = e.total();
-        println!("== power breakdown, b1.58-3B prefill (paper §V-B: 3.2 W; DRAM 53.5%, wbuf 31.6%) ==");
-        println!("  total power     {:>7.2} W", r.power_w());
-        println!("  DRAM            {:>5.1}%", 100.0 * e.dram / t);
-        println!("  weight buffer   {:>5.1}%", 100.0 * e.weight_buf / t);
-        println!("  LUT buffers     {:>5.1}%", 100.0 * e.lut_buf / t);
-        println!("  output buffer   {:>5.1}%", 100.0 * e.output_buf / t);
-        println!("  input buffer    {:>5.1}%", 100.0 * e.input_buf / t);
-        println!("  adders          {:>5.1}%", 100.0 * e.adders / t);
-        println!("  static          {:>5.1}%", 100.0 * e.static_leak / t);
-        let etab = EnergyTable::from_area(&AreaModel::platinum(&cfg));
-        println!(
-            "  (model: wbuf {:.1} pJ/B, LUT {:.1} pJ/B, DRAM {:.0} pJ/bit)",
-            etab.wbuf_read_pj_per_byte, etab.lut_read_pj_per_byte, etab.dram_pj_per_bit
-        );
+        let r = plat_backend.run(&Workload::prefill(B158_3B));
+        let e = r.energy_breakdown.expect("platinum model pass carries energy detail");
+        if json {
+            out.push((
+                "power",
+                obj(vec![
+                    ("total_w", num(r.power_w())),
+                    ("dram_j", num(e.dram)),
+                    ("weight_buf_j", num(e.weight_buf)),
+                    ("input_buf_j", num(e.input_buf)),
+                    ("output_buf_j", num(e.output_buf)),
+                    ("lut_buf_j", num(e.lut_buf)),
+                    ("path_buf_j", num(e.path_buf)),
+                    ("adders_j", num(e.adders)),
+                    ("static_leak_j", num(e.static_leak)),
+                    ("total_j", num(e.total())),
+                ]),
+            ));
+        } else {
+            let t = e.total();
+            println!("== power breakdown, b1.58-3B prefill (paper §V-B: 3.2 W; DRAM 53.5%, wbuf 31.6%) ==");
+            println!("  total power     {:>7.2} W", r.power_w());
+            println!("  DRAM            {:>5.1}%", 100.0 * e.dram / t);
+            println!("  weight buffer   {:>5.1}%", 100.0 * e.weight_buf / t);
+            println!("  LUT buffers     {:>5.1}%", 100.0 * e.lut_buf / t);
+            println!("  output buffer   {:>5.1}%", 100.0 * e.output_buf / t);
+            println!("  input buffer    {:>5.1}%", 100.0 * e.input_buf / t);
+            println!("  adders          {:>5.1}%", 100.0 * e.adders / t);
+            println!("  static          {:>5.1}%", 100.0 * e.static_leak / t);
+            let etab = EnergyTable::from_area(&AreaModel::platinum(&cfg));
+            println!(
+                "  (model: wbuf {:.1} pJ/B, LUT {:.1} pJ/B, DRAM {:.0} pJ/bit)",
+                etab.wbuf_read_pj_per_byte, etab.lut_read_pj_per_byte, etab.dram_pj_per_bit
+            );
+        }
     }
     if args.flag("util") || all {
-        let g = Gemm::new(1080, 520, 32);
-        let r = simulate_gemm(&cfg, ExecMode::Ternary, g);
-        println!("== utilization, steady-state tile (paper §IV-B: adders 90.5%, LUT ports ~100%) ==");
-        println!("  adders          {:>5.1}%", 100.0 * r.utilization.adders);
-        println!("  LUT ports       {:>5.1}%", 100.0 * r.utilization.lut_ports);
+        let r = plat_backend.run(&Workload::Kernel(Gemm::new(1080, 520, 32)));
+        let u = r.utilization.expect("platinum kernel carries utilization");
+        if json {
+            out.push((
+                "util",
+                obj(vec![
+                    ("adders", num(u.adders)),
+                    ("lut_ports", num(u.lut_ports)),
+                    ("dram_bw", num(u.dram_bw)),
+                ]),
+            ));
+        } else {
+            println!("== utilization, steady-state tile (paper §IV-B: adders 90.5%, LUT ports ~100%) ==");
+            println!("  adders          {:>5.1}%", 100.0 * u.adders);
+            println!("  LUT ports       {:>5.1}%", 100.0 * u.lut_ports);
+        }
+    }
+    if json {
+        println!("{}", obj(out).to_string());
     }
     Ok(())
 }
@@ -230,27 +312,66 @@ fn cmd_paths(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_baselines(_args: &cli::Args) -> Result<()> {
-    let cfg = PlatinumConfig::default();
-    println!("== Table I reproduction: b1.58-3B, prefill N={PREFILL_N} / decode N={DECODE_N} ==");
-    println!(
-        "{:<16} {:>8} {:>8} {:>14} {:>14}",
-        "system", "PEs", "mm²", "prefill GOP/s", "decode GOP/s"
-    );
-    let plat_p = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, PREFILL_N);
-    let plat_d = simulate_model(&cfg, ExecMode::Ternary, &B158_3B, DECODE_N);
-    let area = AreaModel::platinum(&cfg).breakdown().total();
-    let eye_p = model_report(&B158_3B, PREFILL_N, |g| eyeriss::simulate(g, PREFILL_N));
-    let eye_d = model_report(&B158_3B, DECODE_N, |g| eyeriss::simulate(g, DECODE_N));
-    let pro_p = model_report(&B158_3B, PREFILL_N, |g| prosperity::simulate(g, PREFILL_N));
-    let pro_d = model_report(&B158_3B, DECODE_N, |g| prosperity::simulate(g, DECODE_N));
-    let tm_p = model_report(&B158_3B, PREFILL_N, |g| tmac::simulate_m2pro(g));
-    let tm_d = model_report(&B158_3B, DECODE_N, |g| tmac::simulate_m2pro(g));
-    println!("{:<16} {:>8} {:>8.3} {:>14.1} {:>14.1}", "SpikingEyeriss", 168, 1.07, eye_p.throughput_gops, eye_d.throughput_gops);
-    println!("{:<16} {:>8} {:>8.3} {:>14.1} {:>14.1}", "Prosperity", 256, 1.06, pro_p.throughput_gops, pro_d.throughput_gops);
-    println!("{:<16} {:>8} {:>8} {:>14.1} {:>14.1}", "T-MAC (M2 Pro)", "-", "289", tm_p.throughput_gops, tm_d.throughput_gops);
-    println!("{:<16} {:>8} {:>8.3} {:>14.1} {:>14.1}", "Platinum", cfg.num_pes(), area, plat_p.throughput_gops, plat_d.throughput_gops);
-    println!("(paper Table I: Eyeriss 20.8, Prosperity 375, T-MAC 715, Platinum 1534 GOP/s prefill)");
+fn cmd_baselines(args: &cli::Args) -> Result<()> {
+    let registry = Registry::with_defaults();
+    let backends = registry.build_selection(args.get_str("backend", COMPARISON_IDS))?;
+    let json = args.flag("json");
+    let mut rows: Vec<Json> = Vec::new();
+    if !json {
+        println!("== Table I reproduction: b1.58-3B, prefill N={PREFILL_N} / decode N={DECODE_N} ==");
+        println!(
+            "{:<20} {:>8} {:>8} {:>14} {:>14}",
+            "system", "PEs", "mm²", "prefill GOP/s", "decode GOP/s"
+        );
+    }
+    for be in &backends {
+        let info = be.describe();
+        let pre = be.run(&Workload::prefill(B158_3B));
+        let dec = be.run(&Workload::decode(B158_3B));
+        if json {
+            rows.push(pre.to_json());
+            rows.push(dec.to_json());
+        } else {
+            let pes = info.pes.map(|p| p.to_string()).unwrap_or_else(|| "-".to_string());
+            let area = info.area_mm2.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".to_string());
+            println!(
+                "{:<20} {:>8} {:>8} {:>14.1} {:>14.1}",
+                info.name, pes, area, pre.throughput_gops, dec.throughput_gops
+            );
+        }
+    }
+    if json {
+        println!("{}", arr(rows).to_string());
+    } else {
+        println!("(paper Table I: Eyeriss 20.8, Prosperity 375, T-MAC 715, Platinum 1534 GOP/s prefill)");
+    }
+    Ok(())
+}
+
+fn cmd_backends(args: &cli::Args) -> Result<()> {
+    let registry = Registry::with_defaults();
+    if args.flag("json") {
+        let rows: Vec<Json> = registry
+            .build_selection("all")?
+            .iter()
+            .map(|be| be.describe().to_json())
+            .collect();
+        println!("{}", arr(rows).to_string());
+        return Ok(());
+    }
+    println!("{:<20} {:<18} {:>6} {:>10} {:>8}  notes", "id", "name", "kind", "freq MHz", "PEs");
+    for be in registry.build_selection("all")? {
+        let info = be.describe();
+        println!(
+            "{:<20} {:<18} {:>6} {:>10.0} {:>8}  {}",
+            info.id,
+            info.name,
+            info.kind.label(),
+            info.freq_hz / 1e6,
+            info.pes.map(|p| p.to_string()).unwrap_or_else(|| "-".to_string()),
+            info.notes
+        );
+    }
     Ok(())
 }
 

@@ -104,10 +104,28 @@ impl Manifest {
             }
             artifacts.push(ArtifactSpec { name, file, inputs, outputs, meta });
         }
+        // Chunk sizes are part of the lowered artifacts' ABI: a manifest
+        // that omits them is from a stale toolchain, and silently
+        // assuming the defaults makes shape mismatches undiagnosable.
+        // Warn loudly (keep loading: the defaults match every artifact
+        // generation the repo has ever shipped).
+        let chunk_key = |key: &str, default: usize| -> usize {
+            match j.get(key).and_then(Json::as_usize) {
+                Some(c) => c,
+                None => {
+                    eprintln!(
+                        "warning: {} omits {key:?}; assuming default {default} — \
+                         regenerate artifacts (`make artifacts`) if results look wrong",
+                        dir.join("manifest.json").display()
+                    );
+                    default
+                }
+            }
+        };
         Ok(Manifest {
             artifacts,
-            c_ternary: j.get("c_ternary").and_then(Json::as_usize).unwrap_or(5),
-            c_binary: j.get("c_binary").and_then(Json::as_usize).unwrap_or(7),
+            c_ternary: chunk_key("c_ternary", 5),
+            c_binary: chunk_key("c_binary", 7),
         })
     }
 
@@ -276,5 +294,19 @@ mod tests {
     fn tensor_spec_elements() {
         let t = TensorSpec { name: "x".into(), shape: vec![3, 4, 5], dtype: DType::F32 };
         assert_eq!(t.elements(), 60);
+    }
+
+    #[test]
+    fn manifest_missing_chunk_keys_warns_and_defaults() {
+        // stale-toolchain manifest without c_ternary/c_binary: loading
+        // must still succeed (with a stderr warning) on the defaults
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("target")
+            .join("tmp-manifest-missing-chunks");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!((m.c_ternary, m.c_binary), (5, 7));
+        assert!(m.artifacts.is_empty());
     }
 }

@@ -75,6 +75,23 @@ impl Activity {
     pub fn dram_total_bytes(&self) -> u64 {
         self.dram_read_bytes + self.dram_write_bytes
     }
+
+    /// Multiply every counter by a kernel occurrence count (model-pass
+    /// aggregation in [`crate::engine`] and [`simulate_model`]).
+    pub fn scale(&mut self, c: u64) {
+        self.construct_adds *= c;
+        self.reduce_adds *= c;
+        self.lut_write_bytes *= c;
+        self.lut_read_bytes *= c;
+        self.wbuf_read_bytes *= c;
+        self.wbuf_write_bytes *= c;
+        self.ibuf_read_bytes *= c;
+        self.ibuf_write_bytes *= c;
+        self.obuf_bytes *= c;
+        self.path_read_bytes *= c;
+        self.dram_read_bytes *= c;
+        self.dram_write_bytes *= c;
+    }
 }
 
 /// Per-component dynamic + static energy in joules (→ Fig 9, §V-B).
@@ -112,6 +129,18 @@ impl EnergyBreakdown {
         self.adders += o.adders;
         self.static_leak += o.static_leak;
     }
+
+    /// Multiply every component by a kernel occurrence count.
+    pub fn scale(&mut self, c: f64) {
+        self.dram *= c;
+        self.weight_buf *= c;
+        self.input_buf *= c;
+        self.output_buf *= c;
+        self.lut_buf *= c;
+        self.path_buf *= c;
+        self.adders *= c;
+        self.static_leak *= c;
+    }
 }
 
 /// Cycle occupancy per phase (→ utilization report, E11).
@@ -130,6 +159,21 @@ impl PhaseCycles {
 
     pub fn total(&self) -> u64 {
         self.busy() + self.dram_stall
+    }
+
+    pub fn add(&mut self, o: &PhaseCycles) {
+        self.construct += o.construct;
+        self.query += o.query;
+        self.drain += o.drain;
+        self.dram_stall += o.dram_stall;
+    }
+
+    /// Multiply every phase by a kernel occurrence count.
+    pub fn scale(&mut self, c: u64) {
+        self.construct *= c;
+        self.query *= c;
+        self.drain *= c;
+        self.dram_stall *= c;
     }
 }
 

@@ -260,6 +260,11 @@ pub fn simulate_gemm(cfg: &PlatinumConfig, mode: ExecMode, g: Gemm) -> SimReport
 }
 
 /// Simulate a full model forward pass (Σ kernels × counts × layers).
+///
+/// Prefer [`crate::engine::PlatinumBackend`] with a
+/// [`crate::engine::Workload::ModelPass`] — the engine aggregates with
+/// identical arithmetic and returns the unified report; this free
+/// function is kept as a stable shim for existing callers.
 pub fn simulate_model(cfg: &PlatinumConfig, mode: ExecMode, model: &BitNetModel, n: usize) -> SimReport {
     let mut total: Option<SimReport> = None;
     let mut naive: u64 = 0;
@@ -271,25 +276,22 @@ pub fn simulate_model(cfg: &PlatinumConfig, mode: ExecMode, model: &BitNetModel,
                 let mut first = r.clone();
                 first.cycles *= count as u64;
                 first.latency_s *= count as f64;
-                scale_phases(&mut first.phases, count as u64);
-                scale_activity(&mut first.activity, count as u64);
-                scale_energy(&mut first.energy, count as f64);
+                first.phases.scale(count as u64);
+                first.activity.scale(count as u64);
+                first.energy.scale(count as f64);
                 total = Some(first);
             }
             Some(acc) => {
                 acc.cycles += r.cycles * count as u64;
                 acc.latency_s += r.latency_s * count as f64;
                 let mut ph = r.phases;
-                scale_phases(&mut ph, count as u64);
-                acc.phases.construct += ph.construct;
-                acc.phases.query += ph.query;
-                acc.phases.drain += ph.drain;
-                acc.phases.dram_stall += ph.dram_stall;
+                ph.scale(count as u64);
+                acc.phases.add(&ph);
                 let mut a = r.activity;
-                scale_activity(&mut a, count as u64);
+                a.scale(count as u64);
                 acc.activity.add(&a);
                 let mut e = r.energy;
-                scale_energy(&mut e, count as f64);
+                e.scale(count as f64);
                 acc.energy.add(&e);
             }
         }
@@ -301,39 +303,6 @@ pub fn simulate_model(cfg: &PlatinumConfig, mode: ExecMode, model: &BitNetModel,
     out.utilization.lut_ports =
         (out.phases.construct + out.phases.query) as f64 / out.phases.busy().max(1) as f64;
     out
-}
-
-fn scale_phases(p: &mut PhaseCycles, c: u64) {
-    p.construct *= c;
-    p.query *= c;
-    p.drain *= c;
-    p.dram_stall *= c;
-}
-
-fn scale_activity(a: &mut Activity, c: u64) {
-    a.construct_adds *= c;
-    a.reduce_adds *= c;
-    a.lut_write_bytes *= c;
-    a.lut_read_bytes *= c;
-    a.wbuf_read_bytes *= c;
-    a.wbuf_write_bytes *= c;
-    a.ibuf_read_bytes *= c;
-    a.ibuf_write_bytes *= c;
-    a.obuf_bytes *= c;
-    a.path_read_bytes *= c;
-    a.dram_read_bytes *= c;
-    a.dram_write_bytes *= c;
-}
-
-fn scale_energy(e: &mut EnergyBreakdown, c: f64) {
-    e.dram *= c;
-    e.weight_buf *= c;
-    e.input_buf *= c;
-    e.output_buf *= c;
-    e.lut_buf *= c;
-    e.path_buf *= c;
-    e.adders *= c;
-    e.static_leak *= c;
 }
 
 #[cfg(test)]

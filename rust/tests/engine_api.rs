@@ -1,0 +1,156 @@
+//! Engine API contract tests: registry round-trips, unified-report JSON
+//! golden output, and equivalence pins tying `Backend::run` on
+//! `Workload::ModelPass` to the legacy `simulate_model` /
+//! `model_report` aggregation it replaced.
+
+use platinum::analysis::Gemm;
+use platinum::baselines::{eyeriss, prosperity, tmac};
+use platinum::config::{ExecMode, PlatinumConfig};
+use platinum::engine::{Backend, Registry, Report, Stage, Workload, COMPARISON_IDS};
+use platinum::models::{B158_3B, DECODE_N, PREFILL_N};
+use platinum::sim::simulate_model;
+use platinum::util::json::Json;
+
+fn run(id: &str, w: &Workload) -> Report {
+    Registry::with_defaults().build(id).unwrap().run(w)
+}
+
+// ---------------------------------------------------------------------------
+// registry round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_registered_backend_runs_a_kernel() {
+    let reg = Registry::with_defaults();
+    let g = Gemm::new(128, 65, 8);
+    assert!(reg.ids().len() >= 6, "expected all five systems + tmac-cpu");
+    for id in reg.ids() {
+        let be = reg.build(id).unwrap();
+        let r = be.run(&Workload::Kernel(g));
+        assert_eq!(r.backend, id);
+        assert_eq!(r.workload, "gemm-128x65x8");
+        assert_eq!(r.ops, g.naive_adds());
+        assert!(r.latency_s > 0.0 && r.throughput_gops > 0.0, "{id}");
+    }
+}
+
+#[test]
+fn all_five_comparison_systems_run_model_passes() {
+    // acceptance: platinum-ternary, platinum-bitserial, eyeriss,
+    // prosperity, tmac all runnable through Registry/Backend::run
+    let reg = Registry::with_defaults();
+    for be in reg.build_selection(COMPARISON_IDS).unwrap() {
+        let r = be.run(&Workload::decode(B158_3B));
+        assert!(r.latency_s > 0.0 && r.energy_j > 0.0, "{}", be.id());
+        assert_eq!(r.workload, "b1.58-3B-decode-n8");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report::to_json golden output
+// ---------------------------------------------------------------------------
+
+#[test]
+fn report_json_golden() {
+    let r = Report {
+        backend: "tmac".into(),
+        workload: "b1.58-3B-decode-n8".into(),
+        latency_s: 0.25,
+        energy_j: 8.0,
+        throughput_gops: 2.5,
+        ops: 4096,
+        ..Report::default()
+    };
+    assert_eq!(
+        r.to_json().to_string(),
+        "{\"backend\":\"tmac\",\"energy_j\":8,\"latency_s\":0.25,\"ops\":4096,\
+         \"power_w\":32,\"throughput_gops\":2.5,\"workload\":\"b1.58-3B-decode-n8\"}"
+    );
+}
+
+#[test]
+fn live_report_json_parses_with_detail_sections() {
+    let r = run("platinum-ternary", &Workload::Kernel(Gemm::new(1080, 520, 32)));
+    let j = Json::parse(&r.to_json().to_string()).unwrap();
+    assert_eq!(j.get("backend").unwrap().as_str(), Some("platinum-ternary"));
+    for key in ["latency_s", "energy_j", "power_w", "throughput_gops", "cycles"] {
+        assert!(j.get(key).and_then(Json::as_f64).unwrap() > 0.0, "{key}");
+    }
+    for section in ["phases", "activity", "energy_breakdown_j", "utilization"] {
+        assert!(j.get(section).is_some(), "missing {section}");
+    }
+    assert_eq!(
+        j.get("cycles").unwrap().as_f64().unwrap(),
+        r.cycles.unwrap() as f64
+    );
+}
+
+// ---------------------------------------------------------------------------
+// equivalence pins vs the legacy aggregation
+// ---------------------------------------------------------------------------
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= b.abs() * 1e-12
+}
+
+#[test]
+fn platinum_model_pass_pins_legacy_simulate_model() {
+    for (mode_id, mode, retile_k) in [
+        ("platinum-ternary", ExecMode::Ternary, None),
+        ("platinum-bitserial", ExecMode::BitSerial { planes: 2 }, Some(728)),
+    ] {
+        for n in [PREFILL_N, DECODE_N] {
+            let r = run(mode_id, &Workload::model_pass(B158_3B, n));
+            let mut cfg = PlatinumConfig::default();
+            if let Some(k) = retile_k {
+                cfg.tiling.k = k;
+            }
+            let legacy = simulate_model(&cfg, mode, &B158_3B, n);
+            assert_eq!(r.cycles, Some(legacy.cycles), "{mode_id} n={n} cycles");
+            assert!(close(r.latency_s, legacy.latency_s), "{mode_id} n={n} latency");
+            assert!(close(r.energy_j, legacy.energy_j()), "{mode_id} n={n} energy");
+            assert!(
+                close(r.throughput_gops, legacy.throughput_gops),
+                "{mode_id} n={n} throughput"
+            );
+            let ph = r.phases.expect("detail");
+            assert_eq!(ph.busy(), legacy.phases.busy(), "{mode_id} n={n} phases");
+        }
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn baseline_model_passes_pin_legacy_model_report() {
+    use platinum::baselines::model_report;
+    type Sim = fn(Gemm, usize) -> platinum::baselines::BaselineReport;
+    let eye: Sim = eyeriss::simulate;
+    let pro: Sim = prosperity::simulate;
+    for (id, f) in [("eyeriss", eye), ("prosperity", pro)] {
+        for n in [PREFILL_N, DECODE_N] {
+            let r = run(id, &Workload::model_pass(B158_3B, n));
+            let legacy = model_report(&B158_3B, n, |g| f(g, n));
+            assert!(close(r.latency_s, legacy.latency_s), "{id} n={n} latency");
+            assert!(close(r.energy_j, legacy.energy_j), "{id} n={n} energy");
+            assert!(
+                close(r.throughput_gops, legacy.throughput_gops),
+                "{id} n={n} throughput"
+            );
+        }
+    }
+    let r = run("tmac", &Workload::prefill(B158_3B));
+    let legacy = model_report(&B158_3B, PREFILL_N, tmac::simulate_m2pro);
+    assert!(close(r.latency_s, legacy.latency_s) && close(r.energy_j, legacy.energy_j));
+}
+
+#[test]
+fn stage_and_n_agree_on_paper_operating_points() {
+    assert_eq!(Stage::Prefill.default_n(), PREFILL_N);
+    assert_eq!(Stage::Decode.default_n(), DECODE_N);
+    match Workload::prefill(B158_3B) {
+        Workload::ModelPass { n, stage, .. } => {
+            assert_eq!((n, stage), (PREFILL_N, Stage::Prefill));
+        }
+        _ => panic!("prefill() must build a model pass"),
+    }
+}

@@ -1,0 +1,224 @@
+//! Offline drop-in subset of the `anyhow` error-handling crate.
+//!
+//! This environment builds with no network access, so the real crates.io
+//! `anyhow` cannot be fetched; this vendored shim implements exactly the
+//! surface the workspace uses — `Result`, `Error`, `anyhow!`, `bail!`,
+//! and the `Context` extension trait (including context on an existing
+//! `anyhow::Result`, via the same sealed-trait trick the real crate
+//! uses).  Swapping back to crates.io `anyhow` is a one-line change in
+//! Cargo.toml; no call site depends on anything beyond the real API.
+
+use std::fmt::{self, Display};
+
+/// `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message plus an optional boxed source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    fn from_parts(
+        msg: String,
+        source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+    ) -> Error {
+        Error { msg, source }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut source: Option<&(dyn std::error::Error + 'static)> = match &self.source {
+            Some(b) => Some(b.as_ref()),
+            None => None,
+        };
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(err) = source {
+            write!(f, "\n    {err}")?;
+            source = err.source();
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts via `?` (mirrors anyhow: `Error` itself never
+// implements `std::error::Error`, which keeps this coherent with the
+// blanket `From<T> for T`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::from_parts(err.to_string(), Some(Box::new(err)))
+    }
+}
+
+/// Carrier for an `Error`'s payload once it is demoted into the source
+/// chain of a wrapping context error.
+struct ChainLink {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Display for ChainLink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for ChainLink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for ChainLink {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match &self.source {
+            Some(b) => Some(b.as_ref()),
+            None => None,
+        }
+    }
+}
+
+mod ext {
+    use super::*;
+
+    /// Sealed dispatch: "something that can absorb a context message" —
+    /// implemented for std errors and for [`Error`] itself, which is how
+    /// `.context(..)` works on both plain and already-`anyhow` results.
+    pub trait StdError {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> StdError for E {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error {
+            Error::from_parts(context.to_string(), Some(Box::new(self)))
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error {
+            Error::from_parts(
+                context.to_string(),
+                Some(Box::new(ChainLink { msg: self.msg, source: self.source })),
+            )
+        }
+    }
+}
+
+/// Extension trait attaching context to `Result`/`Option` errors.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: ext::StdError> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tok:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tok)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_fail() -> Result<i32> {
+        let n: i32 = "notanumber".parse()?; // ParseIntError → Error
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = parse_fail().unwrap_err();
+        assert!(err.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn context_on_std_and_anyhow_results() {
+        let base: Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"));
+        let wrapped = base.context("reading manifest").unwrap_err();
+        assert_eq!(wrapped.to_string(), "reading manifest");
+        let rewrapped: Result<()> = Err(wrapped);
+        let twice = rewrapped.with_context(|| "loading artifacts").unwrap_err();
+        assert_eq!(twice.to_string(), "loading artifacts");
+        let dbg = format!("{twice:?}");
+        assert!(dbg.contains("reading manifest") && dbg.contains("disk on fire"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let name = "x";
+        let e = anyhow!("missing {name:?} at {}", 7);
+        assert_eq!(e.to_string(), "missing \"x\" at 7");
+        fn bails() -> Result<()> {
+            bail!("nope {}", 1)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert_eq!(v.context("empty").unwrap_err().to_string(), "empty");
+    }
+}
