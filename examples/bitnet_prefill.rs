@@ -117,7 +117,10 @@ fn main() -> Result<()> {
             }
         }
         if b == 0 {
-            println!("  first sequence: wall {:.1} ms (interpret-mode CPU functional path)", wall * 1e3);
+            println!(
+                "  first sequence: wall {:.1} ms (interpret-mode CPU functional path)",
+                wall * 1e3
+            );
         }
     }
 
@@ -138,8 +141,15 @@ fn main() -> Result<()> {
     println!("  output checksum         {checksum:.3} (finite: {})", checksum.is_finite());
     println!("  mpGEMM ops (naive adds) {:.2} G", ops as f64 / 1e9);
     println!("\n  simulated Platinum ASIC (0.96 mm², 500 MHz):");
-    println!("    latency    {:.3} ms  ({:.0} tok/s)", sim_latency * 1e3, total_tokens as f64 / sim_latency);
-    println!("    throughput {:.0} GOP/s (paper Table I: 1534 GOP/s at N=1024)", ops as f64 / sim_latency / 1e9);
+    println!(
+        "    latency    {:.3} ms  ({:.0} tok/s)",
+        sim_latency * 1e3,
+        total_tokens as f64 / sim_latency
+    );
+    println!(
+        "    throughput {:.0} GOP/s (paper Table I: 1534 GOP/s at N=1024)",
+        ops as f64 / sim_latency / 1e9
+    );
     println!("    energy     {:.2} mJ  ({:.2} W)", sim_energy * 1e3, sim_energy / sim_latency);
     Ok(())
 }

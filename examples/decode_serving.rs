@@ -113,7 +113,9 @@ fn main() -> Result<()> {
     let exec = BlockExec::new()?;
     let d = exec.d_model();
     let seq = exec.seq;
-    println!("decode serving: {n_requests} requests, ~{rate}/s arrivals, bucket seq={seq}, d={d}\n");
+    println!(
+        "decode serving: {n_requests} requests, ~{rate}/s arrivals, bucket seq={seq}, d={d}\n"
+    );
 
     let mut server = Server::new(
         exec,
@@ -149,7 +151,11 @@ fn main() -> Result<()> {
     println!("== serving report ==");
     println!("  completed           {}", stats.completed);
     println!("  batches             {} (mean size {:.2})", stats.batches, stats.mean_batch_size());
-    println!("  offered load        {:.1} req/s, served {:.1} req/s", rate, out.len() as f64 / total);
+    println!(
+        "  offered load        {:.1} req/s, served {:.1} req/s",
+        rate,
+        out.len() as f64 / total
+    );
     println!("  request latency     p50 {:.1} ms  p95 {:.1} ms  (functional CPU path + queueing)",
         percentile(&walls, 0.5), percentile(&walls, 0.95));
     let sim_lat_per_batch = out.iter().map(|r| r.sim_latency_s).sum::<f64>() / out.len() as f64;

@@ -35,6 +35,7 @@ fn main() {
             "{:<16} {:>12} {:>12} {:>14} {:>14}",
             "vs", "speedup", "paper", "energy sav", "paper"
         );
+        let plat_energy = r_plat.energy_j.expect("platinum models energy");
         for (name, lat, en, ps, pe) in [
             ("SpikingEyeriss", r_eye.latency_s, r_eye.energy_j, paper_spd[0], paper_en[0]),
             ("Prosperity", r_pro.latency_s, r_pro.energy_j, paper_spd[1], paper_en[1]),
@@ -45,12 +46,12 @@ fn main() {
                 name,
                 lat / r_plat.latency_s,
                 ps,
-                en / r_plat.energy_j,
+                en.expect("modelled") / plat_energy,
                 pe
             );
         }
         let bs_spd = r_bs.latency_s / r_plat.latency_s;
-        let bs_en = r_bs.energy_j / r_plat.energy_j;
+        let bs_en = r_bs.energy_j.expect("modelled") / plat_energy;
         let paper_bs_en = if stage == "prefill" { 1.34 } else { 1.31 };
         println!(
             "{:<16} {:>11.2}x {:>11} {:>13.2}x {:>13.2}x",
@@ -59,8 +60,8 @@ fn main() {
         println!(
             "Platinum absolute: {:.0} GOP/s, {:.3} J, {:.2} W",
             r_plat.throughput_gops,
-            r_plat.energy_j,
-            r_plat.power_w()
+            plat_energy,
+            r_plat.power_w().expect("platinum models energy")
         );
     }
     println!("\npaper shape (who wins, roughly what factor): HOLDS (see asserts in `cargo test`)");

@@ -51,7 +51,14 @@ fn main() {
     let kc = (k as u64).div_ceil(5);
     let expect_construct = kc * 121; // ⌈3^c/2⌉−1 adds per chunk, 1 lane
     assert_eq!(ops.construct_adds, expect_construct, "Eq(3) vs measured");
-    println!("golden-model cross-check: construct adds {} == Eq(3) term {} ✓", ops.construct_adds, expect_construct);
-    println!("\npaper shape: Platinum lowest across all chunk sizes — {}",
-        if rows.iter().all(|r| best.platinum <= r.bitserial && best.platinum <= r.ternary_lut) { "HOLDS" } else { "VIOLATED" });
+    println!(
+        "golden-model cross-check: construct adds {} == Eq(3) term {} ✓",
+        ops.construct_adds, expect_construct
+    );
+    let holds =
+        rows.iter().all(|r| best.platinum <= r.bitserial && best.platinum <= r.ternary_lut);
+    println!(
+        "\npaper shape: Platinum lowest across all chunk sizes — {}",
+        if holds { "HOLDS" } else { "VIOLATED" }
+    );
 }

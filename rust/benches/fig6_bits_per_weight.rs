@@ -8,7 +8,10 @@ use platinum::encoding::{self, pack_ternary};
 use platinum::util::rng::Rng;
 
 fn main() {
-    println!("Fig 6: encoded bits per weight vs pack size (entropy floor: log2(3) = {:.3})", 3f64.log2());
+    println!(
+        "Fig 6: encoded bits per weight vs pack size (entropy floor: log2(3) = {:.3})",
+        3f64.log2()
+    );
     println!("{:<4} {:>10} {:>12} {:>14}", "c", "bits", "bits/weight", "overhead vs H");
     for (c, bpw) in fig6_series(1..=10) {
         println!(
@@ -29,5 +32,8 @@ fn main() {
     let measured = p.data.len() as f64 * 8.0 / (m * k) as f64;
     println!("\nmeasured on a {m}x{k} matrix: {measured:.3} bits/weight");
     assert!((measured - 1.6).abs() < 1e-9);
-    println!("vs T-MAC's 2-bit encoding: {:.0}% smaller weight footprint", (1.0 - 1.6 / 2.0) * 100.0);
+    println!(
+        "vs T-MAC's 2-bit encoding: {:.0}% smaller weight footprint",
+        (1.0 - 1.6 / 2.0) * 100.0
+    );
 }

@@ -33,7 +33,13 @@ fn main() {
         if front.contains(&i) || chosen {
             println!(
                 "{:<24} {:>8.3} {:>9.3} {:>8.3} {:>9.0}  {}{}",
-                format!("m{} k{} n{} {}", p.tiling.m, p.tiling.k, p.tiling.n, p.tiling.order.label()),
+                format!(
+                    "m{} k{} n{} {}",
+                    p.tiling.m,
+                    p.tiling.k,
+                    p.tiling.n,
+                    p.tiling.order.label()
+                ),
                 p.latency_s / lat0,
                 p.energy_j / en0,
                 p.area_mm2 / ar0,

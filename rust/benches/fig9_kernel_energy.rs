@@ -22,10 +22,11 @@ fn main() {
         for model in &ALL_MODELS {
             for (m, k) in model.unique_shapes() {
                 let w = Workload::Kernel(Gemm::new(m, k, n));
-                let e_eye = eye.run(&w).energy_j * 1e3;
-                let e_pro = pro.run(&w).energy_j * 1e3;
-                let e_tm = tm.run(&w).energy_j * 1e3;
-                let e_plat = plat.run(&w).energy_j * 1e3;
+                let e = |r: platinum::engine::Report| r.energy_j.expect("modelled") * 1e3;
+                let e_eye = e(eye.run(&w));
+                let e_pro = e(pro.run(&w));
+                let e_tm = e(tm.run(&w));
+                let e_plat = e(plat.run(&w));
                 let best_base = e_pro.min(e_tm).min(e_eye);
                 println!(
                     "{:<10} {:<14} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>9.2}x",

@@ -1,36 +1,88 @@
 //! Hot-path microbenchmarks (real wallclock on this machine) — the
 //! §Perf substrate: offline toolchain throughput, golden-datapath
-//! throughput, the real T-MAC CPU kernel, simulator speed, and manifest
-//! parsing.  Regenerated before/after every optimization iteration.
+//! throughput (with 1/4/8-thread pool sweeps), the real T-MAC CPU
+//! kernel (same sweeps), simulator speed, and manifest parsing.
+//! Regenerated before/after every optimization iteration.
+//!
+//! Besides the human-readable report, every row is recorded to
+//! `BENCH_hotpath.json` (override with `BENCH_HOTPATH_JSON=<path>`) as
+//! `{name, ns_per_iter, rate_per_s, unit}` so the perf trajectory is
+//! machine-diffable across commits; CI runs a smoke invocation with
+//! `HOTPATH_BUDGET_MS=40`.
 
 use platinum::analysis::Gemm;
 use platinum::baselines::tmac::TMacCpu;
 use platinum::config::{ExecMode, PlatinumConfig};
 use platinum::encoding::pack_ternary;
-use platinum::engine::{Backend, PlatinumBackend, Registry, Workload};
-use platinum::lut::{naive_mpgemm, ternary_mpgemm};
+use platinum::engine::{Backend, PlatinumBackend, PlatinumCpuBackend, Registry, Workload};
+use platinum::lut::{naive_mpgemm, ternary_mpgemm, ternary_mpgemm_pool};
 use platinum::models::B158_3B;
 use platinum::pathgen;
+use platinum::runtime::pool::Pool;
 use platinum::sim::{simulate_gemm, simulate_model};
-use platinum::util::bench::{bench, fmt_rate, report};
+use platinum::util::bench::{bench, fmt_rate, report, Stats};
+use platinum::util::json::{arr, num, obj, s as jstr, Json};
 use platinum::util::rng::Rng;
 use std::time::Duration;
 
+/// Collects every reported row for the machine-readable sidecar.
+struct Recorder {
+    rows: Vec<Json>,
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder { rows: Vec::new() }
+    }
+
+    /// Print the human row and record the JSON one.  `rate` is
+    /// (per-second quantity, unit), e.g. `(1.2e9, "op")`.
+    fn row(&mut self, name: &str, stats: &Stats, rate: Option<(f64, &str)>) {
+        let extra = rate.map(|(r, u)| fmt_rate(r, u)).unwrap_or_default();
+        report(name, stats, &extra);
+        self.rows.push(obj(vec![
+            ("name", jstr(name)),
+            ("ns_per_iter", num(stats.per_iter_ns())),
+            (
+                "rate_per_s",
+                rate.map(|(r, _)| num(r)).unwrap_or(Json::Null),
+            ),
+            (
+                "unit",
+                rate.map(|(_, u)| jstr(u)).unwrap_or(Json::Null),
+            ),
+        ]));
+    }
+
+    fn write(self, path: &str) {
+        let doc = obj(vec![("bench", jstr("hotpath")), ("results", arr(self.rows))]);
+        match std::fs::write(path, doc.to_string() + "\n") {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("warning: could not write {path}: {e}"),
+        }
+    }
+}
+
 fn main() {
-    let budget = Duration::from_millis(300);
+    let budget_ms: u64 = std::env::var("HOTPATH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    let budget = Duration::from_millis(budget_ms);
+    let mut rec = Recorder::new();
     let mut rng = Rng::seed_from(0xBE);
 
     // --- offline toolchain -------------------------------------------------
-    let s = bench(2, budget, || pathgen::ternary_path(5));
-    report("pathgen/ternary_c5", &s, "");
-    let s = bench(2, budget, || pathgen::binary_path(7));
-    report("pathgen/binary_c7", &s, "");
+    let st = bench(2, budget, || pathgen::ternary_path(5));
+    rec.row("pathgen/ternary_c5", &st, None);
+    let st = bench(2, budget, || pathgen::binary_path(7));
+    rec.row("pathgen/binary_c7", &st, None);
 
     let (m, k) = (1080, 520);
     let w = rng.ternary_vec(m * k);
-    let s = bench(2, budget, || pack_ternary(&w, m, k, 5));
-    let rate = (m * k) as f64 / (s.per_iter_ns() * 1e-9);
-    report("encode/pack_ternary_1080x520", &s, &fmt_rate(rate, "wt"));
+    let st = bench(2, budget, || pack_ternary(&w, m, k, 5));
+    let rate = (m * k) as f64 / (st.per_iter_ns() * 1e-9);
+    rec.row("encode/pack_ternary_1080x520", &st, Some((rate, "wt")));
 
     // --- golden datapath vs naive vs real T-MAC ----------------------------
     let (gm, gk, gn) = (512, 520, 8);
@@ -40,51 +92,95 @@ fn main() {
     let cfg = PlatinumConfig::default();
     let ops = (gm * gk * gn) as f64;
 
-    let s = bench(2, budget, || ternary_mpgemm(&cfg, &packed, &gx, gn));
-    report("golden/lut_mpgemm_512x520x8", &s, &fmt_rate(ops / (s.per_iter_ns() * 1e-9), "op"));
+    // headline: the default entry point (process-wide pool, all cores)
+    let st = bench(2, budget, || ternary_mpgemm(&cfg, &packed, &gx, gn));
+    let r = ops / (st.per_iter_ns() * 1e-9);
+    rec.row("golden/lut_mpgemm_512x520x8", &st, Some((r, "op")));
 
-    let s = bench(2, budget, || naive_mpgemm(&gw, gm, gk, &gx, gn));
-    report("golden/naive_512x520x8", &s, &fmt_rate(ops / (s.per_iter_ns() * 1e-9), "op"));
+    let st = bench(2, budget, || naive_mpgemm(&gw, gm, gk, &gx, gn));
+    rec.row(
+        "golden/naive_512x520x8",
+        &st,
+        Some((ops / (st.per_iter_ns() * 1e-9), "op")),
+    );
 
     let tm = TMacCpu::new(&gw, gm, gk);
     let mut out = vec![0i32; gm * gn];
-    let s = bench(2, budget, || tm.gemm(&gx, gn, &mut out, 1));
-    report("tmac_cpu/gemm_512x520x8_1T", &s, &fmt_rate(ops / (s.per_iter_ns() * 1e-9), "op"));
+
+    // thread sweeps on pinned-size pools: the scaling trajectory the
+    // acceptance criteria pin (golden ≥4x, tmac ≥2x at 8T vs seed)
+    for threads in [1usize, 4, 8] {
+        let pool = Pool::new(threads);
+        let st = bench(2, budget, || {
+            ternary_mpgemm_pool(&cfg, &packed, &gx, gn, &pool, threads)
+        });
+        let r = ops / (st.per_iter_ns() * 1e-9);
+        rec.row(
+            &format!("golden/lut_mpgemm_512x520x8_{threads}T"),
+            &st,
+            Some((r, "op")),
+        );
+        let st = bench(2, budget, || tm.gemm_pool(&gx, gn, &mut out, threads, &pool));
+        let r = ops / (st.per_iter_ns() * 1e-9);
+        rec.row(
+            &format!("tmac_cpu/gemm_512x520x8_{threads}T"),
+            &st,
+            Some((r, "op")),
+        );
+    }
 
     let gx1 = rng.act_vec(gk);
     let mut out1 = vec![0i32; gm];
-    let s = bench(2, budget, || tm.gemv(&gx1, &mut out1));
-    report("tmac_cpu/gemv_512x520", &s, &fmt_rate((gm * gk) as f64 / (s.per_iter_ns() * 1e-9), "op"));
+    let st = bench(2, budget, || tm.gemv(&gx1, &mut out1));
+    rec.row(
+        "tmac_cpu/gemv_512x520",
+        &st,
+        Some(((gm * gk) as f64 / (st.per_iter_ns() * 1e-9), "op")),
+    );
 
     // --- simulator speed ----------------------------------------------------
     let g = Gemm::new(3200, 3200, 1024);
-    let s = bench(1, budget, || simulate_gemm(&cfg, ExecMode::Ternary, g));
+    let st = bench(1, budget, || simulate_gemm(&cfg, ExecMode::Ternary, g));
     let r = simulate_gemm(&cfg, ExecMode::Ternary, g);
-    report(
+    rec.row(
         "sim/kernel_3200x3200x1024",
-        &s,
-        &fmt_rate(r.cycles as f64 / (s.per_iter_ns() * 1e-9), "simcycle"),
+        &st,
+        Some((r.cycles as f64 / (st.per_iter_ns() * 1e-9), "simcycle")),
     );
 
-    let s = bench(1, budget, || simulate_model(&cfg, ExecMode::Ternary, &B158_3B, 1024));
-    report("sim/model_3B_prefill", &s, "");
+    let st = bench(1, budget, || simulate_model(&cfg, ExecMode::Ternary, &B158_3B, 1024));
+    rec.row("sim/model_3B_prefill", &st, None);
 
     // --- engine API overhead ------------------------------------------------
     // the unified Backend surface must stay a zero-ish-cost wrapper over
     // the raw simulator calls above
     let be = PlatinumBackend::ternary();
-    let s = bench(1, budget, || be.run(&Workload::Kernel(g)));
-    report("engine/kernel_3200x3200x1024", &s, "");
-    let s = bench(1, budget, || be.run(&Workload::prefill(B158_3B)));
-    report("engine/model_3B_prefill", &s, "");
-    let s = bench(2, budget, || Registry::with_defaults().build("prosperity").unwrap());
-    report("engine/registry_build", &s, "");
+    let st = bench(1, budget, || be.run(&Workload::Kernel(g)));
+    rec.row("engine/kernel_3200x3200x1024", &st, None);
+    let st = bench(1, budget, || be.run(&Workload::prefill(B158_3B)));
+    rec.row("engine/model_3B_prefill", &st, None);
+    let st = bench(2, budget, || Registry::with_defaults().build("prosperity").unwrap());
+    rec.row("engine/registry_build", &st, None);
+
+    // the measured golden backend end to end (includes weight synthesis
+    // + packing per call, amortized by its internal shape memo)
+    let pcpu = PlatinumCpuBackend::new();
+    let st = bench(1, budget, || pcpu.run(&Workload::Kernel(Gemm::new(gm, gk, gn))));
+    rec.row("engine/platinum_cpu_kernel_512x520x8", &st, None);
 
     // --- manifest / json ----------------------------------------------------
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
-        let s = bench(2, budget, || platinum::util::json::Json::parse(&text).unwrap());
-        report("json/manifest_parse", &s, &fmt_rate(text.len() as f64 / (s.per_iter_ns() * 1e-9), "B"));
+        let st = bench(2, budget, || platinum::util::json::Json::parse(&text).unwrap());
+        rec.row(
+            "json/manifest_parse",
+            &st,
+            Some((text.len() as f64 / (st.per_iter_ns() * 1e-9), "B")),
+        );
     }
+
+    let path = std::env::var("BENCH_HOTPATH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    rec.write(&path);
 }

@@ -10,16 +10,30 @@
 //!
 //! 2. [`TMacCpu`] — a **real, runnable** T-MAC-style implementation:
 //!    per 4-wide binary weight group, a 16-entry LUT of activation sums
-//!    is built per column block and queried per row; ternary runs as two
-//!    passes.  Multithreaded over row stripes with `std::thread::scope`.
-//!    This is what the hotpath bench measures and what the examples use
-//!    as the CPU reference; it is validated against the golden model.
+//!    is built per column block and queried per row; ternary runs as a
+//!    fused pos/neg two-plane pass.  This is what the hotpath bench
+//!    measures and what the examples use as the CPU reference; it is
+//!    validated against the golden model.
+//!
+//! §Perf iteration 5: `gemm` runs on the persistent
+//! [`runtime::pool`](crate::runtime::pool) instead of paying a
+//! `std::thread::scope` spawn per call, and processes columns in blocks
+//! of [`COL_BLOCK`]: each block's LUTs are built **once** into a shared
+//! arena (parallel across groups) and then queried by parallel row
+//! stripes — the seed implementation rebuilt every LUT per column *per
+//! stripe*, duplicating construction work across threads.
 
 use super::BaselineReport;
 use crate::analysis::Gemm;
+use crate::runtime::pool::{self, split_even, take_slices, Pool, Task};
 
 /// T-MAC group width (4 binary weights → 16-entry LUT).
 pub const GROUP: usize = 4;
+
+/// Columns per LUT-reuse block in [`TMacCpu::gemm`] (matches the
+/// paper's decode granularity; 130 groups × 16 entries × 8 columns of
+/// i32 ≈ 65 KB arena for a 520-deep layer — L2-resident).
+pub const COL_BLOCK: usize = 8;
 
 // --- analytical M2 Pro model ---------------------------------------------
 
@@ -56,11 +70,11 @@ pub fn simulate_m2pro(g: Gemm) -> BaselineReport {
 
 // --- real CPU implementation ----------------------------------------------
 
-/// A T-MAC-style CPU kernel instance: pre-grouped binary plane indices.
+/// A T-MAC-style CPU kernel instance: pre-grouped binary plane indices
+/// (plane 0 = +1 weights, plane 1 = −1 weights; queries fuse the two).
 pub struct TMacCpu {
     /// Per plane: (m × groups) 4-bit LUT indices.
     planes: Vec<Vec<u8>>,
-    plane_signs: Vec<i32>,
     m: usize,
     k: usize,
     groups: usize,
@@ -91,7 +105,7 @@ impl TMacCpu {
                 neg[row * groups + gidx] = nb;
             }
         }
-        TMacCpu { planes: vec![pos, neg], plane_signs: vec![1, -1], m, k, groups }
+        TMacCpu { planes: vec![pos, neg], m, k, groups }
     }
 
     /// Compute y = W · x for a single activation column (the
@@ -129,55 +143,103 @@ impl TMacCpu {
         }
     }
 
-    /// Multithreaded GEMM y = W · X over row stripes.
-    /// `x` is (k × n) row-major; `out` is (m × n) row-major.
+    /// GEMM y = W · X over the process-wide worker pool with `threads`
+    /// row stripes.  `x` is (k × n) row-major; `out` is (m × n)
+    /// row-major.  Bit-exact for any thread count.
     pub fn gemm(&self, x: &[i32], n: usize, out: &mut [i32], threads: usize) {
+        self.gemm_pool(x, n, out, threads, pool::global());
+    }
+
+    /// [`TMacCpu::gemm`] on an explicit pool (bench sweeps, backends
+    /// with pinned thread counts).
+    pub fn gemm_pool(&self, x: &[i32], n: usize, out: &mut [i32], threads: usize, pool: &Pool) {
         assert_eq!(x.len(), self.k * n);
         assert_eq!(out.len(), self.m * n);
         let threads = threads.max(1);
-        let stripe = self.m.div_ceil(threads);
-        // per-column-group LUTs are built per thread to stay cache-local
-        std::thread::scope(|scope| {
-            for (tid, chunk) in out.chunks_mut(stripe * n).enumerate() {
-                let row0 = tid * stripe;
-                scope.spawn(move || {
-                    self.gemm_stripe(x, n, row0, chunk);
-                });
-            }
-        });
-    }
+        let groups = self.groups;
+        let k = self.k;
+        let pos = &self.planes[0][..];
+        let neg = &self.planes[1][..];
+        let stripes = split_even(self.m, threads);
 
-    fn gemm_stripe(&self, x: &[i32], n: usize, row0: usize, out: &mut [i32]) {
-        let rows = out.len() / n;
-        out.fill(0);
-        // process columns one at a time (decode) or in blocks; LUT per
-        // (group, column) is rebuilt per column — T-MAC's act-major order
-        let mut luts = vec![0i32; self.groups * 16];
-        for col in 0..n {
-            for gidx in 0..self.groups {
-                let base = gidx * GROUP;
-                let lut = &mut luts[gidx * 16..(gidx + 1) * 16];
-                for t in 1..16usize {
-                    let j = t.trailing_zeros() as usize;
-                    let xv = if base + j < self.k { x[(base + j) * n + col] } else { 0 };
-                    lut[t] = lut[t & (t - 1)] + xv;
-                }
+        // shared per-block LUT arena: entry t of group g for block
+        // column j lives at luts[(g*16 + t) * nb + j], so one query
+        // fetches nb contiguous accumulators
+        let mut luts = vec![0i32; groups * 16 * COL_BLOCK];
+        for col0 in (0..n).step_by(COL_BLOCK) {
+            let nb = COL_BLOCK.min(n - col0);
+
+            // phase 1: build the block's LUTs once, parallel over groups
+            {
+                let gspans = split_even(groups, threads);
+                let lut_parts = take_slices(
+                    &mut luts,
+                    gspans.iter().map(|s| (s.end - s.start) * 16 * nb),
+                );
+                let tasks: Vec<Task> = gspans
+                    .iter()
+                    .zip(lut_parts)
+                    .map(|(span, part)| {
+                        let span = span.clone();
+                        Box::new(move || {
+                            for (g, lut) in part.chunks_mut(16 * nb).enumerate() {
+                                let base = (span.start + g) * GROUP;
+                                lut[..nb].fill(0); // entry 0: empty subset
+                                for t in 1..16usize {
+                                    let j = t.trailing_zeros() as usize;
+                                    let src = (t & (t - 1)) * nb;
+                                    let dst = t * nb;
+                                    if base + j < k {
+                                        let xrow =
+                                            &x[(base + j) * n + col0..(base + j) * n + col0 + nb];
+                                        for jj in 0..nb {
+                                            lut[dst + jj] = lut[src + jj] + xrow[jj];
+                                        }
+                                    } else {
+                                        // zero-padded k tail: copy the source entry
+                                        lut.copy_within(src..src + nb, dst);
+                                    }
+                                }
+                            }
+                        }) as Task
+                    })
+                    .collect();
+                pool.run(tasks);
             }
-            for r in 0..rows {
-                let row = row0 + r;
-                if row >= self.m {
-                    break;
-                }
-                let mut acc = 0i32;
-                for (plane, &sign) in self.planes.iter().zip(&self.plane_signs) {
-                    let idxs = &plane[row * self.groups..(row + 1) * self.groups];
-                    let mut pacc = 0i32;
-                    for (gidx, &t) in idxs.iter().enumerate() {
-                        pacc += luts[gidx * 16 + t as usize];
-                    }
-                    acc += sign * pacc;
-                }
-                out[r * n + col] = acc;
+
+            // phase 2: query, parallel over row stripes, both planes
+            // fused per group (as in gemv)
+            {
+                let luts_ref = &luts[..];
+                let out_parts =
+                    take_slices(&mut *out, stripes.iter().map(|s| (s.end - s.start) * n));
+                let tasks: Vec<Task> = stripes
+                    .iter()
+                    .zip(out_parts)
+                    .map(|(stripe, ostripe)| {
+                        let stripe = stripe.clone();
+                        Box::new(move || {
+                            for r in 0..stripe.end - stripe.start {
+                                let row = stripe.start + r;
+                                let pi = &pos[row * groups..(row + 1) * groups];
+                                let ni = &neg[row * groups..(row + 1) * groups];
+                                let mut acc = [0i32; COL_BLOCK];
+                                for g in 0..groups {
+                                    let lp = &luts_ref
+                                        [(g * 16 + pi[g] as usize) * nb..][..nb];
+                                    let ln = &luts_ref
+                                        [(g * 16 + ni[g] as usize) * nb..][..nb];
+                                    for jj in 0..nb {
+                                        acc[jj] += lp[jj] - ln[jj];
+                                    }
+                                }
+                                let orow = &mut ostripe[r * n + col0..r * n + col0 + nb];
+                                orow.copy_from_slice(&acc[..nb]);
+                            }
+                        }) as Task
+                    })
+                    .collect();
+                pool.run(tasks);
             }
         }
     }
@@ -244,5 +306,66 @@ mod tests {
         tm.gemv(&x_col, &mut a);
         tm.gemm(&x_mat, 1, &mut b, 1);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gemm_threads_exceed_rows() {
+        let mut rng = Rng::seed_from(4);
+        let (m, k, n) = (5, 37, 3);
+        let w = rng.ternary_vec(m * k);
+        let x = rng.act_vec(k * n);
+        let tm = TMacCpu::new(&w, m, k);
+        let pool = Pool::new(8);
+        let mut out = vec![0i32; m * n];
+        tm.gemm_pool(&x, n, &mut out, 8, &pool);
+        let want = naive_mpgemm(&w, m, k, &x, n);
+        for i in 0..m * n {
+            assert_eq!(out[i] as i64, want[i]);
+        }
+    }
+
+    #[test]
+    fn gemm_column_count_not_multiple_of_block() {
+        // n straddles COL_BLOCK boundaries (tail block narrower)
+        let mut rng = Rng::seed_from(5);
+        let (m, k, n) = (24, 41, COL_BLOCK + 3);
+        let w = rng.ternary_vec(m * k);
+        let x = rng.act_vec(k * n);
+        let tm = TMacCpu::new(&w, m, k);
+        let mut out = vec![0i32; m * n];
+        tm.gemm(&x, n, &mut out, 2);
+        let want = naive_mpgemm(&w, m, k, &x, n);
+        for i in 0..m * n {
+            assert_eq!(out[i] as i64, want[i]);
+        }
+    }
+
+    #[test]
+    fn prop_gemm_pool_matches_single_thread() {
+        let pool = Pool::new(4);
+        crate::util::check_prop("tmac_pool_matches_single_thread", 10, |seed| {
+            let mut rng = Rng::seed_from(seed);
+            let m = 1 + rng.below(48) as usize;
+            let k = 1 + rng.below(90) as usize;
+            let n = 1 + rng.below(20) as usize;
+            let w = rng.ternary_vec(m * k);
+            let x = rng.act_vec(k * n);
+            let tm = TMacCpu::new(&w, m, k);
+            let single = Pool::new(1);
+            let mut seq = vec![0i32; m * n];
+            tm.gemm_pool(&x, n, &mut seq, 1, &single);
+            let threads = 1 + rng.below(9) as usize;
+            let mut par = vec![0i32; m * n];
+            tm.gemm_pool(&x, n, &mut par, threads, &pool);
+            crate::ensure_prop!(
+                seq == par,
+                "pool diverged at m={m} k={k} n={n} threads={threads}"
+            );
+            let want = naive_mpgemm(&w, m, k, &x, n);
+            for i in 0..m * n {
+                crate::ensure_prop!(seq[i] as i64 == want[i], "wrong vs naive at {i}");
+            }
+            Ok(())
+        });
     }
 }

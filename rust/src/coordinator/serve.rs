@@ -4,14 +4,17 @@
 //! Requests (token sequences) arrive on a channel; the batcher groups
 //! them into accelerator-friendly batches (multiples of n_cols = 8, the
 //! paper's decode granularity), runs the functional forward through a
-//! pluggable [`Executor`] (PJRT artifacts in the examples, the golden
-//! model in tests), and attaches simulated accelerator timing/energy
-//! from the cycle-accurate model — the classic functional + performance
-//! model split.
+//! pluggable [`Executor`] (PJRT artifacts in the examples,
+//! [`GoldenExecutor`] for the pooled golden datapath), and attaches
+//! accelerator timing/energy from a pluggable engine backend — the
+//! classic functional + performance model split, or, with the measured
+//! `platinum-cpu` pricer, one fast substrate serving both roles.
 
 use crate::analysis::Gemm;
 use crate::config::{ExecMode, PlatinumConfig};
+use crate::encoding::{pack_ternary, PackedTernary};
 use crate::engine::{Backend, PlatinumBackend, Workload};
+use crate::lut::ternary_mpgemm;
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -117,7 +120,9 @@ impl<E: Executor> Server<E> {
         Server { exec, pricer, policy, stats: ServeStats::default() }
     }
 
-    /// Price one request batch's GEMMs on the engine backend.
+    /// Price one request batch's GEMMs on the engine backend.  Energy
+    /// is 0 when the pricer doesn't model it (measured CPU backends);
+    /// latency is always real.
     fn price(&self, seq: usize, batch: usize) -> (f64, f64) {
         // the batch shares the N dimension: one dispatch serves all
         let gemms: Vec<Gemm> = self
@@ -127,7 +132,7 @@ impl<E: Executor> Server<E> {
             .map(|g| Gemm::new(g.m, g.k, g.n * batch))
             .collect();
         let r = self.pricer.run(&Workload::Batch(gemms));
-        (r.latency_s, r.energy_j)
+        (r.latency_s, r.energy_j.unwrap_or(0.0))
     }
 
     /// Drain the channel until it closes, batching and executing.
@@ -202,76 +207,89 @@ impl<E: Executor> Server<E> {
     }
 }
 
+/// Functional [`Executor`] running one BitLinear layer through the
+/// golden ternary datapath ([`crate::lut::ternary_mpgemm`]) on the
+/// worker pool — the serving loop's fast CPU substrate.  Pair it with
+/// the measured `platinum-cpu` pricer and the functional execution and
+/// the latency pricing finally share one implementation; pair it with
+/// `platinum-ternary` for the classic functional + cycle-model split.
+///
+/// Inputs are quantized to the int8 grid (×127), run exactly, and
+/// dequantized — mirroring BitNet's activation quantization.
+pub struct GoldenExecutor {
+    packed: PackedTernary,
+    d: usize,
+    m: usize,
+    cfg: PlatinumConfig,
+}
+
+impl GoldenExecutor {
+    /// Wrap a ternary weight matrix (row-major m × d).
+    pub fn new(w: &[i8], m: usize, d: usize, cfg: PlatinumConfig) -> Self {
+        let c = cfg.c_ternary;
+        GoldenExecutor { packed: pack_ternary(w, m, d, c), d, m, cfg }
+    }
+
+    /// Output feature count.
+    pub fn d_out(&self) -> usize {
+        self.m
+    }
+}
+
+impl Executor for GoldenExecutor {
+    fn d_model(&self) -> usize {
+        self.d
+    }
+
+    fn run(&mut self, xs: &[&[f32]], seq: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        let n = xs.len() * seq;
+        // quantize to int8 grid, run the golden datapath, dequantize
+        let mut acts = vec![0i32; self.d * n];
+        for (r, x) in xs.iter().enumerate() {
+            for s in 0..seq {
+                for f in 0..self.d {
+                    let col = r * seq + s;
+                    acts[f * n + col] = (x[s * self.d + f] * 127.0).round() as i32;
+                }
+            }
+        }
+        let (y, _) = ternary_mpgemm(&self.cfg, &self.packed, &acts, n);
+        Ok(xs
+            .iter()
+            .enumerate()
+            .map(|(r, _)| {
+                let mut o = vec![0f32; seq * self.m];
+                for s in 0..seq {
+                    for mm in 0..self.m {
+                        let col = r * seq + s;
+                        o[s * self.m + mm] = y[mm * n + col] as f32 / 127.0;
+                    }
+                }
+                o
+            })
+            .collect())
+    }
+
+    fn gemms(&self, seq: usize) -> Vec<Gemm> {
+        vec![Gemm::new(self.m, self.d, seq)]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::encoding::pack_ternary;
-    use crate::lut::ternary_mpgemm;
     use crate::util::rng::Rng;
 
-    /// Test executor: one BitLinear layer through the golden model.
-    struct GoldenExec {
-        packed: crate::encoding::PackedTernary,
-        d: usize,
-        m: usize,
-        cfg: PlatinumConfig,
-    }
-
-    impl GoldenExec {
-        fn new(d: usize, m: usize) -> Self {
-            let mut rng = Rng::seed_from(11);
-            let w = rng.ternary_vec(m * d);
-            GoldenExec {
-                packed: pack_ternary(&w, m, d, 5),
-                d,
-                m,
-                cfg: PlatinumConfig::default(),
-            }
-        }
-    }
-
-    impl Executor for GoldenExec {
-        fn d_model(&self) -> usize {
-            self.d
-        }
-
-        fn run(&mut self, xs: &[&[f32]], seq: usize) -> anyhow::Result<Vec<Vec<f32>>> {
-            let n = xs.len() * seq;
-            // quantize to int8 grid, run the golden datapath, dequantize
-            let mut acts = vec![0i32; self.d * n];
-            for (r, x) in xs.iter().enumerate() {
-                for s in 0..seq {
-                    for f in 0..self.d {
-                        let col = r * seq + s;
-                        acts[f * n + col] = (x[s * self.d + f] * 127.0).round() as i32;
-                    }
-                }
-            }
-            let (y, _) = ternary_mpgemm(&self.cfg, &self.packed, &acts, n);
-            Ok(xs
-                .iter()
-                .enumerate()
-                .map(|(r, _)| {
-                    let mut o = vec![0f32; seq * self.m];
-                    for s in 0..seq {
-                        for mm in 0..self.m {
-                            let col = r * seq + s;
-                            o[s * self.m + mm] = y[mm * n + col] as f32 / 127.0;
-                        }
-                    }
-                    o
-                })
-                .collect())
-        }
-
-        fn gemms(&self, seq: usize) -> Vec<Gemm> {
-            vec![Gemm::new(self.m, self.d, seq)]
-        }
+    /// Random-weight [`GoldenExecutor`] with d inputs and m outputs.
+    fn golden_exec(d: usize, m: usize) -> GoldenExecutor {
+        let mut rng = Rng::seed_from(11);
+        let w = rng.ternary_vec(m * d);
+        GoldenExecutor::new(&w, m, d, PlatinumConfig::default())
     }
 
     #[test]
     fn serves_batched_requests() {
-        let exec = GoldenExec::new(40, 16);
+        let exec = golden_exec(40, 16);
         let mut server = Server::new(
             exec,
             PlatinumConfig::default(),
@@ -296,7 +314,7 @@ mod tests {
     #[test]
     fn pricing_backend_is_pluggable() {
         // same functional path, priced on a baseline instead of Platinum
-        let exec = GoldenExec::new(24, 8);
+        let exec = golden_exec(24, 8);
         let mut server = Server::with_backend(
             exec,
             Box::new(crate::engine::EyerissBackend),
@@ -316,9 +334,37 @@ mod tests {
     }
 
     #[test]
+    fn batches_execute_through_measured_platinum_cpu() {
+        // functional execution AND pricing both run the golden datapath:
+        // the pricer is the measured platinum-cpu backend, so
+        // sim_latency is real wall-clock of the same substrate (energy
+        // deliberately 0: the measured backend reports it unmodelled)
+        let exec = golden_exec(30, 12);
+        let pricer = crate::engine::Registry::with_defaults().build("platinum-cpu").unwrap();
+        let mut server = Server::with_backend(
+            exec,
+            pricer,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        let (tx, rx) = mpsc::channel();
+        let mut rng = Rng::seed_from(7);
+        for id in 0..6u64 {
+            let x: Vec<f32> = (0..30).map(|_| (rng.f64() as f32 - 0.5)).collect();
+            tx.send(Request { id, x, seq: 1, arrived: Instant::now() }).unwrap();
+        }
+        drop(tx);
+        let mut out = Vec::new();
+        server.run(rx, &mut out).unwrap();
+        assert_eq!(out.len(), 6);
+        assert!(out.iter().all(|r| r.y.len() == 12));
+        assert!(out.iter().all(|r| r.sim_latency_s > 0.0), "measured latency must be real");
+        assert!(out.iter().all(|r| r.sim_energy_j == 0.0), "unmodelled energy prices as 0");
+    }
+
+    #[test]
     fn batching_reduces_batches() {
         // with a generous wait window all 8 requests coalesce
-        let exec = GoldenExec::new(20, 8);
+        let exec = golden_exec(20, 8);
         let mut server = Server::new(
             exec,
             PlatinumConfig::default(),

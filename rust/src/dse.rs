@@ -63,9 +63,15 @@ pub fn evaluate(tiling: Tiling, models: &[BitNetModel]) -> DsePoint {
     for model in models {
         let r = backend.run(&Workload::model_pass(*model, PREFILL_N));
         latency += r.latency_s;
-        energy += r.energy_j;
+        energy += r.energy_j.expect("platinum models energy");
     }
-    DsePoint { tiling, latency_s: latency, energy_j: energy, area_mm2: area, sram_kb: area_model.total_sram_kb() }
+    DsePoint {
+        tiling,
+        latency_s: latency,
+        energy_j: energy,
+        area_mm2: area,
+        sram_kb: area_model.total_sram_kb(),
+    }
 }
 
 /// Run the full sweep (Fig 7). `models` defaults to all three b1.58

@@ -10,7 +10,9 @@
 //!
 //! * [`Backend`] — anything that executes a [`Workload`]: Platinum in
 //!   either [`crate::config::ExecMode`], SpikingEyeriss, Prosperity,
-//!   the analytical T-MAC model, and the real measured CPU kernel.
+//!   the analytical T-MAC model, and the two real measured CPU kernels
+//!   (`tmac-cpu`, and `platinum-cpu` running the golden datapath on the
+//!   [`crate::runtime::pool`] worker pool).
 //! * [`Workload`] — kernel / model-pass / batch, with model-pass
 //!   expansion and aggregation implemented once inside the engine.
 //! * [`Report`] — one result shape (scalars always, cycle-accurate
@@ -29,7 +31,8 @@ pub mod report;
 pub mod workload;
 
 pub use backends::{
-    EyerissBackend, PlatinumBackend, ProsperityBackend, TMacBackend, TMacCpuBackend,
+    EyerissBackend, PlatinumBackend, PlatinumCpuBackend, ProsperityBackend, TMacBackend,
+    TMacCpuBackend,
 };
 pub use registry::{Registry, COMPARISON_IDS};
 pub use report::{BackendInfo, BackendKind, Report};
@@ -38,9 +41,9 @@ pub use workload::{Stage, Workload};
 /// A system that executes mpGEMM workloads.
 ///
 /// Implementations must be deterministic given the workload (the
-/// measured CPU backend is the one deliberate exception: it reports
+/// measured CPU backends are the deliberate exception: they report
 /// real wall-clock time) and must fill every scalar field of the
-/// returned [`Report`].
+/// returned [`Report`] (`energy_j` stays `None` when unmodelled).
 pub trait Backend {
     /// Stable registry id (e.g. `"platinum-ternary"`).
     fn id(&self) -> &str;

@@ -6,7 +6,8 @@
 //! the crate needs to change to make them reachable from every surface.
 
 use super::backends::{
-    EyerissBackend, PlatinumBackend, ProsperityBackend, TMacBackend, TMacCpuBackend,
+    EyerissBackend, PlatinumBackend, PlatinumCpuBackend, ProsperityBackend, TMacBackend,
+    TMacCpuBackend,
 };
 use super::Backend;
 use anyhow::{bail, Result};
@@ -37,9 +38,14 @@ fn build_tmac_cpu() -> Box<dyn Backend> {
     Box::new(TMacCpuBackend::new())
 }
 
+fn build_platinum_cpu() -> Box<dyn Backend> {
+    Box::new(PlatinumCpuBackend::new())
+}
+
 /// Backend ids used for paper-style cross-system comparisons (every
-/// modelled system; excludes `tmac-cpu`, whose wall-clock measurement of
-/// a full model pass is prohibitively slow and machine-dependent).
+/// modelled system; excludes the measured `tmac-cpu`/`platinum-cpu`
+/// kernels, whose wall-clock measurement of a full model pass is
+/// prohibitively slow and machine-dependent).
 pub const COMPARISON_IDS: &str = "platinum-ternary,platinum-bitserial,eyeriss,prosperity,tmac";
 
 /// Constructs [`Backend`]s by id string.
@@ -57,6 +63,7 @@ impl Registry {
         r.register("prosperity", build_prosperity);
         r.register("tmac", build_tmac);
         r.register("tmac-cpu", build_tmac_cpu);
+        r.register("platinum-cpu", build_platinum_cpu);
         r
     }
 

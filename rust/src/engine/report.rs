@@ -72,7 +72,13 @@ impl BackendInfo {
 /// Scalar headline metrics are always present; the `Option` sections
 /// carry the cycle-accurate detail only the simulated Platinum backends
 /// produce (analytical baselines report scalars, the measured CPU
-/// backend reports wall-clock latency only).
+/// backends report wall-clock latency only).
+///
+/// `energy_j` is `None` — serialized as JSON `null`, **not** `0.0` —
+/// when the backend does not model energy at all (the measured
+/// `tmac-cpu` / `platinum-cpu` kernels; RAPL-based measurement is the
+/// ROADMAP fix).  A literal `0.0` would be indistinguishable from "this
+/// system consumes no energy" in downstream comparisons.
 #[derive(Debug, Clone, Default)]
 pub struct Report {
     /// Backend id that produced this report.
@@ -80,7 +86,8 @@ pub struct Report {
     /// Workload label (see [`super::Workload::label`]).
     pub workload: String,
     pub latency_s: f64,
-    pub energy_j: f64,
+    /// Total energy, when the backend models it (`None` = unmodelled).
+    pub energy_j: Option<f64>,
     /// Naive-equivalent throughput (the paper's GOP/s normalization).
     pub throughput_gops: f64,
     /// Naive addition count of the workload.
@@ -93,13 +100,12 @@ pub struct Report {
 }
 
 impl Report {
-    /// Average power over the workload (0 when latency or energy is
-    /// unmodelled).
-    pub fn power_w(&self) -> f64 {
-        if self.latency_s > 0.0 {
-            self.energy_j / self.latency_s
-        } else {
-            0.0
+    /// Average power over the workload (`None` when energy is
+    /// unmodelled or latency is zero).
+    pub fn power_w(&self) -> Option<f64> {
+        match self.energy_j {
+            Some(e) if self.latency_s > 0.0 => Some(e / self.latency_s),
+            _ => None,
         }
     }
 
@@ -109,7 +115,7 @@ impl Report {
             backend: backend.to_string(),
             workload: format!("gemm-{}x{}x{}", r.gemm.m, r.gemm.k, r.gemm.n),
             latency_s: r.latency_s,
-            energy_j: r.energy.total(),
+            energy_j: Some(r.energy.total()),
             throughput_gops: r.throughput_gops,
             ops: r.gemm.naive_adds(),
             cycles: Some(r.cycles),
@@ -126,7 +132,7 @@ impl Report {
             backend: backend.to_string(),
             workload: format!("gemm-{}x{}x{}", g.m, g.k, g.n),
             latency_s,
-            energy_j,
+            energy_j: Some(energy_j),
             throughput_gops: if latency_s > 0.0 {
                 g.naive_adds() as f64 / latency_s / 1e9
             } else {
@@ -137,14 +143,24 @@ impl Report {
         }
     }
 
+    /// Lift a wall-clock measurement: real latency, energy unmodelled.
+    pub fn from_measured(backend: &str, g: Gemm, latency_s: f64) -> Report {
+        Report {
+            energy_j: None,
+            ..Report::from_scalars(backend, g, latency_s, 0.0)
+        }
+    }
+
     /// Machine-readable form (stable key order; `--json` CLI surface).
+    /// `energy_j`/`power_w` are `null` when energy is unmodelled.
     pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(num).unwrap_or(Json::Null);
         let mut pairs = vec![
             ("backend", s(&self.backend)),
             ("workload", s(&self.workload)),
             ("latency_s", num(self.latency_s)),
-            ("energy_j", num(self.energy_j)),
-            ("power_w", num(self.power_w())),
+            ("energy_j", opt(self.energy_j)),
+            ("power_w", opt(self.power_w())),
             ("throughput_gops", num(self.throughput_gops)),
             ("ops", num(self.ops as f64)),
         ];
@@ -220,7 +236,7 @@ mod tests {
             backend: "platinum-ternary".into(),
             workload: "gemm-4x4x4".into(),
             latency_s: 0.5,
-            energy_j: 2.0,
+            energy_j: Some(2.0),
             throughput_gops: 1.5,
             ops: 64,
             cycles: Some(1000),
@@ -235,12 +251,27 @@ mod tests {
     }
 
     #[test]
+    fn unmodelled_energy_serializes_as_null_not_zero() {
+        let r = Report::from_measured("tmac-cpu", Gemm::new(4, 4, 4), 0.5);
+        assert_eq!(r.energy_j, None);
+        assert_eq!(r.power_w(), None);
+        let text = r.to_json().to_string();
+        assert!(text.contains("\"energy_j\":null"), "{text}");
+        assert!(text.contains("\"power_w\":null"), "{text}");
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("energy_j"), Some(&Json::Null));
+        // a modelled zero still serializes as the number 0
+        let z = Report::from_scalars("eyeriss", Gemm::new(4, 4, 4), 0.5, 0.0);
+        assert!(z.to_json().to_string().contains("\"energy_j\":0"));
+    }
+
+    #[test]
     fn json_roundtrips_through_parser() {
         let mut r = Report {
             backend: "eyeriss".into(),
             workload: "b1.58-3B-prefill-n1024".into(),
             latency_s: 1.25e-3,
-            energy_j: 3.5e-2,
+            energy_j: Some(3.5e-2),
             throughput_gops: 20.8,
             ops: 123_456,
             ..Report::default()
@@ -257,7 +288,8 @@ mod tests {
 
     #[test]
     fn power_guards_zero_latency() {
-        let r = Report::default();
-        assert_eq!(r.power_w(), 0.0);
+        let r = Report { energy_j: Some(1.0), ..Report::default() };
+        assert_eq!(r.power_w(), None, "zero latency yields no power figure");
+        assert_eq!(Report::default().power_w(), None);
     }
 }

@@ -31,7 +31,7 @@
 //! | [`sim`] | cycle-accurate Platinum simulator (S4) |
 //! | [`baselines`] | SpikingEyeriss, Prosperity, T-MAC, naive (S8) |
 //! | [`dse`] | design-space exploration over tiling (S7) |
-//! | [`runtime`] | PJRT artifact load/execute (S11) |
+//! | [`runtime`] | PJRT artifact load/execute + worker pool (S11, S14) |
 //! | [`coordinator`] | tiling scheduler + serving loop (S6, S12) |
 //! | [`engine`] | unified Backend/Workload/Report execution API (S13) |
 //!
@@ -39,7 +39,10 @@
 //! constructs [`engine::Backend`]s by name, each runs
 //! [`engine::Workload`]s (kernel, model pass, batch) and returns the
 //! unified [`engine::Report`] — the CLI, DSE, benches and the serving
-//! coordinator are all thin frontends over that one API.
+//! coordinator are all thin frontends over that one API.  The
+//! functional CPU hot paths ([`lut`], [`baselines::tmac::TMacCpu`])
+//! execute in parallel blocked rounds on the persistent
+//! [`runtime::pool`] worker pool, bit-exact at any thread count.
 
 pub mod analysis;
 pub mod baselines;

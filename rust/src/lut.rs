@@ -7,13 +7,33 @@
 //! a property test pins the two op counts to each other, and the L1
 //! Pallas kernel plus the PJRT artifacts are validated against this model
 //! by the integration tests.
+//!
+//! §Perf iteration 5 — blocked parallel execution on
+//! [`crate::runtime::pool`]: a GEMM runs as *rounds* of up to
+//! [`PlatinumConfig::num_ppes`] chunks.  Per round, every chunk's LUT is
+//! built exactly once into a shared arena (parallel across chunks), then
+//! all output rows query the arena (parallel across row stripes), each
+//! row accumulating the round into an `i32` block register that spills
+//! to the `i64` output once per round — mirroring the PPE-array /
+//! aggregator split in hardware.  Row results are bit-exact regardless
+//! of thread count: every output element sees the same integer summands
+//! in the same chunk order as the sequential path.  The i32 round
+//! accumulator assumes `round · c · max|activation|` (ternary) or
+//! `round · Σ|plane_weight| · c · max|activation|` (bit-serial) stays
+//! below 2³¹ — comfortably true for the int8-range activations every
+//! caller feeds (|a| ≤ 127 leaves headroom beyond 2²⁰).
 
 use crate::config::PlatinumConfig;
 use crate::encoding::{self, PackedBinary, PackedTernary};
 use crate::pathgen::BuildPath;
+use crate::runtime::pool::{self, split_even, take_slices, Pool, Task};
 
 /// Operation counters for cross-checking against the analytical model
 /// (Eq 1–3) and the simulator's activity-based energy accounting.
+///
+/// Counts model the datapath's work and are independent of thread
+/// count; the per-round i64 spill is bookkeeping of the aggregator's
+/// existing adds, not extra datapath work, and is not counted.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct OpCounts {
     /// Adder operations during LUT construction.
@@ -31,6 +51,25 @@ impl OpCounts {
     }
 }
 
+/// Algorithm 2: replay the build path for one activation chunk into a
+/// caller-provided LUT slice (`entries × n_cols`, reused across
+/// chunks).  `acts` is (c × n_cols) row-major.  Returns adds performed.
+pub fn construct_into(path: &BuildPath, acts: &[i32], n_cols: usize, lut: &mut [i32]) -> u64 {
+    debug_assert_eq!(acts.len(), path.c * n_cols);
+    lut.fill(0); // root (and padding) entries read as zero
+    for e in &path.entries {
+        let (dst, src, j) =
+            (e.dst as usize * n_cols, e.src as usize * n_cols, e.j as usize * n_cols);
+        // split_at_mut-free: src and dst rows never alias (tree edges)
+        for col in 0..n_cols {
+            let a = acts[j + col];
+            let v = lut[src + col] + if e.sign { -a } else { a };
+            lut[dst + col] = v;
+        }
+    }
+    (path.entries.len() * n_cols) as u64
+}
+
 /// One PPE's LUT storage: `entries × n_cols` accumulators.
 pub struct LutBuffer {
     data: Vec<i32>,
@@ -46,19 +85,7 @@ impl LutBuffer {
     /// Algorithm 2: replay the build path for one activation chunk.
     /// `acts` is (c × n_cols) row-major. Returns adds performed.
     pub fn construct(&mut self, path: &BuildPath, acts: &[i32]) -> u64 {
-        debug_assert_eq!(acts.len(), path.c * self.n_cols);
-        self.data[..].fill(0); // root (and padding) entries read as zero
-        let n = self.n_cols;
-        for e in &path.entries {
-            let (dst, src, j) = (e.dst as usize * n, e.src as usize * n, e.j as usize * n);
-            // split_at_mut-free: src and dst rows never alias (tree edges)
-            for col in 0..n {
-                let a = acts[j + col];
-                let v = self.data[src + col] + if e.sign { -a } else { a };
-                self.data[dst + col] = v;
-            }
-        }
-        (path.entries.len() * n) as u64
+        construct_into(path, acts, self.n_cols, &mut self.data)
     }
 
     /// Algorithm 1's PPE.QUERY: `Flip(LUT[idx], sign)` for one column.
@@ -93,14 +120,34 @@ impl LutBuffer {
 }
 
 /// Golden ternary mpGEMM through the full Platinum datapath:
-/// rounds of (construct L LUTs → query m rows → aggregate).
+/// rounds of (construct L LUTs → query m rows → aggregate), executed in
+/// parallel on the process-wide worker pool.
 ///
-/// `acts` is (k × n) row-major int (activations); output is (m × n) i64.
+/// `acts` is (k × n) row-major int (activations); output is (m × n)
+/// i64.  Exactness contract: per-round partials accumulate in i32 (the
+/// PPE's accumulator width), so `num_ppes · c · max|act|` must stay
+/// below 2³¹ — any int8-range activations qualify by ~4 orders of
+/// magnitude; see the module docs for the derivation.
 pub fn ternary_mpgemm(
     cfg: &PlatinumConfig,
     weights: &PackedTernary,
     acts: &[i32],
     n: usize,
+) -> (Vec<i64>, OpCounts) {
+    let pool = pool::global();
+    ternary_mpgemm_pool(cfg, weights, acts, n, pool, pool.threads())
+}
+
+/// [`ternary_mpgemm`] on an explicit pool with an explicit stripe count
+/// (`threads` = parallelism degree; results are bit-exact for any
+/// value).
+pub fn ternary_mpgemm_pool(
+    cfg: &PlatinumConfig,
+    weights: &PackedTernary,
+    acts: &[i32],
+    n: usize,
+    pool: &Pool,
+    threads: usize,
 ) -> (Vec<i64>, OpCounts) {
     let c = weights.c;
     let k = weights.k;
@@ -109,67 +156,149 @@ pub fn ternary_mpgemm(
     let path = crate::pathgen::ternary_path_cached(c);
     let entries = encoding::lut_entries(c);
     let nchunks = weights.chunks();
+    let threads = threads.max(1);
     let mut out = vec![0i64; m * n];
     let mut ops = OpCounts::default();
 
-    // process n in blocks of n_cols, chunks in groups of L (one "round")
-    let ncols = cfg.n_cols.min(n.max(1));
-    let mut lut = LutBuffer::new(entries, ncols);
-    // §Perf iteration 3: hoisted activation staging buffer + sliced query
-    // accumulation (row windows let the compiler elide bounds checks and
-    // keep the idx·n_cols address math out of the column loop).
-    let mut a = vec![0i32; c * ncols];
-    let ib_mask = (1usize << encoding::index_bits(c)) - 1;
+    // process n in blocks of n_cols, chunks in rounds of L
+    let ncols = cfg.n_cols.min(n.max(1)).max(1);
+    let round = cfg.num_ppes.max(1);
     let ib = encoding::index_bits(c);
+    let ib_mask = (1usize << ib) - 1;
+    let slot = entries * ncols;
+
+    // hoisted working storage, reused across every round and n-block:
+    // the round's LUT arena (one slot per chunk), per-construct-task
+    // activation staging, per-query-stripe i32 round accumulators
+    let mut arena = vec![0i32; round.min(nchunks.max(1)) * slot];
+    let cspan_count = threads.min(round);
+    let mut staging = vec![0i32; cspan_count * c * ncols];
+    let stripes = split_even(m, threads);
+    let mut accs = vec![0i32; stripes.len().max(1) * ncols];
+
+    let wdata = &weights.data[..];
     for n0 in (0..n).step_by(ncols) {
         let nb = ncols.min(n - n0);
-        for ch_group in (0..nchunks).step_by(cfg.num_ppes) {
-            let gsz = cfg.num_ppes.min(nchunks - ch_group);
-            for g in 0..gsz {
-                let ch = ch_group + g;
-                // gather this chunk's activation block (c × nb, padded)
-                a.fill(0);
-                for i in 0..c {
-                    let kk = ch * c + i;
-                    if kk < k {
-                        let src = &acts[kk * n + n0..kk * n + n0 + nb];
-                        a[i * ncols..i * ncols + nb].copy_from_slice(src);
-                    }
-                }
-                ops.construct_adds += lut.construct(path, &a);
-                // query phase: every output row queries this PPE's LUT
-                for row in 0..m {
-                    let byte = weights.at(row, ch) as usize;
-                    let idx = byte & ib_mask;
-                    let sign = byte >> ib == 1;
-                    let lrow = lut.row(idx);
-                    let orow = &mut out[row * n + n0..row * n + n0 + nb];
-                    if sign {
-                        for (o, &v) in orow.iter_mut().zip(lrow) {
-                            *o -= v as i64;
-                        }
-                    } else {
-                        for (o, &v) in orow.iter_mut().zip(lrow) {
-                            *o += v as i64;
-                        }
-                    }
-                }
-                ops.queries += m as u64;
-                ops.reduce_adds += (m * nb) as u64;
+        for ch0 in (0..nchunks).step_by(round) {
+            let gsz = round.min(nchunks - ch0);
+
+            // phase 1: build this round's LUTs, parallel across chunks
+            let cspans = split_even(gsz, threads);
+            {
+                let arena_parts =
+                    take_slices(&mut arena, cspans.iter().map(|s| (s.end - s.start) * slot));
+                let stage_parts =
+                    take_slices(&mut staging, cspans.iter().map(|_| c * ncols));
+                let tasks: Vec<Task> = cspans
+                    .iter()
+                    .zip(arena_parts.into_iter().zip(stage_parts))
+                    .map(|(span, (luts, stage))| {
+                        let span = span.clone();
+                        Box::new(move || {
+                            for (g, lut) in luts.chunks_mut(slot).enumerate() {
+                                let ch = ch0 + span.start + g;
+                                // gather the chunk's activation block
+                                // (c × nb, zero-padded)
+                                stage.fill(0);
+                                for i in 0..c {
+                                    let kk = ch * c + i;
+                                    if kk < k {
+                                        let src = &acts[kk * n + n0..kk * n + n0 + nb];
+                                        stage[i * ncols..i * ncols + nb].copy_from_slice(src);
+                                    }
+                                }
+                                construct_into(path, stage, ncols, lut);
+                            }
+                        }) as Task
+                    })
+                    .collect();
+                pool.run(tasks);
             }
+
+            // phase 2: query, parallel across row stripes; each row
+            // accumulates the round in i32 and spills to i64 once
+            {
+                let out_parts =
+                    take_slices(&mut out, stripes.iter().map(|s| (s.end - s.start) * n));
+                let acc_parts = take_slices(&mut accs, stripes.iter().map(|_| ncols));
+                let arena_ref = &arena[..];
+                let tasks: Vec<Task> = stripes
+                    .iter()
+                    .zip(out_parts.into_iter().zip(acc_parts))
+                    .map(|(stripe, (ostripe, acc))| {
+                        let stripe = stripe.clone();
+                        Box::new(move || {
+                            for r in 0..stripe.end - stripe.start {
+                                let row = stripe.start + r;
+                                let wrow =
+                                    &wdata[row * nchunks + ch0..row * nchunks + ch0 + gsz];
+                                let acc = &mut acc[..nb];
+                                acc.fill(0);
+                                for (g, &byte) in wrow.iter().enumerate() {
+                                    let byte = byte as usize;
+                                    let idx = byte & ib_mask;
+                                    let base = g * slot + idx * ncols;
+                                    let lrow = &arena_ref[base..base + nb];
+                                    if byte >> ib == 1 {
+                                        for (a, &v) in acc.iter_mut().zip(lrow) {
+                                            *a -= v;
+                                        }
+                                    } else {
+                                        for (a, &v) in acc.iter_mut().zip(lrow) {
+                                            *a += v;
+                                        }
+                                    }
+                                }
+                                let orow = &mut ostripe[r * n + n0..r * n + n0 + nb];
+                                for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                                    *o += a as i64;
+                                }
+                            }
+                        }) as Task
+                    })
+                    .collect();
+                pool.run(tasks);
+            }
+
+            // thread-count-independent op accounting (identical to the
+            // sequential per-chunk formulas; pinned by tests)
+            ops.construct_adds += (gsz * path.entries.len() * ncols) as u64;
+            ops.queries += (gsz * m) as u64;
+            ops.reduce_adds += (gsz * m * nb) as u64;
         }
     }
     (out, ops)
 }
 
 /// Golden bit-serial mpGEMM (Platinum-bs / SNN-baseline execution):
-/// binary LUT shared across planes, merged with plane weights.
+/// binary LUT shared across planes, merged with plane weights, on the
+/// process-wide worker pool.
+///
+/// Exactness contract: per-round partials accumulate in i32, so
+/// `num_ppes · Σ|plane_weight| · c · max|act|` must stay below 2³¹
+/// (int8 activations with ≤8-bit integer plane weights qualify
+/// comfortably; see the module docs).
 pub fn bitserial_mpgemm(
     cfg: &PlatinumConfig,
     planes: &[PackedBinary],
     plane_weights: &[i32],
     acts: &[i32],
     n: usize,
+) -> (Vec<i64>, OpCounts) {
+    let pool = pool::global();
+    bitserial_mpgemm_pool(cfg, planes, plane_weights, acts, n, pool, pool.threads())
+}
+
+/// [`bitserial_mpgemm`] on an explicit pool with an explicit stripe
+/// count.
+pub fn bitserial_mpgemm_pool(
+    cfg: &PlatinumConfig,
+    planes: &[PackedBinary],
+    plane_weights: &[i32],
+    acts: &[i32],
+    n: usize,
+    pool: &Pool,
+    threads: usize,
 ) -> (Vec<i64>, OpCounts) {
     assert_eq!(planes.len(), plane_weights.len());
     assert!(!planes.is_empty());
@@ -180,35 +309,101 @@ pub fn bitserial_mpgemm(
     let path = crate::pathgen::binary_path_cached(c);
     let entries = 1usize << c;
     let nchunks = planes[0].chunks();
+    let threads = threads.max(1);
     let mut out = vec![0i64; m * n];
     let mut ops = OpCounts::default();
 
-    let ncols = cfg.n_cols.min(n.max(1));
-    let mut lut = LutBuffer::new(entries, ncols);
+    let ncols = cfg.n_cols.min(n.max(1)).max(1);
+    let round = cfg.num_ppes.max(1);
+    let slot = entries * ncols;
+
+    let mut arena = vec![0i32; round.min(nchunks.max(1)) * slot];
+    let cspan_count = threads.min(round);
+    // §Perf: staging hoisted out of the chunk loop (was a fresh
+    // `c*ncols` allocation per chunk), matching the ternary path
+    let mut staging = vec![0i32; cspan_count * c * ncols];
+    let stripes = split_even(m, threads);
+    let mut accs = vec![0i32; stripes.len().max(1) * ncols];
+
     for n0 in (0..n).step_by(ncols) {
         let nb = ncols.min(n - n0);
-        for ch in 0..nchunks {
-            let mut a = vec![0i32; c * ncols];
-            for i in 0..c {
-                let kk = ch * c + i;
-                if kk < k {
-                    for col in 0..nb {
-                        a[i * ncols + col] = acts[kk * n + n0 + col];
-                    }
-                }
+        for ch0 in (0..nchunks).step_by(round) {
+            let gsz = round.min(nchunks - ch0);
+
+            // phase 1: one binary LUT per chunk, shared by all planes
+            let cspans = split_even(gsz, threads);
+            {
+                let arena_parts =
+                    take_slices(&mut arena, cspans.iter().map(|s| (s.end - s.start) * slot));
+                let stage_parts =
+                    take_slices(&mut staging, cspans.iter().map(|_| c * ncols));
+                let tasks: Vec<Task> = cspans
+                    .iter()
+                    .zip(arena_parts.into_iter().zip(stage_parts))
+                    .map(|(span, (luts, stage))| {
+                        let span = span.clone();
+                        Box::new(move || {
+                            for (g, lut) in luts.chunks_mut(slot).enumerate() {
+                                let ch = ch0 + span.start + g;
+                                stage.fill(0);
+                                for i in 0..c {
+                                    let kk = ch * c + i;
+                                    if kk < k {
+                                        let src = &acts[kk * n + n0..kk * n + n0 + nb];
+                                        stage[i * ncols..i * ncols + nb].copy_from_slice(src);
+                                    }
+                                }
+                                construct_into(path, stage, ncols, lut);
+                            }
+                        }) as Task
+                    })
+                    .collect();
+                pool.run(tasks);
             }
-            ops.construct_adds += lut.construct(path, &a);
-            for row in 0..m {
-                for (p, &pw) in planes.iter().zip(plane_weights) {
-                    let idx = p.at(row, ch) as usize;
-                    ops.queries += 1;
-                    for col in 0..nb {
-                        let v = lut.query(idx, false, col) as i64;
-                        out[row * n + n0 + col] += pw as i64 * v;
-                        ops.reduce_adds += 1;
-                    }
-                }
+
+            // phase 2: per row, merge every plane's query of the shared
+            // LUT with its plane weight in an i32 round accumulator
+            {
+                let out_parts =
+                    take_slices(&mut out, stripes.iter().map(|s| (s.end - s.start) * n));
+                let acc_parts = take_slices(&mut accs, stripes.iter().map(|_| ncols));
+                let arena_ref = &arena[..];
+                let tasks: Vec<Task> = stripes
+                    .iter()
+                    .zip(out_parts.into_iter().zip(acc_parts))
+                    .map(|(stripe, (ostripe, acc))| {
+                        let stripe = stripe.clone();
+                        Box::new(move || {
+                            for r in 0..stripe.end - stripe.start {
+                                let row = stripe.start + r;
+                                let acc = &mut acc[..nb];
+                                acc.fill(0);
+                                for g in 0..gsz {
+                                    let ch = ch0 + g;
+                                    for (p, &pw) in planes.iter().zip(plane_weights) {
+                                        let idx = p.data[row * nchunks + ch] as usize;
+                                        let base = g * slot + idx * ncols;
+                                        let lrow = &arena_ref[base..base + nb];
+                                        for (a, &v) in acc.iter_mut().zip(lrow) {
+                                            *a += pw * v;
+                                        }
+                                    }
+                                }
+                                let orow = &mut ostripe[r * n + n0..r * n + n0 + nb];
+                                for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                                    *o += a as i64;
+                                }
+                            }
+                        }) as Task
+                    })
+                    .collect();
+                pool.run(tasks);
             }
+
+            let nplanes = planes.len();
+            ops.construct_adds += (gsz * path.entries.len() * ncols) as u64;
+            ops.queries += (gsz * m * nplanes) as u64;
+            ops.reduce_adds += (gsz * m * nplanes * nb) as u64;
         }
     }
     (out, ops)
@@ -343,5 +538,101 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    // --- pool-vs-single-thread bit-exactness -----------------------------
+
+    #[test]
+    fn prop_pool_matches_single_thread_ternary() {
+        let pools = [Pool::new(1), Pool::new(2), Pool::new(4)];
+        crate::util::check_prop("pool_matches_single_thread_ternary", 12, |seed| {
+            let mut rng = Rng::seed_from(seed);
+            let m = 1 + rng.below(48) as usize;
+            let k = 1 + rng.below(300) as usize; // spans multi-round (k > 260)
+            let n = 1 + rng.below(10) as usize;
+            let cfg = PlatinumConfig::default();
+            let (w, x) = rand_case(seed ^ 0x517, m, k, n);
+            let packed = pack_ternary(&w, m, k, 5);
+            let want = naive_mpgemm(&w, m, k, &x, n);
+            let (seq, seq_ops) =
+                ternary_mpgemm_pool(&cfg, &packed, &x, n, &pools[0], 1);
+            crate::ensure_prop!(seq == want, "sequential mismatch m={m} k={k} n={n}");
+            for (pi, pool) in pools.iter().enumerate() {
+                let threads = 1 + rng.below(9) as usize;
+                let (par, par_ops) =
+                    ternary_mpgemm_pool(&cfg, &packed, &x, n, pool, threads);
+                crate::ensure_prop!(
+                    par == seq,
+                    "pool {pi} threads={threads} diverged at m={m} k={k} n={n}"
+                );
+                crate::ensure_prop!(
+                    par_ops == seq_ops,
+                    "op counts must be thread-count independent"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_pool_matches_single_thread_bitserial() {
+        let pool = Pool::new(4);
+        crate::util::check_prop("pool_matches_single_thread_bitserial", 10, |seed| {
+            let mut rng = Rng::seed_from(seed);
+            let m = 1 + rng.below(40) as usize;
+            let k = 1 + rng.below(120) as usize;
+            let n = 1 + rng.below(9) as usize;
+            let cfg = PlatinumConfig::default();
+            let (w, x) = rand_case(seed ^ 0xb17, m, k, n);
+            let (pos, neg) = ternary_planes(&w, m, k);
+            let planes = vec![pack_binary(&pos, m, k, 7), pack_binary(&neg, m, k, 7)];
+            let single = Pool::new(1);
+            let (seq, _) =
+                bitserial_mpgemm_pool(&cfg, &planes, &[1, -1], &x, n, &single, 1);
+            let (par, _) = bitserial_mpgemm_pool(&cfg, &planes, &[1, -1], &x, n, &pool, 7);
+            crate::ensure_prop!(seq == par, "bitserial diverged at m={m} k={k} n={n}");
+            crate::ensure_prop!(
+                seq == naive_mpgemm(&w, m, k, &x, n),
+                "bitserial wrong at m={m} k={k} n={n}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_threads_exceed_rows() {
+        // more stripes requested than output rows: degenerate striping
+        let cfg = PlatinumConfig::default();
+        let (m, k, n) = (3, 57, 5);
+        let (w, x) = rand_case(7, m, k, n);
+        let packed = pack_ternary(&w, m, k, 5);
+        let pool = Pool::new(8);
+        let (out, _) = ternary_mpgemm_pool(&cfg, &packed, &x, n, &pool, 8);
+        assert_eq!(out, naive_mpgemm(&w, m, k, &x, n));
+    }
+
+    #[test]
+    fn parallel_decode_shape_n1() {
+        // the decode hot shape: a single activation column
+        let cfg = PlatinumConfig::default();
+        let (m, k, n) = (128, 260, 1);
+        let (w, x) = rand_case(8, m, k, n);
+        let packed = pack_ternary(&w, m, k, 5);
+        let pool = Pool::new(4);
+        let (out, _) = ternary_mpgemm_pool(&cfg, &packed, &x, n, &pool, 4);
+        assert_eq!(out, naive_mpgemm(&w, m, k, &x, n));
+    }
+
+    #[test]
+    fn parallel_ragged_k_across_round_boundary() {
+        // k not a multiple of c, chunk count not a multiple of the
+        // round size (104 full + 1 ragged chunk = 2 full + 1 short round)
+        let cfg = PlatinumConfig::default();
+        let (m, k, n) = (17, 523, 4);
+        let (w, x) = rand_case(9, m, k, n);
+        let packed = pack_ternary(&w, m, k, 5);
+        let pool = Pool::new(3);
+        let (out, _) = ternary_mpgemm_pool(&cfg, &packed, &x, n, &pool, 3);
+        assert_eq!(out, naive_mpgemm(&w, m, k, &x, n));
     }
 }

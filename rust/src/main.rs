@@ -61,7 +61,8 @@ fn print_help() {
            runtime    [--artifacts <dir>] [--run <name>] PJRT artifacts\n\
          \n\
          BACKENDS (see `platinum backends`):\n\
-           platinum-ternary, platinum-bitserial, eyeriss, prosperity, tmac, tmac-cpu"
+           platinum-ternary, platinum-bitserial, eyeriss, prosperity, tmac,\n\
+           tmac-cpu, platinum-cpu (measured on this host; energy reported null)"
     );
 }
 
@@ -127,8 +128,14 @@ fn cmd_simulate(args: &cli::Args) -> Result<()> {
 fn print_report(r: &Report) {
     println!("  latency      {:>14.6} s", r.latency_s);
     println!("  throughput   {:>14.1} GOP/s (naive-adds)", r.throughput_gops);
-    println!("  energy       {:>14.4} J", r.energy_j);
-    println!("  power        {:>14.2} W", r.power_w());
+    match (r.energy_j, r.power_w()) {
+        (Some(e), Some(p)) => {
+            println!("  energy       {:>14.4} J", e);
+            println!("  power        {:>14.2} W", p);
+        }
+        (Some(e), None) => println!("  energy       {:>14.4} J", e),
+        _ => println!("  energy           unmodelled  (ROADMAP: RAPL measurement)"),
+    }
     println!("  ops          {:>14}", r.ops);
     if let Some(c) = r.cycles {
         println!("  cycles       {:>14}", c);
@@ -174,15 +181,18 @@ fn cmd_report(args: &cli::Args) -> Result<()> {
                 ]),
             ));
         } else {
-            println!("== area breakdown (paper §V-B: 0.955 mm²; buffers 65%, +LUT 83.3%, compute 15%) ==");
-            println!("  weight buffer   {:>7.4} mm²  {:>5.1}%", b.weight_buf, 100.0 * b.weight_buf / t);
-            println!("  input buffer    {:>7.4} mm²  {:>5.1}%", b.input_buf, 100.0 * b.input_buf / t);
-            println!("  output buffer   {:>7.4} mm²  {:>5.1}%", b.output_buf, 100.0 * b.output_buf / t);
-            println!("  path buffer     {:>7.4} mm²  {:>5.1}%", b.path_buf, 100.0 * b.path_buf / t);
-            println!("  LUT buffers     {:>7.4} mm²  {:>5.1}%", b.lut_bufs, 100.0 * b.lut_bufs / t);
-            println!("  PPEs            {:>7.4} mm²  {:>5.1}%", b.ppes, 100.0 * b.ppes / t);
-            println!("  aggregator      {:>7.4} mm²  {:>5.1}%", b.aggregator, 100.0 * b.aggregator / t);
-            println!("  SFU             {:>7.4} mm²  {:>5.1}%", b.sfu, 100.0 * b.sfu / t);
+            println!(
+                "== area breakdown (paper §V-B: 0.955 mm²; buffers 65%, +LUT 83.3%, compute 15%) =="
+            );
+            let pct = |part: f64| 100.0 * part / t;
+            println!("  weight buffer   {:>7.4} mm²  {:>5.1}%", b.weight_buf, pct(b.weight_buf));
+            println!("  input buffer    {:>7.4} mm²  {:>5.1}%", b.input_buf, pct(b.input_buf));
+            println!("  output buffer   {:>7.4} mm²  {:>5.1}%", b.output_buf, pct(b.output_buf));
+            println!("  path buffer     {:>7.4} mm²  {:>5.1}%", b.path_buf, pct(b.path_buf));
+            println!("  LUT buffers     {:>7.4} mm²  {:>5.1}%", b.lut_bufs, pct(b.lut_bufs));
+            println!("  PPEs            {:>7.4} mm²  {:>5.1}%", b.ppes, pct(b.ppes));
+            println!("  aggregator      {:>7.4} mm²  {:>5.1}%", b.aggregator, pct(b.aggregator));
+            println!("  SFU             {:>7.4} mm²  {:>5.1}%", b.sfu, pct(b.sfu));
             println!("  TOTAL           {t:>7.4} mm²   (paper: 0.955)");
             println!(
                 "  data buffers {:.1}%  +LUT {:.1}%  compute {:.1}%",
@@ -199,7 +209,7 @@ fn cmd_report(args: &cli::Args) -> Result<()> {
             out.push((
                 "power",
                 obj(vec![
-                    ("total_w", num(r.power_w())),
+                    ("total_w", num(r.power_w().expect("platinum models energy"))),
                     ("dram_j", num(e.dram)),
                     ("weight_buf_j", num(e.weight_buf)),
                     ("input_buf_j", num(e.input_buf)),
@@ -213,8 +223,13 @@ fn cmd_report(args: &cli::Args) -> Result<()> {
             ));
         } else {
             let t = e.total();
-            println!("== power breakdown, b1.58-3B prefill (paper §V-B: 3.2 W; DRAM 53.5%, wbuf 31.6%) ==");
-            println!("  total power     {:>7.2} W", r.power_w());
+            println!(
+                "== power breakdown, b1.58-3B prefill (§V-B: 3.2 W; DRAM 53.5%, wbuf 31.6%) =="
+            );
+            println!(
+                "  total power     {:>7.2} W",
+                r.power_w().expect("platinum models energy")
+            );
             println!("  DRAM            {:>5.1}%", 100.0 * e.dram / t);
             println!("  weight buffer   {:>5.1}%", 100.0 * e.weight_buf / t);
             println!("  LUT buffers     {:>5.1}%", 100.0 * e.lut_buf / t);
@@ -242,7 +257,9 @@ fn cmd_report(args: &cli::Args) -> Result<()> {
                 ]),
             ));
         } else {
-            println!("== utilization, steady-state tile (paper §IV-B: adders 90.5%, LUT ports ~100%) ==");
+            println!(
+                "== utilization, steady-state tile (paper §IV-B: adders 90.5%, LUT ports ~100%) =="
+            );
             println!("  adders          {:>5.1}%", 100.0 * u.adders);
             println!("  LUT ports       {:>5.1}%", 100.0 * u.lut_ports);
         }
@@ -265,7 +282,8 @@ fn cmd_dse(args: &cli::Args) -> Result<()> {
         "tiling", "latency(s)", "energy(J)", "mm²", "KB"
     );
     for (i, p) in pts.iter().enumerate() {
-        let tag = format!("m{} k{} n{} {}", p.tiling.m, p.tiling.k, p.tiling.n, p.tiling.order.label());
+        let t = &p.tiling;
+        let tag = format!("m{} k{} n{} {}", t.m, t.k, t.n, t.order.label());
         let chosen = p.tiling == Tiling::default();
         println!(
             "{:<22} {:>12.4} {:>12.3} {:>9.3} {:>9.0}  {}{}",
@@ -318,7 +336,9 @@ fn cmd_baselines(args: &cli::Args) -> Result<()> {
     let json = args.flag("json");
     let mut rows: Vec<Json> = Vec::new();
     if !json {
-        println!("== Table I reproduction: b1.58-3B, prefill N={PREFILL_N} / decode N={DECODE_N} ==");
+        println!(
+            "== Table I reproduction: b1.58-3B, prefill N={PREFILL_N} / decode N={DECODE_N} =="
+        );
         println!(
             "{:<20} {:>8} {:>8} {:>14} {:>14}",
             "system", "PEs", "mm²", "prefill GOP/s", "decode GOP/s"
@@ -343,7 +363,9 @@ fn cmd_baselines(args: &cli::Args) -> Result<()> {
     if json {
         println!("{}", arr(rows).to_string());
     } else {
-        println!("(paper Table I: Eyeriss 20.8, Prosperity 375, T-MAC 715, Platinum 1534 GOP/s prefill)");
+        println!(
+            "(paper Table I: Eyeriss 20.8, Prosperity 375, T-MAC 715, Platinum 1534 GOP/s prefill)"
+        );
     }
     Ok(())
 }

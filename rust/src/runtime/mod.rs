@@ -1,6 +1,11 @@
-//! PJRT runtime (S11): loads the HLO-text artifacts emitted by
-//! `python/compile/aot.py` (`make artifacts`), compiles them on the PJRT
-//! CPU client, and executes them from the coordinator's request path.
+//! Execution runtimes: the PJRT artifact runtime (S11) plus the
+//! [`pool`] persistent worker pool (S14) that the functional CPU hot
+//! paths run on.
+//!
+//! The rest of this file is the PJRT side: it loads the HLO-text
+//! artifacts emitted by `python/compile/aot.py` (`make artifacts`),
+//! compiles them on the PJRT CPU client, and executes them from the
+//! coordinator's request path.
 //!
 //! Python never runs here — the interchange is HLO **text** (not a
 //! serialized HloModuleProto: jax ≥ 0.5 emits 64-bit instruction ids
@@ -9,6 +14,8 @@
 //! The manifest (`artifacts/manifest.json`) drives everything: input
 //! names/shapes/dtypes per artifact, so the coordinator can bind packed
 //! weights, activations and build paths positionally.
+
+pub mod pool;
 
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};

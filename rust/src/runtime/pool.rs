@@ -1,0 +1,403 @@
+//! Persistent worker pool for the functional hot paths (S14).
+//!
+//! The golden datapath ([`crate::lut`]) and the real T-MAC kernel
+//! ([`crate::baselines::tmac::TMacCpu`]) are the repo's latency ground
+//! truth, and decode-shaped GEMMs are far too small to amortize a
+//! `std::thread::scope` spawn per call (tens of microseconds of spawn
+//! and join for a kernel that runs in hundreds).  This module provides
+//! the alternative: a pool of long-lived workers fed through a
+//! mutex/condvar job queue, with a scoped [`Pool::run`] that blocks
+//! until every submitted task finishes.
+//!
+//! **Why not rayon:** the build is fully offline (see `Cargo.toml`:
+//! every dependency is vendored under `rust/vendor/`), so pulling in
+//! rayon and its crossbeam dependency tree is not an option.  The hot
+//! paths need exactly one primitive — fork-join over borrowed slices —
+//! and ~200 lines of std suffice; NUMA-aware striping and work stealing
+//! are ROADMAP follow-ups if profiles ever demand them.
+//!
+//! Soundness of the scoped API: `run` transmutes each boxed task to
+//! `'static` to push it through the `'static` queue, then blocks on a
+//! completion latch before returning.  No borrow captured by a task can
+//! therefore outlive the call, which is the same contract
+//! `std::thread::scope` enforces.  Tasks must not block waiting for
+//! other pool work (the submitting thread helps drain the queue, so
+//! plain nested `run` calls complete, but hand-rolled cross-task
+//! waiting can deadlock).
+//!
+//! Panics inside a task are caught, the latch still releases, and the
+//! submitting `run` call re-panics — a poisoned worker never wedges the
+//! pool.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// A task as it lives in the queue ('static; scoped tasks are lifetime-
+/// erased by [`Pool::run`], which guarantees completion before return).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A scoped task as callers submit it: may borrow from the caller's
+/// stack frame for the duration of the [`Pool::run`] call.
+pub type Task<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    work: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Completion latch for one `run` batch: counts tasks down to zero and
+/// records whether any of them panicked.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch { state: Mutex::new((count, false)), done: Condvar::new() }
+    }
+
+    fn complete(&self, ok: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        if !ok {
+            st.1 = true;
+        }
+        if st.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until all tasks completed; returns true if any panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.1
+    }
+}
+
+/// Persistent fork-join worker pool.
+///
+/// A pool of `threads` has `threads - 1` OS workers: the thread calling
+/// [`Pool::run`] participates in executing the batch, so total
+/// concurrency equals `threads` without oversubscribing the machine.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool with the given total concurrency (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("platinum-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool { shared, workers, threads }
+    }
+
+    /// Total concurrency (workers + the participating caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute every task and return once all have finished.
+    ///
+    /// Tasks may borrow from the caller's frame (see module docs for the
+    /// soundness argument).  The caller's thread helps drain the queue,
+    /// so a 1-thread pool degenerates to inline sequential execution.
+    /// Re-panics on the calling thread if any task panicked.
+    pub fn run<'scope>(&self, tasks: Vec<Task<'scope>>) {
+        match tasks.len() {
+            0 => return,
+            // nothing to overlap: run inline, skip the latch machinery
+            1 => {
+                let mut tasks = tasks;
+                (tasks.pop().unwrap())();
+                return;
+            }
+            _ => {}
+        }
+        if self.workers.is_empty() {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for task in tasks {
+                // SAFETY: this call blocks on `latch` until every task
+                // has run to completion, so no borrow captured by `task`
+                // outlives the `'scope` it was created in.
+                let task: Job = unsafe {
+                    std::mem::transmute::<Task<'scope>, Task<'static>>(task)
+                };
+                let latch = Arc::clone(&latch);
+                q.push_back(Box::new(move || {
+                    let ok = catch_unwind(AssertUnwindSafe(task)).is_ok();
+                    latch.complete(ok);
+                }));
+            }
+        }
+        self.shared.work.notify_all();
+        // help: the submitting thread drains jobs (possibly including
+        // other batches') until the queue is empty, then waits
+        loop {
+            let job = self.shared.queue.lock().unwrap().pop_front();
+            match job {
+                Some(job) => job(),
+                None => break,
+            }
+        }
+        if latch.wait() {
+            panic!("platinum worker pool: a task panicked (see stderr)");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break Some(job);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+/// Default concurrency: `PLATINUM_THREADS` env override, else the
+/// machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("PLATINUM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// The process-wide pool every default hot-path entry point runs on
+/// (sized by [`default_threads`], created on first use, never torn
+/// down).  Callers needing an exact concurrency — bench sweeps, the
+/// `with_threads` backend constructors — build their own [`Pool`].
+pub fn global() -> &'static Pool {
+    static GLOBAL: OnceLock<Pool> = OnceLock::new();
+    GLOBAL.get_or_init(|| Pool::new(default_threads()))
+}
+
+/// Split `buf` into consecutive mutable slices of the given widths —
+/// the arena-partitioning companion to [`split_even`], used to hand
+/// each task its disjoint output/scratch region.  Trailing capacity
+/// beyond the widths' sum stays unborrowed.
+pub fn take_slices<'a, T>(
+    mut buf: &'a mut [T],
+    widths: impl Iterator<Item = usize>,
+) -> Vec<&'a mut [T]> {
+    let mut out = Vec::new();
+    for w in widths {
+        let (head, tail) = std::mem::take(&mut buf).split_at_mut(w);
+        out.push(head);
+        buf = tail;
+    }
+    out
+}
+
+/// Split `len` items into at most `parts` contiguous, near-equal,
+/// non-empty ranges (fewer than `parts` when `len < parts`) — the
+/// row-stripe decomposition every parallel hot path uses.
+pub fn split_even(len: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.max(1).min(len);
+    let mut out = Vec::with_capacity(parts);
+    if len == 0 {
+        return out;
+    }
+    let base = len / parts;
+    let rem = len % parts;
+    let mut start = 0;
+    for i in 0..parts {
+        let size = base + usize::from(i < rem);
+        out.push(start..start + size);
+        start += size;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_task() {
+        let pool = Pool::new(4);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Task> = (0..64)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn scoped_borrows_of_disjoint_slices() {
+        let pool = Pool::new(3);
+        let mut data = vec![0u64; 100];
+        let tasks: Vec<Task> = data
+            .chunks_mut(7)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 7 + j) as u64;
+                    }
+                }) as Task
+            })
+            .collect();
+        pool.run(tasks);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut hits = 0;
+        let tasks: Vec<Task> = (0..5).map(|_| Box::new(|| {}) as Task).collect();
+        pool.run(tasks);
+        // borrowed mutation still observable after run returns
+        pool.run(vec![Box::new(|| hits += 1) as Task]);
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn reuse_across_many_batches() {
+        // the whole point vs thread::scope: no spawn per call
+        let pool = Pool::new(2);
+        let total = AtomicUsize::new(0);
+        for round in 0..50 {
+            let tasks: Vec<Task> = (0..4)
+                .map(|_| {
+                    Box::new(|| {
+                        total.fetch_add(round, Ordering::Relaxed);
+                    }) as Task
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * (0..50).sum::<usize>());
+    }
+
+    #[test]
+    #[should_panic(expected = "a task panicked")]
+    fn task_panic_propagates_without_wedging() {
+        let pool = Pool::new(2);
+        let tasks: Vec<Task> =
+            vec![Box::new(|| {}) as Task, Box::new(|| panic!("boom")) as Task];
+        pool.run(tasks);
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_batch() {
+        let pool = Pool::new(2);
+        let bad: Vec<Task> = vec![
+            Box::new(|| panic!("expected")) as Task,
+            Box::new(|| {}) as Task,
+        ];
+        assert!(catch_unwind(AssertUnwindSafe(|| pool.run(bad))).is_err());
+        // the pool still executes subsequent batches
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Task> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn take_slices_partitions_disjointly() {
+        let mut buf = vec![0u8; 10];
+        {
+            let parts = take_slices(&mut buf, [3usize, 2, 4].into_iter());
+            assert_eq!(parts.iter().map(|p| p.len()).collect::<Vec<_>>(), vec![3, 2, 4]);
+            for (i, p) in parts.into_iter().enumerate() {
+                p.fill(i as u8 + 1);
+            }
+        }
+        assert_eq!(buf, vec![1, 1, 1, 2, 2, 3, 3, 3, 3, 0]);
+    }
+
+    #[test]
+    fn split_even_covers_and_balances() {
+        assert_eq!(split_even(10, 3), vec![0..4, 4..7, 7..10]);
+        assert_eq!(split_even(8, 4), vec![0..2, 2..4, 4..6, 6..8]);
+        // more parts than items: one range per item
+        assert_eq!(split_even(3, 8), vec![0..1, 1..2, 2..3]);
+        assert_eq!(split_even(0, 4), Vec::<Range<usize>>::new());
+        assert_eq!(split_even(5, 1), vec![0..5]);
+    }
+
+    #[test]
+    fn global_pool_is_reused() {
+        let a = global() as *const Pool;
+        let b = global() as *const Pool;
+        assert_eq!(a, b);
+        assert!(global().threads() >= 1);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -36,7 +36,13 @@ impl SimReport {
 
 /// Walk order helper: produce tile index triples in the configured
 /// stationarity order; returns (m0, k0, n0) origin per step.
-fn tile_walk(g: Gemm, mt: usize, kt: usize, nt: usize, order: Stationarity) -> Vec<(usize, usize, usize)> {
+fn tile_walk(
+    g: Gemm,
+    mt: usize,
+    kt: usize,
+    nt: usize,
+    order: Stationarity,
+) -> Vec<(usize, usize, usize)> {
     let ms: Vec<usize> = (0..g.m).step_by(mt).collect();
     let ks: Vec<usize> = (0..g.k).step_by(kt).collect();
     let ns: Vec<usize> = (0..g.n).step_by(nt).collect();
@@ -265,7 +271,12 @@ pub fn simulate_gemm(cfg: &PlatinumConfig, mode: ExecMode, g: Gemm) -> SimReport
 /// [`crate::engine::Workload::ModelPass`] — the engine aggregates with
 /// identical arithmetic and returns the unified report; this free
 /// function is kept as a stable shim for existing callers.
-pub fn simulate_model(cfg: &PlatinumConfig, mode: ExecMode, model: &BitNetModel, n: usize) -> SimReport {
+pub fn simulate_model(
+    cfg: &PlatinumConfig,
+    mode: ExecMode,
+    model: &BitNetModel,
+    n: usize,
+) -> SimReport {
     let mut total: Option<SimReport> = None;
     let mut naive: u64 = 0;
     for (g, count) in model.model_gemms(n) {

@@ -175,7 +175,8 @@ fn pjrt_bitlinear_dequantizes_correctly() {
         let xr = &x[row * k..(row + 1) * k];
         let amax = xr.iter().fold(1e-5f32, |a, &v| a.max(v.abs()));
         let scale = 127.0 / amax;
-        let xq: Vec<i64> = xr.iter().map(|&v| (v * scale).round().clamp(-127.0, 127.0) as i64).collect();
+        let xq: Vec<i64> =
+            xr.iter().map(|&v| (v * scale).round().clamp(-127.0, 127.0) as i64).collect();
         for col in (0..m).step_by(97) {
             let dot: i64 = (0..k).map(|i| w[col * k + i] as i64 * xq[i]).sum();
             let want = dot as f32 * beta / scale;
