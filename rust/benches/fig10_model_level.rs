@@ -19,12 +19,17 @@ fn main() {
     let pro = registry.build("prosperity").unwrap();
     let tm = registry.build("tmac").unwrap();
 
+    // single-chip Platinum passes, computed once and reused by both the
+    // per-stage tables and the multi-chip scaling section below
+    let r_plat_pre = plat.run(&Workload::model_pass(B158_3B, PREFILL_N));
+    let r_plat_dec = plat.run(&Workload::model_pass(B158_3B, DECODE_N));
+
     for (stage, n, paper_spd, paper_en) in [
         ("prefill", PREFILL_N, [73.6, 4.09, 2.15], [32.4, 3.23, 20.9]),
         ("decode", DECODE_N, [47.6, 28.4, 1.75], [18.4, 15.3, 15.0]),
     ] {
         let w = Workload::model_pass(B158_3B, n);
-        let r_plat = plat.run(&w);
+        let r_plat = if n == PREFILL_N { &r_plat_pre } else { &r_plat_dec };
         let r_bs = bs.run(&w);
         let r_eye = eye.run(&w);
         let r_pro = pro.run(&w);
@@ -65,4 +70,35 @@ fn main() {
         );
     }
     println!("\npaper shape (who wins, roughly what factor): HOLDS (see asserts in `cargo test`)");
+
+    // --- multi-chip scaling (beyond the paper: the engine's sharded
+    // composite, rows strategy, modelled interconnect included) --------
+    println!("\n== multi-chip scaling — sharded:<N>:platinum-ternary, b1.58-3B ==");
+    println!(
+        "{:<28} {:>14} {:>10} {:>14} {:>10}",
+        "backend", "prefill GOP/s", "scale eff", "decode GOP/s", "scale eff"
+    );
+    // chips = 1 is the hoisted single-chip pass (sharded:1 is a
+    // bit-exact passthrough — no need to simulate it again)
+    println!(
+        "{:<28} {:>14.0} {:>9.1}% {:>14.0} {:>9.1}%",
+        "platinum-ternary", r_plat_pre.throughput_gops, 100.0, r_plat_dec.throughput_gops, 100.0
+    );
+    for chips in [2usize, 4, 8] {
+        let be = registry.build(&format!("sharded:{chips}:platinum-ternary")).unwrap();
+        let pre = be.run(&Workload::model_pass(B158_3B, PREFILL_N));
+        let dec = be.run(&Workload::model_pass(B158_3B, DECODE_N));
+        let eff = |r: &platinum::engine::Report, base: &platinum::engine::Report| {
+            100.0 * r.throughput_gops / (base.throughput_gops * chips as f64)
+        };
+        println!(
+            "{:<28} {:>14.0} {:>9.1}% {:>14.0} {:>9.1}%",
+            be.id(),
+            pre.throughput_gops,
+            eff(&pre, &r_plat_pre),
+            dec.throughput_gops,
+            eff(&dec, &r_plat_dec)
+        );
+    }
+    println!("(efficiency <100%: replicated LUT construction + the modelled interconnect merge)");
 }

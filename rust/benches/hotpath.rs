@@ -162,6 +162,12 @@ fn main() {
     let st = bench(2, budget, || Registry::with_defaults().build("prosperity").unwrap());
     rec.row("engine/registry_build", &st, None);
 
+    // the multi-chip composite: partition + 4 replica sim runs + merge
+    // must stay cheap relative to the single-chip model pass above
+    let sharded4 = Registry::with_defaults().build("sharded:4:platinum-ternary").unwrap();
+    let st = bench(1, budget, || sharded4.run(&Workload::prefill(B158_3B)));
+    rec.row("engine/sharded4_model_3B_prefill", &st, None);
+
     // the measured golden backend end to end (includes weight synthesis
     // + packing per call, amortized by its internal shape memo)
     let pcpu = PlatinumCpuBackend::new();

@@ -9,6 +9,12 @@
 //! accelerator timing/energy from a pluggable engine backend — the
 //! classic functional + performance model split, or, with the measured
 //! `platinum-cpu` pricer, one fast substrate serving both roles.
+//!
+//! Because the pricer is any [`Backend`], a **sharded multi-chip
+//! pricer** (`Registry::build("sharded:4:platinum-ternary")`) drops in
+//! unchanged: batch pricing then reflects N chips splitting the
+//! dispatch (max-replica latency + interconnect, summed energy), which
+//! is how the serving layer models scale-out deployments.
 
 use crate::analysis::Gemm;
 use crate::config::{ExecMode, PlatinumConfig};
@@ -359,6 +365,39 @@ mod tests {
         assert!(out.iter().all(|r| r.y.len() == 12));
         assert!(out.iter().all(|r| r.sim_latency_s > 0.0), "measured latency must be real");
         assert!(out.iter().all(|r| r.sim_energy_j == 0.0), "unmodelled energy prices as 0");
+    }
+
+    #[test]
+    fn sharded_pricer_prices_batches_below_single_chip() {
+        // the multi-chip composite drops in as a pricer unchanged.
+        // Shapes are deep in k (d=1040) so the row-sharded compute
+        // saving dominates the modelled interconnect gather (which
+        // scales with output bytes m·n only).
+        let run_with = |pricer: Box<dyn Backend>| -> f64 {
+            let (d, m, seq) = (1040, 2080, 8);
+            let exec = golden_exec(d, m);
+            let mut server = Server::with_backend(
+                exec,
+                pricer,
+                BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) },
+            );
+            let (tx, rx) = mpsc::channel();
+            let mut rng = Rng::seed_from(13);
+            for id in 0..4u64 {
+                let x: Vec<f32> = (0..seq * d).map(|_| (rng.f64() as f32 - 0.5)).collect();
+                tx.send(Request { id, x, seq, arrived: Instant::now() }).unwrap();
+            }
+            drop(tx);
+            let mut out = Vec::new();
+            server.run(rx, &mut out).unwrap();
+            assert_eq!(out.len(), 4);
+            assert!(out.iter().all(|r| r.sim_latency_s > 0.0 && r.sim_energy_j > 0.0));
+            out[0].sim_latency_s
+        };
+        let reg = crate::engine::Registry::with_defaults();
+        let single = run_with(reg.build("platinum-ternary").unwrap());
+        let sharded = run_with(reg.build("sharded:4:platinum-ternary").unwrap());
+        assert!(sharded < single, "4-chip pricer must beat 1 chip: {sharded} vs {single}");
     }
 
     #[test]

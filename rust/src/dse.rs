@@ -1,27 +1,34 @@
-//! Design-space exploration over tiling sizes and stationarity (S7,
-//! Fig 7): for each candidate (m_t, k_t, n_t, order) evaluate the
-//! prefill stages of the three BitNet-b1.58 models with the simulator
-//! and the area model, and report (latency, energy, area) points.
+//! Design-space exploration over tiling sizes, stationarity, and chip
+//! count (S7, Fig 7 + the multi-chip axis): for each candidate
+//! (m_t, k_t, n_t, order) — optionally replicated across N chips via
+//! [`crate::engine::Sharded`] — evaluate the prefill stages of the
+//! BitNet-b1.58 models with the simulator and the area model, and
+//! report (latency, energy, area) points.
 //!
 //! The paper's chosen point — m=1080, k=520, n=32, mnk-stationary —
-//! must lie on (or near) the Pareto frontier; a test pins this.
+//! must lie on (or near) the Pareto frontier; a test pins this.  The
+//! replica sweep exposes the scaling trade: latency drops toward
+//! 1/N (bounded by the interconnect merge term) while energy and area
+//! grow with N.
 
 use crate::config::{ExecMode, PlatinumConfig, Stationarity, Tiling};
 use crate::energy::AreaModel;
-use crate::engine::{Backend, PlatinumBackend, Workload};
+use crate::engine::{Backend, PlatinumBackend, ShardStrategy, Sharded, Workload};
 use crate::models::{BitNetModel, ALL_MODELS, PREFILL_N};
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
 pub struct DsePoint {
     pub tiling: Tiling,
+    /// Chip replicas this point was evaluated at (1 = single chip).
+    pub replicas: usize,
     /// Summed prefill latency across the evaluated models (s).
     pub latency_s: f64,
     /// Summed prefill energy across the evaluated models (J).
     pub energy_j: f64,
-    /// Chip area at this buffer provisioning (mm²).
+    /// Total silicon area at this provisioning (all replicas, mm²).
     pub area_mm2: f64,
-    /// Total on-chip SRAM (KB).
+    /// Total on-chip SRAM (all replicas, KB).
     pub sram_kb: f64,
 }
 
@@ -53,11 +60,27 @@ pub fn default_grid() -> Vec<Tiling> {
 /// Evaluate one tiling on the given models' prefill stages (through the
 /// engine's Platinum backend — the sweep is itself an engine consumer).
 pub fn evaluate(tiling: Tiling, models: &[BitNetModel]) -> DsePoint {
+    evaluate_replicated(tiling, 1, models)
+}
+
+/// Evaluate one (tiling, chip count) point: `replicas` row-sharded
+/// Platinum chips behind one [`Sharded`] backend (a single replica is
+/// the plain chip — no interconnect term).  Area and SRAM scale with
+/// the replica count; latency/energy come out of the engine's
+/// max+interconnect / sum aggregation.
+pub fn evaluate_replicated(tiling: Tiling, replicas: usize, models: &[BitNetModel]) -> DsePoint {
+    let replicas = replicas.max(1);
     let mut cfg = PlatinumConfig::default();
     cfg.tiling = tiling;
     let area_model = AreaModel::platinum(&cfg);
     let area = area_model.breakdown().total();
-    let backend = PlatinumBackend::with_config(cfg, ExecMode::Ternary);
+    let chips: Vec<Box<dyn Backend>> = (0..replicas)
+        .map(|_| {
+            Box::new(PlatinumBackend::with_config(cfg.clone(), ExecMode::Ternary))
+                as Box<dyn Backend>
+        })
+        .collect();
+    let backend = Sharded::new(chips, ShardStrategy::Rows).expect("non-empty replica set");
     let mut latency = 0.0;
     let mut energy = 0.0;
     for model in models {
@@ -67,10 +90,11 @@ pub fn evaluate(tiling: Tiling, models: &[BitNetModel]) -> DsePoint {
     }
     DsePoint {
         tiling,
+        replicas,
         latency_s: latency,
         energy_j: energy,
-        area_mm2: area,
-        sram_kb: area_model.total_sram_kb(),
+        area_mm2: area * replicas as f64,
+        sram_kb: area_model.total_sram_kb() * replicas as f64,
     }
 }
 
@@ -79,6 +103,21 @@ pub fn evaluate(tiling: Tiling, models: &[BitNetModel]) -> DsePoint {
 pub fn sweep(grid: &[Tiling], models: &[BitNetModel]) -> Vec<DsePoint> {
     let models = if models.is_empty() { &ALL_MODELS[..] } else { models };
     grid.iter().map(|&t| evaluate(t, models)).collect()
+}
+
+/// The multi-chip sweep: the tiling grid crossed with every replica
+/// count, each evaluated through a [`Sharded`] composite.
+pub fn sweep_replicated(
+    grid: &[Tiling],
+    replica_counts: &[usize],
+    models: &[BitNetModel],
+) -> Vec<DsePoint> {
+    let models = if models.is_empty() { &ALL_MODELS[..] } else { models };
+    let counts = if replica_counts.is_empty() { &[1][..] } else { replica_counts };
+    grid.iter()
+        .flat_map(|&t| counts.iter().map(move |&r| (t, r)))
+        .map(|(t, r)| evaluate_replicated(t, r, models))
+        .collect()
 }
 
 /// Pareto frontier under (latency, energy, area) minimization.
@@ -149,6 +188,37 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn replica_sweep_trades_latency_for_area() {
+        let single = evaluate(Tiling::default(), &[B158_3B]);
+        assert_eq!(single.replicas, 1);
+        let quad = evaluate_replicated(Tiling::default(), 4, &[B158_3B]);
+        assert_eq!(quad.replicas, 4);
+        // latency improves but sublinearly (interconnect merge term);
+        // area scales exactly with chips; energy never shrinks
+        assert!(quad.latency_s < single.latency_s);
+        assert!(quad.latency_s > single.latency_s / 4.0 - 1e-15);
+        assert!((quad.area_mm2 - 4.0 * single.area_mm2).abs() < 1e-9);
+        assert!((quad.sram_kb - 4.0 * single.sram_kb).abs() < 1e-9);
+        assert!(quad.energy_j >= single.energy_j * 0.99);
+    }
+
+    #[test]
+    fn sweep_replicated_crosses_grid_and_counts() {
+        let grid = vec![
+            Tiling { m: 540, k: 260, n: 16, order: Stationarity::Mnk },
+            Tiling { m: 1080, k: 520, n: 32, order: Stationarity::Mnk },
+        ];
+        let pts = sweep_replicated(&grid, &[1, 2], &[B158_3B]);
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts.iter().filter(|p| p.replicas == 2).count(), 2);
+        // a single-replica point from the new sweep matches the classic one
+        let classic = evaluate(grid[0], &[B158_3B]);
+        let p = pts.iter().find(|p| p.tiling == grid[0] && p.replicas == 1).unwrap();
+        assert_eq!(p.latency_s, classic.latency_s);
+        assert_eq!(p.energy_j, classic.energy_j);
     }
 
     #[test]

@@ -182,14 +182,16 @@ impl Backend for PlatinumBackend {
             id: match self.mode {
                 ExecMode::Ternary => "platinum-ternary",
                 ExecMode::BitSerial { .. } => "platinum-bitserial",
-            },
-            name: self.mode.label(),
+            }
+            .into(),
+            name: self.mode.label().into(),
             kind: BackendKind::Asic,
             freq_hz: self.cfg.freq_hz,
             pes: Some(self.cfg.num_pes()),
             area_mm2: Some(AreaModel::platinum(&self.cfg).breakdown().total()),
             tech_nm: Some(28),
-            notes: "cycle-accurate simulator, §IV phase laws (paper: 0.955 mm², 1534 GOP/s)",
+            notes: "cycle-accurate simulator, §IV phase laws (paper: 0.955 mm², 1534 GOP/s)"
+                .into(),
         }
     }
 
@@ -214,14 +216,15 @@ impl Backend for EyerissBackend {
 
     fn describe(&self) -> BackendInfo {
         BackendInfo {
-            id: "eyeriss",
-            name: "SpikingEyeriss",
+            id: "eyeriss".into(),
+            name: "SpikingEyeriss".into(),
             kind: BackendKind::Asic,
             freq_hz: eyeriss::FREQ_HZ,
             pes: Some(eyeriss::PES_ROWS * eyeriss::PES_COLS),
             area_mm2: Some(1.07),
             tech_nm: Some(28),
-            notes: "row-stationary GEMM mapping, calibrated to Table I (20.8 GOP/s prefill)",
+            notes: "row-stationary GEMM mapping, calibrated to Table I (20.8 GOP/s prefill)"
+                .into(),
         }
     }
 
@@ -248,14 +251,15 @@ impl Backend for ProsperityBackend {
 
     fn describe(&self) -> BackendInfo {
         BackendInfo {
-            id: "prosperity",
-            name: "Prosperity",
+            id: "prosperity".into(),
+            name: "Prosperity".into(),
             kind: BackendKind::Asic,
             freq_hz: prosperity::FREQ_HZ,
             pes: Some(prosperity::NUM_PES),
             area_mm2: Some(1.06),
             tech_nm: Some(28),
-            notes: "product-sparsity model, 32.3% dynamic-scheduler power tax (Table I: 375 GOP/s)",
+            notes: "product-sparsity model, 32.3% dynamic-scheduler power tax (Table I: 375 GOP/s)"
+                .into(),
         }
     }
 
@@ -282,14 +286,15 @@ impl Backend for TMacBackend {
 
     fn describe(&self) -> BackendInfo {
         BackendInfo {
-            id: "tmac",
-            name: "T-MAC (M2 Pro)",
+            id: "tmac".into(),
+            name: "T-MAC (M2 Pro)".into(),
             kind: BackendKind::Cpu,
             freq_hz: tmac::M2_FREQ_HZ,
             pes: None,
             area_mm2: Some(289.0),
             tech_nm: Some(5),
-            notes: "analytical NEON-tbl LUT model, 16 threads, calibrated to Table I (715 GOP/s)",
+            notes: "analytical NEON-tbl LUT model, 16 threads, calibrated to Table I (715 GOP/s)"
+                .into(),
         }
     }
 
@@ -385,14 +390,15 @@ impl Backend for TMacCpuBackend {
 
     fn describe(&self) -> BackendInfo {
         BackendInfo {
-            id: "tmac-cpu",
-            name: "T-MAC (this host)",
+            id: "tmac-cpu".into(),
+            name: "T-MAC (this host)".into(),
             kind: BackendKind::Cpu,
             freq_hz: 0.0,
             pes: None,
             area_mm2: None,
             tech_nm: None,
-            notes: "real multithreaded LUT kernel, wall-clock on this machine; energy unmodelled",
+            notes: "real multithreaded LUT kernel, wall-clock on this machine; energy unmodelled"
+                .into(),
         }
     }
 
@@ -511,14 +517,15 @@ impl Backend for PlatinumCpuBackend {
 
     fn describe(&self) -> BackendInfo {
         BackendInfo {
-            id: "platinum-cpu",
-            name: "Platinum (golden, this host)",
+            id: "platinum-cpu".into(),
+            name: "Platinum (golden, this host)".into(),
             kind: BackendKind::Cpu,
             freq_hz: 0.0,
             pes: None,
             area_mm2: None,
             tech_nm: None,
-            notes: "golden datapath executed for real on the worker pool; energy unmodelled",
+            notes: "golden datapath executed for real on the worker pool; energy unmodelled"
+                .into(),
         }
     }
 

@@ -21,6 +21,12 @@
 //! * [`Registry`] — string-keyed backend construction, so every
 //!   frontend (`--backend` CLI flags, DSE, benches, serving) selects
 //!   systems the same way and new accelerators plug in at one place.
+//!   Beyond the fixed table it resolves the parameterized multi-chip
+//!   grammar `sharded:<replicas>[:<strategy>]:<inner-id>`.
+//! * [`Sharded`] — the multi-chip composite: N replicas of any backend
+//!   with a workload partitioned across them (`rows`/`batch`/`layers`)
+//!   and reports merged under the max-latency/sum-energy rules plus a
+//!   modelled interconnect term.
 //!
 //! The legacy free functions remain as thin shims over the same
 //! arithmetic; `tests/engine_api.rs` pins the equivalence.
@@ -28,14 +34,16 @@
 pub mod backends;
 pub mod registry;
 pub mod report;
+pub mod sharded;
 pub mod workload;
 
 pub use backends::{
     EyerissBackend, PlatinumBackend, PlatinumCpuBackend, ProsperityBackend, TMacBackend,
     TMacCpuBackend,
 };
-pub use registry::{Registry, COMPARISON_IDS};
+pub use registry::{Registry, COMPARISON_IDS, SHARDED_GRAMMAR};
 pub use report::{BackendInfo, BackendKind, Report};
+pub use sharded::{Interconnect, ShardStrategy, Sharded};
 pub use workload::{Stage, Workload};
 
 /// A system that executes mpGEMM workloads.

@@ -4,13 +4,19 @@
 //!
 //! New accelerators plug in via [`Registry::register`]; nothing else in
 //! the crate needs to change to make them reachable from every surface.
+//!
+//! Besides the fixed ids the table also resolves the **parameterized
+//! composite grammar** [`SHARDED_GRAMMAR`]: `sharded:4:platinum-ternary`
+//! builds four Platinum replicas behind one [`Backend`] (see
+//! [`super::Sharded`]), recursively, so composites nest.
 
 use super::backends::{
     EyerissBackend, PlatinumBackend, PlatinumCpuBackend, ProsperityBackend, TMacBackend,
     TMacCpuBackend,
 };
+use super::sharded::{ShardStrategy, Sharded};
 use super::Backend;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 type Builder = fn() -> Box<dyn Backend>;
 
@@ -48,6 +54,33 @@ fn build_platinum_cpu() -> Box<dyn Backend> {
 /// prohibitively slow and machine-dependent).
 pub const COMPARISON_IDS: &str = "platinum-ternary,platinum-bitserial,eyeriss,prosperity,tmac";
 
+/// The parameterized multi-chip id form [`Registry::build`] accepts on
+/// top of the fixed table: replica count, optional partition strategy
+/// (default `rows`), then any resolvable inner id (composites nest).
+pub const SHARDED_GRAMMAR: &str = "sharded:<replicas>[:rows|batch|layers]:<inner-id>";
+
+/// Ceiling on the TOTAL chip count a `sharded:` id may construct,
+/// multiplied across nesting levels — a typo/DoS guard (each replica
+/// is a live backend instance), far above any plausible chip count.
+const MAX_REPLICAS: usize = 4096;
+
+/// Total chip count the nested `sharded:` prefixes of an id multiply
+/// out to (1 for a plain backend id).  Malformed tails stop the walk —
+/// the recursive build diagnoses them with a proper error.
+fn nested_replicas(mut spec: &str) -> u128 {
+    let mut total: u128 = 1;
+    while let Some(rest) = spec.strip_prefix("sharded:") {
+        let Some((count, tail)) = rest.split_once(':') else { break };
+        let Ok(n) = count.parse::<u128>() else { break };
+        total = total.saturating_mul(n.max(1));
+        spec = match tail.split_once(':') {
+            Some((tok, inner)) if ShardStrategy::parse(tok).is_some() => inner,
+            _ => tail,
+        };
+    }
+    total
+}
+
 /// Constructs [`Backend`]s by id string.
 pub struct Registry {
     entries: Vec<(&'static str, Builder)>,
@@ -81,16 +114,58 @@ impl Registry {
         self.entries.iter().map(|(id, _)| *id).collect()
     }
 
-    /// Construct one backend by id.
+    /// Construct one backend by id — a fixed table entry or a
+    /// [`SHARDED_GRAMMAR`] composite.
     pub fn build(&self, id: &str) -> Result<Box<dyn Backend>> {
-        match self.entries.iter().find(|(eid, _)| *eid == id.trim()) {
+        let id = id.trim();
+        if let Some(spec) = id.strip_prefix("sharded:") {
+            return self.build_sharded(spec);
+        }
+        match self.entries.iter().find(|(eid, _)| *eid == id) {
             Some((_, builder)) => Ok(builder()),
             None => bail!(
-                "unknown backend {:?}; registered backends: {}",
-                id.trim(),
+                "unknown backend {:?}; registered backends: {}; \
+                 composites: {SHARDED_GRAMMAR}",
+                id,
                 self.ids().join(", ")
             ),
         }
+    }
+
+    /// Resolve the tail of a `sharded:` id (everything after the
+    /// prefix): `<replicas>[:<strategy>]:<inner-id>`.
+    fn build_sharded(&self, spec: &str) -> Result<Box<dyn Backend>> {
+        let (count, tail) = spec
+            .split_once(':')
+            .ok_or_else(|| anyhow!("malformed sharded id; expected {SHARDED_GRAMMAR}"))?;
+        let replicas: usize = count.parse().map_err(|_| {
+            anyhow!("sharded replica count {count:?} is not a number; expected {SHARDED_GRAMMAR}")
+        })?;
+        if replicas == 0 {
+            bail!("sharded replica count must be >= 1; expected {SHARDED_GRAMMAR}");
+        }
+        // the strategy segment is optional; an unrecognized token here
+        // is part of the inner id and diagnosed by the recursive build
+        let (strategy, inner_id) = match tail.split_once(':') {
+            Some((tok, rest)) => match ShardStrategy::parse(tok) {
+                Some(st) => (st, rest),
+                None => (ShardStrategy::Rows, tail),
+            },
+            None => (ShardStrategy::Rows, tail),
+        };
+        // cap the TOTAL chip count: nested composites multiply, so a
+        // per-level check alone would let sharded:4096:sharded:4096:…
+        // eagerly construct millions of backend instances
+        let total = (replicas as u128).saturating_mul(nested_replicas(inner_id));
+        if total > MAX_REPLICAS as u128 {
+            bail!(
+                "sharded id would construct {total} chips (nested counts multiply), \
+                 exceeding the {MAX_REPLICAS} sanity cap"
+            );
+        }
+        let inner: Vec<Box<dyn Backend>> =
+            (0..replicas).map(|_| self.build(inner_id)).collect::<Result<_>>()?;
+        Ok(Box::new(Sharded::new(inner, strategy)?))
     }
 
     /// Construct several backends from a comma-separated selection
@@ -137,10 +212,56 @@ mod tests {
     }
 
     #[test]
-    fn unknown_id_lists_known_backends() {
+    fn unknown_id_lists_known_backends_and_sharded_grammar() {
         let err = Registry::with_defaults().build("sparsecore").unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("sparsecore") && msg.contains("platinum-ternary"), "{msg}");
+        // the parameterized form must be discoverable from the error
+        assert!(msg.contains(SHARDED_GRAMMAR), "{msg}");
+    }
+
+    #[test]
+    fn sharded_ids_build_and_canonicalize() {
+        let reg = Registry::with_defaults();
+        for (spec, canon) in [
+            ("sharded:4:platinum-ternary", "sharded:4:platinum-ternary"),
+            // explicit default strategy canonicalizes to the short form
+            ("sharded:4:rows:platinum-ternary", "sharded:4:platinum-ternary"),
+            ("sharded:2:batch:eyeriss", "sharded:2:batch:eyeriss"),
+            ("sharded:3:layers:prosperity", "sharded:3:layers:prosperity"),
+            // composites nest (pipeline of row-parallel groups)
+            (
+                "sharded:2:layers:sharded:2:platinum-ternary",
+                "sharded:2:layers:sharded:2:platinum-ternary",
+            ),
+        ] {
+            let be = reg.build(spec).unwrap();
+            assert_eq!(be.id(), canon, "{spec}");
+            assert_eq!(be.describe().id, canon, "{spec}");
+            let r = be.run(&Workload::Kernel(Gemm::new(64, 40, 8)));
+            assert_eq!(r.backend, canon);
+            assert!(r.latency_s > 0.0, "{spec}");
+        }
+    }
+
+    #[test]
+    fn malformed_sharded_ids_error_clearly() {
+        let reg = Registry::with_defaults();
+        for bad in [
+            "sharded:",
+            "sharded:4",
+            "sharded:zero:platinum-ternary",
+            "sharded:0:platinum-ternary",
+            "sharded:9999999:platinum-ternary",
+            // nested counts multiply: each level is under the cap, the
+            // product is not
+            "sharded:4096:sharded:4096:platinum-ternary",
+            "sharded:2:diagonal-strategy",
+            "sharded:2:rows:nope",
+        ] {
+            let err = reg.build(bad).unwrap_err().to_string();
+            assert!(err.contains("sharded") || err.contains("unknown backend"), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -25,13 +25,15 @@ impl BackendKind {
     }
 }
 
-/// Static description of a backend (Table I's spec columns).
+/// Static description of a backend (Table I's spec columns).  Owned
+/// strings, because composite backends (`engine::Sharded`) carry
+/// parameterized ids like `sharded:4:platinum-ternary`.
 #[derive(Debug, Clone)]
 pub struct BackendInfo {
     /// Registry id, e.g. `"platinum-ternary"`.
-    pub id: &'static str,
+    pub id: String,
     /// Display name, e.g. `"Platinum"`.
-    pub name: &'static str,
+    pub name: String,
     pub kind: BackendKind,
     /// Clock frequency in Hz (nominal for CPU backends).
     pub freq_hz: f64,
@@ -42,17 +44,17 @@ pub struct BackendInfo {
     /// Process node in nm, when known.
     pub tech_nm: Option<u32>,
     /// One-line provenance note (calibration target, measurement caveat).
-    pub notes: &'static str,
+    pub notes: String,
 }
 
 impl BackendInfo {
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
-            ("id", s(self.id)),
-            ("name", s(self.name)),
+            ("id", s(&self.id)),
+            ("name", s(&self.name)),
             ("kind", s(self.kind.label())),
             ("freq_hz", num(self.freq_hz)),
-            ("notes", s(self.notes)),
+            ("notes", s(&self.notes)),
         ];
         if let Some(p) = self.pes {
             pairs.push(("pes", num(p as f64)));

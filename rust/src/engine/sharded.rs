@@ -1,0 +1,496 @@
+//! Multi-chip composition: [`Sharded`] wraps N replicas of any
+//! registered backend and partitions a [`Workload`] across them — the
+//! scaling axis the paper's 0.96 mm²-per-chip positioning implies and
+//! the ROADMAP names first among the engine follow-ups.
+//!
+//! Three partition strategies:
+//!
+//! * [`ShardStrategy::Rows`] — split every kernel's M dimension (each
+//!   chip owns a disjoint stripe of output rows; weights are
+//!   partitioned, activations broadcast).  Default, and functionally
+//!   lossless: stitching the per-shard outputs reproduces the
+//!   unsharded result bit-exactly (pinned in `tests/engine_api.rs`).
+//! * [`ShardStrategy::Batch`] — split the request axis: the entries of
+//!   a [`Workload::Batch`], the N (batch·seq) dimension of a kernel or
+//!   model pass (weights replicated, activations partitioned).
+//! * [`ShardStrategy::Layers`] — split a model pass layer-wise across
+//!   chips (pipeline parallelism; each chip holds a contiguous block
+//!   of transformer layers).
+//!
+//! Aggregation follows the timing physics of each strategy: for the
+//! data-parallel strategies (`rows`/`batch`) **latency is the max over
+//! replicas plus a modelled interconnect/merge term**
+//! ([`Interconnect`]); for `layers` a single dispatch traverses the
+//! pipeline stages **sequentially**, so latency is the *sum* of stage
+//! latencies plus the handoffs (max would describe steady-state
+//! pipelined throughput, not one pass).  **Energy is always the sum** —
+//! preserving the `Option<f64>` null-propagation contract (one replica
+//! with unmodelled energy makes the composite's energy unmodelled).
+//! Cycle-accurate detail survives when every active replica reports
+//! it: cycles follow latency (max, or sum for `layers`), activity and
+//! the energy breakdown are cross-chip sums, phases/utilization are
+//! the critical (slowest) replica's view.
+//!
+//! Registry grammar: `sharded:<replicas>[:<strategy>]:<inner-id>`,
+//! e.g. `sharded:4:platinum-ternary` or `sharded:8:batch:eyeriss`
+//! (strategy defaults to `rows`; composites nest, so
+//! `sharded:2:layers:sharded:4:platinum-ternary` is a 2-stage pipeline
+//! of 4-way row-parallel chips).
+
+use super::report::{BackendInfo, Report};
+use super::workload::Workload;
+use super::Backend;
+use crate::analysis::Gemm;
+use crate::runtime::pool::split_even;
+use anyhow::{bail, Result};
+
+/// How a [`Sharded`] backend partitions a workload across replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Split every kernel's M (output-row) dimension.
+    Rows,
+    /// Split the request axis (batch entries / the N dimension).
+    Batch,
+    /// Split a model pass layer-wise (pipeline stages).
+    Layers,
+}
+
+impl ShardStrategy {
+    pub const ALL: [ShardStrategy; 3] =
+        [ShardStrategy::Rows, ShardStrategy::Batch, ShardStrategy::Layers];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardStrategy::Rows => "rows",
+            ShardStrategy::Batch => "batch",
+            ShardStrategy::Layers => "layers",
+        }
+    }
+
+    /// Parse a grammar token (`rows`/`batch`/`layers`).
+    pub fn parse(s: &str) -> Option<ShardStrategy> {
+        ShardStrategy::ALL.into_iter().find(|st| st.label() == s)
+    }
+}
+
+/// Modelled chip-to-chip interconnect, charged once per dispatch for
+/// collecting partial results (rows/batch: an all-gather of the output
+/// stripes into one place; layers: activation handoffs between pipeline
+/// stages).  Deliberately modest edge-class numbers — the point is that
+/// scaling is *not* free, so replica sweeps show diminishing returns.
+#[derive(Debug, Clone, Copy)]
+pub struct Interconnect {
+    /// Sustained link bandwidth in bytes/s.
+    pub link_bytes_per_s: f64,
+    /// Per-hop latency of the reduction/gather tree (s).
+    pub hop_s: f64,
+}
+
+impl Default for Interconnect {
+    fn default() -> Interconnect {
+        // 16 GB/s (PCIe-gen4-x4-ish edge link), 1 µs per tree hop
+        Interconnect { link_bytes_per_s: 16e9, hop_s: 1e-6 }
+    }
+}
+
+/// A composite [`Backend`]: N replicas of one inner backend executing
+/// disjoint shards of every workload.  See the module docs for the
+/// partition strategies and aggregation rules.
+pub struct Sharded {
+    id: String,
+    inner: Vec<Box<dyn Backend>>,
+    strategy: ShardStrategy,
+    interconnect: Interconnect,
+}
+
+impl Sharded {
+    /// Compose `inner` replicas under `strategy` with the default
+    /// interconnect.  Replicas are assumed homogeneous (the canonical
+    /// id is derived from the first); errors on an empty replica set.
+    pub fn new(inner: Vec<Box<dyn Backend>>, strategy: ShardStrategy) -> Result<Sharded> {
+        Sharded::with_interconnect(inner, strategy, Interconnect::default())
+    }
+
+    /// [`Sharded::new`] with an explicit interconnect model.
+    pub fn with_interconnect(
+        inner: Vec<Box<dyn Backend>>,
+        strategy: ShardStrategy,
+        interconnect: Interconnect,
+    ) -> Result<Sharded> {
+        if inner.is_empty() {
+            bail!("sharded backend needs at least one replica");
+        }
+        let id = match strategy {
+            // canonical form omits the default strategy, so
+            // `sharded:4:platinum-ternary` round-trips unchanged
+            ShardStrategy::Rows => format!("sharded:{}:{}", inner.len(), inner[0].id()),
+            st => format!("sharded:{}:{}:{}", inner.len(), st.label(), inner[0].id()),
+        };
+        Ok(Sharded { id, inner, strategy, interconnect })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn strategy(&self) -> ShardStrategy {
+        self.strategy
+    }
+
+    /// The per-replica shards of `w` (only non-empty shards; fewer than
+    /// `replicas()` entries means idle chips).  A single replica passes
+    /// the workload through untouched, which keeps `sharded:1:<id>`
+    /// bit-exact with the inner backend.
+    pub fn partition(&self, w: &Workload) -> Vec<Workload> {
+        let n_rep = self.inner.len();
+        if n_rep == 1 {
+            return vec![w.clone()];
+        }
+        match (self.strategy, w) {
+            // rows: every kernel's M stripe-split, counts preserved
+            (ShardStrategy::Rows, _) => {
+                let mut shards: Vec<Vec<(Gemm, usize)>> = vec![Vec::new(); n_rep];
+                for (g, cnt) in w.kernels() {
+                    for (i, r) in split_even(g.m, n_rep).into_iter().enumerate() {
+                        shards[i].push((Gemm::new(r.len(), g.k, g.n), cnt));
+                    }
+                }
+                shards
+                    .into_iter()
+                    .filter(|s| !s.is_empty())
+                    .map(Workload::Counted)
+                    .collect()
+            }
+            // batch: split the request list / the N dimension; for
+            // counted workloads the requests are the occurrences, so
+            // each kernel's count is what splits (not the distinct-
+            // kernel list, which may be a single high-count entry)
+            (ShardStrategy::Batch, Workload::Batch(gs)) => split_even(gs.len(), n_rep)
+                .into_iter()
+                .map(|r| Workload::Batch(gs[r].to_vec()))
+                .collect(),
+            (ShardStrategy::Batch, Workload::Counted(ps))
+            | (ShardStrategy::Layers, Workload::Counted(ps)) => {
+                let mut shards: Vec<Vec<(Gemm, usize)>> = vec![Vec::new(); n_rep];
+                for &(g, cnt) in ps {
+                    for (i, r) in split_even(cnt, n_rep).into_iter().enumerate() {
+                        shards[i].push((g, r.len()));
+                    }
+                }
+                shards
+                    .into_iter()
+                    .filter(|s| !s.is_empty())
+                    .map(Workload::Counted)
+                    .collect()
+            }
+            (ShardStrategy::Batch, Workload::Kernel(g)) => split_even(g.n, n_rep)
+                .into_iter()
+                .map(|r| Workload::Kernel(Gemm::new(g.m, g.k, r.len())))
+                .collect(),
+            (ShardStrategy::Batch, Workload::ModelPass { model, n, stage }) => {
+                split_even(*n, n_rep)
+                    .into_iter()
+                    .map(|r| Workload::ModelPass { model: *model, n: r.len(), stage: *stage })
+                    .collect()
+            }
+            // layers: contiguous layer blocks of a model pass; lists
+            // split stage-wise; a single kernel has no layer axis
+            (ShardStrategy::Layers, Workload::ModelPass { model, n, stage }) => {
+                split_even(model.layers, n_rep)
+                    .into_iter()
+                    .map(|r| {
+                        let mut stage_model = *model;
+                        stage_model.layers = r.len();
+                        Workload::ModelPass { model: stage_model, n: *n, stage: *stage }
+                    })
+                    .collect()
+            }
+            (ShardStrategy::Layers, Workload::Batch(gs)) => split_even(gs.len(), n_rep)
+                .into_iter()
+                .map(|r| Workload::Batch(gs[r].to_vec()))
+                .collect(),
+            (ShardStrategy::Layers, Workload::Kernel(_)) => vec![w.clone()],
+        }
+    }
+
+    /// The modelled interconnect/merge latency for collecting results
+    /// from `active` busy replicas (zero when nothing needs merging).
+    pub fn merge_latency_s(&self, w: &Workload, active: usize) -> f64 {
+        if active <= 1 {
+            return 0.0;
+        }
+        let boundaries = active as f64 - 1.0;
+        // total output bytes of the workload (i32 accumulator words)
+        let out_bytes: f64 = w
+            .kernels()
+            .iter()
+            .map(|(g, c)| 4.0 * (g.m * g.n) as f64 * *c as f64)
+            .sum();
+        let (hops, bytes) = match (self.strategy, w) {
+            // pipeline: (active-1) sequential stage boundaries, each
+            // handing off the activation tile (n × hidden i32 words)
+            (ShardStrategy::Layers, Workload::ModelPass { model, n, .. }) => {
+                (boundaries, 4.0 * (*n as f64) * model.hidden as f64 * boundaries)
+            }
+            // pipeline over a kernel list: each boundary hands off
+            // roughly one stage's share of the intermediate results
+            (ShardStrategy::Layers, _) => {
+                (boundaries, out_bytes * boundaries / active as f64)
+            }
+            // gather: a log2 reduction tree; every non-root chip ships
+            // its output stripe
+            _ => ((active as f64).log2().ceil(), out_bytes * boundaries / active as f64),
+        };
+        hops * self.interconnect.hop_s + bytes / self.interconnect.link_bytes_per_s
+    }
+}
+
+impl Backend for Sharded {
+    fn id(&self) -> &str {
+        &self.id
+    }
+
+    fn describe(&self) -> BackendInfo {
+        let base = self.inner[0].describe();
+        let n = self.inner.len();
+        BackendInfo {
+            id: self.id.clone(),
+            name: format!("{}× {}", n, base.name),
+            kind: base.kind,
+            freq_hz: base.freq_hz,
+            pes: base.pes.map(|p| p * n),
+            area_mm2: base.area_mm2.map(|a| a * n as f64),
+            tech_nm: base.tech_nm,
+            notes: format!(
+                "{n} {} replicas, {}-partitioned; latency = {} + interconnect, energy = sum",
+                base.id,
+                self.strategy.label(),
+                match self.strategy {
+                    ShardStrategy::Layers => "stage sum",
+                    _ => "max",
+                }
+            ),
+        }
+    }
+
+    fn run(&self, w: &Workload) -> Report {
+        let shards = self.partition(w);
+        let reports: Vec<Report> =
+            shards.iter().zip(&self.inner).map(|(shard, be)| be.run(shard)).collect();
+        let mut out = Report {
+            backend: self.id.clone(),
+            workload: w.label(),
+            ops: w.naive_adds(),
+            ..Report::default()
+        };
+        if reports.is_empty() {
+            out.energy_j = Some(0.0);
+            return out;
+        }
+        // latency: concurrent shards bound by the critical (slowest)
+        // replica; pipeline stages traverse sequentially — plus the
+        // interconnect term either way
+        let crit = reports
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.latency_s.total_cmp(&b.1.latency_s))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let compute_latency = match self.strategy {
+            ShardStrategy::Layers => reports.iter().map(|r| r.latency_s).sum(),
+            _ => reports[crit].latency_s,
+        };
+        out.latency_s = compute_latency + self.merge_latency_s(w, reports.len());
+        // energy: sum, with one unmodelled replica nulling the total
+        out.energy_j = reports.iter().fold(Some(0.0f64), |acc, r| match (acc, r.energy_j) {
+            (Some(a), Some(e)) => Some(a + e),
+            _ => None,
+        });
+        out.throughput_gops =
+            if out.latency_s > 0.0 { out.ops as f64 / out.latency_s / 1e9 } else { 0.0 };
+        // detail survives only when every active replica carries it
+        if reports.iter().all(|r| {
+            r.cycles.is_some()
+                && r.phases.is_some()
+                && r.activity.is_some()
+                && r.energy_breakdown.is_some()
+        }) {
+            out.cycles = match self.strategy {
+                ShardStrategy::Layers => Some(reports.iter().map(|r| r.cycles.unwrap()).sum()),
+                _ => reports.iter().map(|r| r.cycles.unwrap()).max(),
+            };
+            out.phases = reports[crit].phases;
+            out.utilization = reports[crit].utilization;
+            let mut activity = crate::sim::Activity::default();
+            let mut breakdown = crate::sim::EnergyBreakdown::default();
+            for r in &reports {
+                activity.add(r.activity.as_ref().unwrap());
+                breakdown.add(r.energy_breakdown.as_ref().unwrap());
+            }
+            out.activity = Some(activity);
+            out.energy_breakdown = Some(breakdown);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::backends::{EyerissBackend, PlatinumBackend};
+    use crate::models::{B158_3B, PREFILL_N};
+
+    fn sharded_platinum(n: usize, strategy: ShardStrategy) -> Sharded {
+        let inner: Vec<Box<dyn Backend>> =
+            (0..n).map(|_| Box::new(PlatinumBackend::ternary()) as Box<dyn Backend>).collect();
+        Sharded::new(inner, strategy).unwrap()
+    }
+
+    #[test]
+    fn strategy_labels_roundtrip() {
+        for st in ShardStrategy::ALL {
+            assert_eq!(ShardStrategy::parse(st.label()), Some(st));
+        }
+        assert_eq!(ShardStrategy::parse("diagonal"), None);
+    }
+
+    #[test]
+    fn canonical_id_elides_default_strategy() {
+        assert_eq!(sharded_platinum(4, ShardStrategy::Rows).id(), "sharded:4:platinum-ternary");
+        assert_eq!(
+            sharded_platinum(2, ShardStrategy::Batch).id(),
+            "sharded:2:batch:platinum-ternary"
+        );
+    }
+
+    #[test]
+    fn empty_replica_set_is_an_error() {
+        assert!(Sharded::new(Vec::new(), ShardStrategy::Rows).is_err());
+    }
+
+    #[test]
+    fn rows_partition_covers_all_rows() {
+        let sh = sharded_platinum(4, ShardStrategy::Rows);
+        let shards = sh.partition(&Workload::Kernel(Gemm::new(10, 20, 8)));
+        assert_eq!(shards.len(), 4);
+        let total_m: usize = shards
+            .iter()
+            .flat_map(|s| s.kernels())
+            .map(|(g, _)| {
+                assert_eq!((g.k, g.n), (20, 8));
+                g.m
+            })
+            .sum();
+        assert_eq!(total_m, 10);
+    }
+
+    #[test]
+    fn batch_partition_splits_n() {
+        let sh = sharded_platinum(3, ShardStrategy::Batch);
+        let shards = sh.partition(&Workload::Kernel(Gemm::new(16, 20, 7)));
+        let ns: Vec<usize> = shards.iter().flat_map(|s| s.kernels()).map(|(g, _)| g.n).collect();
+        assert_eq!(ns.iter().sum::<usize>(), 7);
+        assert_eq!(ns.len(), 3);
+    }
+
+    #[test]
+    fn batch_partition_splits_occurrence_counts() {
+        // a single high-count kernel must still parallelize: the
+        // occurrence counts split, not the distinct-kernel list
+        let sh = sharded_platinum(4, ShardStrategy::Batch);
+        let g = Gemm::new(16, 20, 8);
+        let shards = sh.partition(&Workload::Counted(vec![(g, 100)]));
+        let counts: Vec<usize> = shards
+            .iter()
+            .flat_map(|s| s.kernels())
+            .map(|(sg, c)| {
+                assert_eq!(sg, g);
+                c
+            })
+            .collect();
+        assert_eq!(counts, vec![25, 25, 25, 25]);
+    }
+
+    #[test]
+    fn layers_partition_splits_model_depth() {
+        let sh = sharded_platinum(4, ShardStrategy::Layers);
+        let shards = sh.partition(&Workload::prefill(B158_3B));
+        let layers: Vec<usize> = shards
+            .iter()
+            .map(|s| match s {
+                Workload::ModelPass { model, n, .. } => {
+                    assert_eq!(*n, PREFILL_N);
+                    model.layers
+                }
+                other => panic!("layer shard must stay a model pass, got {other:?}"),
+            })
+            .collect();
+        assert_eq!(layers.iter().sum::<usize>(), B158_3B.layers);
+        assert_eq!(layers.len(), 4);
+    }
+
+    #[test]
+    fn layers_latency_is_stage_sum_not_max() {
+        // one dispatch traverses the pipeline sequentially: reporting
+        // max(stages) would claim an impossible ~N× single-pass speedup
+        let sh = sharded_platinum(2, ShardStrategy::Layers);
+        let w = Workload::prefill(B158_3B);
+        let inner = PlatinumBackend::ternary();
+        let parts: Vec<Report> = sh.partition(&w).iter().map(|s| inner.run(s)).collect();
+        let stage_sum: f64 = parts.iter().map(|r| r.latency_s).sum();
+        let r = sh.run(&w);
+        let expect = stage_sum + sh.merge_latency_s(&w, parts.len());
+        assert!((r.latency_s - expect).abs() <= expect * 1e-12, "sum-of-stages rule");
+        // and therefore never faster than the whole pass on one chip
+        let single = inner.run(&w);
+        assert!(r.latency_s >= single.latency_s * 0.99);
+    }
+
+    #[test]
+    fn merge_term_zero_for_single_active_replica() {
+        let sh = sharded_platinum(4, ShardStrategy::Rows);
+        let w = Workload::Kernel(Gemm::new(64, 40, 8));
+        assert_eq!(sh.merge_latency_s(&w, 1), 0.0);
+        assert!(sh.merge_latency_s(&w, 2) > 0.0);
+        assert!(sh.merge_latency_s(&w, 4) > sh.merge_latency_s(&w, 2));
+    }
+
+    #[test]
+    fn describe_scales_area_and_pes() {
+        let single = PlatinumBackend::ternary().describe();
+        let info = sharded_platinum(4, ShardStrategy::Rows).describe();
+        assert_eq!(info.id, "sharded:4:platinum-ternary");
+        assert_eq!(info.pes, single.pes.map(|p| p * 4));
+        let (a4, a1) = (info.area_mm2.unwrap(), single.area_mm2.unwrap());
+        assert!((a4 - 4.0 * a1).abs() < 1e-12);
+        assert!(info.notes.contains("rows"));
+    }
+
+    #[test]
+    fn run_reports_detail_and_scaling() {
+        // deep-k, tall-m kernel: the row-shard compute saving has to
+        // dominate the interconnect gather (which scales with m·n only)
+        let g = Gemm::new(4320, 2080, 32);
+        let single = PlatinumBackend::ternary().run(&Workload::Kernel(g));
+        let r = sharded_platinum(4, ShardStrategy::Rows).run(&Workload::Kernel(g));
+        assert_eq!(r.backend, "sharded:4:platinum-ternary");
+        assert_eq!(r.ops, single.ops);
+        assert!(r.latency_s < single.latency_s, "4 chips must beat 1 on a tall kernel");
+        assert!(r.cycles.is_some() && r.activity.is_some() && r.energy_breakdown.is_some());
+        // cross-chip energy exceeds a single chip's (construct overhead
+        // is replicated per shard dispatch)
+        assert!(r.energy_j.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn detail_drops_when_inner_has_none() {
+        // eyeriss reports scalars only: the composite must not invent
+        // phantom cycle detail
+        let inner: Vec<Box<dyn Backend>> =
+            (0..2).map(|_| Box::new(EyerissBackend) as Box<dyn Backend>).collect();
+        let sh = Sharded::new(inner, ShardStrategy::Rows).unwrap();
+        let r = sh.run(&Workload::Kernel(Gemm::new(64, 40, 8)));
+        assert!(r.cycles.is_none() && r.phases.is_none());
+        assert!(r.energy_j.unwrap() > 0.0 && r.latency_s > 0.0);
+    }
+}

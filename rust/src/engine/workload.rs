@@ -54,6 +54,14 @@ pub enum Workload {
     /// An ordered sequence of kernels executed back-to-back (the serving
     /// coordinator prices a request batch this way).
     Batch(Vec<Gemm>),
+    /// Kernels with occurrence counts — [`Workload::Batch`] without the
+    /// expansion blowup.  This is what a row-sharded model pass becomes
+    /// on each replica (`engine::Sharded` preserves the per-layer
+    /// kernel counts instead of materializing hundreds of entries), and
+    /// it keeps count-scaled aggregation (`latency × count`) instead of
+    /// repeated addition, so shard reports stay bit-comparable with
+    /// unsharded ones.
+    Counted(Vec<(Gemm, usize)>),
 }
 
 impl Workload {
@@ -80,6 +88,9 @@ impl Workload {
                 format!("{}-{}-n{}", model.name, stage.label(), n)
             }
             Workload::Batch(gs) => format!("batch-{}", gs.len()),
+            Workload::Counted(ps) => {
+                format!("counted-{}", ps.iter().map(|(_, c)| c).sum::<usize>())
+            }
         }
     }
 
@@ -90,6 +101,7 @@ impl Workload {
             Workload::Kernel(g) => vec![(*g, 1)],
             Workload::ModelPass { model, n, .. } => model.model_gemms(*n),
             Workload::Batch(gs) => gs.iter().map(|&g| (g, 1)).collect(),
+            Workload::Counted(ps) => ps.clone(),
         }
     }
 
@@ -116,6 +128,17 @@ mod tests {
     fn model_pass_ops_match_model_zoo() {
         let w = Workload::prefill(B158_3B);
         assert_eq!(w.naive_adds(), B158_3B.total_naive_adds(PREFILL_N));
+    }
+
+    #[test]
+    fn counted_matches_expanded_batch() {
+        let g1 = Gemm::new(4, 5, 6);
+        let g2 = Gemm::new(7, 5, 6);
+        let counted = Workload::Counted(vec![(g1, 3), (g2, 1)]);
+        let batch = Workload::Batch(vec![g1, g1, g1, g2]);
+        assert_eq!(counted.naive_adds(), batch.naive_adds());
+        assert_eq!(counted.label(), "counted-4");
+        assert_eq!(counted.kernels(), vec![(g1, 3), (g2, 1)]);
     }
 
     #[test]

@@ -17,7 +17,9 @@ use anyhow::{anyhow, bail, Result};
 use platinum::analysis::Gemm;
 use platinum::config::{PlatinumConfig, Tiling};
 use platinum::energy::{AreaModel, EnergyTable};
-use platinum::engine::{Backend, PlatinumBackend, Registry, Report, Workload, COMPARISON_IDS};
+use platinum::engine::{
+    Backend, PlatinumBackend, Registry, Report, Workload, COMPARISON_IDS, SHARDED_GRAMMAR,
+};
 use platinum::models::{ALL_MODELS, B158_3B, DECODE_N, PREFILL_N};
 use platinum::runtime::{HostTensor, Runtime};
 use platinum::util::cli;
@@ -52,17 +54,21 @@ fn print_help() {
            simulate   --model {{700m|1.3b|3b}} --n <batch·seq> [--mode ternary|bitserial]\n\
                       or --m --k --n for a single kernel;\n\
                       [--backend <id>] runs any registered system, [--json] emits the report\n\
+                      [--threads <t>] caps the worker pool (overrides PLATINUM_THREADS)\n\
                       (--mode bitserial ≡ --backend platinum-bitserial: k retiled to 728)\n\
            report     --area --power --util   breakdowns vs paper §V-B  [--json]\n\
-           dse        [--full]                Fig 7 tiling sweep\n\
+           dse        [--full] [--replicas <list>]  Fig 7 tiling sweep (× chip count)\n\
            paths      [--kind ternary|binary] [--c <chunk>] [--dump] ISA dump\n\
-           baselines  [--backend <ids|all>] [--json]  Table I comparison on b1.58-3B\n\
+           baselines  [--backend <ids|all>] [--json] [--threads <t>]\n\
+                      Table I comparison on b1.58-3B\n\
            backends   list engine backend ids with specs\n\
            runtime    [--artifacts <dir>] [--run <name>] PJRT artifacts\n\
          \n\
          BACKENDS (see `platinum backends`):\n\
            platinum-ternary, platinum-bitserial, eyeriss, prosperity, tmac,\n\
-           tmac-cpu, platinum-cpu (measured on this host; energy reported null)"
+           tmac-cpu, platinum-cpu (measured on this host; energy reported null);\n\
+           multi-chip composites: sharded:<replicas>[:rows|batch|layers]:<inner-id>\n\
+           (e.g. --backend sharded:4:platinum-ternary)"
     );
 }
 
@@ -80,6 +86,22 @@ fn model_by_name(name: &str) -> Result<&'static platinum::models::BitNetModel> {
         .ok_or_else(|| anyhow!("unknown model {name:?} (700m, 1.3b, 3b)"))
 }
 
+/// Apply `--threads <t>` by overriding `PLATINUM_THREADS` before the
+/// global worker pool is first touched (the pool is created lazily on
+/// first hot-path use, which is always after flag parsing).  The flag
+/// wins over an inherited env var.
+fn apply_threads_flag(args: &cli::Args) -> Result<()> {
+    if let Some(t) = args.get("threads") {
+        let n: usize = t
+            .parse()
+            .ok()
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| anyhow!("--threads expects a positive integer, got {t:?}"))?;
+        std::env::set_var("PLATINUM_THREADS", n.to_string());
+    }
+    Ok(())
+}
+
 /// Map `--mode` to the registry-identical Platinum backend, so
 /// `--mode bitserial` and `--backend platinum-bitserial` produce the
 /// same configuration (and therefore the same numbers).
@@ -92,6 +114,7 @@ fn platinum_from_mode(args: &cli::Args) -> Result<PlatinumBackend> {
 }
 
 fn cmd_simulate(args: &cli::Args) -> Result<()> {
+    apply_threads_flag(args)?;
     let backend: Box<dyn Backend> = match args.get("backend") {
         Some(id) => {
             if args.get("mode").is_some() {
@@ -274,20 +297,46 @@ fn cmd_dse(args: &cli::Args) -> Result<()> {
     let grid = dse::default_grid();
     let models: Vec<platinum::models::BitNetModel> =
         if args.flag("full") { ALL_MODELS.to_vec() } else { vec![B158_3B] };
-    let pts = dse::sweep(&grid, &models);
+    // `--replicas 1,2,4` crosses the tiling grid with multi-chip
+    // sharding (rows strategy) — the scaling axis of the DSE
+    let replicas: Vec<usize> = match args.get("replicas") {
+        None => vec![1],
+        Some(spec) => spec
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.parse::<usize>()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| anyhow!("--replicas expects positive integers, got {t:?}"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    if replicas.is_empty() {
+        bail!("--replicas expects a comma-separated list of positive integers, e.g. 1,2,4");
+    }
+    let pts = dse::sweep_replicated(&grid, &replicas, &models);
     let front = dse::pareto(&pts);
-    println!("== Fig 7 DSE: {} points, {} on the Pareto frontier ==", pts.len(), front.len());
     println!(
-        "{:<22} {:>12} {:>12} {:>9} {:>9}  pareto",
-        "tiling", "latency(s)", "energy(J)", "mm²", "KB"
+        "== Fig 7 DSE: {} points ({} tilings × {} chip counts), {} on the Pareto frontier ==",
+        pts.len(),
+        grid.len(),
+        replicas.len(),
+        front.len()
+    );
+    println!(
+        "{:<22} {:>6} {:>12} {:>12} {:>9} {:>9}  pareto",
+        "tiling", "chips", "latency(s)", "energy(J)", "mm²", "KB"
     );
     for (i, p) in pts.iter().enumerate() {
         let t = &p.tiling;
         let tag = format!("m{} k{} n{} {}", t.m, t.k, t.n, t.order.label());
-        let chosen = p.tiling == Tiling::default();
+        let chosen = p.tiling == Tiling::default() && p.replicas == 1;
         println!(
-            "{:<22} {:>12.4} {:>12.3} {:>9.3} {:>9.0}  {}{}",
+            "{:<22} {:>6} {:>12.4} {:>12.3} {:>9.3} {:>9.0}  {}{}",
             tag,
+            p.replicas,
             p.latency_s,
             p.energy_j,
             p.area_mm2,
@@ -331,6 +380,7 @@ fn cmd_paths(args: &cli::Args) -> Result<()> {
 }
 
 fn cmd_baselines(args: &cli::Args) -> Result<()> {
+    apply_threads_flag(args)?;
     let registry = Registry::with_defaults();
     let backends = registry.build_selection(args.get_str("backend", COMPARISON_IDS))?;
     let json = args.flag("json");
@@ -394,6 +444,10 @@ fn cmd_backends(args: &cli::Args) -> Result<()> {
             info.notes
         );
     }
+    println!(
+        "\nmulti-chip composites: {SHARDED_GRAMMAR}\n\
+         (latency = max over replicas + interconnect, energy = sum; nests recursively)"
+    );
     Ok(())
 }
 
