@@ -1,7 +1,9 @@
 //! Hot-path microbenchmarks (real wallclock on this machine) — the
 //! §Perf substrate: offline toolchain throughput, golden-datapath
 //! throughput (with 1/4/8-thread pool sweeps), the real T-MAC CPU
-//! kernel (same sweeps), simulator speed, and manifest parsing.
+//! kernel (same sweeps), scheduler microbenches (tiny-task fork-join,
+//! dynamic chunk claiming, a ragged decode shape — the work-stealing
+//! paths PR 4 introduced), simulator speed, and manifest parsing.
 //! Regenerated before/after every optimization iteration.
 //!
 //! Besides the human-readable report, every row is recorded to
@@ -18,11 +20,12 @@ use platinum::engine::{Backend, PlatinumBackend, PlatinumCpuBackend, Registry, W
 use platinum::lut::{naive_mpgemm, ternary_mpgemm, ternary_mpgemm_pool};
 use platinum::models::B158_3B;
 use platinum::pathgen;
-use platinum::runtime::pool::Pool;
+use platinum::runtime::pool::{Pool, Task};
 use platinum::sim::{simulate_gemm, simulate_model};
 use platinum::util::bench::{bench, fmt_rate, report, Stats};
 use platinum::util::json::{arr, num, obj, s as jstr, Json};
 use platinum::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
 /// Collects every reported row for the machine-readable sidecar.
@@ -137,6 +140,52 @@ fn main() {
         &st,
         Some(((gm * gk) as f64 / (st.per_iter_ns() * 1e-9), "op")),
     );
+
+    // --- scheduler (PR 4: work stealing + dynamic chunking) -----------------
+    // fork-join of thousands of sub-microsecond tasks — the decode-shaped
+    // submission pattern that convoyed on the seed's single shared queue
+    let pool8 = Pool::new(8);
+    let st = bench(2, budget, || {
+        let hits = AtomicUsize::new(0);
+        let tasks: Vec<Task> = (0..2048)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        pool8.run(tasks);
+        hits.load(Ordering::Relaxed)
+    });
+    rec.row(
+        "pool/forkjoin_2048_tiny_8T",
+        &st,
+        Some((2048.0 / (st.per_iter_ns() * 1e-9), "task")),
+    );
+
+    // chunk-claim overhead of the dynamic scheduler: 64K trivial indices
+    let st = bench(2, budget, || {
+        let sum = AtomicUsize::new(0);
+        pool8.for_each_chunk(8, 65_536, 0, &|r| {
+            sum.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        sum.load(Ordering::Relaxed)
+    });
+    rec.row(
+        "pool/for_each_chunk_64k_8T",
+        &st,
+        Some((65_536.0 / (st.per_iter_ns() * 1e-9), "idx")),
+    );
+
+    // ragged decode shape: 97 rows over 8 lanes, k across a round
+    // boundary — the load-balance case static stripes handled worst
+    let (rm, rk, rn) = (97, 523, 3);
+    let rw = rng.ternary_vec(rm * rk);
+    let rx = rng.act_vec(rk * rn);
+    let rpacked = pack_ternary(&rw, rm, rk, 5);
+    let st = bench(2, budget, || ternary_mpgemm_pool(&cfg, &rpacked, &rx, rn, &pool8, 8));
+    let r = (rm * rk * rn) as f64 / (st.per_iter_ns() * 1e-9);
+    rec.row("golden/lut_mpgemm_97x523x3_8T", &st, Some((r, "op")));
 
     // --- simulator speed ----------------------------------------------------
     let g = Gemm::new(3200, 3200, 1024);

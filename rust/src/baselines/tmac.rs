@@ -19,13 +19,17 @@
 //! [`runtime::pool`](crate::runtime::pool) instead of paying a
 //! `std::thread::scope` spawn per call, and processes columns in blocks
 //! of [`COL_BLOCK`]: each block's LUTs are built **once** into a shared
-//! arena (parallel across groups) and then queried by parallel row
-//! stripes — the seed implementation rebuilt every LUT per column *per
-//! stripe*, duplicating construction work across threads.
+//! arena and then queried per row — the seed implementation rebuilt
+//! every LUT per column *per stripe*, duplicating construction work
+//! across threads.  §PR 4: both phases claim their work (groups, then
+//! rows) dynamically via [`Pool::for_each_chunk`] on the work-stealing
+//! pool, so ragged group/row counts and `threads > rows` decode shapes
+//! load-balance; results stay bit-exact because each row's group
+//! accumulation order is fixed regardless of which lane runs it.
 
 use super::BaselineReport;
 use crate::analysis::Gemm;
-use crate::runtime::pool::{self, split_even, take_slices, Pool, Task};
+use crate::runtime::pool::{self, DisjointSlice, Pool};
 
 /// T-MAC group width (4 binary weights → 16-entry LUT).
 pub const GROUP: usize = 4;
@@ -143,9 +147,10 @@ impl TMacCpu {
         }
     }
 
-    /// GEMM y = W · X over the process-wide worker pool with `threads`
-    /// row stripes.  `x` is (k × n) row-major; `out` is (m × n)
-    /// row-major.  Bit-exact for any thread count.
+    /// GEMM y = W · X over the process-wide worker pool with up to
+    /// `threads` lanes claiming rows dynamically.  `x` is (k × n)
+    /// row-major; `out` is (m × n) row-major.  Bit-exact for any
+    /// thread count.
     pub fn gemm(&self, x: &[i32], n: usize, out: &mut [i32], threads: usize) {
         self.gemm_pool(x, n, out, threads, pool::global());
     }
@@ -160,7 +165,6 @@ impl TMacCpu {
         let k = self.k;
         let pos = &self.planes[0][..];
         let neg = &self.planes[1][..];
-        let stripes = split_even(self.m, threads);
 
         // shared per-block LUT arena: entry t of group g for block
         // column j lives at luts[(g*16 + t) * nb + j], so one query
@@ -169,77 +173,59 @@ impl TMacCpu {
         for col0 in (0..n).step_by(COL_BLOCK) {
             let nb = COL_BLOCK.min(n - col0);
 
-            // phase 1: build the block's LUTs once, parallel over groups
+            // phase 1: build the block's LUTs once — groups claimed
+            // dynamically, each written to its disjoint arena region
             {
-                let gspans = split_even(groups, threads);
-                let lut_parts = take_slices(
-                    &mut luts,
-                    gspans.iter().map(|s| (s.end - s.start) * 16 * nb),
-                );
-                let tasks: Vec<Task> = gspans
-                    .iter()
-                    .zip(lut_parts)
-                    .map(|(span, part)| {
-                        let span = span.clone();
-                        Box::new(move || {
-                            for (g, lut) in part.chunks_mut(16 * nb).enumerate() {
-                                let base = (span.start + g) * GROUP;
-                                lut[..nb].fill(0); // entry 0: empty subset
-                                for t in 1..16usize {
-                                    let j = t.trailing_zeros() as usize;
-                                    let src = (t & (t - 1)) * nb;
-                                    let dst = t * nb;
-                                    if base + j < k {
-                                        let xrow =
-                                            &x[(base + j) * n + col0..(base + j) * n + col0 + nb];
-                                        for jj in 0..nb {
-                                            lut[dst + jj] = lut[src + jj] + xrow[jj];
-                                        }
-                                    } else {
-                                        // zero-padded k tail: copy the source entry
-                                        lut.copy_within(src..src + nb, dst);
-                                    }
+                let luts_sl = DisjointSlice::new(&mut luts);
+                pool.for_each_chunk(threads, groups, 0, &|gs| {
+                    for g in gs {
+                        let base = g * GROUP;
+                        // SAFETY: group g's 16·nb arena region is
+                        // written only by this claim (claims disjoint)
+                        let lut = unsafe { luts_sl.range(g * 16 * nb..(g + 1) * 16 * nb) };
+                        lut[..nb].fill(0); // entry 0: empty subset
+                        for t in 1..16usize {
+                            let j = t.trailing_zeros() as usize;
+                            let src = (t & (t - 1)) * nb;
+                            let dst = t * nb;
+                            if base + j < k {
+                                let xrow =
+                                    &x[(base + j) * n + col0..(base + j) * n + col0 + nb];
+                                for jj in 0..nb {
+                                    lut[dst + jj] = lut[src + jj] + xrow[jj];
                                 }
+                            } else {
+                                // zero-padded k tail: copy the source entry
+                                lut.copy_within(src..src + nb, dst);
                             }
-                        }) as Task
-                    })
-                    .collect();
-                pool.run(tasks);
+                        }
+                    }
+                });
             }
 
-            // phase 2: query, parallel over row stripes, both planes
+            // phase 2: query — rows claimed dynamically, both planes
             // fused per group (as in gemv)
             {
                 let luts_ref = &luts[..];
-                let out_parts =
-                    take_slices(&mut *out, stripes.iter().map(|s| (s.end - s.start) * n));
-                let tasks: Vec<Task> = stripes
-                    .iter()
-                    .zip(out_parts)
-                    .map(|(stripe, ostripe)| {
-                        let stripe = stripe.clone();
-                        Box::new(move || {
-                            for r in 0..stripe.end - stripe.start {
-                                let row = stripe.start + r;
-                                let pi = &pos[row * groups..(row + 1) * groups];
-                                let ni = &neg[row * groups..(row + 1) * groups];
-                                let mut acc = [0i32; COL_BLOCK];
-                                for g in 0..groups {
-                                    let lp = &luts_ref
-                                        [(g * 16 + pi[g] as usize) * nb..][..nb];
-                                    let ln = &luts_ref
-                                        [(g * 16 + ni[g] as usize) * nb..][..nb];
-                                    for jj in 0..nb {
-                                        acc[jj] += lp[jj] - ln[jj];
-                                    }
-                                }
-                                let orow = &mut ostripe[r * n + col0..r * n + col0 + nb];
-                                orow.copy_from_slice(&acc[..nb]);
+                let out_sl = DisjointSlice::new(&mut *out);
+                pool.for_each_chunk(threads, self.m, 0, &|rows| {
+                    for row in rows {
+                        let pi = &pos[row * groups..(row + 1) * groups];
+                        let ni = &neg[row * groups..(row + 1) * groups];
+                        let mut acc = [0i32; COL_BLOCK];
+                        for g in 0..groups {
+                            let lp = &luts_ref[(g * 16 + pi[g] as usize) * nb..][..nb];
+                            let ln = &luts_ref[(g * 16 + ni[g] as usize) * nb..][..nb];
+                            for jj in 0..nb {
+                                acc[jj] += lp[jj] - ln[jj];
                             }
-                        }) as Task
-                    })
-                    .collect();
-                pool.run(tasks);
+                        }
+                        // SAFETY: row's output segment is written only
+                        // by this claim; row ranges are disjoint
+                        let orow = unsafe { out_sl.range(row * n + col0..row * n + col0 + nb) };
+                        orow.copy_from_slice(&acc[..nb]);
+                    }
+                });
             }
         }
     }

@@ -312,7 +312,8 @@ impl Backend for TMacBackend {
 
 /// The real multithreaded T-MAC-style CPU kernel
 /// ([`tmac::TMacCpu`]), measured wall-clock on this host with seeded
-/// synthetic ternary weights, on the persistent worker pool.  Energy is
+/// synthetic ternary weights, on the persistent work-stealing pool
+/// (`threads` bounds the lanes claiming rows dynamically).  Energy is
 /// unmodelled (reported as `None`/JSON `null`, never `0.0`): this
 /// backend exists for latency ground truth, not the energy axis.
 pub struct TMacCpuBackend {
@@ -435,7 +436,9 @@ impl Backend for TMacCpuBackend {
 // ---------------------------------------------------------------------------
 
 /// The functional golden model ([`crate::lut::ternary_mpgemm`])
-/// executed **for real** on the worker pool, reporting measured
+/// executed **for real** on the work-stealing worker pool (construct
+/// and query work claimed dynamically, so decode-shaped kernels with
+/// few rows still spread across `threads` lanes), reporting measured
 /// wall-clock latency/throughput through the unified [`Report`] — the
 /// software twin of the PPE array as an engine citizen, so the
 /// functional path and the perf models are selectable through the same

@@ -12,21 +12,30 @@
 //! [`crate::runtime::pool`]: a GEMM runs as *rounds* of up to
 //! [`PlatinumConfig::num_ppes`] chunks.  Per round, every chunk's LUT is
 //! built exactly once into a shared arena (parallel across chunks), then
-//! all output rows query the arena (parallel across row stripes), each
-//! row accumulating the round into an `i32` block register that spills
-//! to the `i64` output once per round — mirroring the PPE-array /
-//! aggregator split in hardware.  Row results are bit-exact regardless
-//! of thread count: every output element sees the same integer summands
-//! in the same chunk order as the sequential path.  The i32 round
-//! accumulator assumes `round · c · max|activation|` (ternary) or
-//! `round · Σ|plane_weight| · c · max|activation|` (bit-serial) stays
-//! below 2³¹ — comfortably true for the int8-range activations every
-//! caller feeds (|a| ≤ 127 leaves headroom beyond 2²⁰).
+//! all output rows query the arena, each row accumulating the round
+//! into an `i32` block register that spills to the `i64` output once
+//! per round — mirroring the PPE-array / aggregator split in hardware.
+//!
+//! §PR 4 — both phases are scheduled **dynamically** through
+//! [`Pool::for_each_chunk`] on the work-stealing pool: construct claims
+//! activation chunks and query claims output rows from an atomic
+//! cursor, so ragged rounds (`gsz % threads != 0`), `threads > rows`
+//! decode shapes, and straggler lanes load-balance instead of idling on
+//! the old static `split_even` stripes.  Row results are bit-exact
+//! regardless of thread count or claim order: every output element sees
+//! the same integer summands in the same chunk order as the sequential
+//! path (rounds are sequential; chunk order within a round is a fixed
+//! per-row loop; the scheduler only decides *which lane* runs a row).
+//! The i32 round accumulator assumes `round · c · max|activation|`
+//! (ternary) or `round · Σ|plane_weight| · c · max|activation|`
+//! (bit-serial) stays below 2³¹ — comfortably true for the int8-range
+//! activations every caller feeds (|a| ≤ 127 leaves headroom beyond
+//! 2²⁰).
 
 use crate::config::PlatinumConfig;
 use crate::encoding::{self, PackedBinary, PackedTernary};
 use crate::pathgen::BuildPath;
-use crate::runtime::pool::{self, split_even, take_slices, Pool, Task};
+use crate::runtime::pool::{self, DisjointSlice, Pool};
 
 /// Operation counters for cross-checking against the analytical model
 /// (Eq 1–3) and the simulator's activity-based energy accounting.
@@ -138,9 +147,9 @@ pub fn ternary_mpgemm(
     ternary_mpgemm_pool(cfg, weights, acts, n, pool, pool.threads())
 }
 
-/// [`ternary_mpgemm`] on an explicit pool with an explicit stripe count
-/// (`threads` = parallelism degree; results are bit-exact for any
-/// value).
+/// [`ternary_mpgemm`] on an explicit pool with an explicit lane count
+/// (`threads` = max lanes claiming chunks; results are bit-exact for
+/// any value).
 pub fn ternary_mpgemm_pool(
     cfg: &PlatinumConfig,
     weights: &PackedTernary,
@@ -168,13 +177,14 @@ pub fn ternary_mpgemm_pool(
     let slot = entries * ncols;
 
     // hoisted working storage, reused across every round and n-block:
-    // the round's LUT arena (one slot per chunk), per-construct-task
-    // activation staging, per-query-stripe i32 round accumulators
+    // the round's LUT arena (one slot per chunk), plus per-lane
+    // construct staging and query accumulators, partitioned across the
+    // lanes by `for_each_chunk_arena` each phase — dynamic claims have
+    // no stable lane index, so the scratch travels with the lane's
+    // claim loop instead of being re-allocated per claim or per round
     let mut arena = vec![0i32; round.min(nchunks.max(1)) * slot];
-    let cspan_count = threads.min(round);
-    let mut staging = vec![0i32; cspan_count * c * ncols];
-    let stripes = split_even(m, threads);
-    let mut accs = vec![0i32; stripes.len().max(1) * ncols];
+    let mut staging = vec![0i32; threads * c * ncols];
+    let mut accs = vec![0i32; threads * ncols];
 
     let wdata = &weights.data[..];
     for n0 in (0..n).step_by(ncols) {
@@ -182,82 +192,65 @@ pub fn ternary_mpgemm_pool(
         for ch0 in (0..nchunks).step_by(round) {
             let gsz = round.min(nchunks - ch0);
 
-            // phase 1: build this round's LUTs, parallel across chunks
-            let cspans = split_even(gsz, threads);
+            // phase 1: build this round's LUTs — chunks claimed
+            // dynamically, each written into its disjoint arena slot
             {
-                let arena_parts =
-                    take_slices(&mut arena, cspans.iter().map(|s| (s.end - s.start) * slot));
-                let stage_parts =
-                    take_slices(&mut staging, cspans.iter().map(|_| c * ncols));
-                let tasks: Vec<Task> = cspans
-                    .iter()
-                    .zip(arena_parts.into_iter().zip(stage_parts))
-                    .map(|(span, (luts, stage))| {
-                        let span = span.clone();
-                        Box::new(move || {
-                            for (g, lut) in luts.chunks_mut(slot).enumerate() {
-                                let ch = ch0 + span.start + g;
-                                // gather the chunk's activation block
-                                // (c × nb, zero-padded)
-                                stage.fill(0);
-                                for i in 0..c {
-                                    let kk = ch * c + i;
-                                    if kk < k {
-                                        let src = &acts[kk * n + n0..kk * n + n0 + nb];
-                                        stage[i * ncols..i * ncols + nb].copy_from_slice(src);
-                                    }
-                                }
-                                construct_into(path, stage, ncols, lut);
+                let arena_sl = DisjointSlice::new(&mut arena);
+                pool.for_each_chunk_arena(threads, gsz, 0, &mut staging, &|stage, chunks| {
+                    let stage = &mut stage[..c * ncols];
+                    for g in chunks {
+                        let ch = ch0 + g;
+                        // gather the chunk's activation block
+                        // (c × nb, zero-padded)
+                        stage.fill(0);
+                        for i in 0..c {
+                            let kk = ch * c + i;
+                            if kk < k {
+                                let src = &acts[kk * n + n0..kk * n + n0 + nb];
+                                stage[i * ncols..i * ncols + nb].copy_from_slice(src);
                             }
-                        }) as Task
-                    })
-                    .collect();
-                pool.run(tasks);
+                        }
+                        // SAFETY: chunk g's arena slot is written only
+                        // by this claim; claims are disjoint ranges
+                        let lut = unsafe { arena_sl.range(g * slot..(g + 1) * slot) };
+                        construct_into(path, stage, ncols, lut);
+                    }
+                });
             }
 
-            // phase 2: query, parallel across row stripes; each row
-            // accumulates the round in i32 and spills to i64 once
+            // phase 2: query — output rows claimed dynamically; each
+            // row accumulates the round in i32 and spills to i64 once
             {
-                let out_parts =
-                    take_slices(&mut out, stripes.iter().map(|s| (s.end - s.start) * n));
-                let acc_parts = take_slices(&mut accs, stripes.iter().map(|_| ncols));
                 let arena_ref = &arena[..];
-                let tasks: Vec<Task> = stripes
-                    .iter()
-                    .zip(out_parts.into_iter().zip(acc_parts))
-                    .map(|(stripe, (ostripe, acc))| {
-                        let stripe = stripe.clone();
-                        Box::new(move || {
-                            for r in 0..stripe.end - stripe.start {
-                                let row = stripe.start + r;
-                                let wrow =
-                                    &wdata[row * nchunks + ch0..row * nchunks + ch0 + gsz];
-                                let acc = &mut acc[..nb];
-                                acc.fill(0);
-                                for (g, &byte) in wrow.iter().enumerate() {
-                                    let byte = byte as usize;
-                                    let idx = byte & ib_mask;
-                                    let base = g * slot + idx * ncols;
-                                    let lrow = &arena_ref[base..base + nb];
-                                    if byte >> ib == 1 {
-                                        for (a, &v) in acc.iter_mut().zip(lrow) {
-                                            *a -= v;
-                                        }
-                                    } else {
-                                        for (a, &v) in acc.iter_mut().zip(lrow) {
-                                            *a += v;
-                                        }
-                                    }
+                let out_sl = DisjointSlice::new(&mut out);
+                pool.for_each_chunk_arena(threads, m, 0, &mut accs, &|acc, rows| {
+                    let acc = &mut acc[..nb];
+                    for row in rows {
+                        let wrow = &wdata[row * nchunks + ch0..row * nchunks + ch0 + gsz];
+                        acc.fill(0);
+                        for (g, &byte) in wrow.iter().enumerate() {
+                            let byte = byte as usize;
+                            let idx = byte & ib_mask;
+                            let base = g * slot + idx * ncols;
+                            let lrow = &arena_ref[base..base + nb];
+                            if byte >> ib == 1 {
+                                for (a, &v) in acc.iter_mut().zip(lrow) {
+                                    *a -= v;
                                 }
-                                let orow = &mut ostripe[r * n + n0..r * n + n0 + nb];
-                                for (o, &a) in orow.iter_mut().zip(acc.iter()) {
-                                    *o += a as i64;
+                            } else {
+                                for (a, &v) in acc.iter_mut().zip(lrow) {
+                                    *a += v;
                                 }
                             }
-                        }) as Task
-                    })
-                    .collect();
-                pool.run(tasks);
+                        }
+                        // SAFETY: row's output segment is written only
+                        // by this claim; row ranges are disjoint
+                        let orow = unsafe { out_sl.range(row * n + n0..row * n + n0 + nb) };
+                        for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                            *o += a as i64;
+                        }
+                    }
+                });
             }
 
             // thread-count-independent op accounting (identical to the
@@ -289,7 +282,7 @@ pub fn bitserial_mpgemm(
     bitserial_mpgemm_pool(cfg, planes, plane_weights, acts, n, pool, pool.threads())
 }
 
-/// [`bitserial_mpgemm`] on an explicit pool with an explicit stripe
+/// [`bitserial_mpgemm`] on an explicit pool with an explicit lane
 /// count.
 pub fn bitserial_mpgemm_pool(
     cfg: &PlatinumConfig,
@@ -318,86 +311,67 @@ pub fn bitserial_mpgemm_pool(
     let slot = entries * ncols;
 
     let mut arena = vec![0i32; round.min(nchunks.max(1)) * slot];
-    let cspan_count = threads.min(round);
-    // §Perf: staging hoisted out of the chunk loop (was a fresh
-    // `c*ncols` allocation per chunk), matching the ternary path
-    let mut staging = vec![0i32; cspan_count * c * ncols];
-    let stripes = split_even(m, threads);
-    let mut accs = vec![0i32; stripes.len().max(1) * ncols];
+    let mut staging = vec![0i32; threads * c * ncols];
+    let mut accs = vec![0i32; threads * ncols];
 
     for n0 in (0..n).step_by(ncols) {
         let nb = ncols.min(n - n0);
         for ch0 in (0..nchunks).step_by(round) {
             let gsz = round.min(nchunks - ch0);
 
-            // phase 1: one binary LUT per chunk, shared by all planes
-            let cspans = split_even(gsz, threads);
+            // phase 1: one binary LUT per chunk, shared by all planes —
+            // chunks claimed dynamically into disjoint arena slots
             {
-                let arena_parts =
-                    take_slices(&mut arena, cspans.iter().map(|s| (s.end - s.start) * slot));
-                let stage_parts =
-                    take_slices(&mut staging, cspans.iter().map(|_| c * ncols));
-                let tasks: Vec<Task> = cspans
-                    .iter()
-                    .zip(arena_parts.into_iter().zip(stage_parts))
-                    .map(|(span, (luts, stage))| {
-                        let span = span.clone();
-                        Box::new(move || {
-                            for (g, lut) in luts.chunks_mut(slot).enumerate() {
-                                let ch = ch0 + span.start + g;
-                                stage.fill(0);
-                                for i in 0..c {
-                                    let kk = ch * c + i;
-                                    if kk < k {
-                                        let src = &acts[kk * n + n0..kk * n + n0 + nb];
-                                        stage[i * ncols..i * ncols + nb].copy_from_slice(src);
-                                    }
-                                }
-                                construct_into(path, stage, ncols, lut);
+                let arena_sl = DisjointSlice::new(&mut arena);
+                pool.for_each_chunk_arena(threads, gsz, 0, &mut staging, &|stage, chunks| {
+                    let stage = &mut stage[..c * ncols];
+                    for g in chunks {
+                        let ch = ch0 + g;
+                        stage.fill(0);
+                        for i in 0..c {
+                            let kk = ch * c + i;
+                            if kk < k {
+                                let src = &acts[kk * n + n0..kk * n + n0 + nb];
+                                stage[i * ncols..i * ncols + nb].copy_from_slice(src);
                             }
-                        }) as Task
-                    })
-                    .collect();
-                pool.run(tasks);
+                        }
+                        // SAFETY: chunk g's arena slot is written only
+                        // by this claim; claims are disjoint ranges
+                        let lut = unsafe { arena_sl.range(g * slot..(g + 1) * slot) };
+                        construct_into(path, stage, ncols, lut);
+                    }
+                });
             }
 
             // phase 2: per row, merge every plane's query of the shared
-            // LUT with its plane weight in an i32 round accumulator
+            // LUT with its plane weight in an i32 round accumulator —
+            // rows claimed dynamically
             {
-                let out_parts =
-                    take_slices(&mut out, stripes.iter().map(|s| (s.end - s.start) * n));
-                let acc_parts = take_slices(&mut accs, stripes.iter().map(|_| ncols));
                 let arena_ref = &arena[..];
-                let tasks: Vec<Task> = stripes
-                    .iter()
-                    .zip(out_parts.into_iter().zip(acc_parts))
-                    .map(|(stripe, (ostripe, acc))| {
-                        let stripe = stripe.clone();
-                        Box::new(move || {
-                            for r in 0..stripe.end - stripe.start {
-                                let row = stripe.start + r;
-                                let acc = &mut acc[..nb];
-                                acc.fill(0);
-                                for g in 0..gsz {
-                                    let ch = ch0 + g;
-                                    for (p, &pw) in planes.iter().zip(plane_weights) {
-                                        let idx = p.data[row * nchunks + ch] as usize;
-                                        let base = g * slot + idx * ncols;
-                                        let lrow = &arena_ref[base..base + nb];
-                                        for (a, &v) in acc.iter_mut().zip(lrow) {
-                                            *a += pw * v;
-                                        }
-                                    }
-                                }
-                                let orow = &mut ostripe[r * n + n0..r * n + n0 + nb];
-                                for (o, &a) in orow.iter_mut().zip(acc.iter()) {
-                                    *o += a as i64;
+                let out_sl = DisjointSlice::new(&mut out);
+                pool.for_each_chunk_arena(threads, m, 0, &mut accs, &|acc, rows| {
+                    let acc = &mut acc[..nb];
+                    for row in rows {
+                        acc.fill(0);
+                        for g in 0..gsz {
+                            let ch = ch0 + g;
+                            for (p, &pw) in planes.iter().zip(plane_weights) {
+                                let idx = p.data[row * nchunks + ch] as usize;
+                                let base = g * slot + idx * ncols;
+                                let lrow = &arena_ref[base..base + nb];
+                                for (a, &v) in acc.iter_mut().zip(lrow) {
+                                    *a += pw * v;
                                 }
                             }
-                        }) as Task
-                    })
-                    .collect();
-                pool.run(tasks);
+                        }
+                        // SAFETY: row's output segment is written only
+                        // by this claim; row ranges are disjoint
+                        let orow = unsafe { out_sl.range(row * n + n0..row * n + n0 + nb) };
+                        for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                            *o += a as i64;
+                        }
+                    }
+                });
             }
 
             let nplanes = planes.len();

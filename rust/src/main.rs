@@ -1,3 +1,7 @@
+// Same clippy posture as lib.rs (CI gates on `clippy -- -D warnings`):
+// index-form loops and wide argument lists are deliberate style here.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 //! `platinum` CLI — the leader entrypoint of the L3 coordinator.
 //!
 //! Subcommands:

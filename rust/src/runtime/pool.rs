@@ -1,42 +1,67 @@
-//! Persistent worker pool for the functional hot paths (S14).
+//! Persistent work-stealing worker pool for the functional hot paths
+//! (S14).
 //!
 //! The golden datapath ([`crate::lut`]) and the real T-MAC kernel
 //! ([`crate::baselines::tmac::TMacCpu`]) are the repo's latency ground
 //! truth, and decode-shaped GEMMs are far too small to amortize a
 //! `std::thread::scope` spawn per call (tens of microseconds of spawn
 //! and join for a kernel that runs in hundreds).  This module provides
-//! the alternative: a pool of long-lived workers fed through a
-//! mutex/condvar job queue, with a scoped [`Pool::run`] that blocks
-//! until every submitted task finishes.
+//! the alternative: a pool of long-lived workers, with a scoped
+//! [`Pool::run`] that blocks until every submitted task finishes and a
+//! [`Pool::for_each_chunk`] that schedules loop iterations dynamically.
+//!
+//! **Scheduler (PR 4, replacing the single shared queue):** each lane
+//! (worker, plus lane 0 for external submitters) owns a mutex-protected
+//! deque.  [`Pool::run`] distributes a batch as contiguous blocks, one
+//! lock acquisition per lane, starting at the submitter's own lane, so
+//! each deque is bounded to ⌈tasks/lanes⌉ entries per submission;
+//! owners pop their own **tail**
+//! (LIFO — the cache-warm end), and a lane that runs dry steals from
+//! the **head** (FIFO — the oldest work) of victims visited in a
+//! randomized rotation.  This removes the global-queue convoy the seed
+//! implementation had: decode-shaped GEMMs submit many sub-microsecond
+//! tasks, and under one shared mutex every pop serialized on every
+//! push.  Idle lanes park on a single condvar; submitters notify under
+//! the same mutex, so wakeups cannot be lost.
 //!
 //! **Why not rayon:** the build is fully offline (see `Cargo.toml`:
 //! every dependency is vendored under `rust/vendor/`), so pulling in
 //! rayon and its crossbeam dependency tree is not an option.  The hot
-//! paths need exactly one primitive — fork-join over borrowed slices —
-//! and ~200 lines of std suffice; NUMA-aware striping and work stealing
-//! are ROADMAP follow-ups if profiles ever demand them.
+//! paths need fork-join over borrowed slices plus a dynamic parallel
+//! loop, and ~300 lines of std suffice; NUMA-aware lane striping is the
+//! remaining ROADMAP follow-up.
 //!
 //! Soundness of the scoped API: `run` transmutes each boxed task to
-//! `'static` to push it through the `'static` queue, then blocks on a
+//! `'static` to push it through the `'static` deques, then blocks on a
 //! completion latch before returning.  No borrow captured by a task can
 //! therefore outlive the call, which is the same contract
 //! `std::thread::scope` enforces.  Tasks must not block waiting for
-//! other pool work (the submitting thread helps drain the queue, so
-//! plain nested `run` calls complete, but hand-rolled cross-task
-//! waiting can deadlock).
+//! other pool work (the submitting thread helps drain the deques, and
+//! nested `run` calls from inside a task complete because every lane —
+//! including the nested submitter — can claim any queued job; but
+//! hand-rolled cross-task waiting can deadlock).
 //!
-//! Panics inside a task are caught, the latch still releases, and the
-//! submitting `run` call re-panics — a poisoned worker never wedges the
-//! pool.
+//! Panics inside a task are caught — even when the task was claimed by
+//! a stealing lane — the latch still releases, and the submitting `run`
+//! call re-panics: a poisoned worker never wedges the pool.
+//!
+//! **Bit-exactness invariant** every hot path relies on: the scheduler
+//! decides only *which lane* executes a task or claims a chunk, never
+//! the order of arithmetic *within* a task or chunk.  Hot paths keep
+//! per-output accumulation order fixed (rounds are sequential, chunk
+//! order within a round is fixed per row), so results are bit-identical
+//! at every thread count.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
+use std::marker::PhantomData;
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
-/// A task as it lives in the queue ('static; scoped tasks are lifetime-
+/// A task as it lives in a deque ('static; scoped tasks are lifetime-
 /// erased by [`Pool::run`], which guarantees completion before return).
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -44,46 +69,121 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// stack frame for the duration of the [`Pool::run`] call.
 pub type Task<'scope> = Box<dyn FnOnce() + Send + 'scope>;
 
+/// Per-submission deque capacity hint: block distribution bounds a
+/// single batch's share of one deque to ⌈tasks/lanes⌉, and hot-path
+/// batches are at most a few dozen tasks, so this avoids regrowth
+/// (larger batches regrow at most once per submission — `extend` from
+/// an exact-size iterator reserves up front).
+const DEQUE_CAPACITY: usize = 64;
+
+/// One lane's work deque.  The owning lane pushes/pops at the back
+/// (LIFO); thieves pop at the front (FIFO), so stolen work is the
+/// oldest — the standard work-stealing discipline.  Cache-line aligned
+/// so neighbouring lanes' deque mutexes never share a line (false
+/// sharing would partially recreate the convoy the per-lane split
+/// removes).
+#[repr(align(64))]
+struct Slot {
+    deque: Mutex<VecDeque<Job>>,
+}
+
 struct Shared {
-    queue: Mutex<VecDeque<Job>>,
+    /// One slot per lane: lane 0 belongs to external submitters, lanes
+    /// `1..threads` to the OS workers.
+    slots: Vec<Slot>,
+    /// Queued-but-unclaimed jobs across all slots (a fast "is there
+    /// anything to do" signal for parking lanes).
+    pending: AtomicUsize,
+    /// Parking lot: idle workers wait here; submitters notify while
+    /// holding `sleep`, which makes the sleep/notify race lossless.
+    sleep: Mutex<()>,
     work: Condvar,
     shutdown: AtomicBool,
 }
 
-/// Completion latch for one `run` batch: counts tasks down to zero and
-/// records whether any of them panicked.
+thread_local! {
+    /// (pool identity, lane) of the current thread when it is a pool
+    /// worker — lets nested `run`/`for_each_chunk` calls from inside a
+    /// task submit to their own lane instead of contending on lane 0.
+    static WORKER_LANE: Cell<(usize, usize)> = const { Cell::new((0, 0)) };
+
+    /// Per-thread xorshift state for the randomized victim rotation —
+    /// thread-local so the steal path never writes a shared cache line
+    /// (a global RMW per claim attempt would partially recreate the
+    /// single-queue convoy in steal-heavy tiny-task regimes).
+    static STEAL_RNG: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Next per-thread pseudo-random value: xorshift over thread-local
+/// state, seeded once per thread from a global counter (the only
+/// shared write, once per thread lifetime).
+fn steal_rand() -> usize {
+    static SEED: AtomicUsize = AtomicUsize::new(0x9e37_79b9);
+    STEAL_RNG.with(|c| {
+        let mut s = c.get();
+        if s == 0 {
+            s = SEED.fetch_add(0x9e37_79b9, Ordering::Relaxed) | 1;
+        }
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        c.set(s);
+        s
+    })
+}
+
+/// Completion latch for one `run` batch: a lock-free atomic countdown
+/// — per-task completions and the submitter's between-claims polls
+/// touch only atomics, so thousands of sub-microsecond tasks don't
+/// convoy on a latch mutex.  The mutex/condvar pair exists solely for
+/// the final wakeup handshake: the last completer notifies while
+/// holding the mutex, which serializes with the waiter's
+/// check-then-wait and makes the wakeup lossless.
 struct Latch {
-    state: Mutex<(usize, bool)>,
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+    sleep: Mutex<()>,
     done: Condvar,
 }
 
 impl Latch {
     fn new(count: usize) -> Latch {
-        Latch { state: Mutex::new((count, false)), done: Condvar::new() }
+        Latch {
+            remaining: AtomicUsize::new(count),
+            panicked: AtomicBool::new(false),
+            sleep: Mutex::new(()),
+            done: Condvar::new(),
+        }
     }
 
     fn complete(&self, ok: bool) {
-        let mut st = self.state.lock().unwrap();
-        st.0 -= 1;
         if !ok {
-            st.1 = true;
+            self.panicked.store(true, Ordering::Release);
         }
-        if st.0 == 0 {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // last task out: notify under the mutex (see type docs)
+            let _guard = self.sleep.lock().unwrap();
             self.done.notify_all();
         }
     }
 
     /// Block until all tasks completed; returns true if any panicked.
     fn wait(&self) -> bool {
-        let mut st = self.state.lock().unwrap();
-        while st.0 > 0 {
-            st = self.done.wait(st).unwrap();
+        let mut guard = self.sleep.lock().unwrap();
+        while self.remaining.load(Ordering::Acquire) > 0 {
+            guard = self.done.wait(guard).unwrap();
         }
-        st.1
+        self.panicked.load(Ordering::Acquire)
+    }
+
+    /// Lock-free completion probe (the helping submitter polls this
+    /// so it stops claiming *other* batches' work once its own is done).
+    fn is_done(&self) -> bool {
+        self.remaining.load(Ordering::Acquire) == 0
     }
 }
 
-/// Persistent fork-join worker pool.
+/// Persistent fork-join worker pool with per-lane work stealing.
 ///
 /// A pool of `threads` has `threads - 1` OS workers: the thread calling
 /// [`Pool::run`] participates in executing the batch, so total
@@ -99,16 +199,20 @@ impl Pool {
     pub fn new(threads: usize) -> Pool {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            slots: (0..threads)
+                .map(|_| Slot { deque: Mutex::new(VecDeque::with_capacity(DEQUE_CAPACITY)) })
+                .collect(),
+            pending: AtomicUsize::new(0),
+            sleep: Mutex::new(()),
             work: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
         let workers = (1..threads)
-            .map(|i| {
+            .map(|lane| {
                 let shared = Arc::clone(&shared);
                 thread::Builder::new()
-                    .name(format!("platinum-pool-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .name(format!("platinum-pool-{lane}"))
+                    .spawn(move || worker_loop(&shared, lane))
                     .expect("spawning pool worker")
             })
             .collect();
@@ -120,10 +224,23 @@ impl Pool {
         self.threads
     }
 
+    /// The lane whose deque this thread should submit to / pop from
+    /// first: its own lane when it is a worker of *this* pool, lane 0
+    /// otherwise (external callers share lane 0; its deque mutex makes
+    /// concurrent external submitters safe).
+    fn home_lane(&self) -> usize {
+        let (pool_id, lane) = WORKER_LANE.with(Cell::get);
+        if pool_id == Arc::as_ptr(&self.shared) as *const () as usize && lane < self.threads {
+            lane
+        } else {
+            0
+        }
+    }
+
     /// Execute every task and return once all have finished.
     ///
     /// Tasks may borrow from the caller's frame (see module docs for the
-    /// soundness argument).  The caller's thread helps drain the queue,
+    /// soundness argument).  The caller's thread helps drain the deques,
     /// so a 1-thread pool degenerates to inline sequential execution.
     /// Re-panics on the calling thread if any task panicked.
     pub fn run<'scope>(&self, tasks: Vec<Task<'scope>>) {
@@ -143,29 +260,61 @@ impl Pool {
             }
             return;
         }
-        let latch = Arc::new(Latch::new(tasks.len()));
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            for task in tasks {
+        let count = tasks.len();
+        let latch = Arc::new(Latch::new(count));
+        let home = self.home_lane();
+        let lanes = self.shared.slots.len();
+        // wrap every task BEFORE touching any lock (boxing outside the
+        // critical sections), then distribute contiguous blocks of
+        // ⌈count/lanes⌉ with ONE lock acquisition per lane, starting at
+        // the submitter's own lane — a 2048-task batch takes `lanes`
+        // locks, not 2048
+        let jobs: Vec<Job> = tasks
+            .into_iter()
+            .map(|task| {
                 // SAFETY: this call blocks on `latch` until every task
-                // has run to completion, so no borrow captured by `task`
-                // outlives the `'scope` it was created in.
-                let task: Job = unsafe {
-                    std::mem::transmute::<Task<'scope>, Task<'static>>(task)
-                };
+                // has run to completion, so no borrow captured by
+                // `task` outlives the `'scope` it was created in.
+                let task: Job =
+                    unsafe { std::mem::transmute::<Task<'scope>, Task<'static>>(task) };
                 let latch = Arc::clone(&latch);
-                q.push_back(Box::new(move || {
+                Box::new(move || {
                     let ok = catch_unwind(AssertUnwindSafe(task)).is_ok();
                     latch.complete(ok);
-                }));
-            }
-        }
-        self.shared.work.notify_all();
-        // help: the submitting thread drains jobs (possibly including
-        // other batches') until the queue is empty, then waits
+                }) as Job
+            })
+            .collect();
+        // count up BEFORE the first push: `pending` must never read
+        // lower than the number of queued jobs, or a racing claimant's
+        // decrement would wrap it (transiently over-counting is fine —
+        // an early-woken worker just rescans and re-parks)
+        self.shared.pending.fetch_add(count, Ordering::Release);
+        let per = count.div_ceil(lanes);
+        let mut jobs = jobs.into_iter();
+        let mut lane = home;
         loop {
-            let job = self.shared.queue.lock().unwrap().pop_front();
-            match job {
+            let mut q = self.shared.slots[lane].deque.lock().unwrap();
+            let before = q.len();
+            q.extend(jobs.by_ref().take(per));
+            let pushed = q.len() - before;
+            drop(q);
+            if pushed < per {
+                break; // iterator exhausted
+            }
+            lane = (lane + 1) % lanes;
+        }
+        {
+            // notify under the sleep mutex: a worker between its "no
+            // work" scan and its wait() holds this mutex, so it either
+            // sees `pending > 0` or receives this notification
+            let _guard = self.shared.sleep.lock().unwrap();
+            self.shared.work.notify_all();
+        }
+        // help: the submitting thread claims jobs (its own lane's tail
+        // first, then steals — possibly other batches') until nothing
+        // is claimable or its own batch completed, then waits
+        while !latch.is_done() {
+            match find_job(&self.shared, home) {
                 Some(job) => job(),
                 None => break,
             }
@@ -174,37 +323,154 @@ impl Pool {
             panic!("platinum worker pool: a task panicked (see stderr)");
         }
     }
+
+    /// Chunked dynamic scheduling: run `body` over every index in
+    /// `0..len`, claimed in contiguous chunks of `grain` indices from a
+    /// single atomic cursor by up to `threads` lanes.
+    ///
+    /// `grain == 0` selects the self-tuning grain ([`auto_grain`]).
+    /// Unlike a static partition (`split_even` stripes), lanes that
+    /// finish early keep claiming chunks, so ragged per-index costs,
+    /// `threads > len`, and stragglers load-balance instead of idling.
+    ///
+    /// Exactness contract: every index is processed exactly once, and
+    /// indices within one chunk are visited in ascending order by one
+    /// lane — so a `body` whose per-index work is independent of *which*
+    /// lane runs it (true for every hot path: per-row accumulation
+    /// order is internal to the row) is bit-exact at any thread count.
+    ///
+    /// Re-panics on the calling thread if `body` panicked on any lane.
+    pub fn for_each_chunk<F>(&self, threads: usize, len: usize, grain: usize, body: &F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        let mut unit: [(); 0] = [];
+        self.for_each_chunk_arena(threads, len, grain, &mut unit, &|_s, r| body(r));
+    }
+
+    /// [`Pool::for_each_chunk`] with per-lane scratch drawn from a
+    /// caller-hoisted arena: `arena` is split evenly across the
+    /// participating lanes (via [`take_slices`]) and `body` receives
+    /// its lane's region mutably with every chunk it claims — so a hot
+    /// path hoists its staging/accumulator buffers **once per call**
+    /// (as with static striping) even though dynamic claims have no
+    /// stable lane identity to pre-partition scratch by.  Size `arena`
+    /// for `threads` lanes (`threads × width`); a lane's region is then
+    /// at least `width` long (longer when fewer lanes participate), and
+    /// `body` slices off the prefix it needs.  On the sequential path
+    /// `body` sees the whole arena.
+    pub fn for_each_chunk_arena<T, F>(
+        &self,
+        threads: usize,
+        len: usize,
+        grain: usize,
+        arena: &mut [T],
+        body: &F,
+    ) where
+        T: Send,
+        F: Fn(&mut [T], Range<usize>) + Sync,
+    {
+        if len == 0 {
+            return;
+        }
+        let grain = if grain == 0 { auto_grain(len, threads) } else { grain };
+        let lanes = threads.max(1).min(len.div_ceil(grain));
+        if lanes <= 1 || self.workers.is_empty() {
+            let mut start = 0;
+            while start < len {
+                let end = (start + grain).min(len);
+                body(arena, start..end);
+                start = end;
+            }
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        let per = arena.len() / lanes;
+        let parts = take_slices(arena, std::iter::repeat(per).take(lanes));
+        let tasks: Vec<Task> = parts
+            .into_iter()
+            .map(|part| {
+                let cursor = &cursor;
+                Box::new(move || loop {
+                    let start = cursor.fetch_add(grain, Ordering::Relaxed);
+                    if start >= len {
+                        break;
+                    }
+                    body(part, start..(start + grain).min(len));
+                }) as Task
+            })
+            .collect();
+        self.run(tasks);
+    }
 }
 
 impl Drop for Pool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.work.notify_all();
+        {
+            let _guard = self.shared.sleep.lock().unwrap();
+            self.shared.work.notify_all();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(shared: &Shared) {
-    loop {
-        let job = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if let Some(job) = q.pop_front() {
-                    break Some(job);
-                }
-                if shared.shutdown.load(Ordering::Acquire) {
-                    break None;
-                }
-                q = shared.work.wait(q).unwrap();
+/// Claim one job: `home`'s tail first (LIFO, cache-warm), then victims'
+/// heads (FIFO) in a randomized rotation.  Returns `None` only after a
+/// full sweep found every deque empty at the moment it was inspected.
+fn find_job(shared: &Shared, home: usize) -> Option<Job> {
+    if let Some(job) = shared.slots[home].deque.lock().unwrap().pop_back() {
+        shared.pending.fetch_sub(1, Ordering::Release);
+        return Some(job);
+    }
+    let lanes = shared.slots.len();
+    if lanes > 1 && shared.pending.load(Ordering::Acquire) > 0 {
+        // per-thread random rotation start: decorrelates victim choice
+        // across lanes so thieves don't convoy on one deque
+        let start = steal_rand() % lanes;
+        for off in 0..lanes {
+            let victim = (start + off) % lanes;
+            if victim == home {
+                continue;
             }
-        };
-        match job {
-            Some(job) => job(),
-            None => return,
+            if let Some(job) = shared.slots[victim].deque.lock().unwrap().pop_front() {
+                shared.pending.fetch_sub(1, Ordering::Release);
+                return Some(job);
+            }
         }
     }
+    None
+}
+
+fn worker_loop(shared: &Shared, lane: usize) {
+    WORKER_LANE.with(|c| c.set((shared as *const Shared as *const () as usize, lane)));
+    loop {
+        if let Some(job) = find_job(shared, lane) {
+            job();
+            continue;
+        }
+        // park until there is (possibly) work or the pool shuts down
+        let mut guard = shared.sleep.lock().unwrap();
+        loop {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            if shared.pending.load(Ordering::Acquire) > 0 {
+                break;
+            }
+            guard = shared.work.wait(guard).unwrap();
+        }
+    }
+}
+
+/// Self-tuning chunk grain for [`Pool::for_each_chunk`]: targets ~8
+/// claims per lane — enough slack for dynamic load balancing across
+/// ragged chunk costs, few enough that cursor traffic stays negligible —
+/// and never below one index per claim.
+pub fn auto_grain(len: usize, threads: usize) -> usize {
+    (len / (threads.max(1) * 8)).max(1)
 }
 
 /// Default concurrency: `PLATINUM_THREADS` env override, else the
@@ -226,10 +492,61 @@ pub fn global() -> &'static Pool {
     GLOBAL.get_or_init(|| Pool::new(default_threads()))
 }
 
+/// Shared handle to a mutable slice whose concurrent users write
+/// **disjoint** ranges — the aliasing escape hatch
+/// [`Pool::for_each_chunk`] bodies use to scatter into one output
+/// buffer (a dynamic chunk claim can't be pre-partitioned the way
+/// [`take_slices`] partitions for static stripes).
+///
+/// Safety contract: callers must guarantee that ranges passed to
+/// [`DisjointSlice::range`] by concurrently running tasks never
+/// overlap.  `for_each_chunk` hands out disjoint index ranges, so
+/// mapping each index to a fixed, non-overlapping output range (e.g.
+/// row `r` → `out[r*n..(r+1)*n]`) satisfies the contract by
+/// construction.
+pub struct DisjointSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: a DisjointSlice only hands out &mut to disjoint ranges (the
+// caller's contract), so sending/sharing it across the pool's tasks is
+// no more dangerous than split_at_mut — provided T itself is Send.
+unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
+
+impl<'a, T> DisjointSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        DisjointSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _borrow: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of `range`.
+    ///
+    /// # Safety
+    /// No concurrently executing task may hold a range overlapping this
+    /// one (see the type-level contract).  `range` must lie within the
+    /// slice.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range(&self, range: Range<usize>) -> &mut [T] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+    }
+}
+
 /// Split `buf` into consecutive mutable slices of the given widths —
-/// the arena-partitioning companion to [`split_even`], used to hand
-/// each task its disjoint output/scratch region.  Trailing capacity
-/// beyond the widths' sum stays unborrowed.
+/// the arena partitioner [`Pool::for_each_chunk_arena`] uses to hand
+/// each lane its disjoint scratch region (and the general tool for any
+/// static partition).  Trailing capacity beyond the widths' sum stays
+/// unborrowed.
 pub fn take_slices<'a, T>(
     mut buf: &'a mut [T],
     widths: impl Iterator<Item = usize>,
@@ -245,7 +562,9 @@ pub fn take_slices<'a, T>(
 
 /// Split `len` items into at most `parts` contiguous, near-equal,
 /// non-empty ranges (fewer than `parts` when `len < parts`) — the
-/// row-stripe decomposition every parallel hot path uses.
+/// static decomposition used where shard boundaries are part of the
+/// result's meaning (`engine::Sharded` row partitioning); hot-path
+/// loops use [`Pool::for_each_chunk`] instead.
 pub fn split_even(len: usize, parts: usize) -> Vec<Range<usize>> {
     let parts = parts.max(1).min(len);
     let mut out = Vec::with_capacity(parts);
@@ -363,6 +682,120 @@ mod tests {
             .collect();
         pool.run(tasks);
         assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn deques_drain_after_every_batch() {
+        // nothing may linger in any lane's deque once run() returns
+        let pool = Pool::new(4);
+        for _ in 0..20 {
+            let tasks: Vec<Task> = (0..13).map(|_| Box::new(|| {}) as Task).collect();
+            pool.run(tasks);
+        }
+        assert_eq!(pool.shared.pending.load(Ordering::Acquire), 0);
+        for slot in &pool.shared.slots {
+            assert!(slot.deque.lock().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_visits_every_index_once() {
+        let pool = Pool::new(4);
+        for (len, grain, threads) in
+            [(100, 7, 4), (5, 1, 8), (64, 64, 4), (64, 200, 4), (1, 1, 1), (97, 0, 3)]
+        {
+            let hits: Vec<AtomicUsize> = (0..len).map(|_| AtomicUsize::new(0)).collect();
+            pool.for_each_chunk(threads, len, grain, &|r: Range<usize>| {
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} len={len} grain={grain}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_zero_len_is_a_noop() {
+        let pool = Pool::new(2);
+        let called = AtomicUsize::new(0);
+        pool.for_each_chunk(4, 0, 3, &|_r| {
+            called.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(called.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn for_each_chunk_disjoint_writes_through_shared_slice() {
+        let pool = Pool::new(4);
+        let mut out = vec![0usize; 257];
+        {
+            let sl = DisjointSlice::new(&mut out);
+            assert_eq!(sl.len(), 257);
+            assert!(!sl.is_empty());
+            pool.for_each_chunk(8, 257, 0, &|r: Range<usize>| {
+                for i in r {
+                    // SAFETY: chunk ranges are disjoint; each index is
+                    // written by exactly one task
+                    unsafe { sl.range(i..i + 1) }[0] = i * 3;
+                }
+            });
+        }
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 3);
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_arena_hands_each_lane_disjoint_scratch() {
+        let pool = Pool::new(4);
+        let sum = AtomicUsize::new(0);
+        // arena sized for 4 lanes × width 8; every lane tallies its
+        // claim count into its own region — no allocation per claim
+        let mut arena = vec![0usize; 4 * 8];
+        pool.for_each_chunk_arena(4, 1000, 1, &mut arena, &|scratch, r| {
+            let scratch = &mut scratch[..8]; // prefix the body needs
+            scratch[0] += 1;
+            sum.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 1000);
+        // all 1000 grain-1 claims are accounted for, spread over ≤4 lanes
+        let claims: usize = arena.chunks(8).map(|c| c[0]).sum();
+        assert_eq!(claims, 1000);
+        assert!(arena.chunks(8).filter(|c| c[0] > 0).count() <= 4);
+    }
+
+    #[test]
+    fn for_each_chunk_arena_sequential_path_sees_whole_arena() {
+        let pool = Pool::new(1); // no workers: inline execution
+        let mut arena = vec![0usize; 6];
+        pool.for_each_chunk_arena(4, 10, 4, &mut arena, &|scratch, r| {
+            assert_eq!(scratch.len(), 6);
+            scratch[0] += r.len();
+        });
+        assert_eq!(arena[0], 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "a task panicked")]
+    fn for_each_chunk_propagates_body_panic() {
+        let pool = Pool::new(3);
+        pool.for_each_chunk(3, 100, 1, &|r: Range<usize>| {
+            if r.start == 50 {
+                panic!("chunk boom");
+            }
+        });
+    }
+
+    #[test]
+    fn auto_grain_is_positive_and_scales() {
+        assert_eq!(auto_grain(0, 4), 1);
+        assert_eq!(auto_grain(1, 8), 1);
+        assert_eq!(auto_grain(640, 8), 10);
+        assert!(auto_grain(1_000_000, 1) >= 1);
+        // threads = 0 clamps, never divides by zero
+        assert!(auto_grain(100, 0) >= 1);
     }
 
     #[test]

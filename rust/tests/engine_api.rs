@@ -314,6 +314,44 @@ fn sharded_registry_roundtrip_and_json_golden() {
 }
 
 #[test]
+fn sharded_platinum_cpu_null_energy_json_golden() {
+    // golden-JSON pin for the measured-backend + sharding composition:
+    // a sharded report whose inner backend is the measured platinum-cpu
+    // kernel serializes energy_j AND power_w as JSON null (never 0.0),
+    // with the scalar key order unchanged.  Fixed-field golden first —
+    // latency of a live run is machine-dependent, serialization is not.
+    let golden = Report {
+        backend: "sharded:2:platinum-cpu".into(),
+        workload: "gemm-64x40x8".into(),
+        latency_s: 0.5,
+        energy_j: None,
+        throughput_gops: 2.0,
+        ops: 20480,
+        ..Report::default()
+    };
+    assert_eq!(
+        golden.to_json().to_string(),
+        "{\"backend\":\"sharded:2:platinum-cpu\",\"energy_j\":null,\"latency_s\":0.5,\
+         \"ops\":20480,\"power_w\":null,\"throughput_gops\":2,\"workload\":\"gemm-64x40x8\"}"
+    );
+    // and the live composition produces exactly that shape: measured
+    // latency, null energy, same workload label and op count
+    let reg = Registry::with_defaults();
+    let be = reg.build("sharded:2:platinum-cpu").unwrap();
+    let g = Gemm::new(64, 40, 8);
+    let r = be.run(&Workload::Kernel(g));
+    assert_eq!(r.backend, "sharded:2:platinum-cpu");
+    assert_eq!(r.workload, "gemm-64x40x8");
+    assert_eq!(r.ops, g.naive_adds());
+    assert_eq!(r.energy_j, None);
+    let j = Json::parse(&r.to_json().to_string()).unwrap();
+    assert_eq!(j.get("energy_j"), Some(&Json::Null));
+    assert_eq!(j.get("power_w"), Some(&Json::Null));
+    assert!(j.get("latency_s").and_then(Json::as_f64).unwrap() > 0.0);
+    assert_eq!(j.get("ops").and_then(Json::as_usize), Some(20480));
+}
+
+#[test]
 fn sharded_preserves_energy_null_propagation() {
     // a measured inner backend (energy unmodelled) must surface as
     // null through the composite, never a fabricated 0.0

@@ -1,0 +1,373 @@
+//! Stress + property suite for the work-stealing runtime scheduler
+//! (`runtime::pool`, PR 4).
+//!
+//! The scheduler is the substrate under every measured hot path
+//! (`platinum-cpu`, `tmac-cpu`, `serve::GoldenExecutor`), so this suite
+//! pins the two contracts those paths rely on:
+//!
+//! 1. **Liveness/robustness** — thousands of sub-microsecond tasks,
+//!    nested `run()` submitted from inside a worker's task, panic
+//!    propagation while other lanes are mid-steal, `threads > items`,
+//!    and zero-item batches all complete without wedging the pool.
+//! 2. **Bit-exactness** — seeded-RNG randomized GEMM shapes run through
+//!    `ternary_mpgemm` / `bitserial_mpgemm` / `TMacCpu::gemm` on pools
+//!    of every thread count the CI matrix exercises via
+//!    `PLATINUM_THREADS` ∈ {1, 3, 8} (explicit `Pool::new(t)` instances
+//!    here, because the env var is read once per process) must equal
+//!    the single-threaded result bit for bit.
+
+use platinum::baselines::tmac::TMacCpu;
+use platinum::config::PlatinumConfig;
+use platinum::encoding::{pack_binary, pack_ternary, ternary_planes};
+use platinum::lut::{bitserial_mpgemm_pool, naive_mpgemm, ternary_mpgemm_pool};
+use platinum::runtime::pool::{auto_grain, Pool, Task};
+use platinum::util::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The thread counts the bit-exactness matrix pins (mirrors the CI
+/// bench-smoke `PLATINUM_THREADS` axis).
+const THREAD_MATRIX: [usize; 3] = [1, 3, 8];
+
+// ---------------------------------------------------------------------------
+// scheduler stress: liveness and robustness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn thousands_of_sub_microsecond_tasks() {
+    // decode-shaped GEMMs submit huge numbers of tiny tasks; the
+    // steal path must keep every lane busy without losing or
+    // double-running any of them
+    let pool = Pool::new(8);
+    for round in 0..10 {
+        let count = 2_000 + round * 100;
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Task> = (0..count)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), count, "round {round}");
+    }
+}
+
+#[test]
+fn nested_run_from_worker_tasks() {
+    // a task submitting its own batch must complete even while its
+    // parent batch is still in flight on other lanes (the nested
+    // submitter claims from its own lane's deque and steals)
+    let pool = Pool::new(4);
+    let inner_total = AtomicUsize::new(0);
+    let outer: Vec<Task> = (0..16)
+        .map(|_| {
+            let inner_total = &inner_total;
+            let pool_ref = &pool;
+            Box::new(move || {
+                let tasks: Vec<Task> = (0..8)
+                    .map(|_| {
+                        Box::new(|| {
+                            inner_total.fetch_add(1, Ordering::Relaxed);
+                        }) as Task
+                    })
+                    .collect();
+                pool_ref.run(tasks);
+            }) as Task
+        })
+        .collect();
+    pool.run(outer);
+    assert_eq!(inner_total.load(Ordering::Relaxed), 16 * 8);
+}
+
+#[test]
+fn doubly_nested_run_completes() {
+    let pool = Pool::new(3);
+    let hits = AtomicUsize::new(0);
+    let hits_ref = &hits;
+    let pool_ref = &pool;
+    // a leaf batch of 4 counting tasks, submitted from one mid task
+    let leaf_batch = move || {
+        let leaf: Vec<Task> = (0..4)
+            .map(|_| {
+                Box::new(move || {
+                    hits_ref.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        pool_ref.run(leaf);
+    };
+    let outer: Vec<Task> = (0..4)
+        .map(|_| {
+            Box::new(move || {
+                let mid: Vec<Task> = (0..4).map(|_| Box::new(leaf_batch) as Task).collect();
+                pool_ref.run(mid);
+            }) as Task
+        })
+        .collect();
+    pool.run(outer);
+    assert_eq!(hits.load(Ordering::Relaxed), 4 * 4 * 4);
+}
+
+#[test]
+fn panic_mid_batch_propagates_and_pool_survives() {
+    // one task panics while the rest of the batch is being stolen and
+    // executed across lanes: the submitter must re-panic, every other
+    // task must still run exactly once, and the pool must stay usable
+    let pool = Pool::new(4);
+    for round in 0..5 {
+        let survivors = AtomicUsize::new(0);
+        let total = 200;
+        let bomb = 97 + round; // vary where in the batch the panic sits
+        let tasks: Vec<Task> = (0..total)
+            .map(|i| {
+                let survivors = &survivors;
+                Box::new(move || {
+                    if i == bomb {
+                        panic!("mid-steal boom {i}");
+                    }
+                    survivors.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        let err = catch_unwind(AssertUnwindSafe(|| pool.run(tasks)));
+        assert!(err.is_err(), "round {round}: panic must propagate to the submitter");
+        assert_eq!(
+            survivors.load(Ordering::Relaxed),
+            total - 1,
+            "round {round}: every non-panicking task still runs"
+        );
+    }
+    // the pool is not wedged: a clean batch afterwards completes
+    let after = AtomicUsize::new(0);
+    let tasks: Vec<Task> = (0..64)
+        .map(|_| {
+            Box::new(|| {
+                after.fetch_add(1, Ordering::Relaxed);
+            }) as Task
+        })
+        .collect();
+    pool.run(tasks);
+    assert_eq!(after.load(Ordering::Relaxed), 64);
+}
+
+#[test]
+fn threads_exceed_items_and_zero_items() {
+    let pool = Pool::new(8);
+    // more lanes than tasks: nothing idles forever, all complete
+    let counter = AtomicUsize::new(0);
+    let tasks: Vec<Task> = (0..3)
+        .map(|_| {
+            Box::new(|| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            }) as Task
+        })
+        .collect();
+    pool.run(tasks);
+    assert_eq!(counter.load(Ordering::Relaxed), 3);
+    // zero items: a no-op, not a hang
+    pool.run(Vec::new());
+    // dynamic scheduling with zero items and with items < threads
+    let hits = AtomicUsize::new(0);
+    pool.for_each_chunk(8, 0, 0, &|_r| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 0);
+    let seen = AtomicUsize::new(0);
+    pool.for_each_chunk(8, 2, 0, &|r| {
+        seen.fetch_add(r.len(), Ordering::Relaxed);
+    });
+    assert_eq!(seen.load(Ordering::Relaxed), 2);
+}
+
+#[test]
+fn for_each_chunk_exactness_under_contention() {
+    // every index claimed exactly once even when many lanes hammer the
+    // cursor with grain 1 (maximum claim contention)
+    let pool = Pool::new(8);
+    let len = 10_007; // prime: ragged against every grain
+    for grain in [0usize, 1, 3, 64] {
+        let hits: Vec<AtomicUsize> = (0..len).map(|_| AtomicUsize::new(0)).collect();
+        pool.for_each_chunk(8, len, grain, &|r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(
+            hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+            "grain {grain}: some index missed or double-claimed"
+        );
+    }
+}
+
+#[test]
+fn auto_grain_bounds() {
+    for (len, threads) in [(0, 1), (1, 8), (7, 8), (512, 8), (1 << 20, 4)] {
+        let g = auto_grain(len, threads);
+        assert!(g >= 1, "grain must be positive (len={len} threads={threads})");
+        if len > 0 {
+            // never so coarse that one claim swallows everything a
+            // multi-lane run should share
+            assert!(g <= len.max(1), "grain {g} exceeds len {len}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// randomized GEMM bit-exactness across the thread matrix
+// ---------------------------------------------------------------------------
+
+struct Shape {
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+/// Seeded random shape spanning the regimes that stress the scheduler:
+/// decode (n small), threads > rows (m tiny), and multi-round k.
+fn random_shape(rng: &mut Rng) -> Shape {
+    Shape {
+        m: 1 + rng.below(64) as usize,
+        k: 1 + rng.below(400) as usize,
+        n: 1 + rng.below(12) as usize,
+    }
+}
+
+#[test]
+fn ternary_pool_vs_serial_bit_exact_across_thread_matrix() {
+    let cfg = PlatinumConfig::default();
+    let pools: Vec<Pool> = THREAD_MATRIX.iter().map(|&t| Pool::new(t)).collect();
+    let serial = Pool::new(1);
+    platinum::util::check_prop("ternary_pool_matrix", 12, |seed| {
+        let mut rng = Rng::seed_from(seed);
+        let s = random_shape(&mut rng);
+        let w = rng.ternary_vec(s.m * s.k);
+        let x = rng.act_vec(s.k * s.n);
+        let packed = pack_ternary(&w, s.m, s.k, cfg.c_ternary);
+        let (want, ops_serial) = ternary_mpgemm_pool(&cfg, &packed, &x, s.n, &serial, 1);
+        platinum::ensure_prop!(
+            want == naive_mpgemm(&w, s.m, s.k, &x, s.n),
+            "serial wrong vs naive at m={} k={} n={}",
+            s.m,
+            s.k,
+            s.n
+        );
+        for (&t, pool) in THREAD_MATRIX.iter().zip(&pools) {
+            let (got, ops) = ternary_mpgemm_pool(&cfg, &packed, &x, s.n, pool, t);
+            platinum::ensure_prop!(
+                got == want,
+                "threads={t} diverged at m={} k={} n={}",
+                s.m,
+                s.k,
+                s.n
+            );
+            platinum::ensure_prop!(
+                ops == ops_serial,
+                "op counts must be thread-count independent (threads={t})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bitserial_pool_vs_serial_bit_exact_across_thread_matrix() {
+    let cfg = PlatinumConfig::default();
+    let pools: Vec<Pool> = THREAD_MATRIX.iter().map(|&t| Pool::new(t)).collect();
+    let serial = Pool::new(1);
+    platinum::util::check_prop("bitserial_pool_matrix", 10, |seed| {
+        let mut rng = Rng::seed_from(seed ^ 0xb5);
+        let s = random_shape(&mut rng);
+        let w = rng.ternary_vec(s.m * s.k);
+        let x = rng.act_vec(s.k * s.n);
+        let (pos, neg) = ternary_planes(&w, s.m, s.k);
+        let planes = vec![pack_binary(&pos, s.m, s.k, 7), pack_binary(&neg, s.m, s.k, 7)];
+        let (want, _) =
+            bitserial_mpgemm_pool(&cfg, &planes, &[1, -1], &x, s.n, &serial, 1);
+        platinum::ensure_prop!(
+            want == naive_mpgemm(&w, s.m, s.k, &x, s.n),
+            "serial bitserial wrong vs naive at m={} k={} n={}",
+            s.m,
+            s.k,
+            s.n
+        );
+        for (&t, pool) in THREAD_MATRIX.iter().zip(&pools) {
+            let (got, _) = bitserial_mpgemm_pool(&cfg, &planes, &[1, -1], &x, s.n, pool, t);
+            platinum::ensure_prop!(
+                got == want,
+                "bitserial threads={t} diverged at m={} k={} n={}",
+                s.m,
+                s.k,
+                s.n
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tmac_pool_vs_serial_bit_exact_across_thread_matrix() {
+    let pools: Vec<Pool> = THREAD_MATRIX.iter().map(|&t| Pool::new(t)).collect();
+    let serial = Pool::new(1);
+    platinum::util::check_prop("tmac_pool_matrix", 10, |seed| {
+        let mut rng = Rng::seed_from(seed ^ 0x7ac);
+        let s = random_shape(&mut rng);
+        let w = rng.ternary_vec(s.m * s.k);
+        let x = rng.act_vec(s.k * s.n);
+        let kernel = TMacCpu::new(&w, s.m, s.k);
+        let mut want = vec![0i32; s.m * s.n];
+        kernel.gemm_pool(&x, s.n, &mut want, 1, &serial);
+        let naive = naive_mpgemm(&w, s.m, s.k, &x, s.n);
+        for i in 0..s.m * s.n {
+            platinum::ensure_prop!(
+                want[i] as i64 == naive[i],
+                "serial tmac wrong vs naive at {i} (m={} k={} n={})",
+                s.m,
+                s.k,
+                s.n
+            );
+        }
+        for (&t, pool) in THREAD_MATRIX.iter().zip(&pools) {
+            let mut got = vec![0i32; s.m * s.n];
+            kernel.gemm_pool(&x, s.n, &mut got, t, pool);
+            platinum::ensure_prop!(
+                got == want,
+                "tmac threads={t} diverged at m={} k={} n={}",
+                s.m,
+                s.k,
+                s.n
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gemms_inside_pool_tasks_do_not_deadlock() {
+    // the serving path runs whole GEMMs from inside pool tasks (the
+    // batcher prices while workers execute); a GEMM's nested
+    // for_each_chunk phases must complete from within a worker
+    let pool = Pool::new(4);
+    let cfg = PlatinumConfig::default();
+    let mut rng = Rng::seed_from(0xD15C);
+    let (m, k, n) = (24, 57, 4);
+    let w = rng.ternary_vec(m * k);
+    let x = rng.act_vec(k * n);
+    let packed = pack_ternary(&w, m, k, cfg.c_ternary);
+    let want = naive_mpgemm(&w, m, k, &x, n);
+    let ok = AtomicUsize::new(0);
+    let tasks: Vec<Task> = (0..8)
+        .map(|_| {
+            let (cfg, packed, x, want, ok, pool_ref) = (&cfg, &packed, &x, &want, &ok, &pool);
+            Box::new(move || {
+                let (out, _) = ternary_mpgemm_pool(cfg, packed, x, n, pool_ref, 4);
+                if out == *want {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                }
+            }) as Task
+        })
+        .collect();
+    pool.run(tasks);
+    assert_eq!(ok.load(Ordering::Relaxed), 8, "nested GEMMs must all be correct");
+}
