@@ -1,0 +1,156 @@
+//! Serving-under-load benchmarks: host-side scheduler overhead per
+//! decode step (the control plane must stay negligible next to even a
+//! decode-shaped kernel), and goodput at 0.5×/0.9× of saturation on the
+//! measured `platinum-cpu` backend (the latency-under-load counterpart
+//! to the paper's throughput claims).
+//!
+//! Rows land in `BENCH_serve_load.json` (override with
+//! `BENCH_SERVE_LOAD_JSON=<path>`); `SERVE_LOAD_BUDGET_MS` bounds the
+//! overhead measurement like `HOTPATH_BUDGET_MS` does for hotpath.
+
+use platinum::engine::{Backend, BackendInfo, BackendKind, Registry, Report, Workload};
+use platinum::models::BitNetModel;
+use platinum::traffic::{
+    decode_capacity_tok_s, ArrivalPattern, LenDist, LoadSpec, Scheduler, SchedulerConfig,
+    VirtualClock,
+};
+use platinum::util::bench::{bench, report};
+use platinum::util::json::{arr, num, obj, s as jstr, Json};
+use std::time::Duration;
+
+/// Small-but-real model for the measured goodput rows (the 700M+ zoo
+/// models would push CI's wallclock budget).
+const SMALL: BitNetModel = BitNetModel {
+    name: "b-small",
+    params: "30M",
+    hidden: 256,
+    ffn: 640,
+    heads: 8,
+    kv_heads: 8,
+    layers: 2,
+};
+
+/// Constant-latency pricer: isolates the scheduler's own control-plane
+/// cost (queue ops, admission checks, bookkeeping) from backend time.
+struct FixedLatency(f64);
+
+impl Backend for FixedLatency {
+    fn id(&self) -> &str {
+        "fixed-latency"
+    }
+
+    fn describe(&self) -> BackendInfo {
+        BackendInfo {
+            id: "fixed-latency".into(),
+            name: "fixed".into(),
+            kind: BackendKind::Cpu,
+            freq_hz: 0.0,
+            pes: None,
+            area_mm2: None,
+            tech_nm: None,
+            notes: "bench-only constant-latency pricer".into(),
+        }
+    }
+
+    fn run(&self, w: &Workload) -> Report {
+        Report {
+            backend: "fixed-latency".into(),
+            workload: w.label(),
+            latency_s: self.0,
+            ops: w.naive_adds(),
+            ..Report::default()
+        }
+    }
+}
+
+fn main() {
+    let budget_ms: u64 = std::env::var("SERVE_LOAD_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    let budget = Duration::from_millis(budget_ms);
+    let mut rows: Vec<Json> = Vec::new();
+
+    // --- scheduler overhead per decode step --------------------------------
+    // closed-form load: 64 simultaneous requests lockstep-decoding on a
+    // zero-ish-cost pricer; wallclock / steps = control-plane ns/step
+    let cfg = SchedulerConfig { max_batch: 16, ..SchedulerConfig::default() };
+    let spec = LoadSpec {
+        pattern: ArrivalPattern::Poisson { rate_rps: 1e6 },
+        prompt: LenDist::Fixed(8),
+        output: LenDist::Fixed(16),
+        requests: 64,
+        seed: 42,
+    };
+    let reqs = spec.generate().unwrap();
+    let pricer = FixedLatency(1e-4);
+    let sched = Scheduler::new(&pricer, SMALL, cfg);
+    let probe = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+    let steps = probe.metrics.steps().max(1);
+    let st = bench(2, budget, || sched.serve(&reqs, &mut VirtualClock::new()).unwrap());
+    let ns_per_step = st.per_iter_ns() / steps as f64;
+    report(
+        "traffic/sched_overhead_per_step",
+        &st,
+        &format!("  {ns_per_step:.0} ns/step over {steps} steps"),
+    );
+    rows.push(obj(vec![
+        ("name", jstr("traffic/sched_overhead_per_step")),
+        ("ns_per_iter", num(st.per_iter_ns())),
+        ("steps", num(steps as f64)),
+        ("ns_per_step", num(ns_per_step)),
+    ]));
+
+    // --- goodput at 0.5× / 0.9× saturation on measured platinum-cpu --------
+    // capacity anchor: one full-batch decode step on the real golden
+    // kernel; offered token rate is then placed relative to it
+    let cpu = Registry::with_defaults().build("platinum-cpu").unwrap();
+    let cfg = SchedulerConfig { max_batch: 8, max_queue: 64, ..SchedulerConfig::default() };
+    let output = LenDist::Fixed(8);
+    let capacity_tok_s = decode_capacity_tok_s(cpu.as_ref(), SMALL, cfg.max_batch);
+    println!(
+        "\nplatinum-cpu decode capacity on {}: {:.0} tok/s at batch {}",
+        SMALL.name, capacity_tok_s, cfg.max_batch
+    );
+    for frac in [0.5, 0.9] {
+        let rate_rps = frac * capacity_tok_s / output.mean();
+        let spec = LoadSpec {
+            pattern: ArrivalPattern::Poisson { rate_rps },
+            prompt: LenDist::Fixed(8),
+            output,
+            requests: 48,
+            seed: 42,
+        };
+        let sched = Scheduler::new(cpu.as_ref(), SMALL, cfg);
+        let r = sched.serve(&spec.generate().unwrap(), &mut VirtualClock::new()).unwrap();
+        let m = &r.metrics;
+        let name = format!("traffic/goodput_{frac}x_saturation_platinum_cpu");
+        println!(
+            "{name:<44} {:>8.1} tok/s goodput  batch {:.2}  p99 TTFT {:.2} ms  util {:.0}%",
+            m.goodput_tokens_per_s(),
+            m.mean_decode_batch(),
+            m.ttft.quantile(0.99).unwrap_or(f64::NAN) * 1e3,
+            m.utilization() * 100.0
+        );
+        rows.push(obj(vec![
+            ("name", jstr(&name)),
+            ("offered_frac_of_capacity", num(frac)),
+            ("offered_rps", num(rate_rps)),
+            ("goodput_tokens_per_s", num(m.goodput_tokens_per_s())),
+            ("mean_decode_batch", num(m.mean_decode_batch())),
+            (
+                "p99_ttft_s",
+                m.ttft.quantile(0.99).map(num).unwrap_or(Json::Null),
+            ),
+            ("utilization", num(m.utilization())),
+        ]));
+    }
+
+    let path = std::env::var("BENCH_SERVE_LOAD_JSON")
+        .unwrap_or_else(|_| "BENCH_serve_load.json".to_string());
+    let doc = obj(vec![("bench", jstr("serve_load")), ("results", arr(rows))]);
+    match std::fs::write(&path, doc.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

@@ -1,6 +1,15 @@
 //! Serving layer (S12): a batching request loop for the end-to-end
 //! examples, shaped like an edge-LLM serving frontend.
 //!
+//! **Superseded for load evaluation by [`crate::traffic`]** — this
+//! one-shot synchronous batch loop has no notion of request arrival
+//! over time, admission, or tail latency.  It is kept as a working
+//! shim for the PJRT examples, and its [`Executor`] implementations
+//! (notably [`GoldenExecutor`]) remain the functional substrate the
+//! continuous-batching scheduler executes through via
+//! [`crate::traffic::ExecutorBridge`]; new serving work should target
+//! `traffic::Scheduler`.
+//!
 //! Requests (token sequences) arrive on a channel; the batcher groups
 //! them into accelerator-friendly batches (multiples of n_cols = 8, the
 //! paper's decode granularity), runs the functional forward through a

@@ -78,6 +78,15 @@ impl ShardStrategy {
 /// stripes into one place; layers: activation handoffs between pipeline
 /// stages).  Deliberately modest edge-class numbers — the point is that
 /// scaling is *not* free, so replica sweeps show diminishing returns.
+///
+/// The constants are calibratable without a rebuild: registry-built
+/// composites read `PLATINUM_LINK_GBPS` (sustained link bandwidth,
+/// GB/s) and `PLATINUM_HOP_US` (per-hop latency, µs) via
+/// [`Interconnect::from_env`], falling back to the 16 GB/s / 1 µs
+/// defaults — so a measured chip-to-chip link (the ROADMAP
+/// calibration follow-on) plugs in from the environment.  The active
+/// values are surfaced in the composite's
+/// [`BackendInfo::notes`].
 #[derive(Debug, Clone, Copy)]
 pub struct Interconnect {
     /// Sustained link bandwidth in bytes/s.
@@ -93,6 +102,28 @@ impl Default for Interconnect {
     }
 }
 
+impl Interconnect {
+    /// Defaults overridden by `PLATINUM_LINK_GBPS` / `PLATINUM_HOP_US`
+    /// when set to positive finite numbers (anything else — unset,
+    /// unparsable, zero, negative — keeps the default for that knob).
+    pub fn from_env() -> Interconnect {
+        let read = |key: &str| -> Option<f64> {
+            std::env::var(key)
+                .ok()
+                .and_then(|v| v.trim().parse::<f64>().ok())
+                .filter(|v| v.is_finite() && *v > 0.0)
+        };
+        let mut ic = Interconnect::default();
+        if let Some(gbps) = read("PLATINUM_LINK_GBPS") {
+            ic.link_bytes_per_s = gbps * 1e9;
+        }
+        if let Some(us) = read("PLATINUM_HOP_US") {
+            ic.hop_s = us * 1e-6;
+        }
+        ic
+    }
+}
+
 /// A composite [`Backend`]: N replicas of one inner backend executing
 /// disjoint shards of every workload.  See the module docs for the
 /// partition strategies and aggregation rules.
@@ -104,11 +135,13 @@ pub struct Sharded {
 }
 
 impl Sharded {
-    /// Compose `inner` replicas under `strategy` with the default
-    /// interconnect.  Replicas are assumed homogeneous (the canonical
-    /// id is derived from the first); errors on an empty replica set.
+    /// Compose `inner` replicas under `strategy` with the
+    /// environment-calibratable interconnect
+    /// ([`Interconnect::from_env`]).  Replicas are assumed homogeneous
+    /// (the canonical id is derived from the first); errors on an
+    /// empty replica set.
     pub fn new(inner: Vec<Box<dyn Backend>>, strategy: ShardStrategy) -> Result<Sharded> {
-        Sharded::with_interconnect(inner, strategy, Interconnect::default())
+        Sharded::with_interconnect(inner, strategy, Interconnect::from_env())
     }
 
     /// [`Sharded::new`] with an explicit interconnect model.
@@ -262,13 +295,17 @@ impl Backend for Sharded {
             area_mm2: base.area_mm2.map(|a| a * n as f64),
             tech_nm: base.tech_nm,
             notes: format!(
-                "{n} {} replicas, {}-partitioned; latency = {} + interconnect, energy = sum",
+                "{n} {} replicas, {}-partitioned; latency = {} + interconnect \
+                 ({} GB/s link, {} us/hop; env PLATINUM_LINK_GBPS/PLATINUM_HOP_US), \
+                 energy = sum",
                 base.id,
                 self.strategy.label(),
                 match self.strategy {
                     ShardStrategy::Layers => "stage sum",
                     _ => "max",
-                }
+                },
+                self.interconnect.link_bytes_per_s / 1e9,
+                self.interconnect.hop_s * 1e6
             ),
         }
     }
@@ -453,6 +490,52 @@ mod tests {
         assert_eq!(sh.merge_latency_s(&w, 1), 0.0);
         assert!(sh.merge_latency_s(&w, 2) > 0.0);
         assert!(sh.merge_latency_s(&w, 4) > sh.merge_latency_s(&w, 2));
+    }
+
+    #[test]
+    fn interconnect_constants_come_from_env() {
+        // direct math: a faster link / cheaper hop shrinks the merge term
+        let inner = |n: usize| -> Vec<Box<dyn Backend>> {
+            (0..n).map(|_| Box::new(PlatinumBackend::ternary()) as Box<dyn Backend>).collect()
+        };
+        let w = Workload::Kernel(Gemm::new(512, 40, 8));
+        let slow = Sharded::with_interconnect(
+            inner(4),
+            ShardStrategy::Rows,
+            Interconnect { link_bytes_per_s: 16e9, hop_s: 1e-6 },
+        )
+        .unwrap();
+        let fast = Sharded::with_interconnect(
+            inner(4),
+            ShardStrategy::Rows,
+            Interconnect { link_bytes_per_s: 32e9, hop_s: 0.5e-6 },
+        )
+        .unwrap();
+        assert!(fast.merge_latency_s(&w, 4) < slow.merge_latency_s(&w, 4));
+
+        // env round-trip: calibration knobs reach registry-built
+        // composites and are surfaced in the notes.  Values chosen
+        // strictly faster than the defaults so any concurrently-built
+        // composite in another test only gets cheaper interconnect.
+        std::env::set_var("PLATINUM_LINK_GBPS", "32");
+        std::env::set_var("PLATINUM_HOP_US", "0.5");
+        let ic = Interconnect::from_env();
+        let sh = sharded_platinum(2, ShardStrategy::Rows);
+        std::env::remove_var("PLATINUM_LINK_GBPS");
+        std::env::remove_var("PLATINUM_HOP_US");
+        assert_eq!(ic.link_bytes_per_s, 32e9);
+        assert_eq!(ic.hop_s, 0.5e-6);
+        let notes = sh.describe().notes;
+        assert!(notes.contains("32 GB/s") && notes.contains("0.5 us/hop"), "{notes}");
+        assert!(notes.contains("PLATINUM_LINK_GBPS"), "{notes}");
+        // junk values fall back to the defaults
+        std::env::set_var("PLATINUM_LINK_GBPS", "not-a-number");
+        std::env::set_var("PLATINUM_HOP_US", "-3");
+        let ic = Interconnect::from_env();
+        std::env::remove_var("PLATINUM_LINK_GBPS");
+        std::env::remove_var("PLATINUM_HOP_US");
+        assert_eq!(ic.link_bytes_per_s, 16e9);
+        assert_eq!(ic.hop_s, 1e-6);
     }
 
     #[test]

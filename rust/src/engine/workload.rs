@@ -80,6 +80,22 @@ impl Workload {
         Workload::ModelPass { model, n, stage: Stage::from_n(n) }
     }
 
+    /// One decode iteration of a continuous-batching scheduler: `seqs`
+    /// running sequences each contribute exactly one token, so
+    /// batch·seq = seqs — and the stage is **forced** to decode, since
+    /// [`Stage::from_n`] would misclassify a batch wider than its
+    /// threshold as prefill.
+    pub fn decode_step(model: BitNetModel, seqs: usize) -> Workload {
+        Workload::ModelPass { model, n: seqs.max(1), stage: Stage::Decode }
+    }
+
+    /// One coalesced prefill step over `tokens` total prompt tokens
+    /// (possibly from several admitted requests batched together) —
+    /// forced to the prefill stage even for short prompts.
+    pub fn prefill_step(model: BitNetModel, tokens: usize) -> Workload {
+        Workload::ModelPass { model, n: tokens.max(1), stage: Stage::Prefill }
+    }
+
     /// Human/JSON label identifying the workload in a [`super::Report`].
     pub fn label(&self) -> String {
         match self {
@@ -139,6 +155,25 @@ mod tests {
         assert_eq!(counted.naive_adds(), batch.naive_adds());
         assert_eq!(counted.label(), "counted-4");
         assert_eq!(counted.kernels(), vec![(g1, 3), (g2, 1)]);
+    }
+
+    #[test]
+    fn step_helpers_force_their_stage() {
+        // a 64-wide decode batch would classify as prefill by n alone
+        let d = Workload::decode_step(B158_3B, 64);
+        assert_eq!(d.label(), "b1.58-3B-decode-n64");
+        match d {
+            Workload::ModelPass { n, stage, .. } => {
+                assert_eq!((n, stage), (64, Stage::Decode));
+            }
+            other => panic!("decode_step must be a model pass, got {other:?}"),
+        }
+        // a 4-token chunked prefill would classify as decode by n alone
+        let p = Workload::prefill_step(B158_3B, 4);
+        assert_eq!(p.label(), "b1.58-3B-prefill-n4");
+        // zero-token guards
+        assert_eq!(Workload::decode_step(B158_3B, 0).naive_adds(), B158_3B.total_naive_adds(1));
+        assert_eq!(Workload::prefill_step(B158_3B, 0).naive_adds(), B158_3B.total_naive_adds(1));
     }
 
     #[test]

@@ -45,6 +45,7 @@
 //! | [`runtime`] | PJRT artifact load/execute + worker pool (S11, S14) |
 //! | [`coordinator`] | tiling scheduler + serving loop (S6, S12) |
 //! | [`engine`] | unified Backend/Workload/Report execution API (S13) |
+//! | [`traffic`] | continuous-batching serving + load generation (S15) |
 //!
 //! All execution flows through [`engine`]: a [`engine::Registry`]
 //! constructs [`engine::Backend`]s by name, each runs
@@ -69,6 +70,7 @@ pub mod models;
 pub mod pathgen;
 pub mod runtime;
 pub mod sim;
+pub mod traffic;
 pub mod util;
 
 pub use config::PlatinumConfig;

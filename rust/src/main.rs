@@ -11,6 +11,7 @@
 //!   paths      — generate + inspect offline build paths (ISA dump)
 //!   baselines  — Table I cross-system comparison via the engine registry
 //!   backends   — list registered engine backends
+//!   serve-bench — continuous-batching load run with TTFT/TPOT percentiles
 //!   runtime    — list / smoke-run the PJRT artifacts
 //!
 //! Execution goes through `engine::Registry`/`engine::Backend`: pick a
@@ -26,8 +27,12 @@ use platinum::engine::{
 };
 use platinum::models::{ALL_MODELS, B158_3B, DECODE_N, PREFILL_N};
 use platinum::runtime::{HostTensor, Runtime};
+use platinum::traffic::{
+    parse_trace, ArrivalPattern, Clock, LenDist, LoadSpec, Scheduler, SchedulerConfig,
+    VirtualClock, WallClock,
+};
 use platinum::util::cli;
-use platinum::util::json::{arr, num, obj, Json};
+use platinum::util::json::{arr, num, obj, s, Json};
 use platinum::{dse, encoding, isa, pathgen};
 
 fn main() -> Result<()> {
@@ -39,6 +44,7 @@ fn main() -> Result<()> {
         Some("paths") => cmd_paths(&args),
         Some("baselines") => cmd_baselines(&args),
         Some("backends") => cmd_backends(&args),
+        Some("serve-bench") => cmd_serve_bench(&args),
         Some("runtime") => cmd_runtime(&args),
         Some(other) => bail!("unknown command {other:?}; run without args for help"),
         None => {
@@ -66,6 +72,14 @@ fn print_help() {
            baselines  [--backend <ids|all>] [--json] [--threads <t>]\n\
                       Table I comparison on b1.58-3B\n\
            backends   list engine backend ids with specs\n\
+           serve-bench --backend <id> --rate <rps> --pattern poisson|burst|replay\n\
+                      [--model {{700m|1.3b|3b}}] [--requests <n>] [--seed <n>]\n\
+                      [--prompt-tokens <n|lo:hi>] [--output-tokens <n|lo:hi>]\n\
+                      [--trace <file>] [--clock virtual|wall] [--json]\n\
+                      [--max-batch <n>] [--max-queue <n>] [--max-inflight-tokens <n>]\n\
+                      [--max-prefill-tokens <n>] [--step-overhead-us <f>] [--threads <t>]\n\
+                      continuous-batching load run: TTFT/TPOT/E2E percentiles,\n\
+                      batch/queue series, goodput vs offered load\n\
            runtime    [--artifacts <dir>] [--run <name>] PJRT artifacts\n\
          \n\
          BACKENDS (see `platinum backends`):\n\
@@ -452,6 +466,137 @@ fn cmd_backends(args: &cli::Args) -> Result<()> {
         "\nmulti-chip composites: {SHARDED_GRAMMAR}\n\
          (latency = max over replicas + interconnect, energy = sum; nests recursively)"
     );
+    Ok(())
+}
+
+/// `serve-bench`: generate a deterministic load trace, serve it through
+/// the continuous-batching scheduler against any registered backend,
+/// and report TTFT/TPOT/E2E percentiles, batch/queue series, and
+/// goodput.  The default virtual clock makes the run a reproducible
+/// discrete-event simulation (the measured backends still contribute
+/// real kernel wall-clock as the per-step service time); `--clock wall`
+/// paces arrivals in real time instead.
+fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
+    apply_threads_flag(args)?;
+    let backend = Registry::with_defaults().build(args.get_str("backend", "platinum-cpu"))?;
+    let model = model_by_name(args.get_str("model", "700m"))?;
+    let rate = args.get_f64("rate", 50.0)?;
+    let pattern = match args.get_str("pattern", "poisson") {
+        "poisson" => ArrivalPattern::Poisson { rate_rps: rate },
+        "burst" => ArrivalPattern::Burst {
+            rate_rps: rate,
+            burst_factor: args.get_f64("burst-factor", 4.0)?,
+            mean_burst_s: args.get_f64("mean-burst", 0.5)?,
+            mean_calm_s: args.get_f64("mean-calm", 2.0)?,
+        },
+        "replay" => {
+            let path = args.get("trace").ok_or_else(|| {
+                anyhow!("--pattern replay needs --trace <file> (one arrival offset [s] per line)")
+            })?;
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("cannot read trace {path:?}: {e}"))?;
+            ArrivalPattern::Replay { times_s: parse_trace(&text)? }
+        }
+        other => bail!("unknown --pattern {other:?}; valid patterns: poisson, burst, replay"),
+    };
+    let spec = LoadSpec {
+        pattern,
+        prompt: LenDist::parse(args.get_str("prompt-tokens", "32"))?,
+        output: LenDist::parse(args.get_str("output-tokens", "16"))?,
+        requests: args.get_usize("requests", 128)?,
+        seed: args.get_usize("seed", 0)? as u64,
+    };
+    let cfg = SchedulerConfig {
+        max_batch: args.get_usize("max-batch", 32)?,
+        max_queue: args.get_usize("max-queue", 256)?,
+        max_inflight_tokens: args.get_usize("max-inflight-tokens", 65_536)?,
+        max_prefill_tokens: args.get_usize("max-prefill-tokens", 2048)?,
+        step_overhead_s: args.get_f64("step-overhead-us", 0.0)? * 1e-6,
+    };
+    let requests = spec.generate()?;
+    let mut clock: Box<dyn Clock> = match args.get_str("clock", "virtual") {
+        "virtual" => Box::new(VirtualClock::new()),
+        "wall" => Box::new(WallClock::new()),
+        other => bail!("unknown --clock {other:?}; valid clocks: virtual, wall"),
+    };
+    let sched = Scheduler::new(backend.as_ref(), *model, cfg);
+    let result = sched.serve(&requests, clock.as_mut())?;
+    let m = &result.metrics;
+    if args.flag("json") {
+        let doc = obj(vec![
+            ("bench", s("serve-bench")),
+            (
+                "config",
+                obj(vec![
+                    ("backend", s(backend.id())),
+                    ("model", s(model.name)),
+                    ("pattern", s(spec.pattern.label())),
+                    // for replay traces the --rate flag is ignored, so
+                    // report the rate the pattern actually offers
+                    ("rate_rps", num(spec.pattern.rate_rps())),
+                    ("requests", num(requests.len() as f64)),
+                    ("seed", num(spec.seed as f64)),
+                    ("prompt_tokens", s(&spec.prompt.label())),
+                    ("output_tokens", s(&spec.output.label())),
+                    ("clock", s(clock.label())),
+                    ("max_batch", num(cfg.max_batch as f64)),
+                    ("max_queue", num(cfg.max_queue as f64)),
+                    ("max_inflight_tokens", num(cfg.max_inflight_tokens as f64)),
+                    ("max_prefill_tokens", num(cfg.max_prefill_tokens as f64)),
+                ]),
+            ),
+            ("metrics", m.to_json()),
+        ]);
+        println!("{}", doc.to_string());
+    } else {
+        let q = |h: &platinum::traffic::Histogram| {
+            let f = |v: Option<f64>| {
+                v.map(|x| format!("{:>10.4}", x * 1e3)).unwrap_or_else(|| format!("{:>10}", "-"))
+            };
+            format!(
+                "p50 {} ms  p95 {} ms  p99 {} ms  (n={})",
+                f(h.quantile(0.50)),
+                f(h.quantile(0.95)),
+                f(h.quantile(0.99)),
+                h.count()
+            )
+        };
+        println!(
+            "== serve-bench: {} requests, {} @ {:.1} rps on {} ({} clock) ==",
+            requests.len(),
+            spec.pattern.label(),
+            spec.pattern.rate_rps(),
+            backend.id(),
+            clock.label()
+        );
+        println!(
+            "  offered {}  admitted {}  rejected {}  completed {}",
+            m.offered, m.admitted, m.rejected, m.completed
+        );
+        println!(
+            "  steps: {} prefill + {} decode, mean decode batch {:.2}, \
+             queue depth mean {:.2} / max {}",
+            m.prefill_steps,
+            m.decode_steps,
+            m.mean_decode_batch(),
+            m.mean_queue_depth(),
+            m.queue_depth_max
+        );
+        println!("  TTFT        {}", q(&m.ttft));
+        println!("  TPOT        {}", q(&m.tpot));
+        println!("  E2E         {}", q(&m.e2e));
+        println!("  queue wait  {}", q(&m.queue_wait));
+        let completed_rps =
+            if m.makespan_s > 0.0 { m.completed as f64 / m.makespan_s } else { 0.0 };
+        println!(
+            "  goodput {:.1} tok/s  completed {:.2} req/s  utilization {:.1}%  \
+             makespan {:.3} s",
+            m.goodput_tokens_per_s(),
+            completed_rps,
+            m.utilization() * 100.0,
+            m.makespan_s
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,152 @@
+//! Time sources for the serving subsystem.
+//!
+//! The continuous-batching scheduler is written against the [`Clock`]
+//! trait so the *same* control loop runs in two regimes:
+//!
+//! * [`VirtualClock`] — a discrete-event timeline: time moves only when
+//!   the scheduler charges a step's priced latency ([`Clock::advance`])
+//!   or jumps to the next arrival ([`Clock::wait_until`]).  Fully
+//!   deterministic — given the same request trace and a deterministic
+//!   pricing backend, every run produces byte-identical metrics, which
+//!   is what `tests/traffic_serving.rs` pins.
+//! * [`WallClock`] — real elapsed time.  `advance` is a no-op (running
+//!   a measured backend already consumed the wall time it reported) and
+//!   `wait_until` sleeps, so arrivals pace the loop like a live load
+//!   generator.  Use with the measured `platinum-cpu`/`tmac-cpu`
+//!   backends, where the priced latency *is* host wall-clock.
+
+use std::time::{Duration, Instant};
+
+/// The scheduler's notion of "now", in seconds since the run started.
+pub trait Clock {
+    /// Current time (s since start of the run).
+    fn now(&mut self) -> f64;
+
+    /// Charge `dt` seconds of service time to the timeline.  Virtual
+    /// time jumps; wall time ignores it (the work already took real
+    /// time to execute).
+    fn advance(&mut self, dt: f64);
+
+    /// Idle until `t` (the next request arrival).  Virtual time jumps;
+    /// wall time sleeps.  A `t` in the past is a no-op.
+    fn wait_until(&mut self, t: f64);
+
+    /// `"virtual"` or `"wall"` — recorded in the metrics JSON so a
+    /// report is self-describing.
+    fn label(&self) -> &'static str;
+}
+
+/// Deterministic discrete-event clock (starts at 0.0 s).
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    t: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { t: 0.0 }
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&mut self) -> f64 {
+        self.t
+    }
+
+    fn advance(&mut self, dt: f64) {
+        if dt > 0.0 {
+            self.t += dt;
+        }
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        if t > self.t {
+            self.t = t;
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        "virtual"
+    }
+}
+
+/// Real elapsed time, anchored at construction.
+#[derive(Debug, Clone)]
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> WallClock {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&mut self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn advance(&mut self, _dt: f64) {
+        // measured work already consumed real time; nothing to charge
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        let now = self.start.elapsed().as_secs_f64();
+        if t > now {
+            std::thread::sleep(Duration::from_secs_f64(t - now));
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        "wall"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_event_driven() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(0.25);
+        assert_eq!(c.now(), 0.25);
+        // negative charges are ignored, time never runs backwards
+        c.advance(-1.0);
+        assert_eq!(c.now(), 0.25);
+        c.wait_until(0.1);
+        assert_eq!(c.now(), 0.25, "wait into the past is a no-op");
+        c.wait_until(1.5);
+        assert_eq!(c.now(), 1.5);
+        assert_eq!(c.label(), "virtual");
+    }
+
+    #[test]
+    fn wall_clock_moves_on_its_own() {
+        let mut c = WallClock::new();
+        let a = c.now();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = c.now();
+        assert!(b > a);
+        // advance is a no-op: real execution already took real time
+        c.advance(1000.0);
+        assert!(c.now() < 500.0);
+        assert_eq!(c.label(), "wall");
+    }
+
+    #[test]
+    fn wall_clock_wait_until_sleeps() {
+        let mut c = WallClock::new();
+        let target = c.now() + 0.01;
+        c.wait_until(target);
+        assert!(c.now() >= target);
+    }
+}

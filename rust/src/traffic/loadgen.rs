@@ -1,0 +1,379 @@
+//! Deterministic load generation: request arrival processes and
+//! prompt/output length distributions.
+//!
+//! A [`LoadSpec`] expands to a concrete, fully-materialized request
+//! trace (`Vec<TrafficRequest>`) **before** the serving loop starts —
+//! the generator and the scheduler share no state, so the same seed
+//! always produces the same trace regardless of how the scheduler
+//! interleaves execution.  Three arrival processes:
+//!
+//! * [`ArrivalPattern::Poisson`] — exponential inter-arrivals at a
+//!   fixed rate, the classic open-loop model.
+//! * [`ArrivalPattern::Burst`] — a 2-state Markov-modulated Poisson
+//!   process (calm/burst with exponential sojourns); by memorylessness
+//!   the redraw-on-switch construction is exact.  Mean rate matches the
+//!   configured rate, so sweeps stay comparable with Poisson.
+//! * [`ArrivalPattern::Replay`] — verbatim arrival offsets from a
+//!   recorded trace (one f64 seconds-offset per request).
+
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+
+/// One request of the load trace: a prompt to prefill and a number of
+/// output tokens to decode, arriving at a fixed offset from run start.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrafficRequest {
+    pub id: u64,
+    /// Arrival offset from the start of the run (s).
+    pub arrival_s: f64,
+    /// Prompt length (tokens prefilled in one pass).
+    pub prompt_tokens: usize,
+    /// Output length (tokens decoded one step each); the first output
+    /// token is produced by the prefill step itself.
+    pub output_tokens: usize,
+}
+
+impl TrafficRequest {
+    /// Tokens this request reserves while in flight (KV-cache style
+    /// conservative reservation: full prompt + full output).
+    pub fn reserved_tokens(&self) -> usize {
+        self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// Prompt/output token-length distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LenDist {
+    /// Every request has exactly this many tokens.
+    Fixed(usize),
+    /// Uniform integer in `[lo, hi]` inclusive.
+    Uniform { lo: usize, hi: usize },
+}
+
+impl LenDist {
+    /// Parse the CLI grammar: `"16"` (fixed) or `"8:32"` (uniform).
+    pub fn parse(spec: &str) -> Result<LenDist> {
+        let spec = spec.trim();
+        if let Some((lo, hi)) = spec.split_once(':') {
+            let lo: usize =
+                lo.parse().map_err(|_| anyhow!("bad length bound {lo:?} in {spec:?}"))?;
+            let hi: usize =
+                hi.parse().map_err(|_| anyhow!("bad length bound {hi:?} in {spec:?}"))?;
+            if lo == 0 || hi < lo {
+                bail!("length range must satisfy 1 <= lo <= hi, got {spec:?}");
+            }
+            Ok(LenDist::Uniform { lo, hi })
+        } else {
+            let n: usize = spec.parse().map_err(|_| {
+                anyhow!("length spec {spec:?} is neither \"<n>\" nor \"<lo>:<hi>\"")
+            })?;
+            if n == 0 {
+                bail!("length must be >= 1 token, got {spec:?}");
+            }
+            Ok(LenDist::Fixed(n))
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n.max(1),
+            LenDist::Uniform { lo, hi } => rng.range_i64(lo as i64, hi as i64) as usize,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LenDist::Fixed(n) => n as f64,
+            LenDist::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            LenDist::Fixed(n) => n.to_string(),
+            LenDist::Uniform { lo, hi } => format!("{lo}:{hi}"),
+        }
+    }
+}
+
+/// Request arrival process over time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalPattern {
+    /// Exponential inter-arrivals at `rate_rps` requests/s.
+    Poisson { rate_rps: f64 },
+    /// 2-state MMPP: a calm state and a burst state with exponential
+    /// sojourn times.  The burst state arrives at
+    /// `rate_rps × burst_factor`; the calm rate is solved so the
+    /// time-weighted mean stays `rate_rps`.
+    Burst { rate_rps: f64, burst_factor: f64, mean_burst_s: f64, mean_calm_s: f64 },
+    /// Replay recorded arrival offsets verbatim (sorted ascending).
+    Replay { times_s: Vec<f64> },
+}
+
+impl ArrivalPattern {
+    /// Burst pattern with the default shape (4× bursts, 0.5 s mean
+    /// burst, 2 s mean calm).
+    pub fn burst(rate_rps: f64) -> ArrivalPattern {
+        ArrivalPattern::Burst {
+            rate_rps,
+            burst_factor: 4.0,
+            mean_burst_s: 0.5,
+            mean_calm_s: 2.0,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalPattern::Poisson { .. } => "poisson",
+            ArrivalPattern::Burst { .. } => "burst",
+            ArrivalPattern::Replay { .. } => "replay",
+        }
+    }
+
+    /// The configured mean offered rate (requests/s); for replay traces
+    /// it is inferred from the trace span.
+    pub fn rate_rps(&self) -> f64 {
+        match self {
+            ArrivalPattern::Poisson { rate_rps } | ArrivalPattern::Burst { rate_rps, .. } => {
+                *rate_rps
+            }
+            ArrivalPattern::Replay { times_s } => {
+                let span = times_s.last().copied().unwrap_or(0.0);
+                if span > 0.0 {
+                    times_s.len() as f64 / span
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Generate `n` arrival offsets (ascending).  Replay ignores `rng`
+    /// and truncates to the trace length.
+    fn arrival_times(&self, n: usize, rng: &mut Rng) -> Result<Vec<f64>> {
+        match self {
+            ArrivalPattern::Poisson { rate_rps } => {
+                if *rate_rps <= 0.0 {
+                    bail!("poisson rate must be > 0 rps, got {rate_rps}");
+                }
+                let mut t = 0.0;
+                Ok((0..n)
+                    .map(|_| {
+                        t += rng.exponential(*rate_rps);
+                        t
+                    })
+                    .collect())
+            }
+            ArrivalPattern::Burst { rate_rps, burst_factor, mean_burst_s, mean_calm_s } => {
+                if *rate_rps <= 0.0 || *burst_factor < 1.0 {
+                    bail!("burst needs rate > 0 and burst_factor >= 1");
+                }
+                if *mean_burst_s <= 0.0 || *mean_calm_s <= 0.0 {
+                    bail!("burst sojourn means must be > 0 s");
+                }
+                // time fraction spent bursting, and the calm rate that
+                // keeps the weighted mean at rate_rps (floored at 2% of
+                // the mean so the calm state still trickles)
+                let f = mean_burst_s / (mean_burst_s + mean_calm_s);
+                let hi = rate_rps * burst_factor;
+                let lo = ((rate_rps - f * hi) / (1.0 - f)).max(rate_rps * 0.02);
+                let mut out = Vec::with_capacity(n);
+                let mut t = 0.0;
+                let mut bursting = false;
+                let mut state_end = rng.exponential(1.0 / mean_calm_s);
+                while out.len() < n {
+                    let rate = if bursting { hi } else { lo };
+                    let dt = rng.exponential(rate);
+                    if t + dt >= state_end {
+                        // exponential inter-arrivals are memoryless, so
+                        // discarding the partial draw at the switch is
+                        // exact, not an approximation
+                        t = state_end;
+                        bursting = !bursting;
+                        let mean = if bursting { *mean_burst_s } else { *mean_calm_s };
+                        state_end = t + rng.exponential(1.0 / mean);
+                    } else {
+                        t += dt;
+                        out.push(t);
+                    }
+                }
+                Ok(out)
+            }
+            ArrivalPattern::Replay { times_s } => {
+                if times_s.is_empty() {
+                    bail!("replay trace is empty");
+                }
+                let mut out: Vec<f64> = times_s.iter().take(n).copied().collect();
+                out.sort_by(|a, b| a.total_cmp(b));
+                if out.first().copied().unwrap_or(0.0) < 0.0 {
+                    bail!("replay trace contains negative arrival offsets");
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// A complete load description; [`LoadSpec::generate`] materializes the
+/// deterministic request trace.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    pub pattern: ArrivalPattern,
+    pub prompt: LenDist,
+    pub output: LenDist,
+    /// Number of requests (replay truncates to the trace length).
+    pub requests: usize,
+    pub seed: u64,
+}
+
+impl LoadSpec {
+    /// Materialize the request trace: arrival offsets first, then one
+    /// (prompt, output) draw per request, all from one seeded stream.
+    pub fn generate(&self) -> Result<Vec<TrafficRequest>> {
+        let mut rng = Rng::seed_from(self.seed);
+        let times = self.pattern.arrival_times(self.requests, &mut rng)?;
+        Ok(times
+            .into_iter()
+            .enumerate()
+            .map(|(i, arrival_s)| TrafficRequest {
+                id: i as u64,
+                arrival_s,
+                prompt_tokens: self.prompt.sample(&mut rng),
+                output_tokens: self.output.sample(&mut rng),
+            })
+            .collect())
+    }
+}
+
+/// Parse a replay trace: one arrival offset (seconds, f64) per line;
+/// blank lines and `#` comments are skipped.
+pub fn parse_trace(text: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let t: f64 = line
+            .parse()
+            .map_err(|_| anyhow!("trace line {}: {line:?} is not a number", lineno + 1))?;
+        out.push(t);
+    }
+    if out.is_empty() {
+        bail!("trace contains no arrival offsets");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(pattern: ArrivalPattern) -> LoadSpec {
+        LoadSpec {
+            pattern,
+            prompt: LenDist::Uniform { lo: 4, hi: 16 },
+            output: LenDist::Fixed(8),
+            requests: 400,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn poisson_is_deterministic_and_rate_accurate() {
+        let s = spec(ArrivalPattern::Poisson { rate_rps: 50.0 });
+        let a = s.generate().unwrap();
+        let b = s.generate().unwrap();
+        assert_eq!(a, b, "same seed must give the identical trace");
+        assert_eq!(a.len(), 400);
+        let span = a.last().unwrap().arrival_s;
+        let rate = a.len() as f64 / span;
+        assert!((rate - 50.0).abs() < 10.0, "empirical rate {rate} rps");
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        let c = LoadSpec { seed: 43, ..s }.generate().unwrap();
+        assert_ne!(a, c, "a different seed must give a different trace");
+    }
+
+    #[test]
+    fn burst_keeps_mean_rate_but_clusters() {
+        let s = spec(ArrivalPattern::burst(50.0));
+        let a = s.generate().unwrap();
+        let span = a.last().unwrap().arrival_s;
+        let rate = a.len() as f64 / span;
+        assert!((rate - 50.0).abs() < 20.0, "MMPP mean rate {rate} rps");
+        // burstiness: the coefficient of variation of inter-arrivals
+        // must exceed the Poisson baseline of ~1
+        let gaps: Vec<f64> =
+            a.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var =
+            gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!(cv > 1.15, "MMPP must be burstier than Poisson (cv {cv})");
+    }
+
+    #[test]
+    fn replay_truncates_and_sorts() {
+        let s = LoadSpec {
+            pattern: ArrivalPattern::Replay { times_s: vec![0.5, 0.1, 0.9, 2.0] },
+            prompt: LenDist::Fixed(4),
+            output: LenDist::Fixed(2),
+            requests: 3,
+            seed: 1,
+        };
+        let a = s.generate().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0].arrival_s, 0.1);
+        assert_eq!(a[2].arrival_s, 0.9);
+        assert!(a.iter().all(|r| r.prompt_tokens == 4 && r.output_tokens == 2));
+    }
+
+    #[test]
+    fn len_dist_parses_and_samples_in_range() {
+        assert_eq!(LenDist::parse("16").unwrap(), LenDist::Fixed(16));
+        assert_eq!(LenDist::parse("8:32").unwrap(), LenDist::Uniform { lo: 8, hi: 32 });
+        assert!(LenDist::parse("0").is_err());
+        assert!(LenDist::parse("9:3").is_err());
+        assert!(LenDist::parse("abc").is_err());
+        let mut rng = Rng::seed_from(5);
+        let d = LenDist::Uniform { lo: 3, hi: 7 };
+        for _ in 0..1000 {
+            let v = d.sample(&mut rng);
+            assert!((3..=7).contains(&v));
+        }
+        assert_eq!(d.mean(), 5.0);
+        assert_eq!(d.label(), "3:7");
+    }
+
+    #[test]
+    fn trace_parser_skips_comments_and_rejects_garbage() {
+        let t = parse_trace("# header\n0.0\n\n0.25\n1.5\n").unwrap();
+        assert_eq!(t, vec![0.0, 0.25, 1.5]);
+        assert!(parse_trace("0.1\nnope\n").is_err());
+        assert!(parse_trace("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn bad_patterns_error() {
+        let mut rng = Rng::seed_from(1);
+        assert!(ArrivalPattern::Poisson { rate_rps: 0.0 }.arrival_times(4, &mut rng).is_err());
+        assert!(ArrivalPattern::Burst {
+            rate_rps: 10.0,
+            burst_factor: 0.5,
+            mean_burst_s: 1.0,
+            mean_calm_s: 1.0
+        }
+        .arrival_times(4, &mut rng)
+        .is_err());
+        assert!(ArrivalPattern::Replay { times_s: vec![] }.arrival_times(4, &mut rng).is_err());
+        assert!(ArrivalPattern::Replay { times_s: vec![-1.0] }
+            .arrival_times(1, &mut rng)
+            .is_err());
+    }
+
+    #[test]
+    fn reserved_tokens_sums_prompt_and_output() {
+        let r = TrafficRequest { id: 0, arrival_s: 0.0, prompt_tokens: 12, output_tokens: 5 };
+        assert_eq!(r.reserved_tokens(), 17);
+    }
+}

@@ -1,0 +1,396 @@
+//! Serving metrics: latency histograms (TTFT / TPOT / end-to-end /
+//! queue wait), admission counters, queue-depth and batch-size time
+//! series, and goodput — serialized through [`crate::util::json`] in
+//! the same Report-JSON style as the rest of the crate.
+//!
+//! The histogram is **fixed-bucket** (log-spaced, 10 buckets per
+//! decade from 100 ns up): recording is O(1), memory is constant, and
+//! — critically for the determinism suite — the percentile estimates
+//! are pure functions of the bucket counts, so two runs that make the
+//! same recordings serialize byte-identical JSON.
+
+use crate::util::json::{arr, num, obj, Json};
+
+/// Number of log-spaced buckets: 10 per decade starting at
+/// [`Histogram::FLOOR_S`], covering 1e-7 s … >1e5 s.
+const BUCKETS: usize = 121;
+
+/// Fixed-bucket log-scale latency histogram.
+///
+/// Percentiles report the **upper bound** of the bucket holding the
+/// requested rank (a deterministic ≤25% overestimate — one bucket is
+/// 10^(1/10) ≈ 1.26× wide), alongside the exact mean and max.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// Lower bound of bucket 0 (100 ns); everything smaller lands there.
+    pub const FLOOR_S: f64 = 1e-7;
+
+    pub fn new() -> Histogram {
+        Histogram { counts: vec![0; BUCKETS], total: 0, sum: 0.0, max: 0.0 }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v <= Self::FLOOR_S {
+            return 0;
+        }
+        let i = ((v / Self::FLOOR_S).log10() * 10.0).floor() as usize;
+        i.min(BUCKETS - 1)
+    }
+
+    /// Upper bound of bucket `i` (seconds).
+    fn upper(i: usize) -> f64 {
+        Self::FLOOR_S * 10f64.powf((i + 1) as f64 / 10.0)
+    }
+
+    /// Record one latency sample (seconds).  Non-finite or negative
+    /// samples are ignored.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.total > 0 {
+            Some(self.sum / self.total as f64)
+        } else {
+            None
+        }
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        if self.total > 0 {
+            Some(self.max)
+        } else {
+            None
+        }
+    }
+
+    /// Bucket-resolution quantile `q` in [0, 1]: the upper bound of the
+    /// bucket containing the ⌈q·total⌉-th sample.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.total == 0 {
+            return None;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(Self::upper(i));
+            }
+        }
+        Some(Self::upper(BUCKETS - 1))
+    }
+
+    /// `{count, mean, max, p50, p95, p99}` — percentiles/mean/max are
+    /// `null` when nothing was recorded.
+    pub fn to_json(&self) -> Json {
+        let o = |v: Option<f64>| v.map(num).unwrap_or(Json::Null);
+        obj(vec![
+            ("count", num(self.total as f64)),
+            ("mean", o(self.mean())),
+            ("max", o(self.max())),
+            ("p50", o(self.quantile(0.50))),
+            ("p95", o(self.quantile(0.95))),
+            ("p99", o(self.quantile(0.99))),
+        ])
+    }
+}
+
+/// One per-step sample of the time series.
+#[derive(Debug, Clone, Copy)]
+pub struct StepSample {
+    /// Timeline position at the end of the step (s).
+    pub t_s: f64,
+    /// Waiting (admitted-but-queued) requests after the step.
+    pub queue_depth: usize,
+    /// Sequences served by the step (prompt count for prefill steps,
+    /// batch size for decode steps).
+    pub batch: usize,
+}
+
+/// Cap on serialized time-series points; longer runs are downsampled
+/// by a deterministic stride so the JSON stays bounded.
+const SERIES_CAP: usize = 200;
+
+/// Aggregate serving metrics for one load run.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficMetrics {
+    /// Time to first token: arrival → end of the prefill step.
+    pub ttft: Histogram,
+    /// Time per output token: the gap between a sequence's consecutive
+    /// tokens (its decode step **plus** any prefill steps interleaved
+    /// since its previous token), one sample per sequence per decode
+    /// step.
+    pub tpot: Histogram,
+    /// End-to-end: arrival → final token.
+    pub e2e: Histogram,
+    /// Arrival → admission into a prefill batch.
+    pub queue_wait: Histogram,
+
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    /// Sum of decode batch sizes (mean = sum / decode_steps).
+    pub decode_batch_sum: u64,
+    pub queue_depth_sum: u64,
+    pub queue_depth_max: usize,
+    pub inflight_tokens_max: usize,
+
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    /// Output tokens of *completed* requests only — the goodput
+    /// numerator (tokens burned on rejected/unfinished work don't
+    /// count).
+    pub completed_tokens: u64,
+
+    /// Total priced service time across steps (s).
+    pub busy_s: f64,
+    /// Timeline position when the run drained (s).
+    pub makespan_s: f64,
+
+    series: Vec<StepSample>,
+}
+
+impl TrafficMetrics {
+    pub fn new() -> TrafficMetrics {
+        TrafficMetrics::default()
+    }
+
+    /// Record the end-of-step snapshot shared by both step kinds.
+    pub fn note_step(&mut self, sample: StepSample, inflight_tokens: usize, step_s: f64) {
+        self.queue_depth_sum += sample.queue_depth as u64;
+        self.queue_depth_max = self.queue_depth_max.max(sample.queue_depth);
+        self.inflight_tokens_max = self.inflight_tokens_max.max(inflight_tokens);
+        self.busy_s += step_s;
+        self.series.push(sample);
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.prefill_steps + self.decode_steps
+    }
+
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_steps > 0 {
+            self.decode_batch_sum as f64 / self.decode_steps as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_queue_depth(&self) -> f64 {
+        let steps = self.steps();
+        if steps > 0 {
+            self.queue_depth_sum as f64 / steps as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Completed output tokens per second of makespan — the headline
+    /// goodput-vs-offered-load figure.
+    pub fn goodput_tokens_per_s(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.completed_tokens as f64 / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of the makespan spent executing steps.
+    pub fn utilization(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            (self.busy_s / self.makespan_s).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// The queue-depth / batch-size series, downsampled to at most
+    /// [`SERIES_CAP`] points with a deterministic stride.
+    pub fn series(&self) -> Vec<StepSample> {
+        let stride = self.series.len().div_ceil(SERIES_CAP).max(1);
+        self.series.iter().step_by(stride).copied().collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let series = self.series();
+        let makespan = self.makespan_s;
+        let rps = |n: u64| if makespan > 0.0 { n as f64 / makespan } else { 0.0 };
+        obj(vec![
+            (
+                "counts",
+                obj(vec![
+                    ("offered", num(self.offered as f64)),
+                    ("admitted", num(self.admitted as f64)),
+                    ("rejected", num(self.rejected as f64)),
+                    ("completed", num(self.completed as f64)),
+                ]),
+            ),
+            (
+                "latency_s",
+                obj(vec![
+                    ("ttft", self.ttft.to_json()),
+                    ("tpot", self.tpot.to_json()),
+                    ("e2e", self.e2e.to_json()),
+                    ("queue_wait", self.queue_wait.to_json()),
+                ]),
+            ),
+            (
+                "steps",
+                obj(vec![
+                    ("total", num(self.steps() as f64)),
+                    ("prefill", num(self.prefill_steps as f64)),
+                    ("decode", num(self.decode_steps as f64)),
+                    ("mean_decode_batch", num(self.mean_decode_batch())),
+                    ("mean_queue_depth", num(self.mean_queue_depth())),
+                    ("max_queue_depth", num(self.queue_depth_max as f64)),
+                    ("max_inflight_tokens", num(self.inflight_tokens_max as f64)),
+                ]),
+            ),
+            (
+                "tokens",
+                obj(vec![
+                    ("prompt", num(self.prompt_tokens as f64)),
+                    ("generated", num(self.generated_tokens as f64)),
+                    ("completed_output", num(self.completed_tokens as f64)),
+                ]),
+            ),
+            (
+                "throughput",
+                obj(vec![
+                    ("offered_rps", num(rps(self.offered))),
+                    ("completed_rps", num(rps(self.completed))),
+                    ("goodput_tokens_per_s", num(self.goodput_tokens_per_s())),
+                    ("busy_s", num(self.busy_s)),
+                    ("makespan_s", num(makespan)),
+                    ("utilization", num(self.utilization())),
+                ]),
+            ),
+            (
+                "series",
+                obj(vec![
+                    ("t_s", arr(series.iter().map(|p| num(p.t_s)).collect())),
+                    (
+                        "queue_depth",
+                        arr(series.iter().map(|p| num(p.queue_depth as f64)).collect()),
+                    ),
+                    ("batch", arr(series.iter().map(|p| num(p.batch as f64)).collect())),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3); // 1..100 ms
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50).unwrap();
+        let p99 = h.quantile(0.99).unwrap();
+        // bucket upper bounds: within one bucket width (×1.26) above
+        assert!(p50 >= 0.050 && p50 <= 0.050 * 1.26, "p50 {p50}");
+        assert!(p99 >= 0.099 && p99 <= 0.099 * 1.26, "p99 {p99}");
+        assert!((h.mean().unwrap() - 0.0505).abs() < 1e-9);
+        assert!((h.max().unwrap() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_edges_and_garbage() {
+        let mut h = Histogram::new();
+        h.record(0.0); // below floor → bucket 0
+        h.record(1e9); // beyond range → clamped to last bucket
+        h.record(f64::NAN); // ignored
+        h.record(-1.0); // ignored
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.01).unwrap() <= Histogram::FLOOR_S * 1.26);
+        assert!(h.quantile(1.0).unwrap() > 1e4);
+    }
+
+    #[test]
+    fn empty_histogram_serializes_nulls() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), None);
+        let j = h.to_json().to_string();
+        assert!(j.contains("\"p99\":null") && j.contains("\"count\":0"), "{j}");
+    }
+
+    #[test]
+    fn histogram_json_is_deterministic() {
+        let run = || {
+            let mut h = Histogram::new();
+            let mut rng = crate::util::rng::Rng::seed_from(7);
+            for _ in 0..5000 {
+                h.record(rng.exponential(100.0));
+            }
+            h.to_json().to_string()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn series_downsamples_deterministically() {
+        let mut m = TrafficMetrics::new();
+        for i in 0..1000 {
+            m.note_step(
+                StepSample { t_s: i as f64, queue_depth: i % 7, batch: 3 },
+                10,
+                0.001,
+            );
+        }
+        let s = m.series();
+        assert!(s.len() <= SERIES_CAP, "{}", s.len());
+        assert_eq!(s[0].t_s, 0.0);
+        // stride 5 over 1000 points
+        assert_eq!(s[1].t_s, 5.0);
+        assert_eq!(m.queue_depth_max, 6);
+        assert!((m.busy_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn goodput_and_utilization() {
+        let mut m = TrafficMetrics::new();
+        m.completed_tokens = 500;
+        m.makespan_s = 10.0;
+        m.busy_s = 4.0;
+        assert_eq!(m.goodput_tokens_per_s(), 50.0);
+        assert_eq!(m.utilization(), 0.4);
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"goodput_tokens_per_s\":50"), "{j}");
+    }
+}

@@ -1,0 +1,49 @@
+//! Serving-under-load subsystem (S15): continuous batching, load
+//! generation, and tail-latency metrics on top of the [`crate::engine`]
+//! API.
+//!
+//! PRs 1–4 built the execution stack — a unified backend API, a
+//! parallel runtime, multi-chip sharding, a work-stealing scheduler —
+//! but every frontend ran **one-shot** workloads: there was no notion
+//! of requests arriving over time, queueing, admission, or tail
+//! latency, so none of that scale work could be evaluated under load.
+//! This module turns the repo into a servable system:
+//!
+//! * [`scheduler`] — the continuous-batching control plane: a bounded
+//!   request queue with admission/backpressure (queue depth + in-flight
+//!   token reservation), prefill coalescing, per-step decode batching,
+//!   and eviction of finished sequences.  Any registered [`Backend`]
+//!   (`platinum-ternary`, the measured `platinum-cpu`, `sharded:*`
+//!   composites, …) prices the steps and thereby drives the timeline.
+//! * [`loadgen`] — deterministic open-loop load: Poisson, bursty
+//!   (2-state MMPP), and trace-replay arrivals with configurable
+//!   prompt/output length distributions, materialized up front from one
+//!   seed.
+//! * [`metrics`] — TTFT / TPOT / end-to-end / queue-wait percentiles
+//!   from fixed-bucket log histograms, queue-depth and batch-size time
+//!   series, goodput vs. offered load; JSON via [`crate::util::json`].
+//! * [`clock`] — the [`Clock`] abstraction that makes the same control
+//!   loop a deterministic discrete-event simulation ([`VirtualClock`])
+//!   or a live paced run ([`WallClock`]).
+//!
+//! CLI: `platinum serve-bench --backend <id> --rate <rps> --pattern
+//! poisson|burst|replay [--json]`; `examples/traffic_sweep.rs` sweeps
+//! offered load to the saturation knee.  `tests/traffic_serving.rs`
+//! pins virtual-clock determinism (byte-identical metrics JSON per
+//! seed, invariant across worker-pool sizes {1, 8}) and bounded,
+//! deadlock-free behavior past saturation.
+//!
+//! [`Backend`]: crate::engine::Backend
+
+pub mod clock;
+pub mod loadgen;
+pub mod metrics;
+pub mod scheduler;
+
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use loadgen::{parse_trace, ArrivalPattern, LenDist, LoadSpec, TrafficRequest};
+pub use metrics::{Histogram, StepSample, TrafficMetrics};
+pub use scheduler::{
+    decode_capacity_tok_s, ExecutorBridge, RunResult, Scheduler, SchedulerConfig, StepExecutor,
+    StepKind, StepRecord,
+};

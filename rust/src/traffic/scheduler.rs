@@ -1,0 +1,559 @@
+//! The continuous-batching scheduler: a request queue, admission /
+//! backpressure control, and a step loop that coalesces admitted
+//! requests into prefill and per-step decode [`Workload`]s against any
+//! registered [`Backend`] — the serving control plane the ROADMAP's
+//! "heavy traffic" north star needs on top of the engine API.
+//!
+//! ## Step loop (vLLM/Orca-style, prefill-prioritized)
+//!
+//! Each iteration: (1) admit arrivals whose offset has passed into the
+//! bounded queue (beyond [`SchedulerConfig::max_queue`] they are
+//! **rejected** — open-loop backpressure); (2) promote queued requests
+//! into the running batch FCFS while the batch has a slot, the
+//! in-flight token reservation fits
+//! ([`SchedulerConfig::max_inflight_tokens`]), and the step's prefill
+//! token budget holds; (3) if anything was promoted, run one
+//! **prefill step** — all promoted prompts coalesced into a single
+//! [`Workload::prefill_step`] whose end produces each prompt's first
+//! token (TTFT); otherwise run one **decode step** — every running
+//! sequence advances one token via [`Workload::decode_step`]; (4)
+//! charge the step's priced latency to the [`Clock`] and evict
+//! finished sequences.  An idle scheduler jumps to the next arrival.
+//!
+//! The **pricing backend is the timeline**: the priced latency of each
+//! step advances virtual time, so with a modelled backend (e.g.
+//! `platinum-ternary`, or `sharded:4:...`) the whole run is a
+//! deterministic discrete-event simulation, and with a measured
+//! backend (`platinum-cpu`) the timeline follows real kernel
+//! wall-clock.  Optional functional execution rides along through
+//! [`StepExecutor`] (e.g. [`ExecutorBridge`] over
+//! [`crate::coordinator::serve::GoldenExecutor`]) and **never**
+//! influences decisions — `tests/traffic_serving.rs` pins metrics
+//! byte-identical across worker-pool sizes {1, 8}.
+
+use super::clock::Clock;
+use super::loadgen::TrafficRequest;
+use super::metrics::{StepSample, TrafficMetrics};
+use crate::coordinator::serve::Executor;
+use crate::engine::{Backend, Workload};
+use crate::models::BitNetModel;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// Admission and batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Max sequences decoded per step (the running-batch slot count).
+    pub max_batch: usize,
+    /// Max waiting requests; arrivals beyond this are rejected.
+    pub max_queue: usize,
+    /// Backpressure bound on Σ(prompt + output) reserved by running
+    /// sequences (KV-cache-style conservative reservation).
+    pub max_inflight_tokens: usize,
+    /// Token budget of one coalesced prefill step.
+    pub max_prefill_tokens: usize,
+    /// Fixed scheduling overhead charged to the timeline per step (s).
+    pub step_overhead_s: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch: 32,
+            max_queue: 256,
+            max_inflight_tokens: 65_536,
+            max_prefill_tokens: 2048,
+            step_overhead_s: 0.0,
+        }
+    }
+}
+
+/// What one executed step did — the scheduler's decision log entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepRecord {
+    pub index: u64,
+    pub kind: StepKind,
+    /// Timeline position when the step launched (s).
+    pub t_start_s: f64,
+    /// Priced duration charged to the timeline (s).
+    pub step_s: f64,
+    /// Sequences the step served, in batch order.
+    pub seq_ids: Vec<u64>,
+    /// Prefill: total coalesced prompt tokens; decode: batch size.
+    pub tokens: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    Prefill,
+    Decode,
+}
+
+impl StepKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            StepKind::Prefill => "prefill",
+            StepKind::Decode => "decode",
+        }
+    }
+}
+
+/// Pluggable functional execution hook, called once per step after
+/// pricing.  The scheduler's timeline and decisions are already fixed
+/// by the pricing backend when this runs; implementations produce the
+/// actual tokens (golden datapath on the worker pool, PJRT artifacts,
+/// …) or instrument the run.
+pub trait StepExecutor {
+    fn execute(&mut self, step: &StepRecord, workload: &Workload) -> Result<()>;
+}
+
+impl<F> StepExecutor for F
+where
+    F: FnMut(&StepRecord, &Workload) -> Result<()>,
+{
+    fn execute(&mut self, step: &StepRecord, workload: &Workload) -> Result<()> {
+        self(step, workload)
+    }
+}
+
+/// Adapts any [`Executor`] (the PR 2 serving trait — e.g.
+/// [`crate::coordinator::serve::GoldenExecutor`], which runs the golden
+/// ternary datapath on the worker pool) into a [`StepExecutor`]:
+/// synthesizes seeded activations per step and drives the functional
+/// forward — decode steps as `batch` single-token columns, prefill
+/// steps as one `tokens`-long sequence.
+pub struct ExecutorBridge<E: Executor> {
+    exec: E,
+    rng: Rng,
+}
+
+impl<E: Executor> ExecutorBridge<E> {
+    pub fn new(exec: E) -> Self {
+        ExecutorBridge { exec, rng: Rng::seed_from(0x7F1C) }
+    }
+
+    /// The wrapped executor (e.g. to inspect outputs after a run).
+    pub fn executor(&self) -> &E {
+        &self.exec
+    }
+}
+
+impl<E: Executor> StepExecutor for ExecutorBridge<E> {
+    fn execute(&mut self, step: &StepRecord, _workload: &Workload) -> Result<()> {
+        let d = self.exec.d_model();
+        let (seqs, seq_len) = match step.kind {
+            StepKind::Decode => (step.seq_ids.len().max(1), 1),
+            StepKind::Prefill => (1, step.tokens.max(1)),
+        };
+        let data: Vec<Vec<f32>> = (0..seqs)
+            .map(|_| (0..seq_len * d).map(|_| self.rng.f64() as f32 - 0.5).collect())
+            .collect();
+        let xs: Vec<&[f32]> = data.iter().map(|v| v.as_slice()).collect();
+        self.exec.run(&xs, seq_len)?;
+        Ok(())
+    }
+}
+
+/// Result of serving one request trace.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub metrics: TrafficMetrics,
+    /// Per-step decision log, in execution order.
+    pub steps: Vec<StepRecord>,
+}
+
+/// One running sequence.
+#[derive(Debug, Clone, Copy)]
+struct Seq {
+    req: TrafficRequest,
+    generated: usize,
+    /// Timeline position of the sequence's latest token — TPOT samples
+    /// are true inter-token gaps, so interleaved prefill steps between
+    /// a sequence's decode steps count against it.
+    last_token_s: f64,
+}
+
+/// The continuous-batching serving scheduler (see module docs).
+pub struct Scheduler<'a> {
+    backend: &'a dyn Backend,
+    model: BitNetModel,
+    cfg: SchedulerConfig,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(backend: &'a dyn Backend, model: BitNetModel, cfg: SchedulerConfig) -> Self {
+        Scheduler { backend, model, cfg }
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    /// Serve a request trace to completion (pricing only).
+    pub fn serve(&self, requests: &[TrafficRequest], clock: &mut dyn Clock) -> Result<RunResult> {
+        self.serve_with(requests, clock, None)
+    }
+
+    /// Serve a request trace, optionally executing each step
+    /// functionally through `exec`.
+    ///
+    /// Always terminates: every iteration either executes a step (a
+    /// prefill admits ≥ 1 request — an oversized head-of-line request
+    /// is admitted alone rather than starved — and a decode advances
+    /// every running sequence by one token) or jumps the clock to the
+    /// next pending arrival; arrivals are finite.
+    pub fn serve_with(
+        &self,
+        requests: &[TrafficRequest],
+        clock: &mut dyn Clock,
+        mut exec: Option<&mut dyn StepExecutor>,
+    ) -> Result<RunResult> {
+        let mut arrivals: Vec<TrafficRequest> = requests.to_vec();
+        arrivals.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+
+        let mut metrics = TrafficMetrics::new();
+        let mut steps: Vec<StepRecord> = Vec::new();
+        let mut queue: VecDeque<TrafficRequest> = VecDeque::new();
+        let mut running: Vec<Seq> = Vec::new();
+        let mut inflight_tokens = 0usize;
+        let mut next = 0usize;
+
+        loop {
+            let now = clock.now();
+
+            // (1) admission: arrivals up to `now` enter the bounded queue
+            while next < arrivals.len() && arrivals[next].arrival_s <= now {
+                metrics.offered += 1;
+                if queue.len() >= self.cfg.max_queue {
+                    metrics.rejected += 1;
+                } else {
+                    queue.push_back(arrivals[next]);
+                }
+                next += 1;
+            }
+
+            // (2) promotion: FCFS while slots, token reservation, and
+            // the prefill budget hold; an oversized request at the head
+            // of an otherwise-empty system is admitted alone
+            let mut promoted: Vec<TrafficRequest> = Vec::new();
+            let mut prefill_tokens = 0usize;
+            while let Some(front) = queue.front() {
+                let reserve = front.reserved_tokens();
+                let fits = running.len() + promoted.len() < self.cfg.max_batch
+                    && inflight_tokens + reserve <= self.cfg.max_inflight_tokens
+                    && prefill_tokens + front.prompt_tokens <= self.cfg.max_prefill_tokens;
+                let alone = running.is_empty() && promoted.is_empty();
+                if !(fits || alone) {
+                    break;
+                }
+                let r = queue.pop_front().unwrap();
+                inflight_tokens += reserve;
+                prefill_tokens += r.prompt_tokens;
+                promoted.push(r);
+                if alone && !fits {
+                    break; // oversized request runs by itself
+                }
+            }
+
+            // (3) pick and price the step
+            let (kind, workload, seq_ids, tokens) = if !promoted.is_empty() {
+                let ids: Vec<u64> = promoted.iter().map(|r| r.id).collect();
+                (
+                    StepKind::Prefill,
+                    Workload::prefill_step(self.model, prefill_tokens),
+                    ids,
+                    prefill_tokens,
+                )
+            } else if !running.is_empty() {
+                let ids: Vec<u64> = running.iter().map(|s| s.req.id).collect();
+                let n = running.len();
+                (StepKind::Decode, Workload::decode_step(self.model, n), ids, n)
+            } else if next < arrivals.len() {
+                // idle: jump to the next arrival
+                clock.wait_until(arrivals[next].arrival_s);
+                continue;
+            } else {
+                break; // drained
+            };
+
+            let priced = self.backend.run(&workload);
+            let step_s = priced.latency_s + self.cfg.step_overhead_s;
+            let record = StepRecord {
+                index: steps.len() as u64,
+                kind,
+                t_start_s: now,
+                step_s,
+                seq_ids,
+                tokens,
+            };
+            if let Some(e) = exec.as_deref_mut() {
+                e.execute(&record, &workload)?;
+            }
+            clock.advance(step_s);
+            let t_end = clock.now();
+
+            // (4) bookkeeping + eviction
+            match kind {
+                StepKind::Prefill => {
+                    metrics.prefill_steps += 1;
+                    for r in promoted {
+                        metrics.admitted += 1;
+                        metrics.prompt_tokens += r.prompt_tokens as u64;
+                        metrics.generated_tokens += 1; // prefill emits token #1
+                        metrics.queue_wait.record(now - r.arrival_s);
+                        metrics.ttft.record(t_end - r.arrival_s);
+                        if r.output_tokens <= 1 {
+                            metrics.completed += 1;
+                            metrics.completed_tokens += r.output_tokens as u64;
+                            metrics.e2e.record(t_end - r.arrival_s);
+                            inflight_tokens -= r.reserved_tokens();
+                        } else {
+                            running.push(Seq { req: r, generated: 1, last_token_s: t_end });
+                        }
+                    }
+                }
+                StepKind::Decode => {
+                    metrics.decode_steps += 1;
+                    metrics.decode_batch_sum += running.len() as u64;
+                    for s in running.iter_mut() {
+                        s.generated += 1;
+                        metrics.generated_tokens += 1;
+                        // inter-token gap, not just this step's length:
+                        // prefill steps that ran since the sequence's
+                        // previous token are what loaded systems pay
+                        metrics.tpot.record(t_end - s.last_token_s);
+                        s.last_token_s = t_end;
+                    }
+                    running.retain(|s| {
+                        if s.generated >= s.req.output_tokens {
+                            metrics.completed += 1;
+                            metrics.completed_tokens += s.req.output_tokens as u64;
+                            metrics.e2e.record(t_end - s.req.arrival_s);
+                            inflight_tokens -= s.req.reserved_tokens();
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                }
+            }
+            metrics.note_step(
+                StepSample { t_s: t_end, queue_depth: queue.len(), batch: tokens },
+                inflight_tokens,
+                step_s,
+            );
+            steps.push(record);
+        }
+
+        metrics.makespan_s = clock.now();
+        Ok(RunResult { metrics, steps })
+    }
+}
+
+/// Decode-capacity anchor: output tokens/s one `max_batch`-wide decode
+/// step sustains on `backend`.  The sweep example, the serve_load
+/// bench, and the saturation tests all place offered load relative to
+/// this same yardstick.
+pub fn decode_capacity_tok_s(
+    backend: &dyn Backend,
+    model: BitNetModel,
+    max_batch: usize,
+) -> f64 {
+    let step = backend.run(&Workload::decode_step(model, max_batch)).latency_s;
+    if step > 0.0 {
+        max_batch as f64 / step
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::PlatinumBackend;
+    use crate::traffic::clock::VirtualClock;
+    use crate::traffic::loadgen::{ArrivalPattern, LenDist, LoadSpec};
+
+    /// A 2-layer toy model so modelled pricing stays microseconds-fast.
+    const TINY: BitNetModel = BitNetModel {
+        name: "tiny",
+        params: "2M",
+        hidden: 64,
+        ffn: 160,
+        heads: 4,
+        kv_heads: 4,
+        layers: 2,
+    };
+
+    fn poisson_load(rate: f64, requests: usize, seed: u64) -> Vec<TrafficRequest> {
+        LoadSpec {
+            pattern: ArrivalPattern::Poisson { rate_rps: rate },
+            prompt: LenDist::Uniform { lo: 4, hi: 12 },
+            output: LenDist::Fixed(6),
+            requests,
+            seed,
+        }
+        .generate()
+        .unwrap()
+    }
+
+    #[test]
+    fn drains_every_request_and_counts_tokens() {
+        let be = PlatinumBackend::ternary();
+        let sched = Scheduler::new(&be, TINY, SchedulerConfig::default());
+        let reqs = poisson_load(100.0, 40, 3);
+        let mut clock = VirtualClock::new();
+        let r = sched.serve(&reqs, &mut clock).unwrap();
+        let m = &r.metrics;
+        assert_eq!(m.offered, 40);
+        assert_eq!(m.rejected, 0);
+        assert_eq!(m.admitted, 40);
+        assert_eq!(m.completed, 40);
+        assert_eq!(m.completed_tokens, 40 * 6);
+        assert_eq!(m.generated_tokens, 40 * 6);
+        let prompts: u64 = reqs.iter().map(|q| q.prompt_tokens as u64).sum();
+        assert_eq!(m.prompt_tokens, prompts);
+        assert_eq!(m.ttft.count(), 40);
+        assert_eq!(m.e2e.count(), 40);
+        // every output token beyond the first came from a decode step
+        assert_eq!(m.tpot.count(), 40 * 5);
+        assert!(m.makespan_s > 0.0 && m.busy_s > 0.0);
+        assert!(m.utilization() <= 1.0);
+        // decision log covers all steps in order
+        assert_eq!(r.steps.len() as u64, m.steps());
+        assert!(r.steps.windows(2).all(|w| w[0].index + 1 == w[1].index));
+        assert!(r
+            .steps
+            .windows(2)
+            .all(|w| w[0].t_start_s <= w[1].t_start_s));
+    }
+
+    #[test]
+    fn simultaneous_arrivals_coalesce_into_batches() {
+        let be = PlatinumBackend::ternary();
+        let sched = Scheduler::new(&be, TINY, SchedulerConfig::default());
+        // 16 requests all arriving at t=0, outputs long enough to decode
+        let reqs: Vec<TrafficRequest> = (0..16)
+            .map(|i| TrafficRequest {
+                id: i,
+                arrival_s: 0.0,
+                prompt_tokens: 8,
+                output_tokens: 10,
+            })
+            .collect();
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        let m = &r.metrics;
+        // one coalesced prefill (128 tokens < budget), then lockstep decode
+        assert_eq!(m.prefill_steps, 1);
+        assert_eq!(m.decode_steps, 9, "10 outputs = 1 prefill token + 9 decode steps");
+        assert!((m.mean_decode_batch() - 16.0).abs() < 1e-9);
+        assert_eq!(m.completed, 16);
+    }
+
+    #[test]
+    fn queue_bound_rejects_and_never_exceeds() {
+        let be = PlatinumBackend::ternary();
+        let cfg = SchedulerConfig { max_queue: 4, max_batch: 2, ..SchedulerConfig::default() };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let reqs: Vec<TrafficRequest> = (0..64)
+            .map(|i| TrafficRequest {
+                id: i,
+                arrival_s: 0.0,
+                prompt_tokens: 4,
+                output_tokens: 8,
+            })
+            .collect();
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        let m = &r.metrics;
+        assert!(m.rejected > 0, "open-loop overload must shed load");
+        assert_eq!(m.offered, 64);
+        assert_eq!(m.admitted + m.rejected, 64);
+        assert_eq!(m.completed, m.admitted);
+        assert!(m.queue_depth_max <= 4, "queue bound violated: {}", m.queue_depth_max);
+    }
+
+    #[test]
+    fn token_backpressure_bounds_inflight() {
+        let be = PlatinumBackend::ternary();
+        let cfg = SchedulerConfig {
+            max_inflight_tokens: 100,
+            max_batch: 32,
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let reqs: Vec<TrafficRequest> = (0..20)
+            .map(|i| TrafficRequest {
+                id: i,
+                arrival_s: 0.0,
+                prompt_tokens: 20,
+                output_tokens: 20,
+            })
+            .collect();
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        let m = &r.metrics;
+        assert_eq!(m.completed, 20, "backpressure must delay, not deadlock");
+        // 100-token budget over 40-token reservations ⇒ ≤ 2 in flight
+        assert!(m.inflight_tokens_max <= 100, "{}", m.inflight_tokens_max);
+        assert!(m.mean_decode_batch() <= 2.5);
+    }
+
+    #[test]
+    fn oversized_request_is_admitted_alone_not_starved() {
+        let be = PlatinumBackend::ternary();
+        let cfg = SchedulerConfig {
+            max_inflight_tokens: 50,
+            max_prefill_tokens: 16,
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        // both the prompt and the reservation bust every budget
+        let reqs = vec![TrafficRequest {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 64,
+            output_tokens: 64,
+        }];
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        assert_eq!(r.metrics.completed, 1);
+        assert_eq!(r.steps[0].kind, StepKind::Prefill);
+        assert_eq!(r.steps[0].tokens, 64);
+    }
+
+    #[test]
+    fn step_executor_sees_every_step_and_cannot_change_decisions() {
+        let be = PlatinumBackend::ternary();
+        let sched = Scheduler::new(&be, TINY, SchedulerConfig::default());
+        let reqs = poisson_load(200.0, 24, 9);
+        let base = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        let mut seen: Vec<(StepKind, usize)> = Vec::new();
+        let mut hook = |s: &StepRecord, w: &Workload| -> anyhow::Result<()> {
+            seen.push((s.kind, s.tokens));
+            assert!(!w.label().is_empty());
+            Ok(())
+        };
+        let hooked = sched
+            .serve_with(&reqs, &mut VirtualClock::new(), Some(&mut hook))
+            .unwrap();
+        assert_eq!(seen.len(), hooked.steps.len());
+        assert_eq!(base.steps, hooked.steps, "executor must not perturb decisions");
+        assert_eq!(
+            base.metrics.to_json().to_string(),
+            hooked.metrics.to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn idle_gaps_jump_to_next_arrival() {
+        let be = PlatinumBackend::ternary();
+        let sched = Scheduler::new(&be, TINY, SchedulerConfig::default());
+        let reqs = vec![
+            TrafficRequest { id: 0, arrival_s: 0.0, prompt_tokens: 4, output_tokens: 2 },
+            TrafficRequest { id: 1, arrival_s: 100.0, prompt_tokens: 4, output_tokens: 2 },
+        ];
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        assert_eq!(r.metrics.completed, 2);
+        assert!(r.metrics.makespan_s >= 100.0);
+        assert!(r.metrics.utilization() < 0.5, "long idle gap must not count as busy");
+    }
+}

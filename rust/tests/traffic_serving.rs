@@ -1,0 +1,207 @@
+//! Traffic-subsystem contract tests (ISSUE 5 acceptance): virtual-clock
+//! determinism (same seed ⇒ byte-identical metrics JSON), invariance of
+//! scheduler decisions and metrics across worker-pool sizes {1, 8}
+//! while real golden-datapath work runs inside the loop, bounded
+//! deadlock-free behavior past saturation, and the batch-size-vs-load
+//! saturation curve.
+
+use platinum::config::PlatinumConfig;
+use platinum::coordinator::serve::GoldenExecutor;
+use platinum::encoding::pack_ternary;
+use platinum::engine::{Backend, PlatinumBackend, Registry, Workload};
+use platinum::lut::ternary_mpgemm_pool;
+use platinum::models::BitNetModel;
+use platinum::runtime::pool::Pool;
+use platinum::traffic::{
+    decode_capacity_tok_s, ArrivalPattern, ExecutorBridge, LenDist, LoadSpec, Scheduler,
+    SchedulerConfig, StepRecord, TrafficRequest, VirtualClock,
+};
+use platinum::util::json::Json;
+use platinum::util::rng::Rng;
+
+/// 2-layer toy model: modelled pricing stays microseconds-fast and the
+/// functional golden work in the pool-invariance tests stays tiny.
+const TINY: BitNetModel = BitNetModel {
+    name: "tiny",
+    params: "2M",
+    hidden: 64,
+    ffn: 160,
+    heads: 4,
+    kv_heads: 4,
+    layers: 2,
+};
+
+fn poisson_spec(rate: f64, requests: usize, seed: u64) -> LoadSpec {
+    LoadSpec {
+        pattern: ArrivalPattern::Poisson { rate_rps: rate },
+        prompt: LenDist::Uniform { lo: 4, hi: 12 },
+        output: LenDist::Fixed(6),
+        requests,
+        seed,
+    }
+}
+
+/// Requests/s one `max_batch`-wide decode step can sustain on the
+/// modelled backend, for placing rates relative to the knee.
+fn capacity_rps(be: &dyn Backend, cfg: &SchedulerConfig, output_tokens: usize) -> f64 {
+    decode_capacity_tok_s(be, TINY, cfg.max_batch) / output_tokens as f64
+}
+
+#[test]
+fn virtual_clock_metrics_are_byte_identical_per_seed() {
+    let be = PlatinumBackend::ternary();
+    let sched = Scheduler::new(&be, TINY, SchedulerConfig::default());
+    let run = |seed: u64| {
+        let reqs = poisson_spec(150.0, 64, seed).generate().unwrap();
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        r.metrics.to_json().to_string()
+    };
+    let a = run(42);
+    assert_eq!(a, run(42), "same seed + same rate must serialize byte-identical");
+    assert_ne!(a, run(43), "a different seed must move the metrics");
+    // and the JSON is well-formed with the advertised headline fields
+    let doc = Json::parse(&a).unwrap();
+    let ttft = doc.get("latency_s").unwrap().get("ttft").unwrap();
+    let p99 = ttft.get("p99").unwrap().as_f64().unwrap();
+    assert!(p99.is_finite() && p99 > 0.0);
+    let goodput = doc.get("throughput").unwrap().get("goodput_tokens_per_s").unwrap();
+    assert!(goodput.as_f64().unwrap() > 0.0);
+    let depth = doc.get("series").unwrap().get("queue_depth").unwrap();
+    assert!(depth.as_arr().unwrap().len() > 1);
+}
+
+#[test]
+fn metrics_and_decisions_invariant_across_pool_sizes_1_and_8() {
+    // real golden-datapath GEMMs execute on an explicit worker pool
+    // inside every scheduler step; the virtual timeline is priced by
+    // the deterministic model, so pool size {1, 8} must not move a
+    // single byte of the metrics or a single scheduling decision
+    let cfg = SchedulerConfig { max_batch: 8, ..SchedulerConfig::default() };
+    let run = |threads: usize| -> (String, Vec<StepRecord>) {
+        let be = PlatinumBackend::ternary();
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let reqs = poisson_spec(200.0, 48, 42).generate().unwrap();
+        let pool = Pool::new(threads);
+        let pcfg = PlatinumConfig::default();
+        let mut wrng = Rng::seed_from(1);
+        let w = wrng.ternary_vec(64 * 64);
+        let packed = pack_ternary(&w, 64, 64, pcfg.c_ternary);
+        let mut exec = |s: &StepRecord, _w: &Workload| -> anyhow::Result<()> {
+            let n = s.tokens.max(1);
+            let mut xrng = Rng::seed_from(0x5EED ^ s.index);
+            let x = xrng.act_vec(64 * n);
+            let (y, _) = ternary_mpgemm_pool(&pcfg, &packed, &x, n, &pool, threads);
+            assert_eq!(y.len(), 64 * n);
+            Ok(())
+        };
+        let r = sched.serve_with(&reqs, &mut VirtualClock::new(), Some(&mut exec)).unwrap();
+        (r.metrics.to_json().to_string(), r.steps)
+    };
+    let (json1, steps1) = run(1);
+    let (json8, steps8) = run(8);
+    assert_eq!(steps1, steps8, "scheduler decisions leaked the pool size");
+    assert_eq!(json1, json8, "metrics JSON leaked the pool size");
+    assert!(!steps1.is_empty());
+}
+
+#[test]
+fn golden_executor_bridge_executes_without_perturbing_the_run() {
+    // the PR 2 serving substrate (GoldenExecutor on the worker pool)
+    // rides along through ExecutorBridge; pricing-only and
+    // functionally-executing runs must agree exactly
+    let cfg = SchedulerConfig { max_batch: 8, ..SchedulerConfig::default() };
+    let be = PlatinumBackend::ternary();
+    let sched = Scheduler::new(&be, TINY, cfg);
+    let reqs = poisson_spec(120.0, 24, 7).generate().unwrap();
+    let priced_only = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+    let mut wrng = Rng::seed_from(11);
+    let w = wrng.ternary_vec(48 * 64);
+    let golden = GoldenExecutor::new(&w, 48, 64, PlatinumConfig::default());
+    let mut bridge = ExecutorBridge::new(golden);
+    let executed =
+        sched.serve_with(&reqs, &mut VirtualClock::new(), Some(&mut bridge)).unwrap();
+    assert_eq!(priced_only.steps, executed.steps);
+    assert_eq!(
+        priced_only.metrics.to_json().to_string(),
+        executed.metrics.to_json().to_string()
+    );
+    assert_eq!(executed.metrics.completed, 24);
+}
+
+#[test]
+fn saturation_triggers_backpressure_bounds_queue_and_never_deadlocks() {
+    let cfg = SchedulerConfig {
+        max_batch: 4,
+        max_queue: 8,
+        ..SchedulerConfig::default()
+    };
+    let be = PlatinumBackend::ternary();
+    let sched = Scheduler::new(&be, TINY, cfg);
+    // offered load 20× the decode capacity of the modelled backend
+    let rate = 20.0 * capacity_rps(&be, &cfg, 6);
+    let reqs = poisson_spec(rate, 96, 5).generate().unwrap();
+    // real pool work inside the loop: overload must not wedge the pool
+    let pool = Pool::new(4);
+    let mut exec = |s: &StepRecord, _w: &Workload| -> anyhow::Result<()> {
+        pool.for_each_chunk(4, s.tokens.max(1) * 64, 0, &|r| {
+            std::hint::black_box(r.len());
+        });
+        Ok(())
+    };
+    let r = sched.serve_with(&reqs, &mut VirtualClock::new(), Some(&mut exec)).unwrap();
+    let m = &r.metrics;
+    assert_eq!(m.offered, 96);
+    assert!(m.rejected > 0, "overload must shed load (admitted {})", m.admitted);
+    assert_eq!(m.admitted + m.rejected, m.offered);
+    assert_eq!(m.completed, m.admitted, "every admitted request must finish");
+    assert!(m.queue_depth_max <= 8, "queue bound violated: {}", m.queue_depth_max);
+    // saturated: the running batch fills up
+    assert!(
+        m.mean_decode_batch() > 0.7 * cfg.max_batch as f64,
+        "saturated batch {:.2}",
+        m.mean_decode_batch()
+    );
+    let p99 = m.ttft.quantile(0.99).unwrap();
+    assert!(p99.is_finite() && p99 > 0.0);
+}
+
+#[test]
+fn batch_size_grows_then_saturates_with_offered_load() {
+    let cfg = SchedulerConfig { max_batch: 8, ..SchedulerConfig::default() };
+    let be = PlatinumBackend::ternary();
+    let sched = Scheduler::new(&be, TINY, cfg);
+    let capacity = capacity_rps(&be, &cfg, 6);
+    let batch_at = |mult: f64| {
+        let reqs = poisson_spec(capacity * mult, 64, 42).generate().unwrap();
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        r.metrics.mean_decode_batch()
+    };
+    let light = batch_at(0.2);
+    let heavy = batch_at(8.0);
+    assert!(light < heavy, "batch must grow with load: {light:.2} vs {heavy:.2}");
+    assert!(light < 0.6 * cfg.max_batch as f64, "light load overfills: {light:.2}");
+    assert!(heavy > 0.7 * cfg.max_batch as f64, "heavy load must saturate: {heavy:.2}");
+}
+
+#[test]
+fn sharded_and_measured_backends_serve_through_the_same_scheduler() {
+    // any registry id drops in as the pricing backend, including the
+    // multi-chip composite and the measured golden kernel
+    let reqs: Vec<TrafficRequest> = (0..6)
+        .map(|i| TrafficRequest {
+            id: i,
+            arrival_s: 0.0,
+            prompt_tokens: 4,
+            output_tokens: 3,
+        })
+        .collect();
+    let cfg = SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() };
+    for id in ["sharded:2:platinum-ternary", "platinum-cpu"] {
+        let be = Registry::with_defaults().build(id).unwrap();
+        let sched = Scheduler::new(be.as_ref(), TINY, cfg);
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        assert_eq!(r.metrics.completed, 6, "{id}");
+        assert!(r.metrics.makespan_s > 0.0, "{id}");
+        assert!(r.metrics.ttft.quantile(0.99).unwrap() > 0.0, "{id}");
+    }
+}
