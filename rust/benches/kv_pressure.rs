@@ -1,0 +1,177 @@
+//! Paged-KV pressure benchmarks: what the memory subsystem buys and
+//! costs.  Three row families, all on the modelled `platinum-ternary`
+//! pricer so the runs are deterministic discrete-event simulations:
+//!
+//! 1. **Prefix caching** — a replayed trace whose requests share a
+//!    system prompt, served with the prefix cache on vs. off: TTFT and
+//!    peak block usage must both drop when the shared span is stored
+//!    once (the PR's acceptance evidence).
+//! 2. **Capacity × policy** — the same load against shrinking block
+//!    pools under swap vs. recompute preemption: eviction counts, swap
+//!    stall, recomputed tokens, makespan.
+//! 3. **DRAM timing models** — the pipe and bank-state models priced on
+//!    a streaming and a row-conflict sweep: the bank model must agree
+//!    with the pipe on streaming (within the documented bound) and
+//!    diverge sharply on conflicts.
+//!
+//! Rows land in `BENCH_kv.json` (override with `BENCH_KV_JSON=<path>`).
+
+use platinum::engine::Registry;
+use platinum::kv::{KvConfig, KvPolicy};
+use platinum::models::BitNetModel;
+use platinum::sim::{DramModelKind, DRAM_BANKS, DRAM_ROW_BYTES};
+use platinum::traffic::{
+    with_shared_prefix, ArrivalPattern, LenDist, LoadSpec, Scheduler, SchedulerConfig,
+    TrafficRequest, VirtualClock,
+};
+use platinum::util::json::{arr, num, obj, s as jstr, Json};
+
+/// 2-layer toy model (256 KV bytes/token): pricing stays microseconds.
+const TINY: BitNetModel = BitNetModel {
+    name: "tiny",
+    params: "2M",
+    hidden: 64,
+    ffn: 160,
+    heads: 4,
+    kv_heads: 4,
+    layers: 2,
+};
+
+/// Replayed trace: 32 requests in 4 bursts of 8, every prompt carrying
+/// the same 96-token system prefix plus a short unique tail.
+fn shared_prompt_trace() -> Vec<TrafficRequest> {
+    let times_s: Vec<f64> = (0..32).map(|i| (i / 8) as f64 * 0.02).collect();
+    let spec = LoadSpec {
+        pattern: ArrivalPattern::Replay { times_s },
+        prompt: LenDist::Uniform { lo: 4, hi: 12 },
+        output: LenDist::Fixed(8),
+        requests: 32,
+        seed: 17,
+    };
+    let mut reqs = spec.generate().unwrap();
+    with_shared_prefix(&mut reqs, 96);
+    reqs
+}
+
+fn serve(reqs: &[TrafficRequest], kv: KvConfig) -> platinum::traffic::TrafficMetrics {
+    let be = Registry::with_defaults().build("platinum-ternary").unwrap();
+    let cfg = SchedulerConfig { kv, ..SchedulerConfig::default() };
+    let sched = Scheduler::new(be.as_ref(), TINY, cfg);
+    sched.serve(reqs, &mut VirtualClock::new()).unwrap().metrics
+}
+
+fn main() {
+    let mut rows: Vec<Json> = Vec::new();
+    let reqs = shared_prompt_trace();
+
+    // --- 1. prefix caching: TTFT + peak blocks, cache on vs off ------------
+    println!("== prefix caching on a replayed shared-prompt trace ==");
+    let mut by_cache: Vec<(bool, f64, u64)> = Vec::new();
+    for prefix_cache in [true, false] {
+        let kv = KvConfig { prefix_cache, ..KvConfig::default() };
+        let m = serve(&reqs, kv);
+        let ttft = m.ttft.mean().unwrap();
+        let label = if prefix_cache { "on" } else { "off" };
+        println!(
+            "  cache {label:<3}  mean TTFT {:>8.3} ms  peak blocks {:>4}  \
+             hits {}/{}  tokens saved {}",
+            ttft * 1e3,
+            m.kv.allocated_max,
+            m.kv.prefix_hits,
+            m.kv.prefix_lookups,
+            m.kv.prefix_tokens_saved
+        );
+        rows.push(obj(vec![
+            ("name", jstr(&format!("kv/prefix_cache_{label}"))),
+            ("prefix_cache", jstr(label)),
+            ("mean_ttft_s", num(ttft)),
+            ("p99_ttft_s", m.ttft.quantile(0.99).map(num).unwrap_or(Json::Null)),
+            ("allocated_blocks_max", num(m.kv.allocated_max as f64)),
+            ("prefix_hits", num(m.kv.prefix_hits as f64)),
+            ("prefix_tokens_saved", num(m.kv.prefix_tokens_saved as f64)),
+            ("makespan_s", num(m.makespan_s)),
+        ]));
+        by_cache.push((prefix_cache, ttft, m.kv.allocated_max));
+    }
+    let (on, off) = (&by_cache[0], &by_cache[1]);
+    assert!(on.1 < off.1, "prefix caching must cut TTFT: {} vs {}", on.1, off.1);
+    assert!(on.2 < off.2, "prefix caching must cut peak blocks: {} vs {}", on.2, off.2);
+    println!(
+        "  -> TTFT x{:.2}, peak blocks x{:.2} with the cache on",
+        on.1 / off.1,
+        on.2 as f64 / off.2 as f64
+    );
+
+    // --- 2. capacity sweep × pressure policy -------------------------------
+    // TINY blocks are 4 KiB at the default 16 tok/block; shrink the pool
+    // until preemption starts, under both policies
+    println!("\n== capacity x policy (shrinking pool, same load) ==");
+    for sram_kib in [512, 96, 48] {
+        for policy in [KvPolicy::Recompute, KvPolicy::Swap] {
+            let kv = KvConfig { sram_kib, dram_mib: 0, policy, ..KvConfig::default() };
+            let m = serve(&reqs, kv);
+            assert_eq!(m.completed, 32, "pressure must delay, not drop");
+            println!(
+                "  {:>4} KiB {:<9}  makespan {:>8.3} ms  evictions {:>3}  \
+                 swap stall {:>7.3} ms  recomputed {:>4} tok  util {:>5.2}",
+                sram_kib,
+                policy.label(),
+                m.makespan_s * 1e3,
+                m.kv.evictions,
+                m.kv.swap_stall_s * 1e3,
+                m.kv.recomputed_tokens,
+                m.kv.utilization()
+            );
+            rows.push(obj(vec![
+                ("name", jstr(&format!("kv/pressure_{}kib_{}", sram_kib, policy.label()))),
+                ("sram_kib", num(sram_kib as f64)),
+                ("policy", jstr(policy.label())),
+                ("capacity_blocks", num(m.kv.capacity_blocks as f64)),
+                ("makespan_s", num(m.makespan_s)),
+                ("evictions", num(m.kv.evictions as f64)),
+                ("swap_stall_s", num(m.kv.swap_stall_s)),
+                ("recomputed_tokens", num(m.kv.recomputed_tokens as f64)),
+                ("utilization", num(m.kv.utilization())),
+                ("mean_ttft_s", m.ttft.mean().map(num).unwrap_or(Json::Null)),
+            ]));
+        }
+    }
+
+    // --- 3. DRAM timing models: streaming agreement, conflict divergence ---
+    println!("\n== dram models: 64 KiB streaming vs row-conflict stride ==");
+    let sweep = |kind: DramModelKind, stride: u64, label: &str| -> u64 {
+        let mut dram = kind.build(64e9, 500e6);
+        let mut cycles = 0u64;
+        for i in 0..256u64 {
+            cycles += dram.transfer_cycles_at(i * stride, 256);
+        }
+        println!("  {:<4} {label:<18} {cycles:>8} cycles", kind.label());
+        cycles
+    };
+    let conflict_stride = DRAM_ROW_BYTES as u64 * DRAM_BANKS as u64;
+    let pipe_stream = sweep(DramModelKind::Pipe, 256, "streaming");
+    let bank_stream = sweep(DramModelKind::Bank, 256, "streaming");
+    let pipe_conflict = sweep(DramModelKind::Pipe, conflict_stride, "conflict stride");
+    let bank_conflict = sweep(DramModelKind::Bank, conflict_stride, "conflict stride");
+    let stream_rel = (bank_stream as f64 - pipe_stream as f64).abs() / pipe_stream as f64;
+    let conflict_x = bank_conflict as f64 / pipe_conflict as f64;
+    assert!(stream_rel < 0.25, "streaming agreement bound blown: {stream_rel:.3}");
+    assert!(conflict_x > 3.0, "conflicts must diverge: x{conflict_x:.1}");
+    println!("  -> streaming divergence {:.1}%, conflict slowdown x{conflict_x:.1}", stream_rel * 100.0);
+    rows.push(obj(vec![
+        ("name", jstr("kv/dram_model_agreement")),
+        ("pipe_stream_cycles", num(pipe_stream as f64)),
+        ("bank_stream_cycles", num(bank_stream as f64)),
+        ("stream_rel_divergence", num(stream_rel)),
+        ("pipe_conflict_cycles", num(pipe_conflict as f64)),
+        ("bank_conflict_cycles", num(bank_conflict as f64)),
+        ("conflict_slowdown_x", num(conflict_x)),
+    ]));
+
+    let path = std::env::var("BENCH_KV_JSON").unwrap_or_else(|_| "BENCH_kv.json".to_string());
+    let doc = obj(vec![("bench", jstr("kv_pressure")), ("results", arr(rows))]);
+    match std::fs::write(&path, doc.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

@@ -24,7 +24,7 @@ use crate::encoding::pack_ternary;
 use crate::energy::AreaModel;
 use crate::lut::ternary_mpgemm_pool;
 use crate::runtime::pool::{self, Pool};
-use crate::sim::{simulate_gemm, Activity, EnergyBreakdown, PhaseCycles, Utilization};
+use crate::sim::{simulate_gemm, Activity, DramChannel, EnergyBreakdown, PhaseCycles, Utilization};
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -190,8 +190,11 @@ impl Backend for PlatinumBackend {
             pes: Some(self.cfg.num_pes()),
             area_mm2: Some(AreaModel::platinum(&self.cfg).breakdown().total()),
             tech_nm: Some(28),
-            notes: "cycle-accurate simulator, §IV phase laws (paper: 0.955 mm², 1534 GOP/s)"
-                .into(),
+            notes: format!(
+                "cycle-accurate simulator, §IV phase laws (paper: 0.955 mm², 1534 GOP/s); \
+                 dram eff {:.2} (PLATINUM_DRAM_EFF)",
+                DramChannel::from_env(self.cfg.dram_bw, self.cfg.freq_hz).efficiency
+            ),
         }
     }
 

@@ -1,0 +1,219 @@
+//! Refcounted fixed-size block pool with an SRAM/DRAM tier split.
+//!
+//! Block ids are dense integers; ids below `sram_blocks` model the
+//! on-chip KV carve-out, the rest the DRAM budget.  The free list is a
+//! `BTreeSet`, so allocation always hands out the lowest free id —
+//! deterministic, and SRAM fills before anything spills to DRAM.
+//! Copy-on-write sharing is plain refcounting: a prefix-cache hit
+//! retains a block, release only frees it when the last holder lets go.
+
+use std::collections::BTreeSet;
+
+/// Index of one KV block (dense, lowest-first allocation).
+pub type BlockId = u32;
+
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    /// Modelled capacity in blocks (SRAM + DRAM).
+    capacity: usize,
+    /// Ids below this line are SRAM-resident.
+    sram_blocks: usize,
+    /// Refcount per ever-created id (0 = free or never reused).
+    refcount: Vec<u32>,
+    /// Freed ids awaiting reuse (lowest first).
+    free: BTreeSet<BlockId>,
+    /// Blocks with refcount > 0.
+    allocated: usize,
+    /// Allocated blocks on the SRAM side of the line.
+    sram_in_use: usize,
+}
+
+impl BlockPool {
+    pub fn new(capacity: usize, sram_blocks: usize) -> BlockPool {
+        assert!(capacity >= 1, "pool needs at least one block");
+        BlockPool {
+            capacity,
+            sram_blocks: sram_blocks.min(capacity),
+            refcount: Vec::new(),
+            free: BTreeSet::new(),
+            allocated: 0,
+            sram_in_use: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn sram_blocks(&self) -> usize {
+        self.sram_blocks
+    }
+
+    pub fn allocated(&self) -> usize {
+        self.allocated
+    }
+
+    pub fn sram_in_use(&self) -> usize {
+        self.sram_in_use
+    }
+
+    /// Blocks allocated past the modelled capacity (the single-sequence
+    /// escape hatch; 0 in healthy operation).
+    pub fn overflow(&self) -> usize {
+        self.allocated.saturating_sub(self.capacity)
+    }
+
+    /// Blocks an `alloc` could hand out without overflowing.
+    pub fn available(&self) -> usize {
+        self.free.len() + self.capacity.saturating_sub(self.refcount.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.allocated == 0
+    }
+
+    pub fn refcount(&self, id: BlockId) -> u32 {
+        self.refcount.get(id as usize).copied().unwrap_or(0)
+    }
+
+    fn take(&mut self, id: BlockId) {
+        debug_assert_eq!(self.refcount[id as usize], 0, "allocating a live block {id}");
+        self.refcount[id as usize] = 1;
+        self.allocated += 1;
+        if (id as usize) < self.sram_blocks {
+            self.sram_in_use += 1;
+        }
+    }
+
+    /// Allocate the lowest free block, `None` when the pool is full.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = if let Some(id) = self.free.pop_first() {
+            id
+        } else if self.refcount.len() < self.capacity {
+            self.refcount.push(0);
+            (self.refcount.len() - 1) as BlockId
+        } else {
+            return None;
+        };
+        self.take(id);
+        Some(id)
+    }
+
+    /// Allocate even past capacity (the scheduler's guarantee that a
+    /// lone oversized sequence always terminates).  Prefers a regular
+    /// allocation when one is possible.
+    pub fn alloc_overflow(&mut self) -> BlockId {
+        if let Some(id) = self.alloc() {
+            return id;
+        }
+        self.refcount.push(0);
+        let id = (self.refcount.len() - 1) as BlockId;
+        self.take(id);
+        id
+    }
+
+    /// Add a sharer (prefix-cache hit / CoW parent).
+    pub fn retain(&mut self, id: BlockId) {
+        debug_assert!(self.refcount(id) > 0, "retain on free block {id}");
+        if let Some(rc) = self.refcount.get_mut(id as usize) {
+            *rc += 1;
+        }
+    }
+
+    /// Drop one reference; returns `true` when the block became free.
+    /// Saturating: a double release is a loud `debug_assert` in debug
+    /// builds and a no-op (never corrupting the free list) in release.
+    pub fn release(&mut self, id: BlockId) -> bool {
+        debug_assert!(self.refcount(id) > 0, "double release of block {id}");
+        let Some(rc) = self.refcount.get_mut(id as usize) else {
+            return false;
+        };
+        if *rc == 0 {
+            return false;
+        }
+        *rc -= 1;
+        if *rc > 0 {
+            return false;
+        }
+        self.allocated -= 1;
+        if (id as usize) < self.sram_blocks {
+            self.sram_in_use -= 1;
+        }
+        self.free.insert(id);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_prefers_lowest_ids_sram_first() {
+        let mut p = BlockPool::new(8, 2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        let c = p.alloc().unwrap();
+        assert_eq!((a, b, c), (0, 1, 2));
+        assert_eq!(p.sram_in_use(), 2, "ids below the line fill SRAM first");
+        p.release(a);
+        assert_eq!(p.sram_in_use(), 1);
+        // the freed SRAM block is reused before a fresh DRAM id
+        assert_eq!(p.alloc().unwrap(), 0);
+        assert_eq!(p.sram_in_use(), 2);
+    }
+
+    #[test]
+    fn refcounted_sharing_frees_on_last_release() {
+        let mut p = BlockPool::new(4, 0);
+        let id = p.alloc().unwrap();
+        p.retain(id);
+        p.retain(id);
+        assert_eq!(p.refcount(id), 3);
+        assert!(!p.release(id));
+        assert!(!p.release(id));
+        assert_eq!(p.allocated(), 1);
+        assert!(p.release(id), "last holder frees the block");
+        assert!(p.is_empty());
+        assert_eq!(p.available(), 4);
+    }
+
+    #[test]
+    fn full_pool_rejects_then_overflow_escapes() {
+        let mut p = BlockPool::new(2, 1);
+        let a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        assert_eq!(p.alloc(), None);
+        assert_eq!(p.available(), 0);
+        let c = p.alloc_overflow();
+        assert_eq!(c, 2, "overflow extends past capacity");
+        assert_eq!(p.overflow(), 1);
+        // freeing a real block drains overflow accounting
+        p.release(a);
+        assert_eq!(p.overflow(), 0);
+        assert_eq!(p.available(), 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "double release")]
+    fn double_release_is_loud_in_debug() {
+        let mut p = BlockPool::new(2, 0);
+        let id = p.alloc().unwrap();
+        p.release(id);
+        p.release(id);
+    }
+
+    #[test]
+    fn release_of_free_block_is_saturating() {
+        // the release-build contract: no free-list corruption
+        let mut p = BlockPool::new(2, 0);
+        let id = p.alloc().unwrap();
+        assert!(p.release(id));
+        if !cfg!(debug_assertions) {
+            assert!(!p.release(id));
+            assert_eq!(p.available(), 2);
+            assert_eq!(p.alloc(), Some(id));
+        }
+    }
+}

@@ -1,0 +1,584 @@
+//! Per-sequence block tables, prefix caching and preemption.
+//!
+//! [`KvCache`] owns the [`BlockPool`] and exposes the four verbs the
+//! scheduler needs:
+//!
+//! * `try_admit` — all-or-nothing block reservation for a prompt.  A
+//!   prefix-cache hit retains the cache's full blocks (zero new blocks
+//!   for the shared span) and reports how many prompt tokens the
+//!   prefill can skip; a partial tail block is copy-on-write copied so
+//!   appends never touch shared storage.
+//! * `append` — one decode token; allocates a block when the tail
+//!   fills.
+//! * `preempt_swap` / `preempt_recompute` — evict a sequence under
+//!   pressure, either spilling private blocks (shared prefix blocks
+//!   stay pinned — they are other sequences' storage too) or dropping
+//!   everything for a later re-prefill.
+//! * `release` — a finished sequence returns every reference.
+//!
+//! Accounting model, not a data store: blocks carry no payload.  What
+//! is tracked — refcounts, residency, traffic volumes — is exactly what
+//! the timing and capacity models need.  All bookkeeping is
+//! `BTreeMap`/`BTreeSet`-backed, so iteration order (and therefore the
+//! serving timeline) is deterministic.
+
+use super::block::{BlockId, BlockPool};
+use super::{KvConfig, KvStats};
+use crate::sim::DramModel;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Outcome of a successful admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Admission {
+    /// Prompt tokens the prefill can skip (prefix-cache hit span).
+    pub cached_tokens: usize,
+    /// Blocks newly allocated for this sequence (shared retains excluded).
+    pub new_blocks: usize,
+}
+
+#[derive(Debug, Clone)]
+struct SeqTable {
+    /// Block per token-slot, in position order.
+    blocks: Vec<BlockId>,
+    /// Tokens currently stored.
+    tokens: usize,
+    /// Leading blocks shared with the prefix cache (never written).
+    shared: usize,
+}
+
+#[derive(Debug, Clone)]
+struct SwappedSeq {
+    tokens: usize,
+    /// Shared prefix blocks stay retained while swapped out — they are
+    /// other sequences' live storage and cost nothing to keep mapped.
+    shared_blocks: Vec<BlockId>,
+    /// Private residency to restore (and re-read over DRAM) on swap-in.
+    private_blocks: usize,
+}
+
+/// Admission shape for one prompt (pure function of cache state).
+#[derive(Debug, Clone, Copy)]
+struct AdmitPlan {
+    /// Clamped shared-prefix span (0 = no sharing possible).
+    s: usize,
+    cached: usize,
+    hit: bool,
+    /// First admission carrying this prefix: build the cache entry.
+    populate: bool,
+    /// Cache-held blocks covering the prefix (populate path).
+    prefix_blocks: usize,
+    /// Leading seq slots that retain cache blocks instead of allocating.
+    shared_full: usize,
+    /// Private slots to allocate (includes the CoW tail slot).
+    private: usize,
+    /// Total fresh allocations (private + cache blocks when populating).
+    new_blocks: usize,
+    /// Partial tail block must be copy-on-write copied.
+    cow: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    block_tokens: usize,
+    block_bytes: u64,
+    pool: BlockPool,
+    prefix_enabled: bool,
+    /// Cache-held references covering `prefix_tokens` of system prompt.
+    prefix_blocks: Vec<BlockId>,
+    prefix_tokens: usize,
+    tables: BTreeMap<u64, SeqTable>,
+    swapped: BTreeMap<u64, SwappedSeq>,
+    stats: KvStats,
+}
+
+impl KvCache {
+    pub fn new(cfg: &KvConfig, bytes_per_token: u64) -> Result<KvCache> {
+        if cfg.block_tokens == 0 {
+            bail!("kv block size must be ≥ 1 token");
+        }
+        if bytes_per_token == 0 {
+            bail!("kv bytes/token must be ≥ 1");
+        }
+        let block_bytes = cfg.block_tokens as u64 * bytes_per_token;
+        let capacity = (cfg.capacity_bytes() / block_bytes) as usize;
+        if capacity == 0 {
+            bail!(
+                "kv capacity {} B holds no {} B block — raise \
+                 --kv-sram-kb/--kv-dram-mb or shrink --kv-block",
+                cfg.capacity_bytes(),
+                block_bytes
+            );
+        }
+        let sram_blocks = (cfg.sram_kib as u64 * 1024 / block_bytes) as usize;
+        let stats = KvStats {
+            block_tokens: cfg.block_tokens as u64,
+            block_bytes,
+            bytes_per_token,
+            capacity_blocks: capacity as u64,
+            sram_blocks: sram_blocks.min(capacity) as u64,
+            ..KvStats::default()
+        };
+        Ok(KvCache {
+            block_tokens: cfg.block_tokens,
+            block_bytes,
+            pool: BlockPool::new(capacity, sram_blocks),
+            prefix_enabled: cfg.prefix_cache,
+            prefix_blocks: Vec::new(),
+            prefix_tokens: 0,
+            tables: BTreeMap::new(),
+            swapped: BTreeMap::new(),
+            stats,
+        })
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn block_bytes(&self) -> u64 {
+        self.block_bytes
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    pub fn available_blocks(&self) -> usize {
+        self.pool.available()
+    }
+
+    pub fn live_seqs(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn swapped_seqs(&self) -> usize {
+        self.swapped.len()
+    }
+
+    pub fn stats(&self) -> &KvStats {
+        &self.stats
+    }
+
+    /// True when no sequence state remains (only the prefix cache may
+    /// still hold blocks) — the end-of-run invariant.
+    pub fn is_quiescent(&self) -> bool {
+        self.tables.is_empty()
+            && self.swapped.is_empty()
+            && self.pool.allocated() == self.prefix_blocks.len()
+    }
+
+    /// Prompt tokens an admission would skip right now (non-mutating;
+    /// the scheduler prices prefill on computed = prompt − cached).
+    pub fn cached_tokens(&self, prompt_tokens: usize, shared_prefix: usize) -> usize {
+        self.plan(prompt_tokens, shared_prefix).cached
+    }
+
+    fn plan(&self, prompt: usize, shared_prefix: usize) -> AdmitPlan {
+        let b = self.block_tokens;
+        let total_slots = prompt.div_ceil(b).max(1);
+        let fully_private = AdmitPlan {
+            s: 0,
+            cached: 0,
+            hit: false,
+            populate: false,
+            prefix_blocks: 0,
+            shared_full: 0,
+            private: total_slots,
+            new_blocks: total_slots,
+            cow: false,
+        };
+        // always compute ≥ 1 token so decode has a starting position
+        let s = shared_prefix.min(prompt.saturating_sub(1));
+        if !self.prefix_enabled || s == 0 {
+            return fully_private;
+        }
+        let hit = self.prefix_tokens == s;
+        let populate = !hit && self.prefix_tokens == 0;
+        if !hit && !populate {
+            // cache holds a *different* prefix (single-system-prompt
+            // scope): count the lookup, share nothing
+            return AdmitPlan { s, ..fully_private };
+        }
+        let shared_full = s / b;
+        let private = total_slots - shared_full;
+        let prefix_blocks = if populate { s.div_ceil(b) } else { 0 };
+        AdmitPlan {
+            s,
+            cached: if hit { s } else { 0 },
+            hit,
+            populate,
+            prefix_blocks,
+            shared_full,
+            private,
+            new_blocks: private + prefix_blocks,
+            cow: s % b != 0,
+        }
+    }
+
+    fn alloc_block(&mut self, allow_overflow: bool) -> BlockId {
+        match self.pool.alloc() {
+            Some(id) => id,
+            None => {
+                debug_assert!(allow_overflow, "allocation past a failed admission check");
+                self.pool.alloc_overflow()
+            }
+        }
+    }
+
+    fn note_usage(&mut self) {
+        self.stats.allocated_max = self.stats.allocated_max.max(self.pool.allocated() as u64);
+        self.stats.sram_max = self.stats.sram_max.max(self.pool.sram_in_use() as u64);
+        self.stats.overflow_max = self.stats.overflow_max.max(self.pool.overflow() as u64);
+    }
+
+    /// All-or-nothing block reservation for a new sequence.  `None`
+    /// when the pool cannot supply the plan and `allow_overflow` is
+    /// off (the caller keeps the request queued — block backpressure).
+    pub fn try_admit(
+        &mut self,
+        id: u64,
+        prompt_tokens: usize,
+        shared_prefix: usize,
+        allow_overflow: bool,
+    ) -> Option<Admission> {
+        debug_assert!(prompt_tokens > 0, "empty prompt");
+        debug_assert!(!self.tables.contains_key(&id), "seq {id} admitted twice");
+        debug_assert!(!self.swapped.contains_key(&id), "seq {id} is swapped out");
+        let plan = self.plan(prompt_tokens, shared_prefix);
+        if !allow_overflow && plan.new_blocks > self.pool.available() {
+            return None;
+        }
+        if plan.s > 0 {
+            self.stats.prefix_lookups += 1;
+            if plan.hit {
+                self.stats.prefix_hits += 1;
+                self.stats.prefix_tokens_saved += plan.cached as u64;
+            }
+        }
+        if plan.populate {
+            // the cache itself holds one reference per prefix block;
+            // this sequence computes the tokens that fill them
+            let blocks: Vec<BlockId> =
+                (0..plan.prefix_blocks).map(|_| self.alloc_block(allow_overflow)).collect();
+            self.prefix_blocks = blocks;
+            self.prefix_tokens = plan.s;
+        }
+        let mut blocks = Vec::with_capacity(plan.shared_full + plan.private);
+        for i in 0..plan.shared_full {
+            let b = self.prefix_blocks[i];
+            self.pool.retain(b);
+            blocks.push(b);
+        }
+        if plan.cow {
+            self.stats.cow_copies += 1;
+        }
+        for _ in 0..plan.private {
+            let b = self.alloc_block(allow_overflow);
+            blocks.push(b);
+        }
+        self.tables.insert(
+            id,
+            SeqTable { blocks, tokens: prompt_tokens, shared: plan.shared_full },
+        );
+        self.note_usage();
+        Some(Admission { cached_tokens: plan.cached, new_blocks: plan.new_blocks })
+    }
+
+    /// Blocks the next decode token of `id` will allocate (0 or 1).
+    pub fn append_blocks_needed(&self, id: u64) -> usize {
+        let t = self.tables.get(&id).expect("append_blocks_needed on unknown seq");
+        usize::from(t.tokens == t.blocks.len() * self.block_tokens)
+    }
+
+    /// Store one decode token.  `false` when a block is needed but the
+    /// pool is dry and overflow is not allowed (caller must preempt).
+    pub fn append(&mut self, id: u64, allow_overflow: bool) -> bool {
+        let need = self.append_blocks_needed(id);
+        if need > 0 && !allow_overflow && self.pool.available() == 0 {
+            return false;
+        }
+        let fresh = if need > 0 { Some(self.alloc_block(allow_overflow)) } else { None };
+        let t = self.tables.get_mut(&id).expect("append on unknown seq");
+        if let Some(b) = fresh {
+            t.blocks.push(b);
+        } else {
+            // the tail block is writable only if this seq owns it
+            debug_assert!(t.blocks.len() > t.shared, "append into a shared block");
+        }
+        t.tokens += 1;
+        self.note_usage();
+        need == 0 || fresh.is_some()
+    }
+
+    /// A finished sequence returns every reference.  Double release is
+    /// loud in debug builds, a no-op in release.
+    pub fn release(&mut self, id: u64) {
+        let Some(t) = self.tables.remove(&id) else {
+            debug_assert!(false, "double release of seq {id}");
+            return;
+        };
+        for b in t.blocks {
+            self.pool.release(b);
+        }
+        self.note_usage();
+    }
+
+    /// Swap-out preemption: spill private blocks (returned for DRAM
+    /// write pricing), keep shared prefix blocks retained.
+    pub fn preempt_swap(&mut self, id: u64) -> Vec<BlockId> {
+        let Some(t) = self.tables.remove(&id) else {
+            debug_assert!(false, "preempt of unknown seq {id}");
+            return Vec::new();
+        };
+        let shared_blocks = t.blocks[..t.shared].to_vec();
+        let private = t.blocks[t.shared..].to_vec();
+        for &b in &private {
+            self.pool.release(b);
+        }
+        self.stats.evictions += 1;
+        self.stats.swap_outs += 1;
+        self.stats.swapped_out_bytes += private.len() as u64 * self.block_bytes;
+        self.swapped.insert(
+            id,
+            SwappedSeq { tokens: t.tokens, shared_blocks, private_blocks: private.len() },
+        );
+        self.note_usage();
+        private
+    }
+
+    /// Restore a swapped sequence; returns the freshly allocated block
+    /// ids (for DRAM read pricing), or `None` when blocks are short and
+    /// overflow is not allowed.
+    pub fn resume_swapped(&mut self, id: u64, allow_overflow: bool) -> Option<Vec<BlockId>> {
+        let need = self.swapped.get(&id).expect("resume of unknown seq").private_blocks;
+        if !allow_overflow && need > self.pool.available() {
+            return None;
+        }
+        let sw = self.swapped.remove(&id).unwrap();
+        let fresh: Vec<BlockId> = (0..need).map(|_| self.alloc_block(allow_overflow)).collect();
+        let mut blocks = sw.shared_blocks;
+        let shared = blocks.len();
+        blocks.extend_from_slice(&fresh);
+        self.stats.swap_ins += 1;
+        self.stats.swapped_in_bytes += need as u64 * self.block_bytes;
+        self.tables.insert(id, SeqTable { blocks, tokens: sw.tokens, shared });
+        self.note_usage();
+        Some(fresh)
+    }
+
+    /// Recompute preemption: drop everything; the sequence re-prefills
+    /// later (prefix hits still discount it).  Counts the resident
+    /// tokens whose KV must be recomputed.
+    pub fn preempt_recompute(&mut self, id: u64) {
+        let Some(t) = self.tables.remove(&id) else {
+            debug_assert!(false, "preempt of unknown seq {id}");
+            return;
+        };
+        self.stats.recomputed_tokens += t.tokens as u64;
+        for b in t.blocks {
+            self.pool.release(b);
+        }
+        self.stats.evictions += 1;
+        self.note_usage();
+    }
+
+    /// Drop the cache's own prefix references when no sequence shares
+    /// them (last-resort reclaim under pressure).  Returns blocks freed.
+    pub fn reclaim_prefix(&mut self) -> usize {
+        if self.prefix_blocks.is_empty()
+            || self.prefix_blocks.iter().any(|&b| self.pool.refcount(b) > 1)
+        {
+            return 0;
+        }
+        let blocks = std::mem::take(&mut self.prefix_blocks);
+        let n = blocks.len();
+        for b in blocks {
+            self.pool.release(b);
+        }
+        self.prefix_tokens = 0;
+        self.stats.prefix_evictions += 1;
+        self.note_usage();
+        n
+    }
+
+    /// Accumulate timeline stall charged to swap traffic.
+    pub fn note_swap_stall(&mut self, dt: f64) {
+        self.stats.swap_stall_s += dt;
+    }
+
+    /// Final stats for the metrics JSON, annotated with the DRAM timing
+    /// model that priced the swap traffic.
+    pub fn snapshot(&self, dram: &dyn DramModel) -> KvStats {
+        let mut st = self.stats.clone();
+        st.allocated_final = self.pool.allocated() as u64;
+        st.dram_model = dram.label();
+        st.dram = dram.row_buffer().unwrap_or_default();
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::DramModelKind;
+
+    /// 4-token blocks at 64 B/token → 256 B blocks, SRAM-only budget
+    /// (1 KiB = 4 blocks unless `cache()` resizes it).
+    fn tiny_cfg() -> KvConfig {
+        KvConfig { block_tokens: 4, sram_kib: 1, dram_mib: 0, ..KvConfig::default() }
+    }
+
+    fn cache(total_blocks: usize) -> KvCache {
+        // size SRAM to exactly `total_blocks` 256 B blocks
+        let cfg = KvConfig {
+            sram_kib: total_blocks * 256 / 1024 + usize::from(total_blocks * 256 % 1024 != 0),
+            ..tiny_cfg()
+        };
+        let kv = KvCache::new(&cfg, 64).unwrap();
+        assert!(kv.capacity_blocks() >= total_blocks);
+        kv
+    }
+
+    #[test]
+    fn capacity_is_sized_from_bytes_per_token() {
+        let cfg = KvConfig { block_tokens: 16, sram_kib: 512, dram_mib: 2, ..KvConfig::default() };
+        // TINY-model bytes/token: 2 × 4 kv_heads × 16 head_dim × 2 layers = 256
+        let kv = KvCache::new(&cfg, 256).unwrap();
+        assert_eq!(kv.block_bytes(), 4096);
+        assert_eq!(kv.capacity_blocks(), (512 * 1024 + 2 * 1024 * 1024) / 4096);
+        assert_eq!(kv.stats().sram_blocks, 128);
+        // a zero-capacity config is a loud error, not a silent hang
+        let bad = KvConfig { block_tokens: 64, sram_kib: 1, dram_mib: 0, ..KvConfig::default() };
+        assert!(KvCache::new(&bad, 1 << 20).is_err());
+    }
+
+    #[test]
+    fn repeated_system_prompt_costs_zero_new_blocks_for_the_shared_span() {
+        let mut kv = cache(64);
+        // prompt = 8 shared + 2 unique, block = 4 → slots [S S P]
+        let first = kv.try_admit(1, 10, 8, false).unwrap();
+        assert_eq!(first.cached_tokens, 0, "first sighting computes everything");
+        assert_eq!(first.new_blocks, 2 + 1, "2 cache blocks + 1 private");
+        let second = kv.try_admit(2, 10, 8, false).unwrap();
+        assert_eq!(second.cached_tokens, 8, "full shared span skipped");
+        assert_eq!(second.new_blocks, 1, "only the private tail allocates");
+        let st = kv.stats();
+        assert_eq!(st.prefix_lookups, 2);
+        assert_eq!(st.prefix_hits, 1);
+        assert_eq!(st.prefix_tokens_saved, 8);
+        assert_eq!(st.cow_copies, 0, "aligned prefix needs no CoW");
+        // both finish: only the cache's own blocks remain
+        kv.release(1);
+        kv.release(2);
+        assert!(kv.is_quiescent());
+        assert_eq!(kv.reclaim_prefix(), 2);
+        assert_eq!(kv.available_blocks(), kv.capacity_blocks());
+    }
+
+    #[test]
+    fn unaligned_prefix_copies_the_tail_block_on_write() {
+        let mut kv = cache(64);
+        // s = 6 (1 full block + 2 tokens), prompt = 9 → slots [S C P]
+        let a = kv.try_admit(1, 9, 6, false).unwrap();
+        assert_eq!(a.new_blocks, 2 + 2, "cache 2 + private (CoW tail + 1)");
+        let b = kv.try_admit(2, 9, 6, false).unwrap();
+        assert_eq!(b.cached_tokens, 6);
+        assert_eq!(b.new_blocks, 2, "CoW tail + private tail");
+        assert_eq!(kv.stats().cow_copies, 2);
+        // appends land in private storage, never the shared block
+        for _ in 0..8 {
+            assert!(kv.append(1, false));
+        }
+        assert_eq!(kv.stats().allocated_max, 4 + 2 + 2);
+    }
+
+    #[test]
+    fn admission_respects_block_backpressure_and_overflow_escapes() {
+        let mut kv = cache(4);
+        let cap = kv.capacity_blocks();
+        assert!(kv.try_admit(1, 4 * cap, 0, false).is_some(), "exactly fits");
+        assert!(kv.try_admit(2, 4, 0, false).is_none(), "pool is full");
+        assert_eq!(kv.stats().overflow_max, 0);
+        let adm = kv.try_admit(2, 8, 0, true).unwrap();
+        assert_eq!(adm.new_blocks, 2);
+        assert!(kv.stats().overflow_max >= 2, "escape hatch is accounted");
+        kv.release(1);
+        kv.release(2);
+        assert!(kv.is_quiescent());
+    }
+
+    #[test]
+    fn swap_keeps_shared_blocks_pinned_and_restores_residency() {
+        let mut kv = cache(64);
+        kv.try_admit(1, 10, 8, false).unwrap();
+        kv.try_admit(2, 10, 8, false).unwrap();
+        let before = kv.stats().allocated_max;
+        let spilled = kv.preempt_swap(2);
+        assert_eq!(spilled.len(), 1, "only the private tail spills");
+        assert_eq!(kv.swapped_seqs(), 1);
+        assert_eq!(kv.stats().swapped_out_bytes, 256);
+        // seq 1 still decodes into its own storage
+        assert!(kv.append(1, false));
+        let fresh = kv.resume_swapped(2, false).unwrap();
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(kv.stats().swap_ins, 1);
+        assert!(kv.append(2, false), "restored seq keeps decoding");
+        assert!(kv.stats().allocated_max >= before);
+        kv.release(1);
+        kv.release(2);
+        assert!(kv.is_quiescent());
+    }
+
+    #[test]
+    fn recompute_preemption_drops_everything_and_counts_waste() {
+        let mut kv = cache(64);
+        kv.try_admit(1, 10, 8, false).unwrap();
+        for _ in 0..3 {
+            kv.append(1, false);
+        }
+        kv.preempt_recompute(1);
+        assert_eq!(kv.stats().evictions, 1);
+        assert_eq!(kv.stats().recomputed_tokens, 13);
+        assert!(kv.is_quiescent());
+        // the prefix cache survives: a re-admission still hits
+        let again = kv.try_admit(1, 10, 8, false).unwrap();
+        assert_eq!(again.cached_tokens, 8);
+    }
+
+    #[test]
+    fn prefix_reclaim_refuses_while_shared() {
+        let mut kv = cache(64);
+        kv.try_admit(1, 10, 8, false).unwrap();
+        assert_eq!(kv.reclaim_prefix(), 0, "seq 1 shares the cache blocks");
+        kv.release(1);
+        assert_eq!(kv.reclaim_prefix(), 2);
+        assert_eq!(kv.stats().prefix_evictions, 1);
+        // cold again: next admission repopulates
+        let adm = kv.try_admit(2, 10, 8, false).unwrap();
+        assert_eq!(adm.cached_tokens, 0);
+    }
+
+    #[test]
+    fn disabled_prefix_cache_shares_nothing() {
+        let cfg = KvConfig { prefix_cache: false, ..tiny_cfg() };
+        let mut kv = KvCache::new(&cfg, 64).unwrap();
+        let a = kv.try_admit(1, 10, 8, false).unwrap();
+        let b = kv.try_admit(2, 10, 8, false).unwrap();
+        assert_eq!((a.cached_tokens, b.cached_tokens), (0, 0));
+        assert_eq!(a.new_blocks, 3);
+        assert_eq!(b.new_blocks, 3, "every admission pays full price");
+        assert_eq!(kv.stats().prefix_lookups, 0);
+    }
+
+    #[test]
+    fn snapshot_attaches_the_dram_model() {
+        let kv = cache(8);
+        let mut dram = DramModelKind::Bank.build(64e9, 500e6);
+        dram.transfer_cycles_at(0, 4096);
+        let st = kv.snapshot(dram.as_ref());
+        assert_eq!(st.dram_model, "bank");
+        assert_eq!(st.dram.bursts, 64);
+        assert_eq!(st.allocated_final, 0);
+    }
+}

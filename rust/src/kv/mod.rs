@@ -1,0 +1,316 @@
+//! Paged KV-cache memory subsystem (S16) — the vLLM-style allocator
+//! behind the serving scheduler's admission and eviction decisions.
+//!
+//! Platinum is a 0.96 mm² edge accelerator: on-chip SRAM and the single
+//! DDR4 channel, not FLOPs, bound the achievable batch.  This module
+//! gives the serving layer a real memory model instead of the PR 5
+//! Σ(prompt+output) token counter:
+//!
+//! * **Fixed-size blocks** ([`BlockPool`]) — KV storage is carved into
+//!   blocks of `block_tokens` tokens × `kv_bytes_per_token` (from
+//!   [`crate::models::BitNetModel::kv_bytes_per_token`], the single
+//!   source of truth).  Low block ids live in SRAM, the rest in DRAM;
+//!   the pool allocates lowest-id-first so hot sequences fill SRAM
+//!   before spilling.
+//! * **Per-sequence block tables** ([`KvCache`]) — each admitted
+//!   sequence maps its token positions onto a block list; decode
+//!   appends grow the table one block at a time.
+//! * **Copy-on-write prefix sharing** — a repeated system prompt is
+//!   cached once; later sequences retain the cache's full blocks
+//!   (refcount++, zero new blocks for the shared span) and only
+//!   copy-on-write the partial tail block before appending private
+//!   tokens.
+//! * **Swap vs. recompute under pressure** ([`KvPolicy`]) — when decode
+//!   needs blocks a full pool cannot supply, the scheduler preempts the
+//!   most recently admitted sequence: `Swap` spills its private blocks
+//!   over the DRAM channel (priced by the [`crate::sim::DramModel`]
+//!   timing model, stalling the timeline) and restores them later;
+//!   `Recompute` drops the blocks and re-prefills from scratch.
+//! * **Deterministic by construction** — block ids come from a
+//!   [`std::collections::BTreeSet`], sequence tables from `BTreeMap`s;
+//!   one seed ⇒ byte-identical metrics JSON, extended to every decision
+//!   this module adds (pinned in `tests/traffic_serving.rs`).
+//!
+//! Capacity knobs come from [`KvConfig`]: defaults are ample (serving
+//! behaves exactly like the token-counter era), `KvConfig::from_env`
+//! reads the `PLATINUM_KV_*` variables, and `serve-bench` exposes the
+//! same knobs as flags.  Utilization, prefix-cache hit rate, CoW/swap
+//! counters and DRAM row-buffer stats all land in the `kv` section of
+//! the metrics JSON via [`KvStats`].
+
+mod block;
+mod cache;
+
+pub use block::{BlockId, BlockPool};
+pub use cache::{Admission, KvCache};
+
+use crate::sim::{DramModelKind, DramStats};
+use crate::util::json::{num, obj, s, Json};
+
+/// What to do with a sequence's KV when the pool runs dry mid-decode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvPolicy {
+    /// Spill private blocks to swap space over the DRAM channel and
+    /// restore them (priced, stalling the timeline) when room frees up.
+    Swap,
+    /// Drop the blocks and re-prefill the sequence from scratch later
+    /// (prefix-cache hits still discount the re-prefill).
+    #[default]
+    Recompute,
+}
+
+impl KvPolicy {
+    pub fn parse(text: &str) -> Option<KvPolicy> {
+        match text.trim().to_ascii_lowercase().as_str() {
+            "swap" => Some(KvPolicy::Swap),
+            "recompute" | "drop" => Some(KvPolicy::Recompute),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            KvPolicy::Swap => "swap",
+            KvPolicy::Recompute => "recompute",
+        }
+    }
+}
+
+/// Capacity model + policy knobs for the paged KV cache.
+///
+/// `Copy` so it can ride inside `SchedulerConfig`.  Defaults are
+/// deliberately ample (512 KiB SRAM + 2 GiB DRAM): untuned runs never
+/// hit the eviction path, preserving the PR 5 scheduler behavior.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KvConfig {
+    /// Tokens per block (vLLM's block_size; default 16).
+    pub block_tokens: usize,
+    /// On-chip SRAM carved out for KV, KiB.
+    pub sram_kib: usize,
+    /// DRAM budget for KV, MiB.
+    pub dram_mib: usize,
+    /// Pressure policy.
+    pub policy: KvPolicy,
+    /// Share repeated system prompts across sequences.
+    pub prefix_cache: bool,
+    /// DRAM timing model pricing swap traffic.
+    pub dram_model: DramModelKind,
+    /// DRAM channel peak bandwidth (bytes/s) for swap pricing.
+    pub dram_bw: f64,
+    /// Accelerator clock (Hz) for cycle → second conversion.
+    pub freq_hz: f64,
+}
+
+impl Default for KvConfig {
+    fn default() -> KvConfig {
+        KvConfig {
+            block_tokens: 16,
+            sram_kib: 512,
+            dram_mib: 2048,
+            policy: KvPolicy::default(),
+            prefix_cache: true,
+            dram_model: DramModelKind::default(),
+            dram_bw: 64e9,
+            freq_hz: 500e6,
+        }
+    }
+}
+
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|v| v.trim().parse::<usize>().ok()).filter(|v| *v > 0)
+}
+
+impl KvConfig {
+    /// Defaults overridden by `PLATINUM_KV_BLOCK`, `PLATINUM_KV_SRAM_KB`,
+    /// `PLATINUM_KV_DRAM_MB` and `PLATINUM_KV_POLICY` (unset or
+    /// unparsable values keep the default — PR 5 interconnect pattern).
+    pub fn from_env() -> KvConfig {
+        let mut cfg = KvConfig::default();
+        if let Some(b) = env_usize("PLATINUM_KV_BLOCK") {
+            cfg.block_tokens = b;
+        }
+        if let Some(kib) = env_usize("PLATINUM_KV_SRAM_KB") {
+            cfg.sram_kib = kib;
+        }
+        if let Some(mib) = env_usize("PLATINUM_KV_DRAM_MB") {
+            cfg.dram_mib = mib;
+        }
+        if let Some(p) =
+            std::env::var("PLATINUM_KV_POLICY").ok().and_then(|v| KvPolicy::parse(&v))
+        {
+            cfg.policy = p;
+        }
+        cfg
+    }
+
+    /// Total modelled KV capacity in bytes (SRAM + DRAM budgets).
+    pub fn capacity_bytes(&self) -> u64 {
+        self.sram_kib as u64 * 1024 + self.dram_mib as u64 * 1024 * 1024
+    }
+}
+
+/// Counters and gauges the cache accumulates for the metrics JSON.
+///
+/// The pressure *policy* is deliberately not serialized: with ample
+/// capacity, swap and recompute runs take identical decisions and must
+/// stay byte-identical (pinned in `tests/traffic_serving.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct KvStats {
+    // config echo (set at construction)
+    pub block_tokens: u64,
+    pub block_bytes: u64,
+    pub bytes_per_token: u64,
+    pub capacity_blocks: u64,
+    pub sram_blocks: u64,
+    // occupancy gauges
+    pub allocated_max: u64,
+    pub allocated_final: u64,
+    pub sram_max: u64,
+    pub overflow_max: u64,
+    // prefix cache
+    pub prefix_lookups: u64,
+    pub prefix_hits: u64,
+    pub prefix_tokens_saved: u64,
+    pub prefix_evictions: u64,
+    pub cow_copies: u64,
+    // pressure
+    pub evictions: u64,
+    pub swap_outs: u64,
+    pub swap_ins: u64,
+    pub swapped_out_bytes: u64,
+    pub swapped_in_bytes: u64,
+    pub swap_stall_s: f64,
+    pub recomputed_tokens: u64,
+    // DRAM timing model behind the swap path
+    pub dram_model: &'static str,
+    pub dram: DramStats,
+}
+
+impl KvStats {
+    /// Peak block utilization of the modelled capacity (can exceed 1.0
+    /// when the single-sequence overflow escape hatch fired).
+    pub fn utilization(&self) -> f64 {
+        if self.capacity_blocks == 0 {
+            0.0
+        } else {
+            self.allocated_max as f64 / self.capacity_blocks as f64
+        }
+    }
+
+    /// Prefix-cache hit rate over admissions that carried a shared
+    /// prefix (`None` when no lookups happened).
+    pub fn prefix_hit_rate(&self) -> Option<f64> {
+        if self.prefix_lookups == 0 {
+            None
+        } else {
+            Some(self.prefix_hits as f64 / self.prefix_lookups as f64)
+        }
+    }
+
+    /// The `kv` section of the metrics JSON.
+    pub fn to_json(&self) -> Json {
+        let rate = |r: Option<f64>| r.map(num).unwrap_or(Json::Null);
+        obj(vec![
+            ("block_tokens", num(self.block_tokens as f64)),
+            ("block_bytes", num(self.block_bytes as f64)),
+            ("bytes_per_token", num(self.bytes_per_token as f64)),
+            ("capacity_blocks", num(self.capacity_blocks as f64)),
+            ("sram_blocks", num(self.sram_blocks as f64)),
+            ("allocated_blocks_max", num(self.allocated_max as f64)),
+            ("allocated_blocks_final", num(self.allocated_final as f64)),
+            ("sram_blocks_max", num(self.sram_max as f64)),
+            ("overflow_blocks_max", num(self.overflow_max as f64)),
+            ("utilization", num(self.utilization())),
+            (
+                "prefix_cache",
+                obj(vec![
+                    ("lookups", num(self.prefix_lookups as f64)),
+                    ("hits", num(self.prefix_hits as f64)),
+                    ("hit_rate", rate(self.prefix_hit_rate())),
+                    ("tokens_saved", num(self.prefix_tokens_saved as f64)),
+                    ("evictions", num(self.prefix_evictions as f64)),
+                ]),
+            ),
+            ("cow_copies", num(self.cow_copies as f64)),
+            ("evictions", num(self.evictions as f64)),
+            (
+                "swap",
+                obj(vec![
+                    ("outs", num(self.swap_outs as f64)),
+                    ("ins", num(self.swap_ins as f64)),
+                    ("out_bytes", num(self.swapped_out_bytes as f64)),
+                    ("in_bytes", num(self.swapped_in_bytes as f64)),
+                    ("stall_s", num(self.swap_stall_s)),
+                ]),
+            ),
+            ("recomputed_tokens", num(self.recomputed_tokens as f64)),
+            (
+                "dram",
+                obj(vec![
+                    ("model", s(self.dram_model)),
+                    ("bursts", num(self.dram.bursts as f64)),
+                    ("row_hits", num(self.dram.row_hits as f64)),
+                    ("row_misses", num(self.dram.row_misses as f64)),
+                    ("row_conflicts", num(self.dram.row_conflicts as f64)),
+                    ("row_hit_rate", rate(self.dram.hit_rate())),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parses() {
+        assert_eq!(KvPolicy::parse("swap"), Some(KvPolicy::Swap));
+        assert_eq!(KvPolicy::parse(" Recompute "), Some(KvPolicy::Recompute));
+        assert_eq!(KvPolicy::parse("drop"), Some(KvPolicy::Recompute));
+        assert_eq!(KvPolicy::parse("evict"), None);
+        assert_eq!(KvPolicy::Swap.label(), "swap");
+    }
+
+    #[test]
+    fn defaults_are_ample() {
+        let cfg = KvConfig::default();
+        assert_eq!(cfg.block_tokens, 16);
+        assert!(cfg.prefix_cache);
+        // ≥ 2 GiB of modelled KV: the untuned scheduler never evicts
+        assert!(cfg.capacity_bytes() > 2 * 1024 * 1024 * 1024);
+    }
+
+    #[test]
+    fn from_env_overrides_and_falls_back() {
+        // narrow set → read → remove windows (PR 5 pattern)
+        std::env::set_var("PLATINUM_KV_BLOCK", "8");
+        std::env::set_var("PLATINUM_KV_POLICY", "swap");
+        let cfg = KvConfig::from_env();
+        std::env::remove_var("PLATINUM_KV_BLOCK");
+        std::env::remove_var("PLATINUM_KV_POLICY");
+        assert_eq!(cfg.block_tokens, 8);
+        assert_eq!(cfg.policy, KvPolicy::Swap);
+        std::env::set_var("PLATINUM_KV_SRAM_KB", "zero");
+        let cfg = KvConfig::from_env();
+        std::env::remove_var("PLATINUM_KV_SRAM_KB");
+        assert_eq!(cfg.sram_kib, 512, "unparsable values keep the default");
+    }
+
+    #[test]
+    fn stats_json_has_the_advertised_sections() {
+        let st = KvStats {
+            capacity_blocks: 100,
+            allocated_max: 25,
+            dram_model: "bank",
+            ..KvStats::default()
+        };
+        let j = st.to_json();
+        assert_eq!(j.get("utilization").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j.get("prefix_cache").unwrap().get("hit_rate"), Some(&Json::Null));
+        assert_eq!(j.get("dram").unwrap().get("model").unwrap().as_str(), Some("bank"));
+        // round-trips through the parser
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+    }
+}

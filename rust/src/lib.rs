@@ -46,6 +46,7 @@
 //! | [`coordinator`] | tiling scheduler + serving loop (S6, S12) |
 //! | [`engine`] | unified Backend/Workload/Report execution API (S13) |
 //! | [`traffic`] | continuous-batching serving + load generation (S15) |
+//! | [`kv`] | paged KV-cache allocator + SRAM/DRAM capacity model (S16) |
 //!
 //! All execution flows through [`engine`]: a [`engine::Registry`]
 //! constructs [`engine::Backend`]s by name, each runs
@@ -65,6 +66,7 @@ pub mod encoding;
 pub mod energy;
 pub mod engine;
 pub mod isa;
+pub mod kv;
 pub mod lut;
 pub mod models;
 pub mod pathgen;

@@ -25,11 +25,13 @@ use platinum::energy::{AreaModel, EnergyTable};
 use platinum::engine::{
     Backend, PlatinumBackend, Registry, Report, Workload, COMPARISON_IDS, SHARDED_GRAMMAR,
 };
+use platinum::kv::{KvConfig, KvPolicy};
 use platinum::models::{ALL_MODELS, B158_3B, DECODE_N, PREFILL_N};
 use platinum::runtime::{HostTensor, Runtime};
+use platinum::sim::DramModelKind;
 use platinum::traffic::{
-    parse_trace, ArrivalPattern, Clock, LenDist, LoadSpec, Scheduler, SchedulerConfig,
-    VirtualClock, WallClock,
+    parse_trace, with_shared_prefix, ArrivalPattern, Clock, LenDist, LoadSpec, Scheduler,
+    SchedulerConfig, VirtualClock, WallClock,
 };
 use platinum::util::cli;
 use platinum::util::json::{arr, num, obj, s, Json};
@@ -78,8 +80,12 @@ fn print_help() {
                       [--trace <file>] [--clock virtual|wall] [--json]\n\
                       [--max-batch <n>] [--max-queue <n>] [--max-inflight-tokens <n>]\n\
                       [--max-prefill-tokens <n>] [--step-overhead-us <f>] [--threads <t>]\n\
+                      [--kv-block <tok>] [--kv-sram-kb <n>] [--kv-dram-mb <n>]\n\
+                      [--kv-policy swap|recompute] [--no-prefix-cache]\n\
+                      [--dram-model pipe|bank] [--shared-prefix <tok>]\n\
                       continuous-batching load run: TTFT/TPOT/E2E percentiles,\n\
-                      batch/queue series, goodput vs offered load\n\
+                      batch/queue series, paged-KV block/prefix-cache stats,\n\
+                      goodput vs offered load\n\
            runtime    [--artifacts <dir>] [--run <name>] PJRT artifacts\n\
          \n\
          BACKENDS (see `platinum backends`):\n\
@@ -506,14 +512,31 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
         requests: args.get_usize("requests", 128)?,
         seed: args.get_usize("seed", 0)? as u64,
     };
+    // KV knobs: env (`PLATINUM_KV_*`) seeds the defaults, flags win
+    let mut kv = KvConfig::from_env();
+    kv.block_tokens = args.get_usize("kv-block", kv.block_tokens)?;
+    kv.sram_kib = args.get_usize("kv-sram-kb", kv.sram_kib)?;
+    kv.dram_mib = args.get_usize("kv-dram-mb", kv.dram_mib)?;
+    if let Some(p) = args.get("kv-policy") {
+        kv.policy = KvPolicy::parse(p)
+            .ok_or_else(|| anyhow!("unknown --kv-policy {p:?}; valid: swap, recompute"))?;
+    }
+    if let Some(d) = args.get("dram-model") {
+        kv.dram_model = DramModelKind::parse(d)
+            .ok_or_else(|| anyhow!("unknown --dram-model {d:?}; valid: pipe, bank"))?;
+    }
+    kv.prefix_cache = !args.flag("no-prefix-cache");
+    let shared_prefix = args.get_usize("shared-prefix", 0)?;
     let cfg = SchedulerConfig {
         max_batch: args.get_usize("max-batch", 32)?,
         max_queue: args.get_usize("max-queue", 256)?,
         max_inflight_tokens: args.get_usize("max-inflight-tokens", 65_536)?,
         max_prefill_tokens: args.get_usize("max-prefill-tokens", 2048)?,
         step_overhead_s: args.get_f64("step-overhead-us", 0.0)? * 1e-6,
+        kv,
     };
-    let requests = spec.generate()?;
+    let mut requests = spec.generate()?;
+    with_shared_prefix(&mut requests, shared_prefix);
     let mut clock: Box<dyn Clock> = match args.get_str("clock", "virtual") {
         "virtual" => Box::new(VirtualClock::new()),
         "wall" => Box::new(WallClock::new()),
@@ -543,6 +566,13 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
                     ("max_queue", num(cfg.max_queue as f64)),
                     ("max_inflight_tokens", num(cfg.max_inflight_tokens as f64)),
                     ("max_prefill_tokens", num(cfg.max_prefill_tokens as f64)),
+                    ("kv_block_tokens", num(kv.block_tokens as f64)),
+                    ("kv_sram_kib", num(kv.sram_kib as f64)),
+                    ("kv_dram_mib", num(kv.dram_mib as f64)),
+                    ("kv_policy", s(kv.policy.label())),
+                    ("kv_prefix_cache", s(if kv.prefix_cache { "on" } else { "off" })),
+                    ("dram_model", s(kv.dram_model.label())),
+                    ("shared_prefix_tokens", num(shared_prefix as f64)),
                 ]),
             ),
             ("metrics", m.to_json()),
@@ -581,6 +611,23 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
             m.mean_decode_batch(),
             m.mean_queue_depth(),
             m.queue_depth_max
+        );
+        let hit = m
+            .kv
+            .prefix_hit_rate()
+            .map(|r| format!("{:.0}%", r * 100.0))
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "  kv: peak {}/{} blocks × {} tok ({} policy, {} dram), \
+             prefix hits {}, evictions {}, swap stall {:.3} ms",
+            m.kv.allocated_max,
+            m.kv.capacity_blocks,
+            m.kv.block_tokens,
+            cfg.kv.policy.label(),
+            m.kv.dram_model,
+            hit,
+            m.kv.evictions,
+            m.kv.swap_stall_s * 1e3
         );
         println!("  TTFT        {}", q(&m.ttft));
         println!("  TPOT        {}", q(&m.tpot));

@@ -10,6 +10,11 @@
 
 use crate::analysis::Gemm;
 
+/// Bytes per cached K/V element.  Activations flow through the datapath
+/// as int8 (§III quantization), so the KV cache stores one byte per
+/// element — unlike the 1.58 b weights, K/V are *computed* values.
+pub const KV_DTYPE_BYTES: usize = 1;
+
 /// Architecture description of one BitNet b1.58 model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BitNetModel {
@@ -114,6 +119,18 @@ impl BitNetModel {
             .sum()
     }
 
+    /// Attention head dimension (uniform across Q and KV heads).
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// KV-cache bytes one token pins across the whole layer stack:
+    /// K and V planes × kv_heads × head_dim × dtype × layers.  Single
+    /// source of truth for the paged allocator and SRAM-sizing DSE.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.kv_heads * self.head_dim() * KV_DTYPE_BYTES * self.layers) as u64
+    }
+
     /// Ternary weight bytes of one layer stack at 1.6 b/w.
     pub fn weight_bytes_ternary(&self) -> u64 {
         let per_layer: u64 = self
@@ -170,6 +187,23 @@ mod tests {
         let ks = B158_3B.kernels();
         assert_eq!(ks.iter().map(|k| k.count).sum::<usize>(), 7);
         assert_eq!(B158_3B.unique_shapes().len(), 3); // h→h, h→ffn, ffn→h
+    }
+
+    #[test]
+    fn kv_bytes_per_token_pins_the_suite() {
+        // 3B: 2 planes × 32 kv_heads × (3200/32) head_dim × 1 B × 26 layers
+        assert_eq!(B158_3B.head_dim(), 100);
+        assert_eq!(B158_3B.kv_bytes_per_token(), 166_400);
+        // 700M: 2 × 16 × 96 × 1 × 24
+        assert_eq!(B158_700M.head_dim(), 96);
+        assert_eq!(B158_700M.kv_bytes_per_token(), 73_728);
+        // 1.3B: 2 × 32 × 64 × 1 × 24
+        assert_eq!(B158_1_3B.kv_bytes_per_token(), 98_304);
+        // a 2k-token context stays far below the ternary weight
+        // footprint for every model — KV is DRAM-resident, weights too
+        for m in ALL_MODELS {
+            assert!(2048 * m.kv_bytes_per_token() < 2 * m.weight_bytes_ternary(), "{}", m.name);
+        }
     }
 
     #[test]

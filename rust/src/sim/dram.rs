@@ -1,12 +1,124 @@
-//! Bandwidth-constrained DRAM channel model (the DRAMsim3 substitute).
+//! DRAM channel models (the DRAMsim3 substitute).
 //!
 //! The paper uses DRAMsim3 for energy and a 64 GB/s DDR4-2133 cap for
-//! timing.  We model the channel as a shared-bandwidth pipe with a fixed
-//! access granularity (64 B bursts) and a small per-burst overhead to
-//! mimic row-activation/refresh interference at high utilization.
+//! timing.  Two timing models live behind the [`DramModel`] trait:
+//!
+//! * [`DramChannel`] — the original fixed-efficiency pipe: peak
+//!   bandwidth × a sustained-efficiency factor (default 0.9, calibratable
+//!   via `PLATINUM_DRAM_EFF`), rounded to 64 B bursts.  Address-blind.
+//! * [`BankStateDram`] — a bank-state model: per-bank open-row tracking
+//!   with row-buffer hit / miss (closed row) / conflict (wrong row open)
+//!   timing, a shared data bus, and a validated byte-address → (row,
+//!   bank, column) mapping.  Sequential streams sweep a full row per
+//!   bank and run near the bus rate; row-ping-pong patterns pay
+//!   precharge + activate + CAS per burst and collapse to a small
+//!   fraction of peak.
+//!
+//! The two models agree within a documented 25 % bound on streaming
+//! patterns (the bank model's one activation per 8 KiB row is the only
+//! overhead; the pipe's 0.9 factor prices the same interference
+//! statistically) and diverge sharply — bank model slower — under
+//! deliberate conflict patterns.  Both properties are pinned by tests.
+//! Like every timing law in `sim/`, the models are deterministic:
+//! identical call sequences produce identical cycle counts.
 
 /// DDR4 burst granularity in bytes (BL8 × 64-bit channel).
 pub const BURST_BYTES: u64 = 64;
+
+/// Banks modelled per channel (DDR4 x8: 4 bank groups × 4 banks).
+pub const DRAM_BANKS: u64 = 16;
+
+/// Row-buffer (page) size per bank in bytes.
+pub const DRAM_ROW_BYTES: u64 = 8192;
+
+/// DDR4-2133 CL15-ish core timings, nanoseconds (tRCD ≈ tRP ≈ CL).
+const T_RCD_NS: f64 = 14.0;
+const T_RP_NS: f64 = 14.0;
+const T_CAS_NS: f64 = 14.0;
+
+/// A DRAM timing model the KV swap path and capacity pricing charge
+/// against.  Stateful: each transfer queues behind previously submitted
+/// traffic and leaves bank state behind, which is what lets the
+/// bank-state implementation punish row-conflict access patterns.
+pub trait DramModel {
+    /// `"pipe"` or `"bank"` — recorded in reports.
+    fn label(&self) -> &'static str;
+
+    /// Cycles the channel is occupied transferring `bytes` starting at
+    /// byte address `addr`, issued after all previously submitted
+    /// traffic.  Address-blind models ignore `addr`.
+    fn transfer_cycles_at(&mut self, addr: u64, bytes: u64) -> u64;
+
+    /// Row-buffer statistics, for models that track them.
+    fn row_buffer(&self) -> Option<DramStats>;
+
+    /// Forget all bank/bus state (start of a new run).
+    fn reset(&mut self);
+}
+
+/// Which DRAM timing model to build (serve-bench `--dram-model`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DramModelKind {
+    /// Fixed-efficiency bandwidth pipe ([`DramChannel`]).
+    Pipe,
+    /// Per-bank open-row state machine ([`BankStateDram`]).
+    #[default]
+    Bank,
+}
+
+impl DramModelKind {
+    pub fn parse(text: &str) -> Option<DramModelKind> {
+        match text.trim().to_ascii_lowercase().as_str() {
+            "pipe" | "fixed" => Some(DramModelKind::Pipe),
+            "bank" => Some(DramModelKind::Bank),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            DramModelKind::Pipe => "pipe",
+            DramModelKind::Bank => "bank",
+        }
+    }
+
+    /// Construct the model (pipe efficiency honours `PLATINUM_DRAM_EFF`).
+    pub fn build(self, peak_bw: f64, freq_hz: f64) -> Box<dyn DramModel> {
+        match self {
+            DramModelKind::Pipe => Box::new(DramChannel::from_env(peak_bw, freq_hz)),
+            DramModelKind::Bank => Box::new(BankStateDram::new(peak_bw, freq_hz)),
+        }
+    }
+}
+
+/// Row-buffer outcome counters (→ `kv.dram` section of the metrics
+/// JSON: row-buffer hit rate is the headline locality signal).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DramStats {
+    pub bursts: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+}
+
+impl DramStats {
+    /// Fraction of bursts that hit an open row (`None` before traffic).
+    pub fn hit_rate(&self) -> Option<f64> {
+        if self.bursts == 0 {
+            None
+        } else {
+            Some(self.row_hits as f64 / self.bursts as f64)
+        }
+    }
+}
+
+/// Parse an efficiency override: finite and in (0, 1], else `None`.
+fn parse_efficiency(text: &str) -> Option<f64> {
+    text.trim()
+        .parse::<f64>()
+        .ok()
+        .filter(|e| e.is_finite() && *e > 0.0 && *e <= 1.0)
+}
 
 #[derive(Debug, Clone)]
 pub struct DramChannel {
@@ -24,6 +136,20 @@ impl DramChannel {
         DramChannel { peak_bw, freq_hz, efficiency: 0.9 }
     }
 
+    /// Like [`DramChannel::new`] but with the sustained-efficiency
+    /// factor calibratable via `PLATINUM_DRAM_EFF` (accepted range
+    /// (0, 1]).  Unset, unparsable, or out-of-range values keep the
+    /// default 0.9.
+    pub fn from_env(peak_bw: f64, freq_hz: f64) -> Self {
+        let mut d = DramChannel::new(peak_bw, freq_hz);
+        if let Some(eff) =
+            std::env::var("PLATINUM_DRAM_EFF").ok().and_then(|v| parse_efficiency(&v))
+        {
+            d.efficiency = eff;
+        }
+        d
+    }
+
     /// Bytes transferable per accelerator cycle (sustained).
     pub fn bytes_per_cycle(&self) -> f64 {
         self.peak_bw * self.efficiency / self.freq_hz
@@ -37,6 +163,217 @@ impl DramChannel {
         let bursts = bytes.div_ceil(BURST_BYTES);
         let padded = bursts * BURST_BYTES;
         (padded as f64 / self.bytes_per_cycle()).ceil() as u64
+    }
+}
+
+impl DramModel for DramChannel {
+    fn label(&self) -> &'static str {
+        "pipe"
+    }
+
+    fn transfer_cycles_at(&mut self, _addr: u64, bytes: u64) -> u64 {
+        self.transfer_cycles(bytes)
+    }
+
+    fn row_buffer(&self) -> Option<DramStats> {
+        None
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Byte-address → (row, bank, column) bit-field mapping.
+///
+/// Low bits address the column within a row, middle bits select the
+/// bank, high bits the row ("RoBaCo" from MSB to LSB in DRAMsim3
+/// terms) — the interleave that lets a sequential stream sweep one full
+/// row per bank before reopening anything.  The DRAMsim3 integration
+/// lesson (SNIPPETS) is that a mis-sized field here silently aliases
+/// addresses instead of failing; the constructor therefore validates
+/// the mapping by round-tripping encode ∘ decode over samples of every
+/// field's range and refuses to build a non-bijective layout.
+#[derive(Debug, Clone, Copy)]
+pub struct AddressMapping {
+    pub col_bits: u32,
+    pub bank_bits: u32,
+}
+
+impl AddressMapping {
+    pub fn new(row_bytes: u64, banks: u64) -> AddressMapping {
+        assert!(row_bytes.is_power_of_two(), "row size must be a power of two");
+        assert!(banks.is_power_of_two(), "bank count must be a power of two");
+        let m = AddressMapping {
+            col_bits: row_bytes.trailing_zeros(),
+            bank_bits: banks.trailing_zeros(),
+        };
+        if let Err(e) = m.validate() {
+            panic!("invalid DRAM address mapping: {e}");
+        }
+        m
+    }
+
+    /// Split a byte address into (row, bank, column).
+    pub fn decode(&self, addr: u64) -> (u64, u64, u64) {
+        let col = addr & ((1u64 << self.col_bits) - 1);
+        let bank = (addr >> self.col_bits) & ((1u64 << self.bank_bits) - 1);
+        let row = addr >> (self.col_bits + self.bank_bits);
+        (row, bank, col)
+    }
+
+    /// Reassemble a byte address from its fields.
+    pub fn encode(&self, row: u64, bank: u64, col: u64) -> u64 {
+        (row << (self.col_bits + self.bank_bits)) | (bank << self.col_bits) | col
+    }
+
+    /// Check the field layout is bijective: every sampled address
+    /// round-trips through decode ∘ encode, every sampled field triple
+    /// round-trips through encode ∘ decode, and fields cannot overflow
+    /// into each other.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.col_bits == 0 || self.bank_bits == 0 {
+            return Err("degenerate field (0 bits)".into());
+        }
+        if self.col_bits + self.bank_bits >= 58 {
+            return Err(format!(
+                "col({}) + bank({}) bits leave no room for rows",
+                self.col_bits, self.bank_bits
+            ));
+        }
+        // address round-trips, including far past the low fields
+        let mut addr: u64 = 0;
+        while addr < (1u64 << (self.col_bits + self.bank_bits + 8)) {
+            let (r, b, c) = self.decode(addr);
+            if self.encode(r, b, c) != addr {
+                return Err(format!("address {addr:#x} does not round-trip"));
+            }
+            addr = addr * 3 + 0x11;
+        }
+        // field round-trips across each field's full range boundaries
+        let cols = [0u64, 1, (1u64 << self.col_bits) - 1];
+        let rows = [0u64, 1, 37, (1u64 << 12) + 5];
+        for &row in &rows {
+            for bank in 0..(1u64 << self.bank_bits) {
+                for &col in &cols {
+                    let (r, b, c) = self.decode(self.encode(row, bank, col));
+                    if (r, b, c) != (row, bank, col) {
+                        return Err(format!(
+                            "fields (row {row}, bank {bank}, col {col}) alias to \
+                             (row {r}, bank {b}, col {c})"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-bank open-row DRAM timing model.
+///
+/// Every 64 B burst lands in one bank: a burst to the open row costs
+/// only bus occupancy; a burst to a closed bank adds tRCD + tCAS; a
+/// burst to a bank with a *different* row open adds tRP + tRCD + tCAS.
+/// Activations serialize behind the bank's previous operation and the
+/// shared data bus, so the model is deliberately conservative (no
+/// activate-under-transfer overlap) — the documented ≤ 25 % streaming
+/// gap vs. [`DramChannel`] comes from exactly this.
+#[derive(Debug, Clone)]
+pub struct BankStateDram {
+    pub peak_bw: f64,
+    pub freq_hz: f64,
+    mapping: AddressMapping,
+    /// Data-bus cycles one 64 B burst occupies (no efficiency derate:
+    /// inefficiency emerges from bank timing instead).
+    burst_cycles: f64,
+    t_rcd: f64,
+    t_rp: f64,
+    t_cas: f64,
+    open_row: Vec<Option<u64>>,
+    bank_free: Vec<f64>,
+    bus_free: f64,
+    stats: DramStats,
+}
+
+impl BankStateDram {
+    pub fn new(peak_bw: f64, freq_hz: f64) -> BankStateDram {
+        let ns = freq_hz / 1e9;
+        BankStateDram {
+            peak_bw,
+            freq_hz,
+            mapping: AddressMapping::new(DRAM_ROW_BYTES, DRAM_BANKS),
+            burst_cycles: BURST_BYTES as f64 * freq_hz / peak_bw,
+            t_rcd: T_RCD_NS * ns,
+            t_rp: T_RP_NS * ns,
+            t_cas: T_CAS_NS * ns,
+            open_row: vec![None; DRAM_BANKS as usize],
+            bank_free: vec![0.0; DRAM_BANKS as usize],
+            bus_free: 0.0,
+            stats: DramStats::default(),
+        }
+    }
+
+    pub fn mapping(&self) -> AddressMapping {
+        self.mapping
+    }
+
+    fn burst(&mut self, addr: u64) {
+        let (row, bank, _col) = self.mapping.decode(addr);
+        let bank = bank as usize;
+        self.stats.bursts += 1;
+        let activate = match self.open_row[bank] {
+            Some(open) if open == row => {
+                self.stats.row_hits += 1;
+                0.0
+            }
+            Some(_) => {
+                self.stats.row_conflicts += 1;
+                self.t_rp + self.t_rcd + self.t_cas
+            }
+            None => {
+                self.stats.row_misses += 1;
+                self.t_rcd + self.t_cas
+            }
+        };
+        self.open_row[bank] = Some(row);
+        let start = if activate > 0.0 {
+            (self.bank_free[bank].max(self.bus_free) + activate).max(self.bus_free)
+        } else {
+            self.bus_free
+        };
+        let end = start + self.burst_cycles;
+        self.bus_free = end;
+        self.bank_free[bank] = end;
+    }
+}
+
+impl DramModel for BankStateDram {
+    fn label(&self) -> &'static str {
+        "bank"
+    }
+
+    fn transfer_cycles_at(&mut self, addr: u64, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let t0 = self.bus_free;
+        let mut a = addr - addr % BURST_BYTES;
+        let end = addr + bytes;
+        while a < end {
+            self.burst(a);
+            a += BURST_BYTES;
+        }
+        (self.bus_free - t0).ceil() as u64
+    }
+
+    fn row_buffer(&self) -> Option<DramStats> {
+        Some(self.stats)
+    }
+
+    fn reset(&mut self) {
+        self.open_row.iter_mut().for_each(|r| *r = None);
+        self.bank_free.iter_mut().for_each(|f| *f = 0.0);
+        self.bus_free = 0.0;
+        self.stats = DramStats::default();
     }
 }
 
@@ -70,5 +407,121 @@ mod tests {
     fn zero_bytes_zero_cycles() {
         let d = DramChannel::new(64e9, 500e6);
         assert_eq!(d.transfer_cycles(0), 0);
+        let mut b = BankStateDram::new(64e9, 500e6);
+        assert_eq!(b.transfer_cycles_at(0, 0), 0);
+        assert_eq!(b.row_buffer().unwrap().bursts, 0);
+    }
+
+    #[test]
+    fn efficiency_parser_rejects_out_of_range() {
+        assert_eq!(parse_efficiency("0.75"), Some(0.75));
+        assert_eq!(parse_efficiency(" 1.0 "), Some(1.0));
+        assert_eq!(parse_efficiency("0"), None);
+        assert_eq!(parse_efficiency("-0.5"), None);
+        assert_eq!(parse_efficiency("1.5"), None);
+        assert_eq!(parse_efficiency("NaN"), None);
+        assert_eq!(parse_efficiency("fast"), None);
+    }
+
+    #[test]
+    fn from_env_calibrates_efficiency() {
+        // narrow set → read → remove window, value near the default to
+        // minimize cross-test interference (PR 5 interconnect pattern)
+        std::env::set_var("PLATINUM_DRAM_EFF", "0.88");
+        let d = DramChannel::from_env(64e9, 500e6);
+        std::env::remove_var("PLATINUM_DRAM_EFF");
+        assert!((d.efficiency - 0.88).abs() < 1e-12);
+        std::env::set_var("PLATINUM_DRAM_EFF", "2.5");
+        let d = DramChannel::from_env(64e9, 500e6);
+        std::env::remove_var("PLATINUM_DRAM_EFF");
+        assert!((d.efficiency - 0.9).abs() < 1e-12, "out-of-range must fall back");
+    }
+
+    #[test]
+    fn mapping_is_bijective_and_streams_interleave_banks() {
+        let m = AddressMapping::new(DRAM_ROW_BYTES, DRAM_BANKS);
+        m.validate().unwrap();
+        // one row per bank along a sequential stream: +8 KiB → next bank
+        assert_eq!(m.decode(0), (0, 0, 0));
+        assert_eq!(m.decode(DRAM_ROW_BYTES), (0, 1, 0));
+        // bank field wraps after banks × row_bytes → next row, bank 0
+        assert_eq!(m.decode(DRAM_ROW_BYTES * DRAM_BANKS), (1, 0, 0));
+        assert_eq!(m.encode(1, 0, 0), DRAM_ROW_BYTES * DRAM_BANKS);
+    }
+
+    #[test]
+    fn degenerate_mapping_is_rejected() {
+        // the SNIPPETS lesson: a silent field mistake must fail loudly
+        let bad = AddressMapping { col_bits: 0, bank_bits: 4 };
+        assert!(bad.validate().is_err());
+        let bad = AddressMapping { col_bits: 40, bank_bits: 20 };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn streaming_agrees_with_pipe_within_documented_bound() {
+        // 64 KiB sequential read: the bank model pays one activation per
+        // 8 KiB row and bus occupancy otherwise; the pipe prices the
+        // same interference as a flat 0.9.  Documented bound: ≤ 25 %.
+        let pipe = DramChannel::new(64e9, 500e6);
+        let mut bank = BankStateDram::new(64e9, 500e6);
+        let bytes = 64 * 1024;
+        let p = pipe.transfer_cycles(bytes);
+        let b = bank.transfer_cycles_at(0, bytes);
+        let rel = (b as f64 - p as f64).abs() / p as f64;
+        assert!(rel < 0.25, "streaming gap {rel:.3} (pipe {p}, bank {b})");
+        // exactly one miss per touched bank, zero conflicts, rest hits
+        let st = bank.row_buffer().unwrap();
+        assert_eq!(st.row_misses, bytes / DRAM_ROW_BYTES);
+        assert_eq!(st.row_conflicts, 0);
+        assert_eq!(st.bursts, bytes / BURST_BYTES);
+        assert!(st.hit_rate().unwrap() > 0.95, "{st:?}");
+    }
+
+    #[test]
+    fn bank_conflicts_diverge_slower_than_pipe() {
+        // 256 bursts striding row_bytes × banks: every access reopens a
+        // different row of bank 0 → tRP + tRCD + tCAS per burst
+        let pipe = DramChannel::new(64e9, 500e6);
+        let mut bank = BankStateDram::new(64e9, 500e6);
+        let stride = DRAM_ROW_BYTES * DRAM_BANKS;
+        let mut bank_cycles = 0u64;
+        for i in 0..256u64 {
+            bank_cycles += bank.transfer_cycles_at(i * stride, BURST_BYTES);
+        }
+        let pipe_cycles = pipe.transfer_cycles(256 * BURST_BYTES);
+        assert!(
+            bank_cycles as f64 > 3.0 * pipe_cycles as f64,
+            "conflict pattern must be ≫ slower: bank {bank_cycles} vs pipe {pipe_cycles}"
+        );
+        let st = bank.row_buffer().unwrap();
+        assert_eq!(st.row_conflicts, 255);
+        assert_eq!(st.row_misses, 1);
+        assert_eq!(st.hit_rate(), Some(0.0));
+    }
+
+    #[test]
+    fn reset_restores_cold_state() {
+        let mut bank = BankStateDram::new(64e9, 500e6);
+        let cold = bank.transfer_cycles_at(0, 8192);
+        let warm = bank.transfer_cycles_at(0, 8192);
+        assert!(warm < cold, "open row must make the rerun cheaper");
+        bank.reset();
+        assert_eq!(bank.transfer_cycles_at(0, 8192), cold);
+        assert_eq!(bank.row_buffer().unwrap().bursts, 8192 / BURST_BYTES);
+    }
+
+    #[test]
+    fn kind_parses_and_builds_both_models() {
+        assert_eq!(DramModelKind::parse("pipe"), Some(DramModelKind::Pipe));
+        assert_eq!(DramModelKind::parse(" Bank "), Some(DramModelKind::Bank));
+        assert_eq!(DramModelKind::parse("fixed"), Some(DramModelKind::Pipe));
+        assert_eq!(DramModelKind::parse("hbm"), None);
+        let mut p = DramModelKind::Pipe.build(64e9, 500e6);
+        let mut b = DramModelKind::Bank.build(64e9, 500e6);
+        assert_eq!(p.label(), "pipe");
+        assert_eq!(b.label(), "bank");
+        assert!(p.transfer_cycles_at(0, 4096) > 0);
+        assert!(b.transfer_cycles_at(0, 4096) > 0);
     }
 }

@@ -21,7 +21,10 @@
 mod dram;
 mod platinum;
 
-pub use dram::DramChannel;
+pub use dram::{
+    AddressMapping, BankStateDram, DramChannel, DramModel, DramModelKind, DramStats,
+    BURST_BYTES, DRAM_BANKS, DRAM_ROW_BYTES,
+};
 pub use platinum::{simulate_gemm, simulate_model, SimReport};
 
 use crate::config::ExecMode;

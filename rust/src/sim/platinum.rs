@@ -97,7 +97,7 @@ pub fn simulate_gemm(cfg: &PlatinumConfig, mode: ExecMode, g: Gemm) -> SimReport
     };
     let construct_cycles_round = path.construct_cycles(cfg.pipeline_depth) as u64;
     let tree_drain = (usize::BITS - cfg.num_ppes.leading_zeros()) as u64 + 1;
-    let dram = DramChannel::new(cfg.dram_bw, cfg.freq_hz);
+    let dram = DramChannel::from_env(cfg.dram_bw, cfg.freq_hz);
     let area = AreaModel::platinum(cfg);
     let etab = EnergyTable::from_area(&area);
 
@@ -249,7 +249,7 @@ pub fn simulate_gemm(cfg: &PlatinumConfig, mode: ExecMode, g: Gemm) -> SimReport
             (phases.construct + phases.query) as f64 / busy as f64
         },
         dram_bw: act.dram_total_bytes() as f64
-            / (cycles as f64 * DramChannel::new(cfg.dram_bw, cfg.freq_hz).bytes_per_cycle()),
+            / (cycles as f64 * DramChannel::from_env(cfg.dram_bw, cfg.freq_hz).bytes_per_cycle()),
     };
 
     SimReport {

@@ -26,18 +26,34 @@ pub struct TrafficRequest {
     pub id: u64,
     /// Arrival offset from the start of the run (s).
     pub arrival_s: f64,
-    /// Prompt length (tokens prefilled in one pass).
+    /// Prompt length (tokens prefilled in one pass), **including** any
+    /// shared system-prompt prefix.
     pub prompt_tokens: usize,
     /// Output length (tokens decoded one step each); the first output
     /// token is produced by the prefill step itself.
     pub output_tokens: usize,
+    /// Leading prompt tokens shared verbatim across requests (the
+    /// system prompt) — what the KV prefix cache can deduplicate.
+    pub shared_prefix_tokens: usize,
 }
 
 impl TrafficRequest {
     /// Tokens this request reserves while in flight (KV-cache style
-    /// conservative reservation: full prompt + full output).
+    /// conservative reservation: full prompt + full output; prefix
+    /// sharing is accounted at block granularity by the KV allocator,
+    /// not here).
     pub fn reserved_tokens(&self) -> usize {
         self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// Prepend a shared system prompt of `tokens` tokens to every request:
+/// prompt lengths grow by `tokens` and the shared span is marked so the
+/// KV prefix cache can deduplicate it.  A no-op when `tokens` is 0.
+pub fn with_shared_prefix(requests: &mut [TrafficRequest], tokens: usize) {
+    for r in requests.iter_mut() {
+        r.prompt_tokens += tokens;
+        r.shared_prefix_tokens = tokens;
     }
 }
 
@@ -240,6 +256,7 @@ impl LoadSpec {
                 arrival_s,
                 prompt_tokens: self.prompt.sample(&mut rng),
                 output_tokens: self.output.sample(&mut rng),
+                shared_prefix_tokens: 0,
             })
             .collect())
     }
@@ -373,7 +390,27 @@ mod tests {
 
     #[test]
     fn reserved_tokens_sums_prompt_and_output() {
-        let r = TrafficRequest { id: 0, arrival_s: 0.0, prompt_tokens: 12, output_tokens: 5 };
+        let r = TrafficRequest {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 12,
+            output_tokens: 5,
+            shared_prefix_tokens: 0,
+        };
         assert_eq!(r.reserved_tokens(), 17);
+    }
+
+    #[test]
+    fn shared_prefix_grows_prompts_and_marks_the_span() {
+        let s = spec(ArrivalPattern::Poisson { rate_rps: 50.0 });
+        let mut a = s.generate().unwrap();
+        let plain: Vec<usize> = a.iter().map(|r| r.prompt_tokens).collect();
+        with_shared_prefix(&mut a, 64);
+        for (r, p) in a.iter().zip(&plain) {
+            assert_eq!(r.prompt_tokens, p + 64);
+            assert_eq!(r.shared_prefix_tokens, 64);
+            // at least one unique token follows the shared span
+            assert!(r.prompt_tokens > r.shared_prefix_tokens);
+        }
     }
 }

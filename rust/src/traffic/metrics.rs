@@ -9,6 +9,7 @@
 //! are pure functions of the bucket counts, so two runs that make the
 //! same recordings serialize byte-identical JSON.
 
+use crate::kv::KvStats;
 use crate::util::json::{arr, num, obj, Json};
 
 /// Number of log-spaced buckets: 10 per decade starting at
@@ -177,6 +178,10 @@ pub struct TrafficMetrics {
     /// Timeline position when the run drained (s).
     pub makespan_s: f64,
 
+    /// End-of-run KV-cache snapshot (block utilization, prefix-cache
+    /// hits, swap/recompute pressure, DRAM row-buffer locality).
+    pub kv: KvStats,
+
     series: Vec<StepSample>,
 }
 
@@ -295,6 +300,7 @@ impl TrafficMetrics {
                     ("utilization", num(self.utilization())),
                 ]),
             ),
+            ("kv", self.kv.to_json()),
             (
                 "series",
                 obj(vec![

@@ -10,9 +10,11 @@
 //! This module turns the repo into a servable system:
 //!
 //! * [`scheduler`] — the continuous-batching control plane: a bounded
-//!   request queue with admission/backpressure (queue depth + in-flight
-//!   token reservation), prefill coalescing, per-step decode batching,
-//!   and eviction of finished sequences.  Any registered [`Backend`]
+//!   request queue with admission/backpressure (queue depth, in-flight
+//!   token reservation, and [`crate::kv`] paged-block reservation),
+//!   prefill coalescing with prefix-cache discounts, per-step decode
+//!   batching, swap/recompute preemption under block pressure, and
+//!   eviction of finished sequences.  Any registered [`Backend`]
 //!   (`platinum-ternary`, the measured `platinum-cpu`, `sharded:*`
 //!   composites, …) prices the steps and thereby drives the timeline.
 //! * [`loadgen`] — deterministic open-loop load: Poisson, bursty
@@ -41,7 +43,7 @@ pub mod metrics;
 pub mod scheduler;
 
 pub use clock::{Clock, VirtualClock, WallClock};
-pub use loadgen::{parse_trace, ArrivalPattern, LenDist, LoadSpec, TrafficRequest};
+pub use loadgen::{parse_trace, with_shared_prefix, ArrivalPattern, LenDist, LoadSpec, TrafficRequest};
 pub use metrics::{Histogram, StepSample, TrafficMetrics};
 pub use scheduler::{
     decode_capacity_tok_s, ExecutorBridge, RunResult, Scheduler, SchedulerConfig, StepExecutor,

@@ -8,17 +8,24 @@
 //!
 //! Each iteration: (1) admit arrivals whose offset has passed into the
 //! bounded queue (beyond [`SchedulerConfig::max_queue`] they are
-//! **rejected** — open-loop backpressure); (2) promote queued requests
-//! into the running batch FCFS while the batch has a slot, the
-//! in-flight token reservation fits
-//! ([`SchedulerConfig::max_inflight_tokens`]), and the step's prefill
-//! token budget holds; (3) if anything was promoted, run one
-//! **prefill step** — all promoted prompts coalesced into a single
+//! **rejected** — open-loop backpressure); (2) resume swapped-out
+//! sequences when blocks free up, then promote queued requests into the
+//! running batch FCFS while the batch has a slot, the in-flight token
+//! reservation fits ([`SchedulerConfig::max_inflight_tokens`]), the
+//! step's prefill token budget holds, **and the paged KV cache can
+//! reserve the prompt's blocks** ([`KvCache::try_admit`] — the real
+//! memory backpressure; a prefix-cache hit discounts the prefill to the
+//! uncached tokens); (3) if anything was promoted, run one **prefill
+//! step** — all promoted prompts coalesced into a single
 //! [`Workload::prefill_step`] whose end produces each prompt's first
 //! token (TTFT); otherwise run one **decode step** — every running
-//! sequence advances one token via [`Workload::decode_step`]; (4)
-//! charge the step's priced latency to the [`Clock`] and evict
-//! finished sequences.  An idle scheduler jumps to the next arrival.
+//! sequence advances one token via [`Workload::decode_step`], after
+//! preempting the most recently admitted sequences ([`KvPolicy`]: swap
+//! the blocks over the priced DRAM channel, or drop them for a later
+//! re-prefill) until the step's block appends fit; (4) charge the
+//! step's priced latency (plus any swap-traffic stall) to the
+//! [`Clock`] and evict finished sequences, returning their blocks.  An
+//! idle scheduler jumps to the next arrival.
 //!
 //! The **pricing backend is the timeline**: the priced latency of each
 //! step advances virtual time, so with a modelled backend (e.g.
@@ -36,7 +43,9 @@ use super::loadgen::TrafficRequest;
 use super::metrics::{StepSample, TrafficMetrics};
 use crate::coordinator::serve::Executor;
 use crate::engine::{Backend, Workload};
+use crate::kv::{BlockId, KvCache, KvConfig, KvPolicy};
 use crate::models::BitNetModel;
+use crate::sim::DramModel;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -51,10 +60,13 @@ pub struct SchedulerConfig {
     /// Backpressure bound on Σ(prompt + output) reserved by running
     /// sequences (KV-cache-style conservative reservation).
     pub max_inflight_tokens: usize,
-    /// Token budget of one coalesced prefill step.
+    /// Token budget of one coalesced prefill step (counted on the
+    /// *computed* tokens — prefix-cache hits don't consume it).
     pub max_prefill_tokens: usize,
     /// Fixed scheduling overhead charged to the timeline per step (s).
     pub step_overhead_s: f64,
+    /// Paged KV-cache capacity model and pressure policy.
+    pub kv: KvConfig,
 }
 
 impl Default for SchedulerConfig {
@@ -65,6 +77,7 @@ impl Default for SchedulerConfig {
             max_inflight_tokens: 65_536,
             max_prefill_tokens: 2048,
             step_overhead_s: 0.0,
+            kv: KvConfig::default(),
         }
     }
 }
@@ -80,7 +93,8 @@ pub struct StepRecord {
     pub step_s: f64,
     /// Sequences the step served, in batch order.
     pub seq_ids: Vec<u64>,
-    /// Prefill: total coalesced prompt tokens; decode: batch size.
+    /// Prefill: total coalesced *computed* prompt tokens; decode: batch
+    /// size.
     pub tokens: usize,
 }
 
@@ -174,6 +188,47 @@ struct Seq {
     last_token_s: f64,
 }
 
+impl Seq {
+    /// Tokens resident in the KV cache: the prompt plus one appended
+    /// block slot per decode token (the prefill's own token is stored
+    /// by the first decode append).
+    fn resident_tokens(&self) -> usize {
+        self.req.prompt_tokens + self.generated.saturating_sub(1)
+    }
+}
+
+/// One sequence entering the upcoming coalesced prefill step.
+struct PrefillSeq {
+    seq: Seq,
+    /// First admission (counts admitted / queue-wait / TTFT) — as
+    /// opposed to a re-prefill after recompute preemption.
+    fresh: bool,
+}
+
+/// Hardened in-flight token release (the two call sites used to be
+/// bare `-=`): loud on underflow in debug builds, saturating — never
+/// wrapping the reservation counter — in release.
+fn release_inflight(inflight_tokens: &mut usize, reserve: usize) {
+    debug_assert!(*inflight_tokens >= reserve, "in-flight token release underflow");
+    *inflight_tokens = inflight_tokens.saturating_sub(reserve);
+}
+
+/// Price moving `blocks` over the DRAM channel (seconds of timeline
+/// stall).  Block ids map to addresses at block granularity, so the
+/// bank-state model sees the real spatial pattern of the spill.
+fn swap_traffic_s(
+    dram: &mut dyn DramModel,
+    blocks: &[BlockId],
+    block_bytes: u64,
+    freq_hz: f64,
+) -> f64 {
+    let mut cycles = 0u64;
+    for &b in blocks {
+        cycles += dram.transfer_cycles_at(b as u64 * block_bytes, block_bytes);
+    }
+    cycles as f64 / freq_hz
+}
+
 /// The continuous-batching serving scheduler (see module docs).
 pub struct Scheduler<'a> {
     backend: &'a dyn Backend,
@@ -200,9 +255,11 @@ impl<'a> Scheduler<'a> {
     ///
     /// Always terminates: every iteration either executes a step (a
     /// prefill admits ≥ 1 request — an oversized head-of-line request
-    /// is admitted alone rather than starved — and a decode advances
-    /// every running sequence by one token) or jumps the clock to the
-    /// next pending arrival; arrivals are finite.
+    /// is admitted alone, with the KV pool's overflow escape hatch,
+    /// rather than starved — and a decode advances every running
+    /// sequence by one token after preempting until its block appends
+    /// fit) or jumps the clock to the next pending arrival; arrivals
+    /// are finite and preemption always frees the blocks it needs.
     pub fn serve_with(
         &self,
         requests: &[TrafficRequest],
@@ -212,15 +269,30 @@ impl<'a> Scheduler<'a> {
         let mut arrivals: Vec<TrafficRequest> = requests.to_vec();
         arrivals.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
 
+        let mut kv = KvCache::new(&self.cfg.kv, self.model.kv_bytes_per_token())?;
+        let mut dram = self.cfg.kv.dram_model.build(self.cfg.kv.dram_bw, self.cfg.kv.freq_hz);
+        let block_bytes = kv.block_bytes();
+        let freq_hz = self.cfg.kv.freq_hz;
+
         let mut metrics = TrafficMetrics::new();
         let mut steps: Vec<StepRecord> = Vec::new();
         let mut queue: VecDeque<TrafficRequest> = VecDeque::new();
+        // recompute-preempted sequences awaiting re-prefill (already
+        // admitted: they keep their token reservation and re-enter
+        // ahead of fresh arrivals)
+        let mut requeued: VecDeque<Seq> = VecDeque::new();
+        // swap-preempted sequences whose private blocks sit in swap
+        // space; resumed FCFS as blocks free up
+        let mut swapped: VecDeque<Seq> = VecDeque::new();
         let mut running: Vec<Seq> = Vec::new();
         let mut inflight_tokens = 0usize;
         let mut next = 0usize;
 
         loop {
             let now = clock.now();
+            // DRAM stall accumulated by swap traffic this iteration;
+            // charged to the step the iteration executes.
+            let mut stall_s = 0.0f64;
 
             // (1) admission: arrivals up to `now` enter the bounded queue
             while next < arrivals.len() && arrivals[next].arrival_s <= now {
@@ -233,24 +305,72 @@ impl<'a> Scheduler<'a> {
                 next += 1;
             }
 
-            // (2) promotion: FCFS while slots, token reservation, and
-            // the prefill budget hold; an oversized request at the head
-            // of an otherwise-empty system is admitted alone
-            let mut promoted: Vec<TrafficRequest> = Vec::new();
+            // (2a) resume swapped-out sequences while blocks allow —
+            // started work rejoins ahead of new admissions
+            while running.len() < self.cfg.max_batch {
+                let Some(front) = swapped.front() else { break };
+                let Some(fresh) = kv.resume_swapped(front.req.id, false) else { break };
+                stall_s += swap_traffic_s(dram.as_mut(), &fresh, block_bytes, freq_hz);
+                running.push(swapped.pop_front().unwrap());
+            }
+
+            // (2b) re-prefill recompute-preempted sequences, then (2c)
+            // promote fresh arrivals: FCFS while slots, the token
+            // reservation, the computed-token prefill budget, and the
+            // KV block reservation all hold; an oversized request at
+            // the head of an otherwise-empty system is admitted alone
+            // (overflow allowed so it always terminates)
+            let mut promoted: Vec<PrefillSeq> = Vec::new();
             let mut prefill_tokens = 0usize;
-            while let Some(front) = queue.front() {
-                let reserve = front.reserved_tokens();
+            while let Some(front) = requeued.front() {
+                let resident = front.resident_tokens();
+                let computed = resident - kv.cached_tokens(resident, front.req.shared_prefix_tokens);
                 let fits = running.len() + promoted.len() < self.cfg.max_batch
-                    && inflight_tokens + reserve <= self.cfg.max_inflight_tokens
-                    && prefill_tokens + front.prompt_tokens <= self.cfg.max_prefill_tokens;
-                let alone = running.is_empty() && promoted.is_empty();
+                    && prefill_tokens + computed <= self.cfg.max_prefill_tokens;
+                let alone = running.is_empty() && promoted.is_empty() && swapped.is_empty();
                 if !(fits || alone) {
                     break;
                 }
+                if kv
+                    .try_admit(front.req.id, resident, front.req.shared_prefix_tokens, alone)
+                    .is_none()
+                {
+                    break; // block backpressure: stays queued
+                }
+                let seq = requeued.pop_front().unwrap();
+                prefill_tokens += computed;
+                promoted.push(PrefillSeq { seq, fresh: false });
+                if alone && !fits {
+                    break; // oversized re-prefill runs by itself
+                }
+            }
+            while let Some(front) = queue.front() {
+                let reserve = front.reserved_tokens();
+                let computed = front.prompt_tokens
+                    - kv.cached_tokens(front.prompt_tokens, front.shared_prefix_tokens);
+                let fits = running.len() + promoted.len() < self.cfg.max_batch
+                    && inflight_tokens + reserve <= self.cfg.max_inflight_tokens
+                    && prefill_tokens + computed <= self.cfg.max_prefill_tokens;
+                let alone = running.is_empty()
+                    && promoted.is_empty()
+                    && swapped.is_empty()
+                    && requeued.is_empty();
+                if !(fits || alone) {
+                    break;
+                }
+                if kv
+                    .try_admit(front.id, front.prompt_tokens, front.shared_prefix_tokens, alone)
+                    .is_none()
+                {
+                    break; // block backpressure: stays queued
+                }
                 let r = queue.pop_front().unwrap();
                 inflight_tokens += reserve;
-                prefill_tokens += r.prompt_tokens;
-                promoted.push(r);
+                prefill_tokens += computed;
+                promoted.push(PrefillSeq {
+                    seq: Seq { req: r, generated: 0, last_token_s: now },
+                    fresh: true,
+                });
                 if alone && !fits {
                     break; // oversized request runs by itself
                 }
@@ -258,27 +378,68 @@ impl<'a> Scheduler<'a> {
 
             // (3) pick and price the step
             let (kind, workload, seq_ids, tokens) = if !promoted.is_empty() {
-                let ids: Vec<u64> = promoted.iter().map(|r| r.id).collect();
+                let ids: Vec<u64> = promoted.iter().map(|p| p.seq.req.id).collect();
                 (
                     StepKind::Prefill,
                     Workload::prefill_step(self.model, prefill_tokens),
                     ids,
                     prefill_tokens,
                 )
-            } else if !running.is_empty() {
+            } else {
+                if running.is_empty() {
+                    if let Some(seq) = swapped.pop_front() {
+                        // nothing else can make progress: force the
+                        // swap-in through the overflow escape hatch
+                        let fresh = kv
+                            .resume_swapped(seq.req.id, true)
+                            .expect("forced resume cannot fail");
+                        stall_s += swap_traffic_s(dram.as_mut(), &fresh, block_bytes, freq_hz);
+                        running.push(seq);
+                    } else if next < arrivals.len() {
+                        // idle: jump to the next arrival
+                        clock.wait_until(arrivals[next].arrival_s);
+                        continue;
+                    } else {
+                        break; // drained
+                    }
+                }
+                // (3b) block pressure: each decode token may need a
+                // fresh block; preempt the most recently admitted
+                // sequence until the step's appends fit
+                while running.len() > 1 {
+                    let need: usize =
+                        running.iter().map(|s| kv.append_blocks_needed(s.req.id)).sum();
+                    if need <= kv.available_blocks() {
+                        break;
+                    }
+                    let victim = running.pop().unwrap();
+                    match self.cfg.kv.policy {
+                        KvPolicy::Swap => {
+                            let spilled = kv.preempt_swap(victim.req.id);
+                            stall_s +=
+                                swap_traffic_s(dram.as_mut(), &spilled, block_bytes, freq_hz);
+                            swapped.push_back(victim);
+                        }
+                        KvPolicy::Recompute => {
+                            kv.preempt_recompute(victim.req.id);
+                            requeued.push_front(victim);
+                        }
+                    }
+                }
+                let lone = running.len() == 1;
+                for s in running.iter() {
+                    // a lone sequence may overflow: it must terminate
+                    let stored = kv.append(s.req.id, lone);
+                    debug_assert!(stored, "append failed after the pressure check");
+                }
                 let ids: Vec<u64> = running.iter().map(|s| s.req.id).collect();
                 let n = running.len();
                 (StepKind::Decode, Workload::decode_step(self.model, n), ids, n)
-            } else if next < arrivals.len() {
-                // idle: jump to the next arrival
-                clock.wait_until(arrivals[next].arrival_s);
-                continue;
-            } else {
-                break; // drained
             };
 
             let priced = self.backend.run(&workload);
-            let step_s = priced.latency_s + self.cfg.step_overhead_s;
+            let step_s = priced.latency_s + self.cfg.step_overhead_s + stall_s;
+            kv.note_swap_stall(stall_s);
             let record = StepRecord {
                 index: steps.len() as u64,
                 kind,
@@ -293,23 +454,34 @@ impl<'a> Scheduler<'a> {
             clock.advance(step_s);
             let t_end = clock.now();
 
-            // (4) bookkeeping + eviction
+            // (4) bookkeeping + eviction (finished sequences return
+            // their blocks — the evict-after-finish path)
             match kind {
                 StepKind::Prefill => {
                     metrics.prefill_steps += 1;
-                    for r in promoted {
-                        metrics.admitted += 1;
-                        metrics.prompt_tokens += r.prompt_tokens as u64;
-                        metrics.generated_tokens += 1; // prefill emits token #1
-                        metrics.queue_wait.record(now - r.arrival_s);
-                        metrics.ttft.record(t_end - r.arrival_s);
-                        if r.output_tokens <= 1 {
-                            metrics.completed += 1;
-                            metrics.completed_tokens += r.output_tokens as u64;
-                            metrics.e2e.record(t_end - r.arrival_s);
-                            inflight_tokens -= r.reserved_tokens();
+                    for p in promoted {
+                        let mut s = p.seq;
+                        if p.fresh {
+                            metrics.admitted += 1;
+                            metrics.prompt_tokens += s.req.prompt_tokens as u64;
+                            metrics.queue_wait.record(now - s.req.arrival_s);
+                            metrics.ttft.record(t_end - s.req.arrival_s);
                         } else {
-                            running.push(Seq { req: r, generated: 1, last_token_s: t_end });
+                            // a re-prefill emits the sequence's next
+                            // token: the preemption gap is a TPOT sample
+                            metrics.tpot.record(t_end - s.last_token_s);
+                        }
+                        metrics.generated_tokens += 1;
+                        s.generated += 1;
+                        s.last_token_s = t_end;
+                        if s.generated >= s.req.output_tokens {
+                            metrics.completed += 1;
+                            metrics.completed_tokens += s.req.output_tokens as u64;
+                            metrics.e2e.record(t_end - s.req.arrival_s);
+                            release_inflight(&mut inflight_tokens, s.req.reserved_tokens());
+                            kv.release(s.req.id);
+                        } else {
+                            running.push(s);
                         }
                     }
                 }
@@ -330,7 +502,8 @@ impl<'a> Scheduler<'a> {
                             metrics.completed += 1;
                             metrics.completed_tokens += s.req.output_tokens as u64;
                             metrics.e2e.record(t_end - s.req.arrival_s);
-                            inflight_tokens -= s.req.reserved_tokens();
+                            release_inflight(&mut inflight_tokens, s.req.reserved_tokens());
+                            kv.release(s.req.id);
                             false
                         } else {
                             true
@@ -339,13 +512,20 @@ impl<'a> Scheduler<'a> {
                 }
             }
             metrics.note_step(
-                StepSample { t_s: t_end, queue_depth: queue.len(), batch: tokens },
+                StepSample {
+                    t_s: t_end,
+                    queue_depth: queue.len() + requeued.len() + swapped.len(),
+                    batch: tokens,
+                },
                 inflight_tokens,
                 step_s,
             );
             steps.push(record);
         }
 
+        debug_assert_eq!(inflight_tokens, 0, "in-flight token reservation leaked");
+        debug_assert!(kv.is_quiescent(), "kv blocks leaked past drain");
+        metrics.kv = kv.snapshot(dram.as_ref());
         metrics.makespan_s = clock.now();
         Ok(RunResult { metrics, steps })
     }
@@ -372,8 +552,9 @@ pub fn decode_capacity_tok_s(
 mod tests {
     use super::*;
     use crate::engine::PlatinumBackend;
+    use crate::kv::KvConfig;
     use crate::traffic::clock::VirtualClock;
-    use crate::traffic::loadgen::{ArrivalPattern, LenDist, LoadSpec};
+    use crate::traffic::loadgen::{with_shared_prefix, ArrivalPattern, LenDist, LoadSpec};
 
     /// A 2-layer toy model so modelled pricing stays microseconds-fast.
     const TINY: BitNetModel = BitNetModel {
@@ -398,6 +579,12 @@ mod tests {
         .unwrap()
     }
 
+    /// TINY stores 256 B/token, so 4-token blocks are 1 KiB: `sram_kib`
+    /// is the pool capacity in blocks, DRAM budget off.
+    fn tight_kv(blocks: usize, policy: KvPolicy) -> KvConfig {
+        KvConfig { block_tokens: 4, sram_kib: blocks, dram_mib: 0, policy, ..KvConfig::default() }
+    }
+
     #[test]
     fn drains_every_request_and_counts_tokens() {
         let be = PlatinumBackend::ternary();
@@ -420,6 +607,11 @@ mod tests {
         assert_eq!(m.tpot.count(), 40 * 5);
         assert!(m.makespan_s > 0.0 && m.busy_s > 0.0);
         assert!(m.utilization() <= 1.0);
+        // ample default KV capacity: blocks flow, nothing is evicted
+        assert!(m.kv.allocated_max > 0);
+        assert_eq!(m.kv.evictions, 0);
+        assert_eq!(m.kv.overflow_max, 0);
+        assert_eq!(m.kv.allocated_final, 0, "finished sequences returned every block");
         // decision log covers all steps in order
         assert_eq!(r.steps.len() as u64, m.steps());
         assert!(r.steps.windows(2).all(|w| w[0].index + 1 == w[1].index));
@@ -440,6 +632,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: 8,
                 output_tokens: 10,
+                shared_prefix_tokens: 0,
             })
             .collect();
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
@@ -462,6 +655,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: 4,
                 output_tokens: 8,
+                shared_prefix_tokens: 0,
             })
             .collect();
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
@@ -488,6 +682,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: 20,
                 output_tokens: 20,
+                shared_prefix_tokens: 0,
             })
             .collect();
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
@@ -513,6 +708,7 @@ mod tests {
             arrival_s: 0.0,
             prompt_tokens: 64,
             output_tokens: 64,
+            shared_prefix_tokens: 0,
         }];
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
         assert_eq!(r.metrics.completed, 1);
@@ -548,12 +744,173 @@ mod tests {
         let be = PlatinumBackend::ternary();
         let sched = Scheduler::new(&be, TINY, SchedulerConfig::default());
         let reqs = vec![
-            TrafficRequest { id: 0, arrival_s: 0.0, prompt_tokens: 4, output_tokens: 2 },
-            TrafficRequest { id: 1, arrival_s: 100.0, prompt_tokens: 4, output_tokens: 2 },
+            TrafficRequest {
+                id: 0,
+                arrival_s: 0.0,
+                prompt_tokens: 4,
+                output_tokens: 2,
+                shared_prefix_tokens: 0,
+            },
+            TrafficRequest {
+                id: 1,
+                arrival_s: 100.0,
+                prompt_tokens: 4,
+                output_tokens: 2,
+                shared_prefix_tokens: 0,
+            },
         ];
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
         assert_eq!(r.metrics.completed, 2);
         assert!(r.metrics.makespan_s >= 100.0);
         assert!(r.metrics.utilization() < 0.5, "long idle gap must not count as busy");
+    }
+
+    #[test]
+    fn shared_system_prompt_cuts_prefill_work_and_blocks() {
+        let be = PlatinumBackend::ternary();
+        let wave = |shared: usize| -> Vec<TrafficRequest> {
+            let mut reqs: Vec<TrafficRequest> = (0..8)
+                .map(|i| TrafficRequest {
+                    id: i,
+                    arrival_s: 0.0,
+                    prompt_tokens: 4,
+                    output_tokens: 4,
+                    shared_prefix_tokens: 0,
+                })
+                .collect();
+            with_shared_prefix(&mut reqs, shared);
+            reqs
+        };
+        let run = |prefix_cache: bool| {
+            let cfg = SchedulerConfig {
+                kv: KvConfig { prefix_cache, ..KvConfig::default() },
+                ..SchedulerConfig::default()
+            };
+            Scheduler::new(&be, TINY, cfg)
+                .serve(&wave(64), &mut VirtualClock::new())
+                .unwrap()
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_eq!(on.metrics.completed, 8);
+        assert_eq!(off.metrics.completed, 8);
+        // the first admission computes the whole 68-token prompt and
+        // populates the cache; the other 7 skip the 64 shared tokens
+        assert_eq!(on.metrics.kv.prefix_lookups, 8);
+        assert_eq!(on.metrics.kv.prefix_hits, 7);
+        assert_eq!(on.metrics.kv.prefix_tokens_saved, 7 * 64);
+        assert_eq!(on.steps[0].tokens, 68 + 7 * 4, "coalesced computed tokens");
+        assert_eq!(off.steps[0].tokens, 8 * 68);
+        // cheaper prefill ⇒ lower TTFT; shared blocks ⇒ fewer allocated
+        assert!(
+            on.metrics.ttft.mean().unwrap() < off.metrics.ttft.mean().unwrap(),
+            "prefix caching must cut TTFT"
+        );
+        assert!(
+            on.metrics.kv.allocated_max < off.metrics.kv.allocated_max,
+            "shared span must not be stored 8 times: {} vs {}",
+            on.metrics.kv.allocated_max,
+            off.metrics.kv.allocated_max
+        );
+        // full prompt still counted as offered prompt tokens
+        assert_eq!(on.metrics.prompt_tokens, 8 * 68);
+    }
+
+    #[test]
+    fn block_pressure_preempts_via_recompute_and_still_drains() {
+        let be = PlatinumBackend::ternary();
+        let cfg = SchedulerConfig {
+            kv: tight_kv(6, KvPolicy::Recompute),
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let reqs: Vec<TrafficRequest> = (0..4)
+            .map(|i| TrafficRequest {
+                id: i,
+                arrival_s: 0.0,
+                prompt_tokens: 8,
+                output_tokens: 8,
+                shared_prefix_tokens: 0,
+            })
+            .collect();
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        let m = &r.metrics;
+        // 4 × (2 prompt blocks + appends) cannot fit 6 blocks at once
+        assert_eq!(m.completed, 4, "preemption must delay, not deadlock");
+        assert_eq!(m.generated_tokens, 4 * 8, "every token emitted exactly once");
+        assert!(m.kv.evictions >= 1, "tight pool must evict");
+        assert!(m.kv.recomputed_tokens >= 8, "dropped KV is recomputed");
+        assert_eq!(m.kv.swap_outs, 0, "recompute policy never swaps");
+        assert!(m.kv.utilization() >= 0.9, "pressure run should fill the pool");
+        // re-prefills show up as extra prefill steps
+        assert!(m.prefill_steps > 1, "{} prefill steps", m.prefill_steps);
+    }
+
+    #[test]
+    fn block_pressure_swaps_and_prices_the_dram_traffic() {
+        let be = PlatinumBackend::ternary();
+        let cfg = SchedulerConfig {
+            kv: tight_kv(6, KvPolicy::Swap),
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let reqs: Vec<TrafficRequest> = (0..4)
+            .map(|i| TrafficRequest {
+                id: i,
+                arrival_s: 0.0,
+                prompt_tokens: 8,
+                output_tokens: 8,
+                shared_prefix_tokens: 0,
+            })
+            .collect();
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        let m = &r.metrics;
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.generated_tokens, 4 * 8);
+        assert!(m.kv.swap_outs >= 1, "tight pool must swap out");
+        assert!(m.kv.swap_ins >= 1, "swapped sequences must come back");
+        assert_eq!(m.kv.recomputed_tokens, 0, "swap policy never recomputes");
+        assert!(m.kv.swap_stall_s > 0.0, "swap traffic must stall the timeline");
+        assert_eq!(
+            m.kv.dram.bursts,
+            (m.kv.swapped_out_bytes + m.kv.swapped_in_bytes) / 64,
+            "every swapped byte moves through the DRAM timing model"
+        );
+        // same decisions twice: the pressure path is deterministic
+        let again = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        assert_eq!(
+            r.metrics.to_json().to_string(),
+            again.metrics.to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn finished_sequences_free_blocks_for_queued_work() {
+        // evict-after-finish regression: a 2-block pool serves two
+        // 2-block prompts strictly in sequence — if release leaked, the
+        // second would only fit through the overflow escape hatch
+        let be = PlatinumBackend::ternary();
+        let cfg = SchedulerConfig {
+            kv: tight_kv(2, KvPolicy::Recompute),
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let reqs: Vec<TrafficRequest> = (0..2)
+            .map(|i| TrafficRequest {
+                id: i,
+                arrival_s: 0.0,
+                prompt_tokens: 7,
+                output_tokens: 2,
+                shared_prefix_tokens: 0,
+            })
+            .collect();
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        let m = &r.metrics;
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.kv.allocated_max, 2, "never both resident");
+        assert_eq!(m.kv.overflow_max, 0, "finished blocks were reused, not overflowed");
+        assert_eq!(m.kv.evictions, 0, "sequential fit needs no preemption");
+        assert_eq!(m.kv.allocated_final, 0);
+        assert_eq!(m.prefill_steps, 2, "the second prompt waited for the first");
     }
 }

@@ -9,12 +9,13 @@ use platinum::config::PlatinumConfig;
 use platinum::coordinator::serve::GoldenExecutor;
 use platinum::encoding::pack_ternary;
 use platinum::engine::{Backend, PlatinumBackend, Registry, Workload};
+use platinum::kv::{KvConfig, KvPolicy};
 use platinum::lut::ternary_mpgemm_pool;
 use platinum::models::BitNetModel;
 use platinum::runtime::pool::Pool;
 use platinum::traffic::{
-    decode_capacity_tok_s, ArrivalPattern, ExecutorBridge, LenDist, LoadSpec, Scheduler,
-    SchedulerConfig, StepRecord, TrafficRequest, VirtualClock,
+    decode_capacity_tok_s, with_shared_prefix, ArrivalPattern, ExecutorBridge, LenDist, LoadSpec,
+    Scheduler, SchedulerConfig, StepRecord, TrafficRequest, VirtualClock,
 };
 use platinum::util::json::Json;
 use platinum::util::rng::Rng;
@@ -68,6 +69,13 @@ fn virtual_clock_metrics_are_byte_identical_per_seed() {
     assert!(goodput.as_f64().unwrap() > 0.0);
     let depth = doc.get("series").unwrap().get("queue_depth").unwrap();
     assert!(depth.as_arr().unwrap().len() > 1);
+    // the kv section rides inside the same byte-identical document
+    let kv = doc.get("kv").unwrap();
+    assert!(kv.get("capacity_blocks").unwrap().as_f64().unwrap() > 0.0);
+    assert!(kv.get("allocated_blocks_max").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(kv.get("evictions").unwrap().as_f64(), Some(0.0), "ample capacity");
+    assert!(kv.get("prefix_cache").unwrap().get("lookups").is_some());
+    assert!(kv.get("dram").unwrap().get("model").unwrap().as_str().is_some());
 }
 
 #[test]
@@ -193,6 +201,7 @@ fn sharded_and_measured_backends_serve_through_the_same_scheduler() {
             arrival_s: 0.0,
             prompt_tokens: 4,
             output_tokens: 3,
+            shared_prefix_tokens: 0,
         })
         .collect();
     let cfg = SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() };
@@ -204,4 +213,123 @@ fn sharded_and_measured_backends_serve_through_the_same_scheduler() {
         assert!(r.metrics.makespan_s > 0.0, "{id}");
         assert!(r.metrics.ttft.quantile(0.99).unwrap() > 0.0, "{id}");
     }
+}
+
+#[test]
+fn swap_and_recompute_agree_byte_identically_at_ample_capacity() {
+    // with the default (ample) capacity the eviction path never fires,
+    // so the pressure policy must not move a single metrics byte — the
+    // policy label is deliberately kept out of the JSON
+    let be = PlatinumBackend::ternary();
+    let run = |policy: KvPolicy| {
+        let cfg = SchedulerConfig {
+            kv: KvConfig { policy, ..KvConfig::default() },
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let reqs = poisson_spec(150.0, 48, 21).generate().unwrap();
+        let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        (r.metrics.to_json().to_string(), r.steps)
+    };
+    let (swap_json, swap_steps) = run(KvPolicy::Swap);
+    let (rec_json, rec_steps) = run(KvPolicy::Recompute);
+    assert_eq!(swap_steps, rec_steps, "policy leaked into decisions without pressure");
+    assert_eq!(swap_json, rec_json, "policy leaked into metrics without pressure");
+}
+
+#[test]
+fn tight_kv_pressure_is_deterministic_and_counts_in_the_json() {
+    // TINY stores 256 B/token ⇒ 4-token blocks are 1 KiB: a 12-block
+    // pool under 32 simultaneous requests forces admission backpressure
+    // and decode-time preemption on both policies, deterministically
+    for policy in [KvPolicy::Swap, KvPolicy::Recompute] {
+        let be = PlatinumBackend::ternary();
+        let cfg = SchedulerConfig {
+            kv: KvConfig {
+                block_tokens: 4,
+                sram_kib: 12,
+                dram_mib: 0,
+                policy,
+                ..KvConfig::default()
+            },
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let reqs = LoadSpec {
+            pattern: ArrivalPattern::Replay { times_s: vec![0.0; 32] },
+            prompt: LenDist::Uniform { lo: 4, hi: 12 },
+            output: LenDist::Fixed(6),
+            requests: 32,
+            seed: 9,
+        }
+        .generate()
+        .unwrap();
+        let run = || {
+            let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+            assert_eq!(r.metrics.completed, 32, "{:?}", policy);
+            r.metrics.to_json().to_string()
+        };
+        let a = run();
+        assert_eq!(a, run(), "pressure path must be deterministic ({policy:?})");
+        let kv = Json::parse(&a).unwrap().get("kv").unwrap().clone();
+        assert!(kv.get("evictions").unwrap().as_f64().unwrap() >= 1.0, "{policy:?}");
+        assert!(kv.get("utilization").unwrap().as_f64().unwrap() >= 0.9, "{policy:?}");
+        match policy {
+            KvPolicy::Swap => {
+                assert!(kv.get("swap").unwrap().get("outs").unwrap().as_f64().unwrap() >= 1.0);
+                assert!(kv.get("swap").unwrap().get("stall_s").unwrap().as_f64().unwrap() > 0.0);
+            }
+            KvPolicy::Recompute => {
+                assert!(kv.get("recomputed_tokens").unwrap().as_f64().unwrap() >= 1.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_prefix_serving_cuts_ttft_and_blocks_end_to_end() {
+    // the acceptance trace: a replayed burst sharing one system prompt,
+    // served with the prefix cache on vs off through the full stack
+    let be = PlatinumBackend::ternary();
+    let trace = || {
+        let mut reqs = LoadSpec {
+            pattern: ArrivalPattern::Replay {
+                times_s: (0..24).map(|i| (i / 8) as f64 * 0.05).collect(),
+            },
+            prompt: LenDist::Uniform { lo: 4, hi: 12 },
+            output: LenDist::Fixed(6),
+            requests: 24,
+            seed: 13,
+        }
+        .generate()
+        .unwrap();
+        with_shared_prefix(&mut reqs, 64);
+        reqs
+    };
+    let run = |prefix_cache: bool| {
+        let cfg = SchedulerConfig {
+            kv: KvConfig { prefix_cache, ..KvConfig::default() },
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        sched.serve(&trace(), &mut VirtualClock::new()).unwrap().metrics
+    };
+    let on = run(true);
+    let off = run(false);
+    assert_eq!(on.completed, 24);
+    assert_eq!(off.completed, 24);
+    assert!(on.kv.prefix_hits >= 20, "bursts reuse the cached prompt: {}", on.kv.prefix_hits);
+    assert!(on.kv.prefix_hit_rate().unwrap() > 0.8);
+    assert!(
+        on.ttft.mean().unwrap() < off.ttft.mean().unwrap(),
+        "prefix caching must cut TTFT: {:?} vs {:?}",
+        on.ttft.mean(),
+        off.ttft.mean()
+    );
+    assert!(
+        on.kv.allocated_max < off.kv.allocated_max,
+        "prefix caching must cut peak blocks: {} vs {}",
+        on.kv.allocated_max,
+        off.kv.allocated_max
+    );
 }
