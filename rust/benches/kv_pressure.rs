@@ -140,7 +140,7 @@ fn main() {
     // --- 3. DRAM timing models: streaming agreement, conflict divergence ---
     println!("\n== dram models: 64 KiB streaming vs row-conflict stride ==");
     let sweep = |kind: DramModelKind, stride: u64, label: &str| -> u64 {
-        let mut dram = kind.build(64e9, 500e6);
+        let mut dram = kind.build(64e9, 500e6).unwrap();
         let mut cycles = 0u64;
         for i in 0..256u64 {
             cycles += dram.transfer_cycles_at(i * stride, 256);

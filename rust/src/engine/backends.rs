@@ -193,7 +193,9 @@ impl Backend for PlatinumBackend {
             notes: format!(
                 "cycle-accurate simulator, §IV phase laws (paper: 0.955 mm², 1534 GOP/s); \
                  dram eff {:.2} (PLATINUM_DRAM_EFF)",
-                DramChannel::from_env(self.cfg.dram_bw, self.cfg.freq_hz).efficiency
+                DramChannel::from_env(self.cfg.dram_bw, self.cfg.freq_hz)
+                    .unwrap_or_else(|e| panic!("{e}"))
+                    .efficiency
             ),
         }
     }

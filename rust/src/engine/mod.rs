@@ -62,4 +62,24 @@ pub trait Backend {
     /// Execute a workload and report latency / energy / throughput,
     /// plus cycle-accurate detail when the backend models it.
     fn run(&self, workload: &Workload) -> Report;
+
+    /// Replica count of a composite backend (1 for a single chip).
+    /// Sizes the fault injector's liveness map in the serving layer.
+    fn replicas(&self) -> usize {
+        1
+    }
+
+    /// Execute with some replicas marked dead (`alive[i] == false`).
+    /// Single-chip backends ignore the mask; [`Sharded`] re-partitions
+    /// the dead replicas' shards across the survivors (failover).
+    fn run_degraded(&self, workload: &Workload, _alive: &[bool]) -> Report {
+        self.run(workload)
+    }
+
+    /// Priced weight-redistribution stall when one replica fails and
+    /// its weight shard is re-assigned across `survivors` chips over
+    /// the modelled interconnect (zero for single-chip backends).
+    fn redistribute_cost_s(&self, _weight_bytes: u64, _survivors: usize) -> f64 {
+        0.0
+    }
 }

@@ -103,24 +103,19 @@ impl Default for Interconnect {
 }
 
 impl Interconnect {
-    /// Defaults overridden by `PLATINUM_LINK_GBPS` / `PLATINUM_HOP_US`
-    /// when set to positive finite numbers (anything else — unset,
-    /// unparsable, zero, negative — keeps the default for that knob).
-    pub fn from_env() -> Interconnect {
-        let read = |key: &str| -> Option<f64> {
-            std::env::var(key)
-                .ok()
-                .and_then(|v| v.trim().parse::<f64>().ok())
-                .filter(|v| v.is_finite() && *v > 0.0)
-        };
+    /// Defaults overridden by `PLATINUM_LINK_GBPS` / `PLATINUM_HOP_US`.
+    /// Unset keeps the default for that knob; a set-but-invalid value
+    /// (unparsable, zero, negative, non-finite) is a hard error naming
+    /// the variable and the offending value (`util::env`).
+    pub fn from_env() -> Result<Interconnect> {
         let mut ic = Interconnect::default();
-        if let Some(gbps) = read("PLATINUM_LINK_GBPS") {
+        if let Some(gbps) = crate::util::env::positive_f64("PLATINUM_LINK_GBPS")? {
             ic.link_bytes_per_s = gbps * 1e9;
         }
-        if let Some(us) = read("PLATINUM_HOP_US") {
+        if let Some(us) = crate::util::env::positive_f64("PLATINUM_HOP_US")? {
             ic.hop_s = us * 1e-6;
         }
-        ic
+        Ok(ic)
     }
 }
 
@@ -141,7 +136,7 @@ impl Sharded {
     /// (the canonical id is derived from the first); errors on an
     /// empty replica set.
     pub fn new(inner: Vec<Box<dyn Backend>>, strategy: ShardStrategy) -> Result<Sharded> {
-        Sharded::with_interconnect(inner, strategy, Interconnect::from_env())
+        Sharded::with_interconnect(inner, strategy, Interconnect::from_env()?)
     }
 
     /// [`Sharded::new`] with an explicit interconnect model.
@@ -175,7 +170,12 @@ impl Sharded {
     /// the workload through untouched, which keeps `sharded:1:<id>`
     /// bit-exact with the inner backend.
     pub fn partition(&self, w: &Workload) -> Vec<Workload> {
-        let n_rep = self.inner.len();
+        self.partition_n(w, self.inner.len())
+    }
+
+    /// [`Sharded::partition`] across an explicit replica count — the
+    /// failover path re-partitions across the survivors of a crash.
+    fn partition_n(&self, w: &Workload, n_rep: usize) -> Vec<Workload> {
         if n_rep == 1 {
             return vec![w.clone()];
         }
@@ -276,44 +276,13 @@ impl Sharded {
         };
         hops * self.interconnect.hop_s + bytes / self.interconnect.link_bytes_per_s
     }
-}
 
-impl Backend for Sharded {
-    fn id(&self) -> &str {
-        &self.id
-    }
-
-    fn describe(&self) -> BackendInfo {
-        let base = self.inner[0].describe();
-        let n = self.inner.len();
-        BackendInfo {
-            id: self.id.clone(),
-            name: format!("{}× {}", n, base.name),
-            kind: base.kind,
-            freq_hz: base.freq_hz,
-            pes: base.pes.map(|p| p * n),
-            area_mm2: base.area_mm2.map(|a| a * n as f64),
-            tech_nm: base.tech_nm,
-            notes: format!(
-                "{n} {} replicas, {}-partitioned; latency = {} + interconnect \
-                 ({} GB/s link, {} us/hop; env PLATINUM_LINK_GBPS/PLATINUM_HOP_US), \
-                 energy = sum",
-                base.id,
-                self.strategy.label(),
-                match self.strategy {
-                    ShardStrategy::Layers => "stage sum",
-                    _ => "max",
-                },
-                self.interconnect.link_bytes_per_s / 1e9,
-                self.interconnect.hop_s * 1e6
-            ),
-        }
-    }
-
-    fn run(&self, w: &Workload) -> Report {
-        let shards = self.partition(w);
+    /// Aggregate one dispatch over an explicit live-backend set (the
+    /// shared body of [`Backend::run`] and [`Backend::run_degraded`]).
+    fn run_on(&self, w: &Workload, live: &[&dyn Backend]) -> Report {
+        let shards = self.partition_n(w, live.len().max(1));
         let reports: Vec<Report> =
-            shards.iter().zip(&self.inner).map(|(shard, be)| be.run(shard)).collect();
+            shards.iter().zip(live).map(|(shard, be)| be.run(shard)).collect();
         let mut out = Report {
             backend: self.id.clone(),
             workload: w.label(),
@@ -368,6 +337,77 @@ impl Backend for Sharded {
             out.energy_breakdown = Some(breakdown);
         }
         out
+    }
+}
+
+impl Backend for Sharded {
+    fn id(&self) -> &str {
+        &self.id
+    }
+
+    fn describe(&self) -> BackendInfo {
+        let base = self.inner[0].describe();
+        let n = self.inner.len();
+        BackendInfo {
+            id: self.id.clone(),
+            name: format!("{}× {}", n, base.name),
+            kind: base.kind,
+            freq_hz: base.freq_hz,
+            pes: base.pes.map(|p| p * n),
+            area_mm2: base.area_mm2.map(|a| a * n as f64),
+            tech_nm: base.tech_nm,
+            notes: format!(
+                "{n} {} replicas, {}-partitioned; latency = {} + interconnect \
+                 ({} GB/s link, {} us/hop; env PLATINUM_LINK_GBPS/PLATINUM_HOP_US), \
+                 energy = sum",
+                base.id,
+                self.strategy.label(),
+                match self.strategy {
+                    ShardStrategy::Layers => "stage sum",
+                    _ => "max",
+                },
+                self.interconnect.link_bytes_per_s / 1e9,
+                self.interconnect.hop_s * 1e6
+            ),
+        }
+    }
+
+    fn run(&self, w: &Workload) -> Report {
+        let live: Vec<&dyn Backend> = self.inner.iter().map(|b| b.as_ref()).collect();
+        self.run_on(w, &live)
+    }
+
+    fn replicas(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn run_degraded(&self, w: &Workload, alive: &[bool]) -> Report {
+        let live: Vec<&dyn Backend> = self
+            .inner
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| alive.get(*i).copied().unwrap_or(true))
+            .map(|(_, b)| b.as_ref())
+            .collect();
+        if live.len() == self.inner.len() {
+            return self.run(w);
+        }
+        // failover: the dead replicas' shards fold into the survivors'
+        // partitions — same aggregation physics, fewer chips
+        self.run_on(w, &live)
+    }
+
+    fn redistribute_cost_s(&self, weight_bytes: u64, survivors: usize) -> f64 {
+        if survivors == 0 || self.inner.len() <= 1 {
+            return 0.0;
+        }
+        // The failed chip's weight shard must be re-shipped to the
+        // survivors over the modelled link (the ROADMAP's still-open
+        // weight-redistribution cost when shard assignment changes):
+        // one hop to fan the stripe out, then the shard's bytes
+        // serialized over a single link from the weight store.
+        let shard_bytes = weight_bytes as f64 / self.inner.len() as f64;
+        self.interconnect.hop_s + shard_bytes / self.interconnect.link_bytes_per_s
     }
 }
 
@@ -523,19 +563,56 @@ mod tests {
         let sh = sharded_platinum(2, ShardStrategy::Rows);
         std::env::remove_var("PLATINUM_LINK_GBPS");
         std::env::remove_var("PLATINUM_HOP_US");
+        let ic = ic.unwrap();
         assert_eq!(ic.link_bytes_per_s, 32e9);
         assert_eq!(ic.hop_s, 0.5e-6);
         let notes = sh.describe().notes;
         assert!(notes.contains("32 GB/s") && notes.contains("0.5 us/hop"), "{notes}");
         assert!(notes.contains("PLATINUM_LINK_GBPS"), "{notes}");
-        // junk values fall back to the defaults
+        // junk values are a loud startup error naming variable + value,
+        // never a silent fallback to the defaults
         std::env::set_var("PLATINUM_LINK_GBPS", "not-a-number");
-        std::env::set_var("PLATINUM_HOP_US", "-3");
-        let ic = Interconnect::from_env();
+        let err = Interconnect::from_env();
         std::env::remove_var("PLATINUM_LINK_GBPS");
+        let msg = err.unwrap_err().to_string();
+        assert!(msg.contains("PLATINUM_LINK_GBPS") && msg.contains("not-a-number"), "{msg}");
+        std::env::set_var("PLATINUM_HOP_US", "-3");
+        let err = Interconnect::from_env();
         std::env::remove_var("PLATINUM_HOP_US");
-        assert_eq!(ic.link_bytes_per_s, 16e9);
-        assert_eq!(ic.hop_s, 1e-6);
+        let msg = err.unwrap_err().to_string();
+        assert!(msg.contains("PLATINUM_HOP_US") && msg.contains("-3"), "{msg}");
+    }
+
+    #[test]
+    fn failover_repartitions_across_survivors_and_prices_redistribution() {
+        let sh = sharded_platinum(4, ShardStrategy::Rows);
+        let w = Workload::Kernel(Gemm::new(4320, 2080, 32));
+        let healthy = sh.run(&w);
+        // replica 2 dead: survivors each absorb a third of its stripe
+        let degraded = Backend::run_degraded(&sh, &w, &[true, true, false, true]);
+        assert_eq!(degraded.backend, healthy.backend);
+        assert_eq!(degraded.ops, healthy.ops, "no work is lost in failover");
+        assert!(
+            degraded.latency_s > healthy.latency_s,
+            "3 survivors must be slower than 4 replicas"
+        );
+        // all-alive mask is exactly the healthy path
+        let same = Backend::run_degraded(&sh, &w, &[true; 4]);
+        assert_eq!(same.latency_s, healthy.latency_s);
+        // redistribution stall is positive and shrinks with a faster link
+        let cost = Backend::redistribute_cost_s(&sh, 10_000_000, 3);
+        assert!(cost > 0.0);
+        let fast = Sharded::with_interconnect(
+            (0..4).map(|_| Box::new(PlatinumBackend::ternary()) as Box<dyn Backend>).collect(),
+            ShardStrategy::Rows,
+            Interconnect { link_bytes_per_s: 64e9, hop_s: 1e-6 },
+        )
+        .unwrap();
+        assert!(Backend::redistribute_cost_s(&fast, 10_000_000, 3) < cost);
+        // single-chip backends have nothing to redistribute
+        assert_eq!(Backend::redistribute_cost_s(&PlatinumBackend::ternary(), 1 << 20, 1), 0.0);
+        assert_eq!(Backend::replicas(&PlatinumBackend::ternary()), 1);
+        assert_eq!(Backend::replicas(&sh), 4);
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! The deterministic fault injector: turns a parsed [`FaultPlan`] into
+//! per-step fault outcomes drawn from a dedicated seeded stream.
+//!
+//! Determinism contract: the injector is consulted only from the
+//! scheduler's single-threaded serve loop, in a fixed order (one
+//! [`FaultInjector::begin_step`] per step, one
+//! [`FaultInjector::swap_fails`] per swap transfer), and its RNG stream
+//! is derived from the run seed alone.  Worker-pool size, wall-clock
+//! jitter and backend internals can never perturb a draw, so one seed +
+//! one plan ⇒ the same faults at the same virtual times, every run.
+
+use super::plan::{FaultPlan, FaultSpec};
+use super::ResilienceStats;
+use crate::util::rng::Rng;
+
+/// Domain-separation constant for the fault RNG stream: the injector
+/// must not share draws with the load generator or executor bridges.
+const FAULT_STREAM_SALT: u64 = 0xFA17_1A7E_0D00_C0DE;
+
+/// The faults that fire on one scheduler step.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepFaults {
+    /// Multiplier (≥ 1.0) applied to the step's compute latency —
+    /// max over the straggler clauses that hit live replicas.
+    pub slowdown: f64,
+    /// Extra stall seconds from transient link degradation.
+    pub link_penalty_s: f64,
+    /// Replica indices whose crash clause fired this step (at most once
+    /// per replica per run).
+    pub crashes: Vec<usize>,
+}
+
+/// Seeded, deterministic fault source for one serving run.
+pub struct FaultInjector {
+    specs: Vec<FaultSpec>,
+    rng: Rng,
+    alive: Vec<bool>,
+    fired: Vec<bool>, // per-spec: crash clauses fire at most once
+}
+
+impl FaultInjector {
+    /// Build an injector for a run with `replicas` backend replicas.
+    /// Crash/straggler clauses naming a replica index outside
+    /// `0..replicas` are kept but can never fire (documented no-ops, so
+    /// one plan string works across backend shapes).
+    pub fn new(plan: &FaultPlan, seed: u64, replicas: usize) -> FaultInjector {
+        FaultInjector {
+            specs: plan.specs.clone(),
+            rng: Rng::seed_from(seed ^ FAULT_STREAM_SALT),
+            alive: vec![true; replicas.max(1)],
+            fired: vec![false; plan.specs.len()],
+        }
+    }
+
+    /// Replica liveness map (true = still serving).
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    /// Replicas still alive.
+    pub fn survivors(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    /// Whether any replica has crashed so far.
+    pub fn degraded(&self) -> bool {
+        self.alive.iter().any(|a| !*a)
+    }
+
+    /// Draw this step's faults.  `now_s` is the virtual time at the
+    /// step's start, `step_bytes` the activation bytes the step moves
+    /// over the interconnect (prices link degradation as a stall).
+    /// Probabilistic clauses are drawn in plan order so the stream is
+    /// reproducible; crash clauses fire once when `now_s` passes their
+    /// deadline and the target replica is in range and alive.
+    pub fn begin_step(
+        &mut self,
+        now_s: f64,
+        step_bytes: f64,
+        stats: &mut ResilienceStats,
+    ) -> StepFaults {
+        let mut out = StepFaults { slowdown: 1.0, ..StepFaults::default() };
+        for (i, spec) in self.specs.iter().enumerate() {
+            match *spec {
+                FaultSpec::Straggler { replica, p, slowdown } => {
+                    // Draw unconditionally so liveness changes never
+                    // shift the stream for later clauses.
+                    let hit = self.rng.f64() < p;
+                    if hit && replica < self.alive.len() && self.alive[replica] {
+                        out.slowdown = out.slowdown.max(slowdown);
+                        stats.straggler_hits += 1;
+                    }
+                }
+                FaultSpec::LinkDegrade { p, gbps } => {
+                    let hit = self.rng.f64() < p;
+                    if hit {
+                        out.link_penalty_s += step_bytes / (gbps * 1e9);
+                        stats.linkdeg_hits += 1;
+                    }
+                }
+                FaultSpec::SwapFail { .. } => {} // drawn per swap transfer
+                FaultSpec::Crash { replica, t_s } => {
+                    if !self.fired[i]
+                        && now_s >= t_s
+                        && replica < self.alive.len()
+                        && self.alive[replica]
+                        && self.survivors() > 1
+                    {
+                        self.fired[i] = true;
+                        self.alive[replica] = false;
+                        out.crashes.push(replica);
+                        stats.crashed_replicas += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Draw whether one KV swap transfer fails (max over the plan's
+    /// `swapfail` clauses; every clause draws so the stream is stable).
+    pub fn swap_fails(&mut self, stats: &mut ResilienceStats) -> bool {
+        let mut failed = false;
+        for spec in &self.specs {
+            if let FaultSpec::SwapFail { p } = *spec {
+                if self.rng.f64() < p {
+                    failed = true;
+                }
+            }
+        }
+        if failed {
+            stats.swap_failures += 1;
+        }
+        failed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> ResilienceStats {
+        ResilienceStats::default()
+    }
+
+    #[test]
+    fn same_seed_same_fault_sequence() {
+        let plan = FaultPlan::parse("straggler:r0:p0.3:x4,linkdeg:0.3:2gbps,swapfail:p0.5").unwrap();
+        let run = |seed| {
+            let mut inj = FaultInjector::new(&plan, seed, 2);
+            let mut st = stats();
+            let mut trace = Vec::new();
+            for step in 0..64 {
+                let f = inj.begin_step(step as f64 * 0.01, 1e6, &mut st);
+                trace.push((f.slowdown, f.link_penalty_s, inj.swap_fails(&mut st)));
+            }
+            (trace, st.straggler_hits, st.linkdeg_hits, st.swap_failures)
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7).0, run(8).0, "different seeds draw different faults");
+    }
+
+    #[test]
+    fn crash_fires_once_at_its_deadline_and_spares_the_last_replica() {
+        let plan = FaultPlan::parse("crash:r1@t=1.5s,crash:r0@t=2.0s").unwrap();
+        let mut inj = FaultInjector::new(&plan, 0, 2);
+        let mut st = stats();
+        assert!(inj.begin_step(1.0, 0.0, &mut st).crashes.is_empty());
+        assert_eq!(inj.begin_step(1.6, 0.0, &mut st).crashes, vec![1]);
+        assert!(!inj.alive()[1]);
+        assert_eq!(inj.survivors(), 1);
+        // the r0 clause can never fire: it would kill the last replica
+        assert!(inj.begin_step(5.0, 0.0, &mut st).crashes.is_empty());
+        assert_eq!(st.crashed_replicas, 1);
+    }
+
+    #[test]
+    fn out_of_range_replicas_are_noops() {
+        let plan = FaultPlan::parse("straggler:r9:p1:x8,crash:r9@t=0.1s").unwrap();
+        let mut inj = FaultInjector::new(&plan, 3, 2);
+        let mut st = stats();
+        let f = inj.begin_step(1.0, 0.0, &mut st);
+        assert_eq!(f.slowdown, 1.0);
+        assert!(f.crashes.is_empty());
+        assert_eq!(st.straggler_hits + st.crashed_replicas, 0);
+    }
+
+    #[test]
+    fn link_degradation_prices_bytes_at_the_degraded_rate() {
+        let plan = FaultPlan::parse("linkdeg:1:4gbps").unwrap();
+        let mut inj = FaultInjector::new(&plan, 0, 1);
+        let mut st = stats();
+        let f = inj.begin_step(0.0, 8e9, &mut st);
+        assert!((f.link_penalty_s - 2.0).abs() < 1e-12, "{}", f.link_penalty_s);
+        assert_eq!(st.linkdeg_hits, 1);
+    }
+}

@@ -1,0 +1,184 @@
+//! Deterministic fault injection + SLO-grade resilience (S17).
+//!
+//! Every layer below this one assumed nothing ever fails: the traffic
+//! scheduler never missed a deadline, `Sharded` replicas never crashed,
+//! KV swaps never bounced.  End-to-end serving latency claims are only
+//! earned under degraded conditions, and the repo's seeded-determinism
+//! contract makes chaos testing *reproducible*: one seed + one fault
+//! plan ⇒ byte-identical metrics JSON on the virtual clock, invariant
+//! across worker-pool sizes (pinned in `tests/traffic_serving.rs`).
+//!
+//! Three pieces:
+//!
+//! * [`FaultPlan`] — the compact grammar
+//!   (`straggler:r1:p0.05:x8,linkdeg:0.2:4gbps,swapfail:p0.01,crash:r2@t=1.5s`)
+//!   parsed into validated clauses.
+//! * [`FaultInjector`] — draws each clause's outcomes from a dedicated
+//!   RNG stream derived from the run seed, consulted only at fixed
+//!   points in the single-threaded serve loop.
+//! * [`ResilienceConfig`] / [`ResilienceStats`] — the scheduler's
+//!   responses (per-request deadlines with timeout-kill + KV
+//!   reclamation, capped-exponential-backoff retry re-entering the
+//!   arrival timeline deterministically, brownout load-shedding by
+//!   deadline slack, `Sharded` failover with priced weight
+//!   redistribution) and the `resilience` metrics section they emit.
+//!
+//! The section is *strictly additive*: with an empty plan and default
+//! [`ResilienceConfig`] the scheduler takes the exact PR 6 code paths
+//! and serializes byte-identical metrics.
+
+mod inject;
+mod plan;
+
+pub use inject::{FaultInjector, StepFaults};
+pub use plan::{FaultPlan, FaultSpec};
+
+use crate::util::json::{num, obj, Json};
+
+/// Resilience knobs for the serving scheduler.  The default (no
+/// deadline, no retries, no brownout) disables every resilience code
+/// path; combined with an empty [`FaultPlan`] the scheduler behaves —
+/// and serializes — exactly as it did before this subsystem existed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResilienceConfig {
+    /// Per-request end-to-end deadline (seconds from arrival).  A
+    /// request past its deadline is timeout-killed wherever it sits
+    /// (queue or batch) and its KV blocks are reclaimed.
+    pub deadline_s: Option<f64>,
+    /// Retry budget for rejected / timed-out / failed requests
+    /// (0 = never retry).
+    pub max_retries: u32,
+    /// Capped exponential backoff: attempt `k` re-arrives after
+    /// `min(retry_cap_s, retry_base_s * 2^(k-1))`.
+    pub retry_base_s: f64,
+    pub retry_cap_s: f64,
+    /// Brownout trigger: queue depth at or above this sheds queued
+    /// requests whose deadline slack is below `brownout_slack_s`
+    /// (0 = brownout disabled).
+    pub brownout_queue: usize,
+    /// Minimum deadline slack (seconds) a queued request needs to
+    /// survive admission while browned out.
+    pub brownout_slack_s: f64,
+    /// Run seed the injector's dedicated RNG stream is derived from
+    /// (pass the load generator's seed for end-to-end reproducibility).
+    pub fault_seed: u64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> ResilienceConfig {
+        ResilienceConfig {
+            deadline_s: None,
+            max_retries: 0,
+            retry_base_s: 0.05,
+            retry_cap_s: 1.0,
+            brownout_queue: 0,
+            brownout_slack_s: 0.0,
+            fault_seed: 0,
+        }
+    }
+}
+
+impl ResilienceConfig {
+    /// Whether any resilience mechanism is switched on.  Together with
+    /// a non-empty fault plan this decides if the `resilience` metrics
+    /// section is emitted (byte-identity with pre-fault runs otherwise).
+    pub fn active(&self) -> bool {
+        self.deadline_s.is_some() || self.max_retries > 0 || self.brownout_queue > 0
+    }
+}
+
+/// Counters and gauges for the `resilience` metrics section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResilienceStats {
+    // resilience responses
+    pub timeouts: u64,
+    pub retries: u64,
+    pub retry_exhausted: u64,
+    pub shed: u64,
+    pub failovers: u64,
+    pub step_failures: u64,
+    // injected faults
+    pub straggler_hits: u64,
+    pub linkdeg_hits: u64,
+    pub swap_failures: u64,
+    pub crashed_replicas: u64,
+    // injected latency
+    pub fault_extra_s: f64,
+    pub redistribution_s: f64,
+    /// completed / offered, set by the scheduler at drain.
+    pub availability: f64,
+    /// p99 deltas vs. a fault-free run of the same spec (set by
+    /// `serve-bench` when it runs the baseline; `None` → JSON null).
+    pub p99_ttft_delta_s: Option<f64>,
+    pub p99_e2e_delta_s: Option<f64>,
+}
+
+impl ResilienceStats {
+    /// The `resilience` section of the metrics JSON.
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(num).unwrap_or(Json::Null);
+        obj(vec![
+            ("availability", num(self.availability)),
+            (
+                "counts",
+                obj(vec![
+                    ("timeouts", num(self.timeouts as f64)),
+                    ("retries", num(self.retries as f64)),
+                    ("retry_exhausted", num(self.retry_exhausted as f64)),
+                    ("shed", num(self.shed as f64)),
+                    ("failovers", num(self.failovers as f64)),
+                    ("step_failures", num(self.step_failures as f64)),
+                ]),
+            ),
+            (
+                "faults",
+                obj(vec![
+                    ("straggler_hits", num(self.straggler_hits as f64)),
+                    ("linkdeg_hits", num(self.linkdeg_hits as f64)),
+                    ("swap_failures", num(self.swap_failures as f64)),
+                    ("crashed_replicas", num(self.crashed_replicas as f64)),
+                    ("extra_s", num(self.fault_extra_s)),
+                    ("redistribution_s", num(self.redistribution_s)),
+                ]),
+            ),
+            (
+                "p99_delta_s",
+                obj(vec![
+                    ("ttft", opt(self.p99_ttft_delta_s)),
+                    ("e2e", opt(self.p99_e2e_delta_s)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_inactive() {
+        let cfg = ResilienceConfig::default();
+        assert!(!cfg.active());
+        assert!(ResilienceConfig { deadline_s: Some(0.5), ..cfg }.active());
+        assert!(ResilienceConfig { max_retries: 3, ..cfg }.active());
+        assert!(ResilienceConfig { brownout_queue: 64, ..cfg }.active());
+    }
+
+    #[test]
+    fn stats_json_round_trips() {
+        let st = ResilienceStats {
+            timeouts: 3,
+            retries: 7,
+            availability: 0.96875,
+            p99_ttft_delta_s: Some(0.012),
+            ..ResilienceStats::default()
+        };
+        let j = st.to_json();
+        assert_eq!(j.get("availability").unwrap().as_f64(), Some(0.96875));
+        assert_eq!(j.get("counts").unwrap().get("retries").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("p99_delta_s").unwrap().get("e2e"), Some(&Json::Null));
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+    }
+}

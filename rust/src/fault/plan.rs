@@ -1,0 +1,217 @@
+//! The fault-plan grammar: a compact, seed-friendly description of what
+//! goes wrong during a serving run.
+//!
+//! A plan is a comma-separated list of fault specs:
+//!
+//! ```text
+//! straggler:r1:p0.05:x8     replica 1 runs ×8 slower on 5% of steps
+//! linkdeg:0.2:4gbps         20% of steps re-ship their activations at 4 GB/s
+//! swapfail:p0.01            each KV swap transfer fails with probability 0.01
+//! crash:r2@t=1.5s           replica 2 crashes permanently at t = 1.5 s
+//! ```
+//!
+//! Probabilistic specs draw from a dedicated seeded stream (see
+//! [`crate::fault::FaultInjector`]); `crash` fires at a fixed virtual
+//! time.  [`FaultPlan::label`] re-serializes the canonical form so a
+//! plan can be echoed into the config section of the metrics JSON.
+
+use anyhow::{bail, Result};
+
+/// One fault clause from the plan grammar.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultSpec {
+    /// `straggler:r<i>:p<f>:x<f>` — replica `i`'s step latency is
+    /// multiplied by `slowdown` with per-step probability `p`.
+    Straggler { replica: usize, p: f64, slowdown: f64 },
+    /// `linkdeg:<p>:<g>gbps` — with per-step probability `p` the
+    /// interconnect degrades and the step's activation bytes re-ship at
+    /// `gbps` GB/s (priced as a pure stall).
+    LinkDegrade { p: f64, gbps: f64 },
+    /// `swapfail:p<f>` — each KV swap transfer fails with probability
+    /// `p`; the sequence falls back to recompute.
+    SwapFail { p: f64 },
+    /// `crash:r<i>@t=<f>s` — replica `i` fails permanently at virtual
+    /// time `t`; survivors absorb its shard after a priced
+    /// weight-redistribution stall.
+    Crash { replica: usize, t_s: f64 },
+}
+
+fn prob(tok: &str, clause: &str) -> Result<f64> {
+    let Some(body) = tok.strip_prefix('p') else {
+        bail!("fault clause {clause:?}: expected p<probability>, got {tok:?}")
+    };
+    match body.parse::<f64>() {
+        Ok(p) if p.is_finite() && (0.0..=1.0).contains(&p) => Ok(p),
+        _ => bail!("fault clause {clause:?}: probability {body:?} must be in [0, 1]"),
+    }
+}
+
+fn replica(tok: &str, clause: &str) -> Result<usize> {
+    let Some(body) = tok.strip_prefix('r') else {
+        bail!("fault clause {clause:?}: expected r<replica-index>, got {tok:?}")
+    };
+    match body.parse::<usize>() {
+        Ok(r) => Ok(r),
+        Err(_) => bail!("fault clause {clause:?}: replica index {body:?} is not an integer"),
+    }
+}
+
+fn positive(body: &str, clause: &str, what: &str) -> Result<f64> {
+    match body.parse::<f64>() {
+        Ok(v) if v.is_finite() && v > 0.0 => Ok(v),
+        _ => bail!("fault clause {clause:?}: {what} {body:?} must be a finite number > 0"),
+    }
+}
+
+/// A parsed, validated fault plan (possibly empty).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse the compact grammar; an empty/whitespace string is the
+    /// empty plan (no faults — byte-identical to a plain run).
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut specs = Vec::new();
+        for clause in text.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let mut parts = clause.splitn(2, ':');
+            let kind = parts.next().unwrap_or_default();
+            let rest = parts.next().unwrap_or_default();
+            let spec = match kind {
+                "straggler" => {
+                    let toks: Vec<&str> = rest.split(':').collect();
+                    if toks.len() != 3 {
+                        bail!("fault clause {clause:?}: expected straggler:r<i>:p<f>:x<f>");
+                    }
+                    let slowdown = match toks[2].strip_prefix('x') {
+                        Some(body) => positive(body, clause, "slowdown")?,
+                        None => bail!("fault clause {clause:?}: expected x<slowdown>"),
+                    };
+                    if slowdown < 1.0 {
+                        bail!("fault clause {clause:?}: slowdown must be >= 1");
+                    }
+                    FaultSpec::Straggler {
+                        replica: replica(toks[0], clause)?,
+                        p: prob(toks[1], clause)?,
+                        slowdown,
+                    }
+                }
+                "linkdeg" => {
+                    let toks: Vec<&str> = rest.split(':').collect();
+                    if toks.len() != 2 {
+                        bail!("fault clause {clause:?}: expected linkdeg:<p>:<gbps>gbps");
+                    }
+                    let p = positive(toks[0], clause, "probability")?;
+                    if p > 1.0 {
+                        bail!("fault clause {clause:?}: probability must be in (0, 1]");
+                    }
+                    let gbps = match toks[1].strip_suffix("gbps") {
+                        Some(body) => positive(body, clause, "bandwidth")?,
+                        None => bail!("fault clause {clause:?}: bandwidth needs a gbps suffix"),
+                    };
+                    FaultSpec::LinkDegrade { p, gbps }
+                }
+                "swapfail" => FaultSpec::SwapFail { p: prob(rest, clause)? },
+                "crash" => {
+                    let mut at = rest.splitn(2, "@t=");
+                    let r = at.next().unwrap_or_default();
+                    let Some(t_tok) = at.next() else {
+                        bail!("fault clause {clause:?}: expected crash:r<i>@t=<f>s")
+                    };
+                    let t_s = match t_tok.strip_suffix('s') {
+                        Some(body) => positive(body, clause, "crash time")?,
+                        None => bail!("fault clause {clause:?}: crash time needs an s suffix"),
+                    };
+                    FaultSpec::Crash { replica: replica(r, clause)?, t_s }
+                }
+                other => bail!(
+                    "unknown fault kind {other:?} in clause {clause:?} \
+                     (expected straggler | linkdeg | swapfail | crash)"
+                ),
+            };
+            specs.push(spec);
+        }
+        Ok(FaultPlan { specs })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Canonical re-serialization (round-trips through [`parse`]).
+    ///
+    /// [`parse`]: FaultPlan::parse
+    pub fn label(&self) -> String {
+        let clauses: Vec<String> = self
+            .specs
+            .iter()
+            .map(|s| match s {
+                FaultSpec::Straggler { replica, p, slowdown } => {
+                    format!("straggler:r{replica}:p{p}:x{slowdown}")
+                }
+                FaultSpec::LinkDegrade { p, gbps } => format!("linkdeg:{p}:{gbps}gbps"),
+                FaultSpec::SwapFail { p } => format!("swapfail:p{p}"),
+                FaultSpec::Crash { replica, t_s } => format!("crash:r{replica}@t={t_s}s"),
+            })
+            .collect();
+        clauses.join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example_plan() {
+        let plan =
+            FaultPlan::parse("straggler:r1:p0.05:x8,linkdeg:0.2:4gbps,swapfail:p0.01,crash:r2@t=1.5s")
+                .unwrap();
+        assert_eq!(
+            plan.specs,
+            vec![
+                FaultSpec::Straggler { replica: 1, p: 0.05, slowdown: 8.0 },
+                FaultSpec::LinkDegrade { p: 0.2, gbps: 4.0 },
+                FaultSpec::SwapFail { p: 0.01 },
+                FaultSpec::Crash { replica: 2, t_s: 1.5 },
+            ]
+        );
+    }
+
+    #[test]
+    fn label_round_trips() {
+        let text = "straggler:r0:p0.5:x2,linkdeg:0.25:8gbps,swapfail:p0.1,crash:r3@t=2s";
+        let plan = FaultPlan::parse(text).unwrap();
+        assert_eq!(FaultPlan::parse(&plan.label()).unwrap(), plan);
+    }
+
+    #[test]
+    fn empty_and_whitespace_plans_are_empty() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" , ,").unwrap().is_empty());
+        assert_eq!(FaultPlan::default().label(), "");
+    }
+
+    #[test]
+    fn malformed_clauses_are_loud() {
+        for bad in [
+            "straggler:r1:p0.05",      // missing slowdown
+            "straggler:r1:p2:x8",      // probability out of range
+            "straggler:r1:p0.1:x0.5",  // speedup is not a straggler
+            "linkdeg:0.2:4",           // missing gbps suffix
+            "linkdeg:1.5:4gbps",       // probability > 1
+            "swapfail:0.01",           // missing p prefix
+            "crash:r2@t=1.5",          // missing s suffix
+            "crash:r2:t=1.5s",         // wrong separator
+            "meteor:p1",               // unknown kind
+        ] {
+            let err = FaultPlan::parse(bad);
+            assert!(err.is_err(), "{bad:?} must fail to parse");
+        }
+    }
+}

@@ -168,6 +168,18 @@ impl KvCache {
             && self.pool.allocated() == self.prefix_blocks.len()
     }
 
+    /// Accounting-leak counts at drain: blocks still allocated beyond
+    /// the prefix cache, and sequence state (live tables + swapped)
+    /// that survived the drain.  Both zero on a clean run; the
+    /// scheduler surfaces nonzero values through `KvStats` so release
+    /// builds report leaks instead of a `debug_assert` silently
+    /// compiling out.
+    pub fn leak_counts(&self) -> (u64, u64) {
+        let blocks = self.pool.allocated().saturating_sub(self.prefix_blocks.len()) as u64;
+        let seqs = (self.tables.len() + self.swapped.len()) as u64;
+        (blocks, seqs)
+    }
+
     /// Prompt tokens an admission would skip right now (non-mutating;
     /// the scheduler prices prefill on computed = prompt − cached).
     pub fn cached_tokens(&self, prompt_tokens: usize, shared_prefix: usize) -> usize {
@@ -365,6 +377,20 @@ impl KvCache {
         self.tables.insert(id, SeqTable { blocks, tokens: sw.tokens, shared });
         self.note_usage();
         Some(fresh)
+    }
+
+    /// Terminal release of a swapped-out sequence (deadline kill): drop
+    /// the retained shared-prefix references without paying to swap the
+    /// private blocks back in first.
+    pub fn release_swapped(&mut self, id: u64) {
+        let Some(sw) = self.swapped.remove(&id) else {
+            debug_assert!(false, "release_swapped of unknown seq {id}");
+            return;
+        };
+        for b in sw.shared_blocks {
+            self.pool.release(b);
+        }
+        self.note_usage();
     }
 
     /// Recompute preemption: drop everything; the sequence re-prefills

@@ -116,31 +116,28 @@ impl Default for KvConfig {
     }
 }
 
-fn env_usize(key: &str) -> Option<usize> {
-    std::env::var(key).ok().and_then(|v| v.trim().parse::<usize>().ok()).filter(|v| *v > 0)
-}
-
 impl KvConfig {
     /// Defaults overridden by `PLATINUM_KV_BLOCK`, `PLATINUM_KV_SRAM_KB`,
-    /// `PLATINUM_KV_DRAM_MB` and `PLATINUM_KV_POLICY` (unset or
-    /// unparsable values keep the default — PR 5 interconnect pattern).
-    pub fn from_env() -> KvConfig {
+    /// `PLATINUM_KV_DRAM_MB` and `PLATINUM_KV_POLICY`.  Unset keeps the
+    /// default; a set-but-unparsable value is a hard startup error
+    /// naming the variable and the offending value (`util::env`).
+    pub fn from_env() -> anyhow::Result<KvConfig> {
         let mut cfg = KvConfig::default();
-        if let Some(b) = env_usize("PLATINUM_KV_BLOCK") {
+        if let Some(b) = crate::util::env::positive_usize("PLATINUM_KV_BLOCK")? {
             cfg.block_tokens = b;
         }
-        if let Some(kib) = env_usize("PLATINUM_KV_SRAM_KB") {
+        if let Some(kib) = crate::util::env::positive_usize("PLATINUM_KV_SRAM_KB")? {
             cfg.sram_kib = kib;
         }
-        if let Some(mib) = env_usize("PLATINUM_KV_DRAM_MB") {
+        if let Some(mib) = crate::util::env::positive_usize("PLATINUM_KV_DRAM_MB")? {
             cfg.dram_mib = mib;
         }
         if let Some(p) =
-            std::env::var("PLATINUM_KV_POLICY").ok().and_then(|v| KvPolicy::parse(&v))
+            crate::util::env::read("PLATINUM_KV_POLICY", "swap | recompute", KvPolicy::parse)?
         {
             cfg.policy = p;
         }
-        cfg
+        Ok(cfg)
     }
 
     /// Total modelled KV capacity in bytes (SRAM + DRAM budgets).
@@ -181,6 +178,13 @@ pub struct KvStats {
     pub swapped_in_bytes: u64,
     pub swap_stall_s: f64,
     pub recomputed_tokens: u64,
+    // accounting-leak detectors (release builds report instead of
+    // silently saturating; all-zero on a clean run and then absent from
+    // the JSON, preserving byte-identity)
+    pub token_release_underflows: u64,
+    pub leaked_blocks: u64,
+    pub leaked_seqs: u64,
+    pub leaked_inflight_tokens: u64,
     // DRAM timing model behind the swap path
     pub dram_model: &'static str,
     pub dram: DramStats,
@@ -207,10 +211,20 @@ impl KvStats {
         }
     }
 
+    /// Whether any accounting leak fired (in-flight token release
+    /// underflow, blocks or sequence tables alive past drain).
+    pub fn leaked(&self) -> bool {
+        self.token_release_underflows
+            + self.leaked_blocks
+            + self.leaked_seqs
+            + self.leaked_inflight_tokens
+            > 0
+    }
+
     /// The `kv` section of the metrics JSON.
     pub fn to_json(&self) -> Json {
         let rate = |r: Option<f64>| r.map(num).unwrap_or(Json::Null);
-        obj(vec![
+        let mut fields = vec![
             ("block_tokens", num(self.block_tokens as f64)),
             ("block_bytes", num(self.block_bytes as f64)),
             ("bytes_per_token", num(self.bytes_per_token as f64)),
@@ -244,18 +258,33 @@ impl KvStats {
                 ]),
             ),
             ("recomputed_tokens", num(self.recomputed_tokens as f64)),
-            (
-                "dram",
+        ];
+        // Leak detectors are exceptional-state reporting: the key only
+        // appears when something actually leaked, so clean runs stay
+        // byte-identical to the pre-detector era.
+        if self.leaked() {
+            fields.push((
+                "leaks",
                 obj(vec![
-                    ("model", s(self.dram_model)),
-                    ("bursts", num(self.dram.bursts as f64)),
-                    ("row_hits", num(self.dram.row_hits as f64)),
-                    ("row_misses", num(self.dram.row_misses as f64)),
-                    ("row_conflicts", num(self.dram.row_conflicts as f64)),
-                    ("row_hit_rate", rate(self.dram.hit_rate())),
+                    ("token_release_underflows", num(self.token_release_underflows as f64)),
+                    ("blocks", num(self.leaked_blocks as f64)),
+                    ("seqs", num(self.leaked_seqs as f64)),
+                    ("inflight_tokens", num(self.leaked_inflight_tokens as f64)),
                 ]),
-            ),
-        ])
+            ));
+        }
+        fields.push((
+            "dram",
+            obj(vec![
+                ("model", s(self.dram_model)),
+                ("bursts", num(self.dram.bursts as f64)),
+                ("row_hits", num(self.dram.row_hits as f64)),
+                ("row_misses", num(self.dram.row_misses as f64)),
+                ("row_conflicts", num(self.dram.row_conflicts as f64)),
+                ("row_hit_rate", rate(self.dram.hit_rate())),
+            ]),
+        ));
+        obj(fields)
     }
 }
 
@@ -282,19 +311,36 @@ mod tests {
     }
 
     #[test]
-    fn from_env_overrides_and_falls_back() {
+    fn from_env_overrides_and_rejects_junk_loudly() {
         // narrow set → read → remove windows (PR 5 pattern)
         std::env::set_var("PLATINUM_KV_BLOCK", "8");
         std::env::set_var("PLATINUM_KV_POLICY", "swap");
         let cfg = KvConfig::from_env();
         std::env::remove_var("PLATINUM_KV_BLOCK");
         std::env::remove_var("PLATINUM_KV_POLICY");
+        let cfg = cfg.unwrap();
         assert_eq!(cfg.block_tokens, 8);
         assert_eq!(cfg.policy, KvPolicy::Swap);
+        // an unparsable knob is a startup error naming variable + value,
+        // never a silent fallback to the default
         std::env::set_var("PLATINUM_KV_SRAM_KB", "zero");
-        let cfg = KvConfig::from_env();
+        let err = KvConfig::from_env();
         std::env::remove_var("PLATINUM_KV_SRAM_KB");
-        assert_eq!(cfg.sram_kib, 512, "unparsable values keep the default");
+        let msg = err.unwrap_err().to_string();
+        assert!(msg.contains("PLATINUM_KV_SRAM_KB") && msg.contains("zero"), "{msg}");
+    }
+
+    #[test]
+    fn leak_detectors_surface_only_when_something_leaked() {
+        let clean = KvStats { dram_model: "bank", ..KvStats::default() };
+        assert!(!clean.leaked());
+        assert!(clean.to_json().get("leaks").is_none(), "clean runs emit no leaks key");
+        let leaky = KvStats { leaked_blocks: 3, token_release_underflows: 1, ..clean };
+        assert!(leaky.leaked());
+        let j = leaky.to_json();
+        assert_eq!(j.get("leaks").unwrap().get("blocks").unwrap().as_f64(), Some(3.0));
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text);
     }
 
     #[test]

@@ -47,6 +47,7 @@
 //! | [`engine`] | unified Backend/Workload/Report execution API (S13) |
 //! | [`traffic`] | continuous-batching serving + load generation (S15) |
 //! | [`kv`] | paged KV-cache allocator + SRAM/DRAM capacity model (S16) |
+//! | [`fault`] | deterministic fault injection + SLO resilience (S17) |
 //!
 //! All execution flows through [`engine`]: a [`engine::Registry`]
 //! constructs [`engine::Backend`]s by name, each runs
@@ -65,6 +66,7 @@ pub mod dse;
 pub mod encoding;
 pub mod energy;
 pub mod engine;
+pub mod fault;
 pub mod isa;
 pub mod kv;
 pub mod lut;

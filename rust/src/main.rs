@@ -25,6 +25,7 @@ use platinum::energy::{AreaModel, EnergyTable};
 use platinum::engine::{
     Backend, PlatinumBackend, Registry, Report, Workload, COMPARISON_IDS, SHARDED_GRAMMAR,
 };
+use platinum::fault::{FaultPlan, ResilienceConfig};
 use platinum::kv::{KvConfig, KvPolicy};
 use platinum::models::{ALL_MODELS, B158_3B, DECODE_N, PREFILL_N};
 use platinum::runtime::{HostTensor, Runtime};
@@ -83,9 +84,15 @@ fn print_help() {
                       [--kv-block <tok>] [--kv-sram-kb <n>] [--kv-dram-mb <n>]\n\
                       [--kv-policy swap|recompute] [--no-prefix-cache]\n\
                       [--dram-model pipe|bank] [--shared-prefix <tok>]\n\
+                      [--faults <plan>] deterministic fault injection, e.g.\n\
+                      \"straggler:r1:p0.05:x8,linkdeg:0.2:4gbps,swapfail:p0.01,crash:r2@t=1.5s\"\n\
+                      [--deadline-ms <f>] [--retries <n>] [--retry-base-ms <f>]\n\
+                      [--retry-cap-ms <f>] [--brownout-queue <n>] [--brownout-slack-ms <f>]\n\
                       continuous-batching load run: TTFT/TPOT/E2E percentiles,\n\
                       batch/queue series, paged-KV block/prefix-cache stats,\n\
-                      goodput vs offered load\n\
+                      goodput vs offered load; under faults/SLO flags the\n\
+                      metrics grow a `resilience` section (availability,\n\
+                      timeout/retry/failover/shed counters, p99 deltas)\n\
            runtime    [--artifacts <dir>] [--run <name>] PJRT artifacts\n\
          \n\
          BACKENDS (see `platinum backends`):\n\
@@ -513,7 +520,7 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
         seed: args.get_usize("seed", 0)? as u64,
     };
     // KV knobs: env (`PLATINUM_KV_*`) seeds the defaults, flags win
-    let mut kv = KvConfig::from_env();
+    let mut kv = KvConfig::from_env()?;
     kv.block_tokens = args.get_usize("kv-block", kv.block_tokens)?;
     kv.sram_kib = args.get_usize("kv-sram-kb", kv.sram_kib)?;
     kv.dram_mib = args.get_usize("kv-dram-mb", kv.dram_mib)?;
@@ -527,6 +534,26 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
     }
     kv.prefix_cache = !args.flag("no-prefix-cache");
     let shared_prefix = args.get_usize("shared-prefix", 0)?;
+    // fault injection + SLO resilience (S17): --faults carries the
+    // clause grammar; the response knobs stay inert unless given, so a
+    // flagless run serializes exactly as before the subsystem existed
+    let plan = match args.get("faults") {
+        Some(text) => FaultPlan::parse(text)?,
+        None => FaultPlan::default(),
+    };
+    let deadline_s = match args.get("deadline-ms") {
+        Some(_) => Some(args.get_f64("deadline-ms", 0.0)? * 1e-3),
+        None => None,
+    };
+    let resilience = ResilienceConfig {
+        deadline_s,
+        max_retries: args.get_usize("retries", 0)? as u32,
+        retry_base_s: args.get_f64("retry-base-ms", 50.0)? * 1e-3,
+        retry_cap_s: args.get_f64("retry-cap-ms", 1000.0)? * 1e-3,
+        brownout_queue: args.get_usize("brownout-queue", 0)?,
+        brownout_slack_s: args.get_f64("brownout-slack-ms", 0.0)? * 1e-3,
+        fault_seed: args.get_usize("seed", 0)? as u64,
+    };
     let cfg = SchedulerConfig {
         max_batch: args.get_usize("max-batch", 32)?,
         max_queue: args.get_usize("max-queue", 256)?,
@@ -534,6 +561,7 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
         max_prefill_tokens: args.get_usize("max-prefill-tokens", 2048)?,
         step_overhead_s: args.get_f64("step-overhead-us", 0.0)? * 1e-6,
         kv,
+        resilience,
     };
     let mut requests = spec.generate()?;
     with_shared_prefix(&mut requests, shared_prefix);
@@ -543,38 +571,65 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
         other => bail!("unknown --clock {other:?}; valid clocks: virtual, wall"),
     };
     let sched = Scheduler::new(backend.as_ref(), *model, cfg);
-    let result = sched.serve(&requests, clock.as_mut())?;
+    let mut result = sched.serve_faults(&requests, clock.as_mut(), None, &plan)?;
+    // p99-under-fault deltas need a fault-free baseline of the same
+    // trace; only worth the second pass on the virtual clock (a wall
+    // run would double real time)
+    if result.metrics.resilience.is_some() && args.get_str("clock", "virtual") == "virtual" {
+        let base_cfg =
+            SchedulerConfig { resilience: ResilienceConfig::default(), ..cfg };
+        let base = Scheduler::new(backend.as_ref(), *model, base_cfg)
+            .serve(&requests, &mut VirtualClock::new())?;
+        let ttft = result.metrics.ttft.quantile(0.99).zip(base.metrics.ttft.quantile(0.99));
+        let e2e = result.metrics.e2e.quantile(0.99).zip(base.metrics.e2e.quantile(0.99));
+        if let Some(res) = result.metrics.resilience.as_mut() {
+            res.p99_ttft_delta_s = ttft.map(|(f, b)| f - b);
+            res.p99_e2e_delta_s = e2e.map(|(f, b)| f - b);
+        }
+    }
     let m = &result.metrics;
     if args.flag("json") {
+        let mut config = vec![
+            ("backend", s(backend.id())),
+            ("model", s(model.name)),
+            ("pattern", s(spec.pattern.label())),
+            // for replay traces the --rate flag is ignored, so
+            // report the rate the pattern actually offers
+            ("rate_rps", num(spec.pattern.rate_rps())),
+            ("requests", num(requests.len() as f64)),
+            ("seed", num(spec.seed as f64)),
+            ("prompt_tokens", s(&spec.prompt.label())),
+            ("output_tokens", s(&spec.output.label())),
+            ("clock", s(clock.label())),
+            ("max_batch", num(cfg.max_batch as f64)),
+            ("max_queue", num(cfg.max_queue as f64)),
+            ("max_inflight_tokens", num(cfg.max_inflight_tokens as f64)),
+            ("max_prefill_tokens", num(cfg.max_prefill_tokens as f64)),
+            ("kv_block_tokens", num(kv.block_tokens as f64)),
+            ("kv_sram_kib", num(kv.sram_kib as f64)),
+            ("kv_dram_mib", num(kv.dram_mib as f64)),
+            ("kv_policy", s(kv.policy.label())),
+            ("kv_prefix_cache", s(if kv.prefix_cache { "on" } else { "off" })),
+            ("dram_model", s(kv.dram_model.label())),
+            ("shared_prefix_tokens", num(shared_prefix as f64)),
+        ];
+        // only when the resilience section exists, so fault-free output
+        // stays byte-identical to the pre-fault era
+        if m.resilience.is_some() {
+            config.push(("faults", s(&plan.label())));
+            config.push((
+                "deadline_ms",
+                deadline_s.map(|d| num(d * 1e3)).unwrap_or(Json::Null),
+            ));
+            config.push(("retries", num(resilience.max_retries as f64)));
+            config.push(("retry_base_ms", num(resilience.retry_base_s * 1e3)));
+            config.push(("retry_cap_ms", num(resilience.retry_cap_s * 1e3)));
+            config.push(("brownout_queue", num(resilience.brownout_queue as f64)));
+            config.push(("brownout_slack_ms", num(resilience.brownout_slack_s * 1e3)));
+        }
         let doc = obj(vec![
             ("bench", s("serve-bench")),
-            (
-                "config",
-                obj(vec![
-                    ("backend", s(backend.id())),
-                    ("model", s(model.name)),
-                    ("pattern", s(spec.pattern.label())),
-                    // for replay traces the --rate flag is ignored, so
-                    // report the rate the pattern actually offers
-                    ("rate_rps", num(spec.pattern.rate_rps())),
-                    ("requests", num(requests.len() as f64)),
-                    ("seed", num(spec.seed as f64)),
-                    ("prompt_tokens", s(&spec.prompt.label())),
-                    ("output_tokens", s(&spec.output.label())),
-                    ("clock", s(clock.label())),
-                    ("max_batch", num(cfg.max_batch as f64)),
-                    ("max_queue", num(cfg.max_queue as f64)),
-                    ("max_inflight_tokens", num(cfg.max_inflight_tokens as f64)),
-                    ("max_prefill_tokens", num(cfg.max_prefill_tokens as f64)),
-                    ("kv_block_tokens", num(kv.block_tokens as f64)),
-                    ("kv_sram_kib", num(kv.sram_kib as f64)),
-                    ("kv_dram_mib", num(kv.dram_mib as f64)),
-                    ("kv_policy", s(kv.policy.label())),
-                    ("kv_prefix_cache", s(if kv.prefix_cache { "on" } else { "off" })),
-                    ("dram_model", s(kv.dram_model.label())),
-                    ("shared_prefix_tokens", num(shared_prefix as f64)),
-                ]),
-            ),
+            ("config", obj(config)),
             ("metrics", m.to_json()),
         ]);
         println!("{}", doc.to_string());
@@ -633,6 +688,28 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
         println!("  TPOT        {}", q(&m.tpot));
         println!("  E2E         {}", q(&m.e2e));
         println!("  queue wait  {}", q(&m.queue_wait));
+        if let Some(res) = &m.resilience {
+            println!(
+                "  resilience: availability {:.4}  timeouts {}  retries {}  shed {}  \
+                 failovers {}  step failures {}",
+                res.availability,
+                res.timeouts,
+                res.retries,
+                res.shed,
+                res.failovers,
+                res.step_failures
+            );
+            println!(
+                "  faults: stragglers {}  linkdeg {}  swap failures {}  crashes {}  \
+                 extra {:.3} ms  redistribution {:.3} ms",
+                res.straggler_hits,
+                res.linkdeg_hits,
+                res.swap_failures,
+                res.crashed_replicas,
+                res.fault_extra_s * 1e3,
+                res.redistribution_s * 1e3
+            );
+        }
         let completed_rps =
             if m.makespan_s > 0.0 { m.completed as f64 / m.makespan_s } else { 0.0 };
         println!(

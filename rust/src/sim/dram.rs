@@ -82,12 +82,13 @@ impl DramModelKind {
         }
     }
 
-    /// Construct the model (pipe efficiency honours `PLATINUM_DRAM_EFF`).
-    pub fn build(self, peak_bw: f64, freq_hz: f64) -> Box<dyn DramModel> {
-        match self {
-            DramModelKind::Pipe => Box::new(DramChannel::from_env(peak_bw, freq_hz)),
+    /// Construct the model (pipe efficiency honours `PLATINUM_DRAM_EFF`;
+    /// an invalid value in that variable is a loud startup error).
+    pub fn build(self, peak_bw: f64, freq_hz: f64) -> anyhow::Result<Box<dyn DramModel>> {
+        Ok(match self {
+            DramModelKind::Pipe => Box::new(DramChannel::from_env(peak_bw, freq_hz)?),
             DramModelKind::Bank => Box::new(BankStateDram::new(peak_bw, freq_hz)),
-        }
+        })
     }
 }
 
@@ -138,16 +139,18 @@ impl DramChannel {
 
     /// Like [`DramChannel::new`] but with the sustained-efficiency
     /// factor calibratable via `PLATINUM_DRAM_EFF` (accepted range
-    /// (0, 1]).  Unset, unparsable, or out-of-range values keep the
-    /// default 0.9.
-    pub fn from_env(peak_bw: f64, freq_hz: f64) -> Self {
+    /// (0, 1]).  Unset keeps the default 0.9; a set-but-invalid value
+    /// is a hard error naming the variable and the offending value
+    /// (`util::env`) — a silently-ignored calibration knob looks
+    /// exactly like a successful calibration.
+    pub fn from_env(peak_bw: f64, freq_hz: f64) -> anyhow::Result<Self> {
         let mut d = DramChannel::new(peak_bw, freq_hz);
         if let Some(eff) =
-            std::env::var("PLATINUM_DRAM_EFF").ok().and_then(|v| parse_efficiency(&v))
+            crate::util::env::read("PLATINUM_DRAM_EFF", "a number in (0, 1]", parse_efficiency)?
         {
             d.efficiency = eff;
         }
-        d
+        Ok(d)
     }
 
     /// Bytes transferable per accelerator cycle (sustained).
@@ -430,11 +433,14 @@ mod tests {
         std::env::set_var("PLATINUM_DRAM_EFF", "0.88");
         let d = DramChannel::from_env(64e9, 500e6);
         std::env::remove_var("PLATINUM_DRAM_EFF");
-        assert!((d.efficiency - 0.88).abs() < 1e-12);
+        assert!((d.unwrap().efficiency - 0.88).abs() < 1e-12);
+        // out-of-range is a loud error naming variable + value, never a
+        // silent fallback to the default
         std::env::set_var("PLATINUM_DRAM_EFF", "2.5");
-        let d = DramChannel::from_env(64e9, 500e6);
+        let err = DramChannel::from_env(64e9, 500e6);
         std::env::remove_var("PLATINUM_DRAM_EFF");
-        assert!((d.efficiency - 0.9).abs() < 1e-12, "out-of-range must fall back");
+        let msg = err.unwrap_err().to_string();
+        assert!(msg.contains("PLATINUM_DRAM_EFF") && msg.contains("2.5"), "{msg}");
     }
 
     #[test]
@@ -517,8 +523,8 @@ mod tests {
         assert_eq!(DramModelKind::parse(" Bank "), Some(DramModelKind::Bank));
         assert_eq!(DramModelKind::parse("fixed"), Some(DramModelKind::Pipe));
         assert_eq!(DramModelKind::parse("hbm"), None);
-        let mut p = DramModelKind::Pipe.build(64e9, 500e6);
-        let mut b = DramModelKind::Bank.build(64e9, 500e6);
+        let mut p = DramModelKind::Pipe.build(64e9, 500e6).unwrap();
+        let mut b = DramModelKind::Bank.build(64e9, 500e6).unwrap();
         assert_eq!(p.label(), "pipe");
         assert_eq!(b.label(), "bank");
         assert!(p.transfer_cycles_at(0, 4096) > 0);

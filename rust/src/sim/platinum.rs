@@ -97,7 +97,9 @@ pub fn simulate_gemm(cfg: &PlatinumConfig, mode: ExecMode, g: Gemm) -> SimReport
     };
     let construct_cycles_round = path.construct_cycles(cfg.pipeline_depth) as u64;
     let tree_drain = (usize::BITS - cfg.num_ppes.leading_zeros()) as u64 + 1;
-    let dram = DramChannel::from_env(cfg.dram_bw, cfg.freq_hz);
+    // infallible pricing path: an invalid PLATINUM_DRAM_EFF is a
+    // configuration bug worth halting on, with the variable named
+    let dram = DramChannel::from_env(cfg.dram_bw, cfg.freq_hz).unwrap_or_else(|e| panic!("{e}"));
     let area = AreaModel::platinum(cfg);
     let etab = EnergyTable::from_area(&area);
 
@@ -249,7 +251,10 @@ pub fn simulate_gemm(cfg: &PlatinumConfig, mode: ExecMode, g: Gemm) -> SimReport
             (phases.construct + phases.query) as f64 / busy as f64
         },
         dram_bw: act.dram_total_bytes() as f64
-            / (cycles as f64 * DramChannel::from_env(cfg.dram_bw, cfg.freq_hz).bytes_per_cycle()),
+            / (cycles as f64
+                * DramChannel::from_env(cfg.dram_bw, cfg.freq_hz)
+                    .unwrap_or_else(|e| panic!("{e}"))
+                    .bytes_per_cycle()),
     };
 
     SimReport {

@@ -9,6 +9,7 @@
 //! are pure functions of the bucket counts, so two runs that make the
 //! same recordings serialize byte-identical JSON.
 
+use crate::fault::ResilienceStats;
 use crate::kv::KvStats;
 use crate::util::json::{arr, num, obj, Json};
 
@@ -182,6 +183,11 @@ pub struct TrafficMetrics {
     /// hits, swap/recompute pressure, DRAM row-buffer locality).
     pub kv: KvStats,
 
+    /// Fault-injection / SLO-resilience counters — `Some` only when a
+    /// fault plan or a resilience response was active, so fault-free
+    /// runs serialize byte-identically to the pre-resilience era.
+    pub resilience: Option<ResilienceStats>,
+
     series: Vec<StepSample>,
 }
 
@@ -250,7 +256,7 @@ impl TrafficMetrics {
         let series = self.series();
         let makespan = self.makespan_s;
         let rps = |n: u64| if makespan > 0.0 { n as f64 / makespan } else { 0.0 };
-        obj(vec![
+        let mut fields = vec![
             (
                 "counts",
                 obj(vec![
@@ -301,18 +307,23 @@ impl TrafficMetrics {
                 ]),
             ),
             ("kv", self.kv.to_json()),
-            (
-                "series",
-                obj(vec![
-                    ("t_s", arr(series.iter().map(|p| num(p.t_s)).collect())),
-                    (
-                        "queue_depth",
-                        arr(series.iter().map(|p| num(p.queue_depth as f64)).collect()),
-                    ),
-                    ("batch", arr(series.iter().map(|p| num(p.batch as f64)).collect())),
-                ]),
-            ),
-        ])
+        ];
+        // conditional so fault-free runs stay byte-identical
+        if let Some(res) = &self.resilience {
+            fields.push(("resilience", res.to_json()));
+        }
+        fields.push((
+            "series",
+            obj(vec![
+                ("t_s", arr(series.iter().map(|p| num(p.t_s)).collect())),
+                (
+                    "queue_depth",
+                    arr(series.iter().map(|p| num(p.queue_depth as f64)).collect()),
+                ),
+                ("batch", arr(series.iter().map(|p| num(p.batch as f64)).collect())),
+            ]),
+        ));
+        obj(fields)
     }
 }
 
@@ -386,6 +397,28 @@ mod tests {
         assert_eq!(s[1].t_s, 5.0);
         assert_eq!(m.queue_depth_max, 6);
         assert!((m.busy_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resilience_section_appears_only_when_active() {
+        let mut m = TrafficMetrics::new();
+        assert!(
+            !m.to_json().to_string().contains("\"resilience\""),
+            "fault-free runs must not emit the section"
+        );
+        m.resilience =
+            Some(ResilienceStats { timeouts: 2, availability: 0.5, ..ResilienceStats::default() });
+        let j = m.to_json();
+        assert_eq!(j.get("resilience").unwrap().get("availability").unwrap().as_f64(), Some(0.5));
+        // placement: between kv and series so readers find it with the
+        // other end-of-run sections
+        let text = j.to_string();
+        let (kv, res, ser) = (
+            text.find("\"kv\"").unwrap(),
+            text.find("\"resilience\"").unwrap(),
+            text.find("\"series\"").unwrap(),
+        );
+        assert!(kv < res && res < ser, "{text}");
     }
 
     #[test]

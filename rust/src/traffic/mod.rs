@@ -28,6 +28,11 @@
 //!   loop a deterministic discrete-event simulation ([`VirtualClock`])
 //!   or a live paced run ([`WallClock`]).
 //!
+//! The scheduler also hosts the [`crate::fault`] subsystem's responses
+//! (`Scheduler::serve_faults`): deterministic fault injection with
+//! deadlines, retries, brownout shedding and `Sharded` failover — see
+//! that module's docs.
+//!
 //! CLI: `platinum serve-bench --backend <id> --rate <rps> --pattern
 //! poisson|burst|replay [--json]`; `examples/traffic_sweep.rs` sweeps
 //! offered load to the saturation knee.  `tests/traffic_serving.rs`

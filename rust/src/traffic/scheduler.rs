@@ -43,12 +43,13 @@ use super::loadgen::TrafficRequest;
 use super::metrics::{StepSample, TrafficMetrics};
 use crate::coordinator::serve::Executor;
 use crate::engine::{Backend, Workload};
+use crate::fault::{FaultInjector, FaultPlan, ResilienceConfig, ResilienceStats};
 use crate::kv::{BlockId, KvCache, KvConfig, KvPolicy};
 use crate::models::BitNetModel;
 use crate::sim::DramModel;
 use crate::util::rng::Rng;
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Admission and batching policy.
 #[derive(Debug, Clone, Copy)]
@@ -67,6 +68,9 @@ pub struct SchedulerConfig {
     pub step_overhead_s: f64,
     /// Paged KV-cache capacity model and pressure policy.
     pub kv: KvConfig,
+    /// SLO responses (deadlines, retries, brownout) — inert by default;
+    /// see [`ResilienceConfig`].
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for SchedulerConfig {
@@ -78,6 +82,7 @@ impl Default for SchedulerConfig {
             max_prefill_tokens: 2048,
             step_overhead_s: 0.0,
             kv: KvConfig::default(),
+            resilience: ResilienceConfig::default(),
         }
     }
 }
@@ -205,12 +210,43 @@ struct PrefillSeq {
     fresh: bool,
 }
 
-/// Hardened in-flight token release (the two call sites used to be
-/// bare `-=`): loud on underflow in debug builds, saturating — never
-/// wrapping the reservation counter — in release.
-fn release_inflight(inflight_tokens: &mut usize, reserve: usize) {
-    debug_assert!(*inflight_tokens >= reserve, "in-flight token release underflow");
+/// Hardened in-flight token release: an underflow (releasing more
+/// tokens than were reserved) is a checked error counted into the run's
+/// `kv.leaks.token_release_underflows` — visible in release builds, not
+/// just a debug assert — and the reservation counter saturates instead
+/// of wrapping.
+fn release_inflight(inflight_tokens: &mut usize, reserve: usize, underflows: &mut u64) {
+    if *inflight_tokens < reserve {
+        *underflows += 1;
+    }
     *inflight_tokens = inflight_tokens.saturating_sub(reserve);
+}
+
+/// Re-enter a rejected / timed-out / failed attempt into the arrival
+/// timeline with capped exponential backoff, or exhaust its retry
+/// budget.  Keyed by `(re-arrival time bits, id)` in a `BTreeMap`, so
+/// retried attempts merge back into the timeline in a deterministic
+/// order (times are non-negative, so the bit order is the numeric
+/// order).
+fn schedule_retry(
+    req: TrafficRequest,
+    now: f64,
+    rc: &ResilienceConfig,
+    attempts: &mut BTreeMap<u64, u32>,
+    retries: &mut BTreeMap<(u64, u64), TrafficRequest>,
+    res: &mut ResilienceStats,
+) {
+    let attempt = attempts.get(&req.id).copied().unwrap_or(0) + 1;
+    if attempt > rc.max_retries {
+        res.retry_exhausted += 1;
+        return;
+    }
+    attempts.insert(req.id, attempt);
+    let backoff = (rc.retry_base_s * f64::powi(2.0, attempt as i32 - 1)).min(rc.retry_cap_s);
+    let mut r = req;
+    r.arrival_s = now + backoff;
+    retries.insert((r.arrival_s.to_bits(), r.id), r);
+    res.retries += 1;
 }
 
 /// Price moving `blocks` over the DRAM channel (seconds of timeline
@@ -264,15 +300,44 @@ impl<'a> Scheduler<'a> {
         &self,
         requests: &[TrafficRequest],
         clock: &mut dyn Clock,
+        exec: Option<&mut dyn StepExecutor>,
+    ) -> Result<RunResult> {
+        self.serve_faults(requests, clock, exec, &FaultPlan::default())
+    }
+
+    /// Serve a request trace under an injected fault `plan`, with the
+    /// configured [`ResilienceConfig`] responses: per-request deadlines
+    /// (timeout-kill + KV reclamation), capped-exponential-backoff
+    /// retries merged back into the arrival timeline, brownout
+    /// load-shedding by deadline slack, and `Sharded` failover with
+    /// priced weight redistribution when a replica crash fires.
+    ///
+    /// Strictly additive: with an empty plan and a default (inactive)
+    /// resilience config every branch below reduces to the legacy step
+    /// loop and the metrics serialize byte-identically to a plain
+    /// [`Scheduler::serve`] — no `resilience` section is emitted.
+    pub fn serve_faults(
+        &self,
+        requests: &[TrafficRequest],
+        clock: &mut dyn Clock,
         mut exec: Option<&mut dyn StepExecutor>,
+        plan: &FaultPlan,
     ) -> Result<RunResult> {
         let mut arrivals: Vec<TrafficRequest> = requests.to_vec();
         arrivals.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
 
         let mut kv = KvCache::new(&self.cfg.kv, self.model.kv_bytes_per_token())?;
-        let mut dram = self.cfg.kv.dram_model.build(self.cfg.kv.dram_bw, self.cfg.kv.freq_hz);
+        let mut dram = self.cfg.kv.dram_model.build(self.cfg.kv.dram_bw, self.cfg.kv.freq_hz)?;
         let block_bytes = kv.block_bytes();
         let freq_hz = self.cfg.kv.freq_hz;
+
+        let rc = self.cfg.resilience;
+        let fault_on = !plan.is_empty();
+        // decides retry/absorb behaviour and whether the `resilience`
+        // metrics section is emitted at drain
+        let resilience_on = fault_on || rc.active();
+        let mut res = ResilienceStats::default();
+        let mut injector = FaultInjector::new(plan, rc.fault_seed, self.backend.replicas());
 
         let mut metrics = TrafficMetrics::new();
         let mut steps: Vec<StepRecord> = Vec::new();
@@ -285,7 +350,11 @@ impl<'a> Scheduler<'a> {
         // space; resumed FCFS as blocks free up
         let mut swapped: VecDeque<Seq> = VecDeque::new();
         let mut running: Vec<Seq> = Vec::new();
+        // retried attempts waiting to re-arrive, in timeline order
+        let mut retries: BTreeMap<(u64, u64), TrafficRequest> = BTreeMap::new();
+        let mut attempts: BTreeMap<u64, u32> = BTreeMap::new();
         let mut inflight_tokens = 0usize;
+        let mut underflows = 0u64;
         let mut next = 0usize;
 
         loop {
@@ -294,21 +363,130 @@ impl<'a> Scheduler<'a> {
             // charged to the step the iteration executes.
             let mut stall_s = 0.0f64;
 
-            // (1) admission: arrivals up to `now` enter the bounded queue
-            while next < arrivals.len() && arrivals[next].arrival_s <= now {
-                metrics.offered += 1;
+            // (1) admission: fresh arrivals and due retried attempts
+            // enter the bounded queue, merged in timeline order (a
+            // retried attempt carries its re-arrival time in
+            // `arrival_s`; with no retries pending this is the legacy
+            // arrival scan)
+            loop {
+                let arrival_due = next < arrivals.len() && arrivals[next].arrival_s <= now;
+                let retry_key = retries
+                    .first_key_value()
+                    .map(|(&k, _)| k)
+                    .filter(|&(t_bits, _)| f64::from_bits(t_bits) <= now);
+                let take_arrival = match (arrival_due, retry_key) {
+                    (false, None) => break,
+                    (true, None) => true,
+                    (false, Some(_)) => false,
+                    (true, Some((t_bits, _))) => arrivals[next].arrival_s <= f64::from_bits(t_bits),
+                };
+                let r = if take_arrival {
+                    let r = arrivals[next];
+                    next += 1;
+                    metrics.offered += 1; // a retry is NOT a new offer
+                    r
+                } else {
+                    retries.remove(&retry_key.unwrap()).unwrap()
+                };
                 if queue.len() >= self.cfg.max_queue {
                     metrics.rejected += 1;
+                    if resilience_on {
+                        schedule_retry(r, now, &rc, &mut attempts, &mut retries, &mut res);
+                    }
                 } else {
-                    queue.push_back(arrivals[next]);
+                    queue.push_back(r);
                 }
-                next += 1;
+            }
+
+            // (1b) deadline timeout-kill: an attempt past its deadline
+            // is killed wherever it sits and every resource it holds —
+            // KV blocks (live or swapped) and the in-flight token
+            // reservation — is reclaimed before the killed attempt is
+            // handed to the retry path
+            if let Some(dl) = rc.deadline_s {
+                let mut killed: Vec<TrafficRequest> = Vec::new();
+                queue.retain(|r| {
+                    let dead = now - r.arrival_s > dl;
+                    if dead {
+                        killed.push(*r);
+                    }
+                    !dead
+                });
+                requeued.retain(|s| {
+                    let dead = now - s.req.arrival_s > dl;
+                    if dead {
+                        // recompute-preempted: blocks already dropped,
+                        // only the token reservation is held
+                        release_inflight(
+                            &mut inflight_tokens,
+                            s.req.reserved_tokens(),
+                            &mut underflows,
+                        );
+                        killed.push(s.req);
+                    }
+                    !dead
+                });
+                swapped.retain(|s| {
+                    let dead = now - s.req.arrival_s > dl;
+                    if dead {
+                        kv.release_swapped(s.req.id);
+                        release_inflight(
+                            &mut inflight_tokens,
+                            s.req.reserved_tokens(),
+                            &mut underflows,
+                        );
+                        killed.push(s.req);
+                    }
+                    !dead
+                });
+                running.retain(|s| {
+                    let dead = now - s.req.arrival_s > dl;
+                    if dead {
+                        kv.release(s.req.id);
+                        release_inflight(
+                            &mut inflight_tokens,
+                            s.req.reserved_tokens(),
+                            &mut underflows,
+                        );
+                        killed.push(s.req);
+                    }
+                    !dead
+                });
+                for r in killed {
+                    res.timeouts += 1;
+                    schedule_retry(r, now, &rc, &mut attempts, &mut retries, &mut res);
+                }
+            }
+
+            // (1c) brownout load-shedding: at or beyond the trigger
+            // depth, queued attempts without enough deadline slack are
+            // dropped outright — shedding to the retry path would
+            // defeat the point of shedding load
+            if rc.brownout_queue > 0 && queue.len() >= rc.brownout_queue {
+                if let Some(dl) = rc.deadline_s {
+                    queue.retain(|r| {
+                        let keep = r.arrival_s + dl - now >= rc.brownout_slack_s;
+                        if !keep {
+                            res.shed += 1;
+                        }
+                        keep
+                    });
+                }
             }
 
             // (2a) resume swapped-out sequences while blocks allow —
-            // started work rejoins ahead of new admissions
+            // started work rejoins ahead of new admissions.  An
+            // injected swap-in failure loses the transfer: the
+            // sequence's swapped state is dropped and it falls back to
+            // a recompute re-prefill.
             while running.len() < self.cfg.max_batch {
                 let Some(front) = swapped.front() else { break };
+                if fault_on && injector.swap_fails(&mut res) {
+                    let seq = swapped.pop_front().unwrap();
+                    kv.release_swapped(seq.req.id);
+                    requeued.push_back(seq);
+                    continue;
+                }
                 let Some(fresh) = kv.resume_swapped(front.req.id, false) else { break };
                 stall_s += swap_traffic_s(dram.as_mut(), &fresh, block_bytes, freq_hz);
                 running.push(swapped.pop_front().unwrap());
@@ -395,11 +573,21 @@ impl<'a> Scheduler<'a> {
                             .expect("forced resume cannot fail");
                         stall_s += swap_traffic_s(dram.as_mut(), &fresh, block_bytes, freq_hz);
                         running.push(seq);
-                    } else if next < arrivals.len() {
-                        // idle: jump to the next arrival
-                        clock.wait_until(arrivals[next].arrival_s);
-                        continue;
                     } else {
+                        // idle: jump to the next timeline event — a
+                        // fresh arrival or a retried attempt — or drain
+                        let arrival_t = (next < arrivals.len()).then(|| arrivals[next].arrival_s);
+                        let retry_t = retries
+                            .first_key_value()
+                            .map(|(&(t_bits, _), _)| f64::from_bits(t_bits));
+                        let wake = match (arrival_t, retry_t) {
+                            (Some(a), Some(r)) => Some(a.min(r)),
+                            (a, r) => a.or(r),
+                        };
+                        if let Some(t) = wake {
+                            clock.wait_until(t);
+                            continue;
+                        }
                         break; // drained
                     }
                 }
@@ -415,10 +603,17 @@ impl<'a> Scheduler<'a> {
                     let victim = running.pop().unwrap();
                     match self.cfg.kv.policy {
                         KvPolicy::Swap => {
-                            let spilled = kv.preempt_swap(victim.req.id);
-                            stall_s +=
-                                swap_traffic_s(dram.as_mut(), &spilled, block_bytes, freq_hz);
-                            swapped.push_back(victim);
+                            // an injected swap-out failure loses the
+                            // spill mid-write: fall back to recompute
+                            if fault_on && injector.swap_fails(&mut res) {
+                                kv.preempt_recompute(victim.req.id);
+                                requeued.push_front(victim);
+                            } else {
+                                let spilled = kv.preempt_swap(victim.req.id);
+                                stall_s +=
+                                    swap_traffic_s(dram.as_mut(), &spilled, block_bytes, freq_hz);
+                                swapped.push_back(victim);
+                            }
                         }
                         KvPolicy::Recompute => {
                             kv.preempt_recompute(victim.req.id);
@@ -437,8 +632,37 @@ impl<'a> Scheduler<'a> {
                 (StepKind::Decode, Workload::decode_step(self.model, n), ids, n)
             };
 
-            let priced = self.backend.run(&workload);
-            let step_s = priced.latency_s + self.cfg.step_overhead_s + stall_s;
+            // price the step.  Under a fault plan the injector's draws
+            // for this step land first: a crash fires failover (the
+            // dead replica's weight shard is re-assigned across the
+            // survivors at a priced interconnect cost) and every later
+            // step runs degraded; stragglers stretch the compute
+            // latency; link degradation stalls the step's activation
+            // traffic.
+            let mut redist_s = 0.0f64;
+            let priced_latency_s = if fault_on {
+                let step_bytes = (tokens * self.model.hidden * 4) as f64;
+                let faults = injector.begin_step(now, step_bytes, &mut res);
+                for _ in &faults.crashes {
+                    let cost = self.backend.redistribute_cost_s(
+                        self.model.weight_bytes_ternary(),
+                        injector.survivors(),
+                    );
+                    res.failovers += 1;
+                    res.redistribution_s += cost;
+                    redist_s += cost;
+                }
+                let base = if injector.degraded() {
+                    self.backend.run_degraded(&workload, injector.alive()).latency_s
+                } else {
+                    self.backend.run(&workload).latency_s
+                };
+                res.fault_extra_s += base * (faults.slowdown - 1.0) + faults.link_penalty_s;
+                base * faults.slowdown + faults.link_penalty_s
+            } else {
+                self.backend.run(&workload).latency_s
+            };
+            let step_s = priced_latency_s + self.cfg.step_overhead_s + stall_s + redist_s;
             kv.note_swap_stall(stall_s);
             let record = StepRecord {
                 index: steps.len() as u64,
@@ -448,67 +672,108 @@ impl<'a> Scheduler<'a> {
                 seq_ids,
                 tokens,
             };
+            let mut step_failed = false;
             if let Some(e) = exec.as_deref_mut() {
-                e.execute(&record, &workload)?;
+                if let Err(err) = e.execute(&record, &workload) {
+                    if !resilience_on {
+                        return Err(err);
+                    }
+                    // absorb the failure: the step's output is lost;
+                    // its sequences are killed below and every attempt
+                    // re-enters through the retry path
+                    res.step_failures += 1;
+                    step_failed = true;
+                }
             }
             clock.advance(step_s);
             let t_end = clock.now();
 
             // (4) bookkeeping + eviction (finished sequences return
-            // their blocks — the evict-after-finish path)
-            match kind {
-                StepKind::Prefill => {
-                    metrics.prefill_steps += 1;
-                    for p in promoted {
-                        let mut s = p.seq;
-                        if p.fresh {
-                            metrics.admitted += 1;
-                            metrics.prompt_tokens += s.req.prompt_tokens as u64;
-                            metrics.queue_wait.record(now - s.req.arrival_s);
-                            metrics.ttft.record(t_end - s.req.arrival_s);
-                        } else {
-                            // a re-prefill emits the sequence's next
-                            // token: the preemption gap is a TPOT sample
-                            metrics.tpot.record(t_end - s.last_token_s);
-                        }
-                        metrics.generated_tokens += 1;
-                        s.generated += 1;
-                        s.last_token_s = t_end;
-                        if s.generated >= s.req.output_tokens {
-                            metrics.completed += 1;
-                            metrics.completed_tokens += s.req.output_tokens as u64;
-                            metrics.e2e.record(t_end - s.req.arrival_s);
-                            release_inflight(&mut inflight_tokens, s.req.reserved_tokens());
-                            kv.release(s.req.id);
-                        } else {
-                            running.push(s);
-                        }
+            // their blocks — the evict-after-finish path).  A step
+            // whose functional execution failed still spent its priced
+            // time, but its output is lost: every sequence it served is
+            // killed, its KV and token reservation reclaimed, and the
+            // attempt handed to the retry path.
+            if step_failed {
+                match kind {
+                    StepKind::Prefill => metrics.prefill_steps += 1,
+                    StepKind::Decode => {
+                        metrics.decode_steps += 1;
+                        metrics.decode_batch_sum += running.len() as u64;
                     }
                 }
-                StepKind::Decode => {
-                    metrics.decode_steps += 1;
-                    metrics.decode_batch_sum += running.len() as u64;
-                    for s in running.iter_mut() {
-                        s.generated += 1;
-                        metrics.generated_tokens += 1;
-                        // inter-token gap, not just this step's length:
-                        // prefill steps that ran since the sequence's
-                        // previous token are what loaded systems pay
-                        metrics.tpot.record(t_end - s.last_token_s);
-                        s.last_token_s = t_end;
-                    }
-                    running.retain(|s| {
-                        if s.generated >= s.req.output_tokens {
-                            metrics.completed += 1;
-                            metrics.completed_tokens += s.req.output_tokens as u64;
-                            metrics.e2e.record(t_end - s.req.arrival_s);
-                            release_inflight(&mut inflight_tokens, s.req.reserved_tokens());
-                            kv.release(s.req.id);
-                            false
-                        } else {
-                            true
+                let failed: Vec<Seq> = match kind {
+                    StepKind::Prefill => promoted.into_iter().map(|p| p.seq).collect(),
+                    StepKind::Decode => running.drain(..).collect(),
+                };
+                for s in failed {
+                    kv.release(s.req.id);
+                    release_inflight(&mut inflight_tokens, s.req.reserved_tokens(), &mut underflows);
+                    schedule_retry(s.req, t_end, &rc, &mut attempts, &mut retries, &mut res);
+                }
+            } else {
+                match kind {
+                    StepKind::Prefill => {
+                        metrics.prefill_steps += 1;
+                        for p in promoted {
+                            let mut s = p.seq;
+                            if p.fresh {
+                                metrics.admitted += 1;
+                                metrics.prompt_tokens += s.req.prompt_tokens as u64;
+                                metrics.queue_wait.record(now - s.req.arrival_s);
+                                metrics.ttft.record(t_end - s.req.arrival_s);
+                            } else {
+                                // a re-prefill emits the sequence's next
+                                // token: the preemption gap is a TPOT sample
+                                metrics.tpot.record(t_end - s.last_token_s);
+                            }
+                            metrics.generated_tokens += 1;
+                            s.generated += 1;
+                            s.last_token_s = t_end;
+                            if s.generated >= s.req.output_tokens {
+                                metrics.completed += 1;
+                                metrics.completed_tokens += s.req.output_tokens as u64;
+                                metrics.e2e.record(t_end - s.req.arrival_s);
+                                release_inflight(
+                                    &mut inflight_tokens,
+                                    s.req.reserved_tokens(),
+                                    &mut underflows,
+                                );
+                                kv.release(s.req.id);
+                            } else {
+                                running.push(s);
+                            }
                         }
-                    });
+                    }
+                    StepKind::Decode => {
+                        metrics.decode_steps += 1;
+                        metrics.decode_batch_sum += running.len() as u64;
+                        for s in running.iter_mut() {
+                            s.generated += 1;
+                            metrics.generated_tokens += 1;
+                            // inter-token gap, not just this step's length:
+                            // prefill steps that ran since the sequence's
+                            // previous token are what loaded systems pay
+                            metrics.tpot.record(t_end - s.last_token_s);
+                            s.last_token_s = t_end;
+                        }
+                        running.retain(|s| {
+                            if s.generated >= s.req.output_tokens {
+                                metrics.completed += 1;
+                                metrics.completed_tokens += s.req.output_tokens as u64;
+                                metrics.e2e.record(t_end - s.req.arrival_s);
+                                release_inflight(
+                                    &mut inflight_tokens,
+                                    s.req.reserved_tokens(),
+                                    &mut underflows,
+                                );
+                                kv.release(s.req.id);
+                                false
+                            } else {
+                                true
+                            }
+                        });
+                    }
                 }
             }
             metrics.note_step(
@@ -523,10 +788,25 @@ impl<'a> Scheduler<'a> {
             steps.push(record);
         }
 
-        debug_assert_eq!(inflight_tokens, 0, "in-flight token reservation leaked");
-        debug_assert!(kv.is_quiescent(), "kv blocks leaked past drain");
+        // end-of-run quiescence, surfaced as checked leak counters in
+        // the kv stats (formerly debug_asserts invisible in release
+        // builds): blocks/sequences still held past drain and any
+        // reservation-accounting underflows during the run
         metrics.kv = kv.snapshot(dram.as_ref());
+        metrics.kv.token_release_underflows = underflows;
+        let (leaked_blocks, leaked_seqs) = kv.leak_counts();
+        metrics.kv.leaked_blocks = leaked_blocks;
+        metrics.kv.leaked_seqs = leaked_seqs;
+        metrics.kv.leaked_inflight_tokens = inflight_tokens as u64;
         metrics.makespan_s = clock.now();
+        if resilience_on {
+            res.availability = if metrics.offered > 0 {
+                metrics.completed as f64 / metrics.offered as f64
+            } else {
+                1.0
+            };
+            metrics.resilience = Some(res);
+        }
         Ok(RunResult { metrics, steps })
     }
 }
@@ -912,5 +1192,220 @@ mod tests {
         assert_eq!(m.kv.evictions, 0, "sequential fit needs no preemption");
         assert_eq!(m.kv.allocated_final, 0);
         assert_eq!(m.prefill_steps, 2, "the second prompt waited for the first");
+    }
+
+    // ---- fault injection + resilience (S17) ----------------------------
+
+    fn burst(n: u64, prompt: usize, output: usize) -> Vec<TrafficRequest> {
+        (0..n)
+            .map(|i| TrafficRequest {
+                id: i,
+                arrival_s: 0.0,
+                prompt_tokens: prompt,
+                output_tokens: output,
+                shared_prefix_tokens: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_plan_and_inactive_config_emit_no_resilience_section() {
+        let be = PlatinumBackend::ternary();
+        let sched = Scheduler::new(&be, TINY, SchedulerConfig::default());
+        let reqs = poisson_load(150.0, 32, 11);
+        let plain = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        let faulted = sched
+            .serve_faults(&reqs, &mut VirtualClock::new(), None, &FaultPlan::default())
+            .unwrap();
+        let a = plain.metrics.to_json().to_string();
+        assert_eq!(a, faulted.metrics.to_json().to_string());
+        assert!(!a.contains("\"resilience\""), "inactive runs must not grow new keys");
+        assert!(!a.contains("\"leaks\""), "clean runs must not report leaks");
+    }
+
+    #[test]
+    fn deadlines_kill_overage_and_retries_re_enter_the_timeline() {
+        let be = PlatinumBackend::ternary();
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            step_overhead_s: 0.001,
+            resilience: ResilienceConfig {
+                deadline_s: Some(0.010),
+                max_retries: 2,
+                retry_base_s: 0.002,
+                retry_cap_s: 0.008,
+                ..ResilienceConfig::default()
+            },
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        // 8 simultaneous requests over a 2-slot batch at ~1 ms/step:
+        // the tail of the queue must blow the 10 ms deadline
+        let reqs = burst(8, 8, 4);
+        let run = || {
+            sched
+                .serve_faults(&reqs, &mut VirtualClock::new(), None, &FaultPlan::default())
+                .unwrap()
+        };
+        let r = run();
+        let m = &r.metrics;
+        let res = m.resilience.as_ref().expect("resilience section");
+        assert!(res.timeouts > 0, "queue tail must time out");
+        assert!(res.retries > 0, "timed-out attempts must retry");
+        // every offered request reaches exactly one terminal state
+        assert_eq!(m.completed + res.shed + res.retry_exhausted, m.offered);
+        assert!((res.availability - m.completed as f64 / m.offered as f64).abs() < 1e-12);
+        assert!(m.completed > 0, "the head of the queue meets its deadline");
+        assert!(!m.kv.leaked(), "kill paths must reclaim blocks and reservations");
+        assert_eq!(
+            r.metrics.to_json().to_string(),
+            run().metrics.to_json().to_string(),
+            "deadline/retry machinery must stay deterministic"
+        );
+    }
+
+    #[test]
+    fn unmeetable_deadline_without_retries_zeroes_availability() {
+        let be = PlatinumBackend::ternary();
+        let cfg = SchedulerConfig {
+            step_overhead_s: 0.001,
+            resilience: ResilienceConfig {
+                deadline_s: Some(0.003),
+                ..ResilienceConfig::default()
+            },
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        // 8 output tokens ⇒ ≥ 8 steps ≈ 8 ms of service > 3 ms deadline
+        let reqs = burst(4, 8, 8);
+        let r = sched
+            .serve_faults(&reqs, &mut VirtualClock::new(), None, &FaultPlan::default())
+            .unwrap();
+        let m = &r.metrics;
+        let res = m.resilience.as_ref().unwrap();
+        assert_eq!(m.completed, 0);
+        assert_eq!(res.availability, 0.0);
+        assert_eq!(res.timeouts, 4);
+        assert_eq!(res.retry_exhausted, 4, "no retry budget ⇒ terminal on first kill");
+        assert!(!m.kv.leaked());
+    }
+
+    #[test]
+    fn brownout_sheds_low_slack_requests_at_depth() {
+        let be = PlatinumBackend::ternary();
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            step_overhead_s: 0.001,
+            resilience: ResilienceConfig {
+                deadline_s: Some(0.008),
+                brownout_queue: 4,
+                brownout_slack_s: 0.004,
+                ..ResilienceConfig::default()
+            },
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let r = sched
+            .serve_faults(&burst(12, 8, 6), &mut VirtualClock::new(), None, &FaultPlan::default())
+            .unwrap();
+        let m = &r.metrics;
+        let res = m.resilience.as_ref().unwrap();
+        assert!(res.shed > 0, "sustained overload must shed by deadline slack");
+        assert_eq!(m.completed + res.shed + res.retry_exhausted, m.offered);
+        assert!(res.availability < 1.0);
+        assert!(!m.kv.leaked());
+    }
+
+    #[test]
+    fn injected_swap_failures_fall_back_to_recompute() {
+        let be = PlatinumBackend::ternary();
+        let cfg =
+            SchedulerConfig { kv: tight_kv(6, KvPolicy::Swap), ..SchedulerConfig::default() };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let reqs = burst(4, 8, 8);
+        // sanity: this load swaps when healthy (same shape as the
+        // block_pressure_swaps test)
+        let healthy = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        assert!(healthy.metrics.kv.swap_outs > 0);
+        let plan = FaultPlan::parse("swapfail:p1").unwrap();
+        let r = sched.serve_faults(&reqs, &mut VirtualClock::new(), None, &plan).unwrap();
+        let m = &r.metrics;
+        let res = m.resilience.as_ref().unwrap();
+        assert!(res.swap_failures > 0);
+        assert_eq!(m.kv.swap_outs, 0, "every swap-out failed over to recompute");
+        assert!(m.kv.recomputed_tokens > 0, "the fallback recomputes the dropped KV");
+        assert_eq!(m.completed, m.offered, "swap failures delay, never drop");
+        assert!(!m.kv.leaked());
+    }
+
+    #[test]
+    fn fault_plans_follow_the_seed_and_cost_time() {
+        let be = PlatinumBackend::ternary();
+        let reqs = poisson_load(150.0, 32, 11);
+        let clean = Scheduler::new(&be, TINY, SchedulerConfig::default())
+            .serve(&reqs, &mut VirtualClock::new())
+            .unwrap();
+        let plan = FaultPlan::parse("straggler:r0:p0.5:x8,linkdeg:0.5:1gbps").unwrap();
+        let run = |seed: u64| {
+            let cfg = SchedulerConfig {
+                resilience: ResilienceConfig { fault_seed: seed, ..ResilienceConfig::default() },
+                ..SchedulerConfig::default()
+            };
+            Scheduler::new(&be, TINY, cfg)
+                .serve_faults(&reqs, &mut VirtualClock::new(), None, &plan)
+                .unwrap()
+        };
+        let r = run(7);
+        let m = &r.metrics;
+        let res = m.resilience.as_ref().unwrap();
+        assert!(res.straggler_hits > 0 && res.linkdeg_hits > 0);
+        assert!(res.fault_extra_s > 0.0);
+        assert!(m.makespan_s > clean.metrics.makespan_s, "faults must cost time");
+        assert_eq!(m.completed, m.offered, "pure slowdowns delay, never drop");
+        assert_eq!(
+            m.to_json().to_string(),
+            run(7).metrics.to_json().to_string(),
+            "same seed + same plan ⇒ byte-identical metrics"
+        );
+        assert_ne!(
+            m.to_json().to_string(),
+            run(8).metrics.to_json().to_string(),
+            "the fault stream follows the seed"
+        );
+    }
+
+    #[test]
+    fn executor_failure_is_absorbed_and_retried_when_resilient() {
+        let be = PlatinumBackend::ternary();
+        let reqs = burst(4, 8, 6);
+        let fail_second_step = || {
+            let mut n = 0u64;
+            move |_: &StepRecord, _: &Workload| -> Result<()> {
+                n += 1;
+                if n == 2 {
+                    anyhow::bail!("injected executor failure")
+                }
+                Ok(())
+            }
+        };
+        // legacy contract: without resilience the error propagates
+        let sched = Scheduler::new(&be, TINY, SchedulerConfig::default());
+        let mut hook = fail_second_step();
+        assert!(sched.serve_with(&reqs, &mut VirtualClock::new(), Some(&mut hook)).is_err());
+        // with a retry budget the failed step's sequences are killed,
+        // reclaimed, retried, and the run still drains everything
+        let cfg = SchedulerConfig {
+            resilience: ResilienceConfig { max_retries: 3, ..ResilienceConfig::default() },
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let mut hook = fail_second_step();
+        let r = sched.serve_with(&reqs, &mut VirtualClock::new(), Some(&mut hook)).unwrap();
+        let m = &r.metrics;
+        let res = m.resilience.as_ref().unwrap();
+        assert_eq!(res.step_failures, 1);
+        assert!(res.retries >= 1);
+        assert_eq!(m.completed, m.offered, "the failed step's sequences recovered");
+        assert!(!m.kv.leaked(), "absorbed failures must not leak blocks");
     }
 }

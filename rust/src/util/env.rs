@@ -1,0 +1,73 @@
+//! Loud environment-knob parsing: every `PLATINUM_*` tuning variable
+//! funnels through here so a typo'd value is a startup error naming the
+//! variable and the offending text — never a silent fallback to the
+//! default (which looks exactly like a successful calibration until the
+//! numbers are wrong).
+
+use anyhow::{bail, Result};
+
+/// Read `key` from the environment.  Unset → `Ok(None)` (the caller
+/// keeps its default).  Set → `parse` must accept the trimmed value,
+/// otherwise this is a hard error naming the variable, the offending
+/// value, and what would have been accepted.
+pub fn read<T>(key: &str, expect: &str, parse: impl Fn(&str) -> Option<T>) -> Result<Option<T>> {
+    match std::env::var(key) {
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(_)) => {
+            bail!("invalid {key}: value is not valid unicode (expected {expect})")
+        }
+        Ok(raw) => match parse(raw.trim()) {
+            Some(v) => Ok(Some(v)),
+            None => bail!("invalid {key}={raw:?}: expected {expect}"),
+        },
+    }
+}
+
+/// Positive-integer knob (block sizes, KiB/MiB budgets).
+pub fn positive_usize(key: &str) -> Result<Option<usize>> {
+    read(key, "a positive integer", |t| t.parse::<usize>().ok().filter(|v| *v > 0))
+}
+
+/// Strictly-positive finite float knob (bandwidths, time constants).
+pub fn positive_f64(key: &str) -> Result<Option<f64>> {
+    read(key, "a finite number > 0", |t| {
+        t.parse::<f64>().ok().filter(|v| v.is_finite() && *v > 0.0)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_is_none_set_parses_and_junk_is_loud() {
+        // narrow set → read → remove windows (PR 5 pattern)
+        std::env::remove_var("PLATINUM_ENV_TEST_A");
+        assert_eq!(positive_f64("PLATINUM_ENV_TEST_A").unwrap(), None);
+
+        std::env::set_var("PLATINUM_ENV_TEST_A", " 2.5 ");
+        let got = positive_f64("PLATINUM_ENV_TEST_A");
+        std::env::remove_var("PLATINUM_ENV_TEST_A");
+        assert_eq!(got.unwrap(), Some(2.5));
+
+        std::env::set_var("PLATINUM_ENV_TEST_A", "fast");
+        let err = positive_f64("PLATINUM_ENV_TEST_A").unwrap_err().to_string();
+        std::env::remove_var("PLATINUM_ENV_TEST_A");
+        assert!(err.contains("PLATINUM_ENV_TEST_A"), "{err}");
+        assert!(err.contains("fast"), "error must name the offending value: {err}");
+    }
+
+    #[test]
+    fn zero_negative_and_nonfinite_are_rejected() {
+        for bad in ["0", "-3", "nan", "inf", ""] {
+            std::env::set_var("PLATINUM_ENV_TEST_B", bad);
+            let got = positive_f64("PLATINUM_ENV_TEST_B");
+            std::env::remove_var("PLATINUM_ENV_TEST_B");
+            assert!(got.is_err(), "{bad:?} must be rejected loudly");
+        }
+        std::env::set_var("PLATINUM_ENV_TEST_C", "0");
+        let got = positive_usize("PLATINUM_ENV_TEST_C");
+        std::env::remove_var("PLATINUM_ENV_TEST_C");
+        assert!(got.is_err(), "zero is not a usable knob value");
+    }
+}

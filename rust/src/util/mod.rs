@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod env;
 pub mod json;
 pub mod rng;
 

@@ -153,6 +153,38 @@ fn panic_mid_batch_propagates_and_pool_survives() {
 }
 
 #[test]
+fn arena_body_panic_mid_run_propagates_and_pool_is_reusable() {
+    // the serving executors run through for_each_chunk_arena; a panic in
+    // the body mid-claim (other lanes still pulling chunks) must reach
+    // the submitter and leave the pool fully usable — both entry points
+    // must complete afterwards (ISSUE 7 wedge-resistance)
+    let pool = Pool::new(4);
+    let mut arena = vec![0usize; 4 * 4];
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        pool.for_each_chunk_arena(4, 500, 1, &mut arena, &|scratch, r| {
+            scratch[0] += 1;
+            if r.contains(&250) {
+                panic!("arena boom at {}", r.start);
+            }
+        });
+    }));
+    assert!(err.is_err(), "arena-body panic must propagate to the submitter");
+    // not wedged: chunked dynamic scheduling still covers every index
+    let seen = AtomicUsize::new(0);
+    pool.for_each_chunk(4, 1000, 0, &|r| {
+        seen.fetch_add(r.len(), Ordering::Relaxed);
+    });
+    assert_eq!(seen.load(Ordering::Relaxed), 1000);
+    // and the arena path itself still completes with fresh scratch
+    let mut arena2 = vec![0usize; 4 * 2];
+    let total = AtomicUsize::new(0);
+    pool.for_each_chunk_arena(4, 333, 1, &mut arena2, &|_scratch, r| {
+        total.fetch_add(r.len(), Ordering::Relaxed);
+    });
+    assert_eq!(total.load(Ordering::Relaxed), 333);
+}
+
+#[test]
 fn threads_exceed_items_and_zero_items() {
     let pool = Pool::new(8);
     // more lanes than tasks: nothing idles forever, all complete

@@ -4,11 +4,18 @@
 //! while real golden-datapath work runs inside the loop, bounded
 //! deadlock-free behavior past saturation, and the batch-size-vs-load
 //! saturation curve.
+//!
+//! ISSUE 7 extends the contract to degraded runs: a fault plan + a
+//! resilience config must keep the same byte-identity guarantees
+//! (per-seed, across pool sizes), `Sharded` failover must lose no
+//! sequences, the clean-run JSON schema must not grow, and an executor
+//! panic must propagate without wedging the pool or the scheduler.
 
 use platinum::config::PlatinumConfig;
 use platinum::coordinator::serve::GoldenExecutor;
 use platinum::encoding::pack_ternary;
 use platinum::engine::{Backend, PlatinumBackend, Registry, Workload};
+use platinum::fault::{FaultPlan, ResilienceConfig};
 use platinum::kv::{KvConfig, KvPolicy};
 use platinum::lut::ternary_mpgemm_pool;
 use platinum::models::BitNetModel;
@@ -19,6 +26,7 @@ use platinum::traffic::{
 };
 use platinum::util::json::Json;
 use platinum::util::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 /// 2-layer toy model: modelled pricing stays microseconds-fast and the
 /// functional golden work in the pool-invariance tests stays tiny.
@@ -332,4 +340,161 @@ fn shared_prefix_serving_cuts_ttft_and_blocks_end_to_end() {
         on.kv.allocated_max,
         off.kv.allocated_max
     );
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 7: deterministic fault injection + resilience
+// ---------------------------------------------------------------------------
+
+#[test]
+fn faulted_metrics_invariant_across_pool_sizes_1_and_8() {
+    // the injector's RNG stream is consulted only at fixed points in the
+    // single-threaded serve loop, so a faulted, deadline-bound run with
+    // real golden work inside every step must not move a byte between
+    // pools of 1 and 8 threads — the ISSUE 5 invariance contract holds
+    // under chaos too
+    let plan = FaultPlan::parse("straggler:r0:p0.3:x4,linkdeg:0.3:1gbps").unwrap();
+    let cfg = SchedulerConfig {
+        max_batch: 8,
+        step_overhead_s: 1e-3,
+        resilience: ResilienceConfig {
+            deadline_s: Some(0.012),
+            max_retries: 2,
+            retry_base_s: 2e-3,
+            retry_cap_s: 8e-3,
+            fault_seed: 42,
+            ..ResilienceConfig::default()
+        },
+        ..SchedulerConfig::default()
+    };
+    let run = |threads: usize| -> (String, Vec<StepRecord>) {
+        let be = PlatinumBackend::ternary();
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let reqs = poisson_spec(200.0, 48, 42).generate().unwrap();
+        let pool = Pool::new(threads);
+        let pcfg = PlatinumConfig::default();
+        let mut wrng = Rng::seed_from(1);
+        let w = wrng.ternary_vec(64 * 64);
+        let packed = pack_ternary(&w, 64, 64, pcfg.c_ternary);
+        let mut exec = |s: &StepRecord, _w: &Workload| -> anyhow::Result<()> {
+            let n = s.tokens.max(1);
+            let mut xrng = Rng::seed_from(0x5EED ^ s.index);
+            let x = xrng.act_vec(64 * n);
+            let (y, _) = ternary_mpgemm_pool(&pcfg, &packed, &x, n, &pool, threads);
+            assert_eq!(y.len(), 64 * n);
+            Ok(())
+        };
+        let r = sched
+            .serve_faults(&reqs, &mut VirtualClock::new(), Some(&mut exec), &plan)
+            .unwrap();
+        (r.metrics.to_json().to_string(), r.steps)
+    };
+    let (json1, steps1) = run(1);
+    let (json8, steps8) = run(8);
+    assert_eq!(steps1, steps8, "faulted scheduler decisions leaked the pool size");
+    assert_eq!(json1, json8, "faulted metrics JSON leaked the pool size");
+    let doc = Json::parse(&json1).unwrap();
+    let res = doc.get("resilience").expect("faulted run must emit the resilience section");
+    let faults = res.get("faults").unwrap();
+    let hits = faults.get("straggler_hits").unwrap().as_f64().unwrap()
+        + faults.get("linkdeg_hits").unwrap().as_f64().unwrap();
+    assert!(hits > 0.0, "the plan must actually fire at these probabilities");
+    assert!(res.get("availability").unwrap().as_f64().unwrap() <= 1.0);
+}
+
+#[test]
+fn sharded_failover_redistributes_and_loses_no_sequences() {
+    // a replica crash mid-run on the 4-way sharded composite: survivors
+    // absorb the dead replica's shard after a priced weight
+    // redistribution, every sequence still completes exactly once, and
+    // the failover counters land in the metrics
+    let reqs: Vec<TrafficRequest> = (0..12)
+        .map(|i| TrafficRequest {
+            id: i,
+            arrival_s: i as f64 * 1e-4,
+            prompt_tokens: 8,
+            output_tokens: 6,
+            shared_prefix_tokens: 0,
+        })
+        .collect();
+    let cfg = SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() };
+    let be = Registry::with_defaults().build("sharded:4:platinum-ternary").unwrap();
+    let sched = Scheduler::new(be.as_ref(), TINY, cfg);
+    let clean = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+    let plan = FaultPlan::parse("crash:r2@t=0.000001s").unwrap();
+    let run = || sched.serve_faults(&reqs, &mut VirtualClock::new(), None, &plan).unwrap();
+    let r = run();
+    let m = &r.metrics;
+    assert_eq!(m.offered, 12);
+    assert_eq!(m.completed, 12, "failover must lose (or double-count) no sequence");
+    let res = m.resilience.as_ref().expect("crash plan emits the resilience section");
+    assert_eq!(res.crashed_replicas, 1, "the crash clause must fire exactly once");
+    assert_eq!(res.failovers, 1);
+    assert!(res.redistribution_s > 0.0, "failover must be priced through the interconnect");
+    assert!((res.availability - 1.0).abs() < 1e-12, "no deadline ⇒ everything completes");
+    assert!(
+        m.makespan_s > clean.metrics.makespan_s,
+        "3 survivors + redistribution must cost time: {} vs {}",
+        m.makespan_s,
+        clean.metrics.makespan_s
+    );
+    // the same crash replays byte-identically
+    assert_eq!(r.metrics.to_json().to_string(), run().metrics.to_json().to_string());
+}
+
+#[test]
+fn clean_runs_emit_neither_resilience_nor_leak_keys() {
+    // schema-compat guard: with no fault plan and an inert resilience
+    // config the metrics JSON must match the pre-fault-subsystem shape
+    // key for key — downstream diffing (CI serve-smoke) relies on it
+    let be = PlatinumBackend::ternary();
+    let sched = Scheduler::new(&be, TINY, SchedulerConfig::default());
+    let reqs = poisson_spec(150.0, 32, 11).generate().unwrap();
+    let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+    let doc = Json::parse(&r.metrics.to_json().to_string()).unwrap();
+    assert!(doc.get("resilience").is_none(), "inert config must not grow the schema");
+    assert!(doc.get("kv").unwrap().get("leaks").is_none(), "clean drains leak nothing");
+}
+
+#[test]
+fn executor_panic_propagates_without_wedging_pool_or_scheduler() {
+    // an Err from the executor is absorbed by a resilient scheduler and
+    // retried, but a panic is a bug: it must propagate to the caller —
+    // and must not wedge the worker pool or the scheduler for later runs
+    let cfg = SchedulerConfig {
+        resilience: ResilienceConfig { max_retries: 2, ..ResilienceConfig::default() },
+        ..SchedulerConfig::default()
+    };
+    let be = PlatinumBackend::ternary();
+    let sched = Scheduler::new(&be, TINY, cfg);
+    let reqs = poisson_spec(150.0, 16, 3).generate().unwrap();
+    let pool = Pool::new(4);
+    let panicked = {
+        let mut arena = vec![0usize; 4 * 4];
+        let mut exec = |s: &StepRecord, _w: &Workload| -> anyhow::Result<()> {
+            pool.for_each_chunk_arena(4, s.tokens.max(1) * 64, 0, &mut arena, &|scratch, r| {
+                scratch[0] += r.len();
+                if s.index == 3 {
+                    panic!("injected arena-body panic at step {}", s.index);
+                }
+            });
+            Ok(())
+        };
+        catch_unwind(AssertUnwindSafe(|| {
+            sched.serve_with(&reqs, &mut VirtualClock::new(), Some(&mut exec))
+        }))
+        .is_err()
+    };
+    assert!(panicked, "a panic inside pool work must reach the caller, not be absorbed");
+    // neither the pool nor the scheduler is wedged: the same pool drives
+    // a clean serve to full completion afterwards
+    let mut exec = |s: &StepRecord, _w: &Workload| -> anyhow::Result<()> {
+        pool.for_each_chunk(4, s.tokens.max(1) * 64, 0, &|r| {
+            std::hint::black_box(r.len());
+        });
+        Ok(())
+    };
+    let r = sched.serve_with(&reqs, &mut VirtualClock::new(), Some(&mut exec)).unwrap();
+    assert_eq!(r.metrics.completed, r.metrics.admitted, "post-panic serve must drain");
+    assert!(!r.metrics.kv.leaked(), "post-panic serve must not report KV leaks");
 }
