@@ -1,0 +1,199 @@
+#!/usr/bin/env python3
+"""End-to-end smoke for `platinum serve` (CI job: daemon-smoke).
+
+Stdlib only — no requests/pytest — so the job needs nothing beyond a
+Python interpreter and the release binary:
+
+  python3 python/tools/daemon_smoke.py rust/target/release/platinum
+
+What it pins, in order:
+
+1. the daemon comes up and answers `/health`;
+2. 32 concurrent `POST /v1/generate` requests (half carrying an
+   `X-Deadline-Ms` header) each stream chunked ndjson token lines
+   ending in a `{"done":true,"outcome":"completed"}` record whose
+   token count matches the streamed lines;
+3. `/metrics` parses, counts all 32 completions, and reports a finite
+   positive p99 TTFT;
+4. SIGTERM drains and the process exits 0, writing the capture trace
+   and the final metrics JSON;
+5. the capture holds exactly 32 records, and feeding it back through
+   `serve-bench --pattern replay --clock virtual` is byte-identical
+   across repeat runs *and* across worker-pool sizes — the replay
+   determinism contract.
+"""
+
+import http.client
+import json
+import math
+import os
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+REQUESTS = 32
+PROMPT_TOKENS = 16
+OUTPUT_TOKENS = 8
+
+
+def free_port():
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def wait_health(port, proc, deadline_s=60.0):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline_s:
+        if proc.poll() is not None:
+            raise SystemExit("daemon exited before becoming healthy: rc=%d" % proc.returncode)
+        try:
+            conn = http.client.HTTPConnection("127.0.0.1", port, timeout=2)
+            conn.request("GET", "/health")
+            resp = conn.getresponse()
+            body = json.loads(resp.read())
+            conn.close()
+            if resp.status == 200 and body.get("status") == "ok":
+                return body
+        except (OSError, ValueError):
+            time.sleep(0.05)
+    raise SystemExit("daemon did not become healthy within %gs" % deadline_s)
+
+
+def one_generate(port, idx, results):
+    try:
+        conn = http.client.HTTPConnection("127.0.0.1", port, timeout=60)
+        headers = {"Content-Type": "application/json"}
+        if idx % 2 == 0:
+            headers["X-Deadline-Ms"] = "10000"
+        body = json.dumps({"prompt_tokens": PROMPT_TOKENS, "output_tokens": OUTPUT_TOKENS})
+        conn.request("POST", "/v1/generate", body=body, headers=headers)
+        resp = conn.getresponse()
+        if resp.status != 200:
+            raise AssertionError("status %d: %r" % (resp.status, resp.read(4096)))
+        if resp.getheader("Transfer-Encoding") != "chunked":
+            raise AssertionError("expected a chunked stream, got %r" % dict(resp.getheaders()))
+        lines = [json.loads(l) for l in resp.read().decode().splitlines() if l]
+        conn.close()
+        done = lines[-1]
+        tokens = [l for l in lines[:-1] if "token" in l]
+        assert done.get("done") is True, done
+        assert done.get("outcome") == "completed", done
+        assert len(tokens) >= 1, lines
+        assert done.get("tokens") == len(tokens), (done, len(tokens))
+        results[idx] = None
+    except Exception as e:  # noqa: BLE001 — collected and reported per request
+        results[idx] = "%s: %s" % (type(e).__name__, e)
+
+
+def fetch_metrics(port):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=5)
+    conn.request("GET", "/metrics")
+    resp = conn.getresponse()
+    assert resp.status == 200, resp.status
+    doc = json.loads(resp.read())
+    conn.close()
+    return doc
+
+
+def run_replay(binary, trace, threads):
+    env = dict(os.environ, PLATINUM_THREADS=str(threads))
+    out = subprocess.run(
+        [
+            binary, "serve-bench",
+            "--backend", "platinum-ternary", "--model", "700m",
+            "--pattern", "replay", "--trace", trace,
+            "--max-batch", "8", "--clock", "virtual", "--json",
+        ],
+        env=env, capture_output=True, timeout=300, check=True,
+    )
+    return out.stdout
+
+
+def main():
+    if len(sys.argv) != 2:
+        raise SystemExit("usage: daemon_smoke.py <path-to-platinum-binary>")
+    binary = os.path.abspath(sys.argv[1])
+    port = free_port()
+    workdir = tempfile.mkdtemp(prefix="daemon-smoke-")
+    capture = os.path.join(workdir, "capture.trace")
+    metrics_out = os.path.join(workdir, "serve_metrics.json")
+
+    env = dict(os.environ, PLATINUM_THREADS="4")
+    proc = subprocess.Popen(
+        [
+            binary, "serve",
+            "--addr", "127.0.0.1:%d" % port,
+            "--backend", "platinum-ternary", "--model", "700m",
+            "--max-conns", "64",
+            "--capture", capture,
+            "--metrics-out", metrics_out,
+        ],
+        env=env,
+    )
+    try:
+        wait_health(port, proc)
+        print("daemon-smoke: healthy on port %d" % port)
+
+        results = ["did not finish within the join timeout"] * REQUESTS
+        threads = [
+            threading.Thread(target=one_generate, args=(port, i, results))
+            for i in range(REQUESTS)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        failures = [(i, r) for i, r in enumerate(results) if r is not None]
+        assert not failures, "generate failures: %s" % failures
+        print("daemon-smoke: %d concurrent streams completed" % REQUESTS)
+
+        m = fetch_metrics(port)
+        counts = m["serve"]["counts"]
+        assert counts["completed"] == REQUESTS, counts
+        assert counts["active"] == 0, counts
+        p99 = m["serve"]["latency_s"]["ttft"]["p99"]
+        assert isinstance(p99, (int, float)) and math.isfinite(p99) and p99 > 0, p99
+        print("daemon-smoke: /metrics ok, p99 TTFT %.6f s" % p99)
+    except BaseException:
+        proc.kill()
+        proc.wait()
+        raise
+
+    # graceful shutdown: SIGTERM must drain and exit 0
+    proc.send_signal(signal.SIGTERM)
+    rc = proc.wait(timeout=30)
+    assert rc == 0, "daemon exited %d on SIGTERM" % rc
+    print("daemon-smoke: SIGTERM drained, exit 0")
+
+    final = json.load(open(metrics_out))
+    assert final["serve"]["counts"]["completed"] == REQUESTS, final["serve"]["counts"]
+
+    records = [
+        l for l in open(capture).read().splitlines()
+        if l.strip() and not l.startswith("#")
+    ]
+    assert len(records) == REQUESTS, "capture has %d records, want %d" % (len(records), REQUESTS)
+    with_deadline = [r for r in records if not r.endswith(" -")]
+    assert len(with_deadline) == REQUESTS // 2, records
+    print("daemon-smoke: capture holds %d records (%d with deadlines)"
+          % (len(records), len(with_deadline)))
+
+    # replay determinism: byte-identical across runs and pool sizes
+    a = run_replay(binary, capture, threads=1)
+    b = run_replay(binary, capture, threads=1)
+    c = run_replay(binary, capture, threads=4)
+    assert a == b, "replay is not deterministic across runs"
+    assert a == c, "replay metrics depend on the worker-pool size"
+    doc = json.loads(a)
+    assert doc["metrics"]["counts"]["completed"] == REQUESTS, doc["metrics"]["counts"]
+    print("daemon-smoke: replay byte-identical across runs and pool sizes 1/4")
+    print("daemon-smoke: OK")
+
+
+if __name__ == "__main__":
+    main()

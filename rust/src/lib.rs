@@ -48,6 +48,7 @@
 //! | [`traffic`] | continuous-batching serving + load generation (S15) |
 //! | [`kv`] | paged KV-cache allocator + SRAM/DRAM capacity model (S16) |
 //! | [`fault`] | deterministic fault injection + SLO resilience (S17) |
+//! | [`server`] | `platinum serve` daemon: std-only HTTP/1.1 wire protocol (S18) |
 //!
 //! All execution flows through [`engine`]: a [`engine::Registry`]
 //! constructs [`engine::Backend`]s by name, each runs
@@ -73,6 +74,7 @@ pub mod lut;
 pub mod models;
 pub mod pathgen;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod traffic;
 pub mod util;

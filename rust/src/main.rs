@@ -12,6 +12,7 @@
 //!   baselines  — Table I cross-system comparison via the engine registry
 //!   backends   — list registered engine backends
 //!   serve-bench — continuous-batching load run with TTFT/TPOT percentiles
+//!   serve      — long-running HTTP/1.1 daemon over the same scheduler
 //!   runtime    — list / smoke-run the PJRT artifacts
 //!
 //! Execution goes through `engine::Registry`/`engine::Backend`: pick a
@@ -29,12 +30,14 @@ use platinum::fault::{FaultPlan, ResilienceConfig};
 use platinum::kv::{KvConfig, KvPolicy};
 use platinum::models::{ALL_MODELS, B158_3B, DECODE_N, PREFILL_N};
 use platinum::runtime::{HostTensor, Runtime};
+use platinum::server::{self, ServeOptions};
 use platinum::sim::DramModelKind;
 use platinum::traffic::{
-    parse_trace, with_shared_prefix, ArrivalPattern, Clock, LenDist, LoadSpec, Scheduler,
-    SchedulerConfig, VirtualClock, WallClock,
+    parse_trace_records, with_shared_prefix, ArrivalPattern, Clock, LenDist, LoadSpec, Scheduler,
+    SchedulerConfig, TraceRecord, TrafficRequest, VirtualClock, WallClock,
 };
 use platinum::util::cli;
+use platinum::util::env as envknob;
 use platinum::util::json::{arr, num, obj, s, Json};
 use platinum::{dse, encoding, isa, pathgen};
 
@@ -48,6 +51,7 @@ fn main() -> Result<()> {
         Some("baselines") => cmd_baselines(&args),
         Some("backends") => cmd_backends(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
+        Some("serve") => cmd_serve(&args),
         Some("runtime") => cmd_runtime(&args),
         Some(other) => bail!("unknown command {other:?}; run without args for help"),
         None => {
@@ -93,6 +97,14 @@ fn print_help() {
                       goodput vs offered load; under faults/SLO flags the\n\
                       metrics grow a `resilience` section (availability,\n\
                       timeout/retry/failover/shed counters, p99 deltas)\n\
+           serve      [--addr <host:port>] [--max-conns <n>] [--backend <id>]\n\
+                      [--model {{700m|1.3b|3b}}] [--capture <file>] [--metrics-out <file>]\n\
+                      [+ the serve-bench scheduler/KV/SLO flags]\n\
+                      std-only HTTP/1.1 daemon: POST /v1/generate streams chunked\n\
+                      ndjson tokens (X-Deadline-Ms sets a per-request deadline),\n\
+                      GET /health + /metrics, POST /shutdown or SIGTERM drains\n\
+                      gracefully; --capture records live arrivals as a replay\n\
+                      trace (env: PLATINUM_ADDR, PLATINUM_MAX_CONNS)\n\
            runtime    [--artifacts <dir>] [--run <name>] PJRT artifacts\n\
          \n\
          BACKENDS (see `platinum backends`):\n\
@@ -482,44 +494,11 @@ fn cmd_backends(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
-/// `serve-bench`: generate a deterministic load trace, serve it through
-/// the continuous-batching scheduler against any registered backend,
-/// and report TTFT/TPOT/E2E percentiles, batch/queue series, and
-/// goodput.  The default virtual clock makes the run a reproducible
-/// discrete-event simulation (the measured backends still contribute
-/// real kernel wall-clock as the per-step service time); `--clock wall`
-/// paces arrivals in real time instead.
-fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
-    apply_threads_flag(args)?;
-    let backend = Registry::with_defaults().build(args.get_str("backend", "platinum-cpu"))?;
-    let model = model_by_name(args.get_str("model", "700m"))?;
-    let rate = args.get_f64("rate", 50.0)?;
-    let pattern = match args.get_str("pattern", "poisson") {
-        "poisson" => ArrivalPattern::Poisson { rate_rps: rate },
-        "burst" => ArrivalPattern::Burst {
-            rate_rps: rate,
-            burst_factor: args.get_f64("burst-factor", 4.0)?,
-            mean_burst_s: args.get_f64("mean-burst", 0.5)?,
-            mean_calm_s: args.get_f64("mean-calm", 2.0)?,
-        },
-        "replay" => {
-            let path = args.get("trace").ok_or_else(|| {
-                anyhow!("--pattern replay needs --trace <file> (one arrival offset [s] per line)")
-            })?;
-            let text = std::fs::read_to_string(path)
-                .map_err(|e| anyhow!("cannot read trace {path:?}: {e}"))?;
-            ArrivalPattern::Replay { times_s: parse_trace(&text)? }
-        }
-        other => bail!("unknown --pattern {other:?}; valid patterns: poisson, burst, replay"),
-    };
-    let spec = LoadSpec {
-        pattern,
-        prompt: LenDist::parse(args.get_str("prompt-tokens", "32"))?,
-        output: LenDist::parse(args.get_str("output-tokens", "16"))?,
-        requests: args.get_usize("requests", 128)?,
-        seed: args.get_usize("seed", 0)? as u64,
-    };
-    // KV knobs: env (`PLATINUM_KV_*`) seeds the defaults, flags win
+/// Scheduler / KV / SLO configuration shared by `serve-bench` and
+/// `serve`: env (`PLATINUM_KV_*`) seeds the KV defaults, flags win; the
+/// resilience knobs stay inert unless given, so a flagless run
+/// serializes exactly as before the fault subsystem existed.
+fn scheduler_config_from_args(args: &cli::Args) -> Result<SchedulerConfig> {
     let mut kv = KvConfig::from_env()?;
     kv.block_tokens = args.get_usize("kv-block", kv.block_tokens)?;
     kv.sram_kib = args.get_usize("kv-sram-kb", kv.sram_kib)?;
@@ -533,14 +512,6 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
             .ok_or_else(|| anyhow!("unknown --dram-model {d:?}; valid: pipe, bank"))?;
     }
     kv.prefix_cache = !args.flag("no-prefix-cache");
-    let shared_prefix = args.get_usize("shared-prefix", 0)?;
-    // fault injection + SLO resilience (S17): --faults carries the
-    // clause grammar; the response knobs stay inert unless given, so a
-    // flagless run serializes exactly as before the subsystem existed
-    let plan = match args.get("faults") {
-        Some(text) => FaultPlan::parse(text)?,
-        None => FaultPlan::default(),
-    };
     let deadline_s = match args.get("deadline-ms") {
         Some(_) => Some(args.get_f64("deadline-ms", 0.0)? * 1e-3),
         None => None,
@@ -554,7 +525,7 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
         brownout_slack_s: args.get_f64("brownout-slack-ms", 0.0)? * 1e-3,
         fault_seed: args.get_usize("seed", 0)? as u64,
     };
-    let cfg = SchedulerConfig {
+    Ok(SchedulerConfig {
         max_batch: args.get_usize("max-batch", 32)?,
         max_queue: args.get_usize("max-queue", 256)?,
         max_inflight_tokens: args.get_usize("max-inflight-tokens", 65_536)?,
@@ -562,8 +533,125 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
         step_overhead_s: args.get_f64("step-overhead-us", 0.0)? * 1e-6,
         kv,
         resilience,
+    })
+}
+
+/// `--faults <plan>` clause grammar (S17), shared by `serve-bench` and
+/// `serve`.
+fn fault_plan_from_args(args: &cli::Args) -> Result<FaultPlan> {
+    match args.get("faults") {
+        Some(text) => FaultPlan::parse(text),
+        None => Ok(FaultPlan::default()),
+    }
+}
+
+/// `platinum serve`: the long-running daemon — identical scheduler and
+/// flags as `serve-bench`, but wall-clock time and arrivals pushed by
+/// live HTTP connections instead of a pre-materialized trace.
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    apply_threads_flag(args)?;
+    let backend_id = args.get_str("backend", "platinum-ternary").to_string();
+    // fail fast on a typo'd id rather than inside the scheduler thread
+    Registry::with_defaults().build(&backend_id)?;
+    let model = model_by_name(args.get_str("model", "700m"))?;
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => envknob::read("PLATINUM_ADDR", "a host:port listen address", |t| {
+            t.contains(':').then(|| t.to_string())
+        })?
+        .unwrap_or_else(|| "127.0.0.1:8080".to_string()),
     };
-    let mut requests = spec.generate()?;
+    let max_conns = match args.get("max-conns") {
+        Some(_) => args.get_usize("max-conns", 0)?,
+        None => envknob::positive_usize("PLATINUM_MAX_CONNS")?.unwrap_or(64),
+    };
+    if max_conns == 0 {
+        bail!("--max-conns must be >= 1");
+    }
+    server::run(ServeOptions {
+        addr,
+        max_conns,
+        capture: args.get("capture").map(String::from),
+        metrics_out: args.get("metrics-out").map(String::from),
+        backend_id,
+        model: *model,
+        cfg: scheduler_config_from_args(args)?,
+        plan: fault_plan_from_args(args)?,
+    })
+}
+
+/// `serve-bench`: generate a deterministic load trace, serve it through
+/// the continuous-batching scheduler against any registered backend,
+/// and report TTFT/TPOT/E2E percentiles, batch/queue series, and
+/// goodput.  The default virtual clock makes the run a reproducible
+/// discrete-event simulation (the measured backends still contribute
+/// real kernel wall-clock as the per-step service time); `--clock wall`
+/// paces arrivals in real time instead.
+fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
+    apply_threads_flag(args)?;
+    let backend = Registry::with_defaults().build(args.get_str("backend", "platinum-cpu"))?;
+    let model = model_by_name(args.get_str("model", "700m"))?;
+    let rate = args.get_f64("rate", 50.0)?;
+    // a capture-v1 trace (`platinum serve --capture`) carries request
+    // shapes and deadlines: replay it verbatim instead of sampling
+    let mut replay_records: Option<Vec<TraceRecord>> = None;
+    let pattern = match args.get_str("pattern", "poisson") {
+        "poisson" => ArrivalPattern::Poisson { rate_rps: rate },
+        "burst" => ArrivalPattern::Burst {
+            rate_rps: rate,
+            burst_factor: args.get_f64("burst-factor", 4.0)?,
+            mean_burst_s: args.get_f64("mean-burst", 0.5)?,
+            mean_calm_s: args.get_f64("mean-calm", 2.0)?,
+        },
+        "replay" => {
+            let path = args.get("trace").ok_or_else(|| {
+                anyhow!(
+                    "--pattern replay needs --trace <file> (legacy arrival offsets \
+                     or a `platinum serve --capture` trace)"
+                )
+            })?;
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("cannot read trace {path:?}: {e}"))?;
+            let recs = parse_trace_records(&text)?;
+            if recs.iter().all(|r| r.prompt_tokens.is_some()) {
+                replay_records = Some(recs.clone());
+            }
+            ArrivalPattern::Replay { times_s: recs.iter().map(|r| r.arrival_s).collect() }
+        }
+        other => bail!("unknown --pattern {other:?}; valid patterns: poisson, burst, replay"),
+    };
+    let spec = LoadSpec {
+        pattern,
+        prompt: LenDist::parse(args.get_str("prompt-tokens", "32"))?,
+        output: LenDist::parse(args.get_str("output-tokens", "16"))?,
+        requests: args.get_usize("requests", 128)?,
+        seed: args.get_usize("seed", 0)? as u64,
+    };
+    let shared_prefix = args.get_usize("shared-prefix", 0)?;
+    let plan = fault_plan_from_args(args)?;
+    let cfg = scheduler_config_from_args(args)?;
+    let mut requests = match &replay_records {
+        Some(recs) => {
+            let n = match args.get("requests") {
+                Some(_) => args.get_usize("requests", 0)?.min(recs.len()),
+                None => recs.len(),
+            };
+            let mut recs = recs[..n].to_vec();
+            recs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+            recs.iter()
+                .enumerate()
+                .map(|(i, r)| TrafficRequest {
+                    id: i as u64,
+                    arrival_s: r.arrival_s,
+                    prompt_tokens: r.prompt_tokens.unwrap_or(1),
+                    output_tokens: r.output_tokens.unwrap_or(1),
+                    deadline_s: r.deadline_s,
+                    ..TrafficRequest::default()
+                })
+                .collect()
+        }
+        None => spec.generate()?,
+    };
     with_shared_prefix(&mut requests, shared_prefix);
     let mut clock: Box<dyn Clock> = match args.get_str("clock", "virtual") {
         "virtual" => Box::new(VirtualClock::new()),
@@ -605,12 +693,12 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
             ("max_queue", num(cfg.max_queue as f64)),
             ("max_inflight_tokens", num(cfg.max_inflight_tokens as f64)),
             ("max_prefill_tokens", num(cfg.max_prefill_tokens as f64)),
-            ("kv_block_tokens", num(kv.block_tokens as f64)),
-            ("kv_sram_kib", num(kv.sram_kib as f64)),
-            ("kv_dram_mib", num(kv.dram_mib as f64)),
-            ("kv_policy", s(kv.policy.label())),
-            ("kv_prefix_cache", s(if kv.prefix_cache { "on" } else { "off" })),
-            ("dram_model", s(kv.dram_model.label())),
+            ("kv_block_tokens", num(cfg.kv.block_tokens as f64)),
+            ("kv_sram_kib", num(cfg.kv.sram_kib as f64)),
+            ("kv_dram_mib", num(cfg.kv.dram_mib as f64)),
+            ("kv_policy", s(cfg.kv.policy.label())),
+            ("kv_prefix_cache", s(if cfg.kv.prefix_cache { "on" } else { "off" })),
+            ("dram_model", s(cfg.kv.dram_model.label())),
             ("shared_prefix_tokens", num(shared_prefix as f64)),
         ];
         // only when the resilience section exists, so fault-free output
@@ -619,13 +707,13 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
             config.push(("faults", s(&plan.label())));
             config.push((
                 "deadline_ms",
-                deadline_s.map(|d| num(d * 1e3)).unwrap_or(Json::Null),
+                cfg.resilience.deadline_s.map(|d| num(d * 1e3)).unwrap_or(Json::Null),
             ));
-            config.push(("retries", num(resilience.max_retries as f64)));
-            config.push(("retry_base_ms", num(resilience.retry_base_s * 1e3)));
-            config.push(("retry_cap_ms", num(resilience.retry_cap_s * 1e3)));
-            config.push(("brownout_queue", num(resilience.brownout_queue as f64)));
-            config.push(("brownout_slack_ms", num(resilience.brownout_slack_s * 1e3)));
+            config.push(("retries", num(cfg.resilience.max_retries as f64)));
+            config.push(("retry_base_ms", num(cfg.resilience.retry_base_s * 1e3)));
+            config.push(("retry_cap_ms", num(cfg.resilience.retry_cap_s * 1e3)));
+            config.push(("brownout_queue", num(cfg.resilience.brownout_queue as f64)));
+            config.push(("brownout_slack_ms", num(cfg.resilience.brownout_slack_s * 1e3)));
         }
         let doc = obj(vec![
             ("bench", s("serve-bench")),

@@ -1,0 +1,198 @@
+//! Hand-rolled HTTP/1.1 primitives for `platinum serve` — std-only per
+//! the vendored-deps rule (no hyper/axum), and deliberately tiny: an
+//! incremental request parser that survives arbitrary read-boundary
+//! splits, plus response and chunked-transfer-encoding writers.
+//!
+//! Everything here is pure byte-in/byte-out and unit-tested without
+//! sockets (`tests/server_http.rs`); [`super::stream`] owns the actual
+//! `TcpStream` I/O.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Upper bound on the request head (request line + headers + CRLFCRLF).
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+/// Upper bound on a request body (`Content-Length`).
+pub const MAX_BODY_BYTES: usize = 64 * 1024;
+
+/// One parsed request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Headers in arrival order, names verbatim; look up through
+    /// [`HttpRequest::header`] (names are case-insensitive).
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (first match wins).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Incremental request parser: [`RequestParser::feed`] bytes as they
+/// arrive off the socket, then [`RequestParser::poll`] — `Ok(None)`
+/// means "need more bytes", `Err` means the connection should be
+/// answered 400 and closed.  Pipelined requests queue up: each `poll`
+/// consumes exactly one complete request from the buffer.
+#[derive(Debug, Default)]
+pub struct RequestParser {
+    buf: Vec<u8>,
+}
+
+impl RequestParser {
+    pub fn new() -> RequestParser {
+        RequestParser { buf: Vec::new() }
+    }
+
+    /// Append bytes read from the connection.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Try to parse one complete request out of the buffered bytes.
+    pub fn poll(&mut self) -> Result<Option<HttpRequest>> {
+        let Some(head_end) = find_head_end(&self.buf) else {
+            if self.buf.len() > MAX_HEAD_BYTES {
+                bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+            }
+            return Ok(None);
+        };
+        if head_end > MAX_HEAD_BYTES {
+            bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| anyhow!("request head is not valid UTF-8"))?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split(' ');
+        let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+        {
+            (Some(m), Some(p), Some(v), None) if !m.is_empty() && !p.is_empty() => (m, p, v),
+            _ => bail!("malformed request line {request_line:?}"),
+        };
+        if !version.starts_with("HTTP/1.") {
+            bail!("unsupported protocol version {version:?}");
+        }
+        let mut headers: Vec<(String, String)> = Vec::new();
+        for line in lines {
+            let (name, value) = line
+                .split_once(':')
+                .ok_or_else(|| anyhow!("malformed header line {line:?}"))?;
+            if name.is_empty() || name.contains(' ') {
+                bail!("malformed header name {name:?}");
+            }
+            headers.push((name.to_string(), value.trim().to_string()));
+        }
+        let content_length = match headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        {
+            Some((_, v)) => v
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad Content-Length {v:?}"))?,
+            None => 0,
+        };
+        if content_length > MAX_BODY_BYTES {
+            bail!("request body of {content_length} bytes exceeds {MAX_BODY_BYTES}");
+        }
+        let total = head_end + 4 + content_length;
+        if self.buf.len() < total {
+            return Ok(None); // body still in flight
+        }
+        let body = self.buf[head_end + 4..total].to_vec();
+        self.buf.drain(..total);
+        Ok(Some(HttpRequest {
+            method: method.to_string(),
+            path: path.to_string(),
+            headers,
+            body,
+        }))
+    }
+}
+
+/// Byte offset of the head/body boundary (`\r\n\r\n`), if buffered.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// A complete non-streaming response with `Content-Length`.
+pub fn response(status: u16, reason: &str, content_type: &str, body: &[u8]) -> Vec<u8> {
+    let mut out = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
+/// The head of a chunked streaming response; follow with [`chunk`]s and
+/// one [`last_chunk`].
+pub fn streaming_head(status: u16, reason: &str, content_type: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )
+    .into_bytes()
+}
+
+/// One transfer-encoding chunk: hex length, CRLF, payload, CRLF.
+pub fn chunk(payload: &[u8]) -> Vec<u8> {
+    let mut out = format!("{:x}\r\n", payload.len()).into_bytes();
+    out.extend_from_slice(payload);
+    out.extend_from_slice(b"\r\n");
+    out
+}
+
+/// The zero-length terminator chunk.
+pub fn last_chunk() -> &'static [u8] {
+    b"0\r\n\r\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_request_with_body() {
+        let mut p = RequestParser::new();
+        p.feed(b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd");
+        let r = p.poll().unwrap().expect("complete request");
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/generate");
+        assert_eq!(r.header("host"), Some("x"));
+        assert_eq!(r.body, b"abcd");
+        assert!(p.poll().unwrap().is_none(), "buffer fully consumed");
+    }
+
+    #[test]
+    fn survives_arbitrary_split_boundaries() {
+        let raw = b"GET /health HTTP/1.1\r\nX-Deadline-Ms: 250\r\n\r\n";
+        for cut in 1..raw.len() {
+            let mut p = RequestParser::new();
+            p.feed(&raw[..cut]);
+            let first = p.poll().unwrap();
+            p.feed(&raw[cut..]);
+            let r = match first {
+                Some(r) => r,
+                None => p.poll().unwrap().expect("complete after second feed"),
+            };
+            assert_eq!(r.path, "/health", "cut at {cut}");
+            assert_eq!(r.header("x-deadline-ms"), Some("250"));
+        }
+    }
+
+    #[test]
+    fn chunk_encoding_golden_bytes() {
+        assert_eq!(chunk(b"hello"), b"5\r\nhello\r\n");
+        assert_eq!(chunk(&[0u8; 16]).len(), 2 + 2 + 16 + 2, "hex length for 16 is '10'");
+        assert_eq!(last_chunk(), b"0\r\n\r\n");
+        let head = String::from_utf8(streaming_head(200, "OK", "application/x-ndjson")).unwrap();
+        assert!(head.contains("Transfer-Encoding: chunked"), "{head}");
+    }
+}

@@ -1,0 +1,472 @@
+//! `platinum serve` (S18): a long-running serving daemon with a wire
+//! protocol, built entirely on `std` (the vendored-deps rule rules out
+//! hyper/tokio — the accept loop is blocking threads, the protocol is
+//! hand-rolled HTTP/1.1 in [`http`]).
+//!
+//! Architecture — three planes sharing one [`Gateway`]:
+//!
+//! * **accept loop** (main thread): nonblocking `TcpListener`, one OS
+//!   thread per connection ([`stream::handle`]).  Connections must
+//!   never run on the compute worker pool — a pool task blocking on
+//!   socket I/O would violate the pool's no-external-blocking
+//!   invariant — so the pool stays the compute plane and connection
+//!   threads are plain `thread::spawn`.
+//! * **scheduler thread**: the *unmodified* continuous-batching serve
+//!   loop ([`Scheduler::serve_source`]) on a [`WallClock`] anchored at
+//!   the same instant the accept loop stamps arrival offsets with,
+//!   pulling arrivals from a [`PushSource`].  The daemon is therefore
+//!   the same control plane the virtual-clock benchmarks and tests pin
+//!   — one code path, two clocks.
+//! * **connection threads**: parse one request, [`Gateway::submit`] it,
+//!   and stream token events back as chunked ndjson until the
+//!   scheduler reports the terminal [`Outcome`].
+//!
+//! Graceful shutdown (SIGTERM/SIGINT or `POST /shutdown`): stop
+//! accepting, let in-flight connections drain (the scheduler keeps
+//! running their sequences), close the push source, join the scheduler,
+//! then write the captured arrival trace ([`format_capture`]) and the
+//! final metrics JSON.  A captured trace replayed through `serve-bench
+//! --pattern replay --clock virtual` is byte-reproducible — the
+//! determinism contract CI's `daemon-smoke` job enforces end-to-end.
+
+pub mod http;
+pub mod stream;
+
+use crate::engine::Registry;
+use crate::fault::FaultPlan;
+use crate::models::BitNetModel;
+use crate::traffic::metrics::Histogram;
+use crate::traffic::{
+    format_capture, Outcome, PushHandle, PushSource, RunResult, Scheduler, SchedulerConfig,
+    StepRecord, TraceRecord, TrafficRequest, WallClock,
+};
+use crate::util::json::{b, num, obj, s, Json};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Daemon configuration (CLI flags + `PLATINUM_ADDR`/`PLATINUM_MAX_CONNS`
+/// env knobs, resolved in `main.rs`).
+pub struct ServeOptions {
+    /// Listen address, `host:port`.
+    pub addr: String,
+    /// Concurrent-connection cap; excess connections get an immediate
+    /// 503 instead of an unbounded thread pile-up.
+    pub max_conns: usize,
+    /// Write every live arrival as a capture-v1 replay trace here on
+    /// shutdown.
+    pub capture: Option<String>,
+    /// Write the final metrics JSON here on shutdown.
+    pub metrics_out: Option<String>,
+    /// Engine backend id pricing (or measuring) the steps.
+    pub backend_id: String,
+    pub model: BitNetModel,
+    pub cfg: SchedulerConfig,
+    pub plan: FaultPlan,
+}
+
+/// What a connection thread receives while its request is in flight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenEvent {
+    /// One generated token (0-based position in the output).
+    Token { index: usize },
+    /// Terminal state — always the last event a sink sees.
+    Done { outcome: Outcome },
+}
+
+/// One waiting connection's event channel plus its latency bookkeeping.
+struct Sink {
+    tx: Sender<TokenEvent>,
+    t_submit_s: f64,
+    t_last_s: Option<f64>,
+    tokens: usize,
+}
+
+/// Live serving statistics for `/metrics` — the same [`Histogram`]
+/// machinery the PR 5 bench metrics use, fed by wall-clock events.
+#[derive(Default)]
+struct LiveStats {
+    submitted: u64,
+    completed: u64,
+    cancelled: u64,
+    rejected: u64,
+    shed: u64,
+    exhausted: u64,
+    ttft: Histogram,
+    tpot: Histogram,
+    e2e: Histogram,
+}
+
+/// The meeting point of the three planes: connection threads submit
+/// requests and wait on per-request channels; the scheduler thread
+/// reports tokens (step-executor hook) and terminals (source observer);
+/// `/metrics` reads the aggregate.
+///
+/// Lock order: `sinks` before `live` — both token and terminal paths
+/// follow it, so the two mutexes cannot deadlock.
+pub struct Gateway {
+    handle: PushHandle,
+    anchor: Instant,
+    next_id: AtomicU64,
+    stop: AtomicBool,
+    sinks: Mutex<HashMap<u64, Sink>>,
+    live: Mutex<LiveStats>,
+    captures: Mutex<Vec<TraceRecord>>,
+}
+
+impl Gateway {
+    fn new(handle: PushHandle, anchor: Instant) -> Gateway {
+        Gateway {
+            handle,
+            anchor,
+            next_id: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            sinks: Mutex::new(HashMap::new()),
+            live: Mutex::new(LiveStats::default()),
+            captures: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Seconds since the daemon's t = 0 (shared with the scheduler's
+    /// anchored wall clock).
+    fn now_s(&self) -> f64 {
+        self.anchor.elapsed().as_secs_f64()
+    }
+
+    /// Enqueue one generation request into the live timeline.  Returns
+    /// the request id and the channel its [`TokenEvent`]s arrive on.
+    pub fn submit(
+        &self,
+        prompt_tokens: usize,
+        output_tokens: usize,
+        shared_prefix_tokens: usize,
+        deadline_s: Option<f64>,
+    ) -> (u64, Receiver<TokenEvent>) {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let arrival_s = self.now_s();
+        let (tx, rx) = mpsc::channel();
+        self.sinks
+            .lock()
+            .unwrap()
+            .insert(id, Sink { tx, t_submit_s: arrival_s, t_last_s: None, tokens: 0 });
+        self.live.lock().unwrap().submitted += 1;
+        self.captures.lock().unwrap().push(TraceRecord {
+            arrival_s,
+            prompt_tokens: Some(prompt_tokens),
+            output_tokens: Some(output_tokens),
+            deadline_s,
+        });
+        self.handle.push(TrafficRequest {
+            id,
+            arrival_s,
+            prompt_tokens,
+            output_tokens,
+            shared_prefix_tokens,
+            deadline_s,
+        });
+        (id, rx)
+    }
+
+    /// Client hung up mid-stream: tell the scheduler to kill the
+    /// request wherever it sits and reclaim its KV blocks.
+    pub fn cancel(&self, id: u64) {
+        self.handle.cancel(id);
+    }
+
+    /// Ask the daemon to shut down (`POST /shutdown` — the portable
+    /// sibling of SIGTERM).
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Step-executor hook: every sequence a step served emitted one
+    /// token.  Records TTFT on the first and true inter-token gaps
+    /// after, then forwards the event to the waiting connection.
+    fn on_step_token(&self, id: u64) {
+        let now = self.now_s();
+        let mut sinks = self.sinks.lock().unwrap();
+        let Some(sink) = sinks.get_mut(&id) else { return };
+        let index = sink.tokens;
+        sink.tokens += 1;
+        let mut live = self.live.lock().unwrap();
+        match sink.t_last_s {
+            None => live.ttft.record(now - sink.t_submit_s),
+            Some(prev) => live.tpot.record(now - prev),
+        }
+        drop(live);
+        sink.t_last_s = Some(now);
+        let _ = sink.tx.send(TokenEvent::Token { index });
+    }
+
+    /// Source-observer hook: the request reached its terminal state.
+    /// Routes the outcome to the connection and closes its sink.
+    fn on_terminal(&self, id: u64, outcome: Outcome) {
+        let now = self.now_s();
+        let sink = self.sinks.lock().unwrap().remove(&id);
+        let mut live = self.live.lock().unwrap();
+        match outcome {
+            Outcome::Completed => {
+                live.completed += 1;
+                if let Some(sk) = &sink {
+                    live.e2e.record(now - sk.t_submit_s);
+                }
+            }
+            Outcome::Cancelled => live.cancelled += 1,
+            Outcome::Rejected => live.rejected += 1,
+            Outcome::Shed => live.shed += 1,
+            Outcome::Exhausted => live.exhausted += 1,
+        }
+        drop(live);
+        if let Some(sk) = sink {
+            let _ = sk.tx.send(TokenEvent::Done { outcome });
+        }
+    }
+
+    /// `/health` payload.
+    pub fn health_json(&self) -> Json {
+        obj(vec![
+            ("status", s("ok")),
+            ("active", num(self.sinks.lock().unwrap().len() as f64)),
+            ("draining", b(self.stop_requested())),
+            ("uptime_s", num(self.now_s())),
+        ])
+    }
+
+    /// `/metrics` payload: request counters plus the live TTFT / TPOT /
+    /// E2E histograms (same serialization as the bench metrics).
+    pub fn metrics_json(&self) -> Json {
+        let live = self.live.lock().unwrap();
+        obj(vec![
+            (
+                "counts",
+                obj(vec![
+                    ("submitted", num(live.submitted as f64)),
+                    ("completed", num(live.completed as f64)),
+                    ("cancelled", num(live.cancelled as f64)),
+                    ("rejected", num(live.rejected as f64)),
+                    ("shed", num(live.shed as f64)),
+                    ("exhausted", num(live.exhausted as f64)),
+                    ("active", num(self.sinks.lock().unwrap().len() as f64)),
+                ]),
+            ),
+            (
+                "latency_s",
+                obj(vec![
+                    ("ttft", live.ttft.to_json()),
+                    ("tpot", live.tpot.to_json()),
+                    ("e2e", live.e2e.to_json()),
+                ]),
+            ),
+            ("uptime_s", num(self.now_s())),
+        ])
+    }
+
+    /// Captured arrivals so far, in arrival order.
+    fn capture_records(&self) -> Vec<TraceRecord> {
+        let mut recs = self.captures.lock().unwrap().clone();
+        recs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        recs
+    }
+}
+
+/// Process-wide shutdown flag flipped by SIGTERM/SIGINT.  Pure std: the
+/// handler is registered through the C `signal` entry point (no libc
+/// crate), and only stores into an atomic — async-signal-safe.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_signum: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_signal);
+            signal(SIGINT, on_signal);
+        }
+    }
+
+    pub fn requested() -> bool {
+        SHUTDOWN.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    /// Non-unix: no signal plumbing; `POST /shutdown` is the only stop.
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
+/// Run the daemon until SIGTERM/SIGINT or `POST /shutdown`, then drain
+/// and write the capture / metrics artifacts.  See the module docs for
+/// the three-plane architecture.
+pub fn run(opts: ServeOptions) -> Result<()> {
+    sig::install();
+    let listener = TcpListener::bind(&opts.addr)
+        .map_err(|e| anyhow!("cannot bind {:?}: {e}", opts.addr))?;
+    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
+
+    let anchor = Instant::now();
+    let (mut source, handle) = PushSource::new();
+    let gw = Arc::new(Gateway::new(handle.clone(), anchor));
+    let obs = gw.clone();
+    source.set_observer(Box::new(move |id, outcome| obs.on_terminal(id, outcome)));
+
+    // scheduler thread: builds its own backend (trait objects stay
+    // thread-local) and runs the shared serve loop on the anchored
+    // wall clock until the source closes and drains
+    let sched_gw = gw.clone();
+    let backend_id = opts.backend_id.clone();
+    let model = opts.model;
+    let cfg = opts.cfg;
+    let plan = opts.plan.clone();
+    let scheduler = std::thread::Builder::new().name("platinum-sched".into()).spawn(
+        move || -> Result<RunResult> {
+            let backend = Registry::with_defaults().build(&backend_id)?;
+            let sched = Scheduler::new(backend.as_ref(), model, cfg);
+            let mut clock = WallClock::anchored_at(anchor);
+            let mut hook = |step: &StepRecord, _w: &crate::engine::Workload| -> Result<()> {
+                for &id in &step.seq_ids {
+                    sched_gw.on_step_token(id);
+                }
+                Ok(())
+            };
+            sched.serve_source(&mut source, &mut clock, Some(&mut hook), &plan)
+        },
+    )?;
+
+    eprintln!(
+        "platinum serve: listening on {local} (backend {}, model {}, max {} conns)",
+        opts.backend_id, opts.model.name, opts.max_conns
+    );
+
+    // accept loop: one OS thread per connection, bounded by max_conns
+    let conns = Arc::new(AtomicUsize::new(0));
+    while !sig::requested() && !gw.stop_requested() {
+        match listener.accept() {
+            Ok((stream_sock, _peer)) => {
+                if conns.load(Ordering::SeqCst) >= opts.max_conns {
+                    stream::refuse_overloaded(stream_sock);
+                    continue;
+                }
+                conns.fetch_add(1, Ordering::SeqCst);
+                let gw2 = gw.clone();
+                let conns2 = conns.clone();
+                std::thread::spawn(move || {
+                    let _ = stream::handle(stream_sock, &gw2);
+                    conns2.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(anyhow!("accept failed: {e}")),
+        }
+    }
+
+    // graceful drain: stop accepting, let in-flight connections finish
+    // (the scheduler is still serving their sequences), then close the
+    // source so the serve loop exits once everything completes
+    eprintln!("platinum serve: shutting down, draining in-flight requests");
+    let grace = Instant::now();
+    while conns.load(Ordering::SeqCst) > 0 && grace.elapsed() < Duration::from_secs(20) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    handle.close();
+    let result = scheduler
+        .join()
+        .map_err(|_| anyhow!("scheduler thread panicked"))??;
+
+    if let Some(path) = &opts.capture {
+        let recs = gw.capture_records();
+        std::fs::write(path, format_capture(&recs))
+            .map_err(|e| anyhow!("cannot write capture {path:?}: {e}"))?;
+        eprintln!("platinum serve: wrote {} captured arrivals to {path}", recs.len());
+    }
+    if let Some(path) = &opts.metrics_out {
+        let doc = obj(vec![
+            ("serve", gw.metrics_json()),
+            ("scheduler", result.metrics.to_json()),
+        ]);
+        std::fs::write(path, doc.to_string())
+            .map_err(|e| anyhow!("cannot write metrics {path:?}: {e}"))?;
+        eprintln!("platinum serve: wrote final metrics to {path}");
+    }
+    let m = &result.metrics;
+    eprintln!(
+        "platinum serve: drained — offered {} completed {} cancelled {} steps {}",
+        m.offered,
+        m.completed,
+        m.cancelled,
+        m.steps()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::PushSource;
+
+    #[test]
+    fn gateway_routes_tokens_and_terminals() {
+        let (_source, handle) = PushSource::new();
+        let gw = Gateway::new(handle, Instant::now());
+        let (id, rx) = gw.submit(8, 2, 0, Some(0.25));
+        gw.on_step_token(id);
+        gw.on_step_token(id);
+        gw.on_terminal(id, Outcome::Completed);
+        assert_eq!(rx.recv().unwrap(), TokenEvent::Token { index: 0 });
+        assert_eq!(rx.recv().unwrap(), TokenEvent::Token { index: 1 });
+        assert_eq!(rx.recv().unwrap(), TokenEvent::Done { outcome: Outcome::Completed });
+        assert!(rx.recv().is_err(), "sink closed after the terminal");
+        let m = gw.metrics_json().to_string();
+        assert!(m.contains("\"submitted\":1"), "{m}");
+        assert!(m.contains("\"completed\":1"), "{m}");
+        // the capture recorded the request shape and deadline
+        let recs = gw.capture_records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].prompt_tokens, Some(8));
+        assert_eq!(recs[0].output_tokens, Some(2));
+        assert_eq!(recs[0].deadline_s, Some(0.25));
+    }
+
+    #[test]
+    fn gateway_counts_non_completed_outcomes() {
+        let (_source, handle) = PushSource::new();
+        let gw = Gateway::new(handle, Instant::now());
+        let (a, rx_a) = gw.submit(4, 1, 0, None);
+        let (b_id, rx_b) = gw.submit(4, 1, 0, None);
+        gw.on_terminal(a, Outcome::Rejected);
+        gw.on_terminal(b_id, Outcome::Cancelled);
+        assert_eq!(rx_a.recv().unwrap(), TokenEvent::Done { outcome: Outcome::Rejected });
+        assert_eq!(rx_b.recv().unwrap(), TokenEvent::Done { outcome: Outcome::Cancelled });
+        let health = gw.health_json().to_string();
+        assert!(health.contains("\"active\":0"), "{health}");
+        assert!(health.contains("\"draining\":false"), "{health}");
+        gw.request_stop();
+        assert!(gw.health_json().to_string().contains("\"draining\":true"));
+    }
+}

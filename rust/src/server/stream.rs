@@ -1,0 +1,269 @@
+//! Per-connection protocol handling for `platinum serve`: parse one
+//! HTTP/1.1 request off the socket ([`super::http::RequestParser`]),
+//! route it, and for generation requests stream token events back as
+//! chunked ndjson until the scheduler reports the terminal outcome.
+//!
+//! One request per connection (`Connection: close`) keeps the lifetime
+//! story trivial: a connection thread exists exactly as long as its
+//! request is in flight, and a write failure mid-stream *is* the
+//! client hanging up — the handler cancels the request so the
+//! scheduler reclaims its KV blocks.
+
+use super::http::{chunk, last_chunk, response, streaming_head, HttpRequest, RequestParser};
+use super::{Gateway, TokenEvent};
+use crate::traffic::Outcome;
+use crate::util::json::{b, num, obj, s, Json};
+use anyhow::{anyhow, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// How long a connection may sit idle mid-parse or mid-generation
+/// before the daemon gives up on it.
+const IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Serve one connection to completion.  Errors are connection-local:
+/// the caller logs-and-drops, the daemon keeps running.
+pub fn handle(mut sock: TcpStream, gw: &Gateway) -> Result<()> {
+    sock.set_read_timeout(Some(IO_TIMEOUT))?;
+    sock.set_write_timeout(Some(IO_TIMEOUT))?;
+    let req = match read_request(&mut sock) {
+        Ok(r) => r,
+        Err(e) => {
+            let body = err_json(&e.to_string());
+            let _ = sock.write_all(&response(400, "Bad Request", "application/json", &body));
+            return Err(e);
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            let body = gw.health_json().to_string().into_bytes();
+            sock.write_all(&response(200, "OK", "application/json", &body))?;
+        }
+        ("GET", "/metrics") => {
+            let body = gw.metrics_json().to_string().into_bytes();
+            sock.write_all(&response(200, "OK", "application/json", &body))?;
+        }
+        ("POST", "/v1/generate") => return generate(sock, gw, &req),
+        ("POST", "/shutdown") => {
+            gw.request_stop();
+            let body = obj(vec![("ok", b(true)), ("draining", b(true))]).to_string().into_bytes();
+            sock.write_all(&response(200, "OK", "application/json", &body))?;
+        }
+        _ => {
+            let body = err_json(&format!("no route {} {}", req.method, req.path));
+            sock.write_all(&response(404, "Not Found", "application/json", &body))?;
+        }
+    }
+    Ok(())
+}
+
+/// Immediate 503 for connections over the `max_conns` cap (best
+/// effort — the client may already be gone).
+pub fn refuse_overloaded(mut sock: TcpStream) {
+    let body = err_json("connection limit reached");
+    let _ = sock.write_all(&response(503, "Service Unavailable", "application/json", &body));
+}
+
+fn err_json(msg: &str) -> Vec<u8> {
+    obj(vec![("error", s(msg))]).to_string().into_bytes()
+}
+
+/// Pull bytes until the parser yields one complete request.
+fn read_request(sock: &mut TcpStream) -> Result<HttpRequest> {
+    let mut parser = RequestParser::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        if let Some(req) = parser.poll()? {
+            return Ok(req);
+        }
+        let n = sock.read(&mut buf).map_err(|e| anyhow!("read failed: {e}"))?;
+        if n == 0 {
+            return Err(anyhow!("connection closed mid-request"));
+        }
+        parser.feed(&buf[..n]);
+    }
+}
+
+/// `POST /v1/generate`: body `{"prompt_tokens": N, "output_tokens": N
+/// [, "shared_prefix_tokens": N]}`, optional `X-Deadline-Ms` header.
+///
+/// Response: `200` chunked `application/x-ndjson` — one
+/// `{"token":k}` line per generated token, then a final
+/// `{"done":true,"outcome":"..."}` line.  A request that terminates
+/// before its first token (rejected / shed / exhausted / cancelled)
+/// gets a plain `503` with the outcome instead of an empty stream.
+fn generate(mut sock: TcpStream, gw: &Gateway, req: &HttpRequest) -> Result<()> {
+    if gw.stop_requested() {
+        let body = err_json("draining: not accepting new requests");
+        sock.write_all(&response(503, "Service Unavailable", "application/json", &body))?;
+        return Ok(());
+    }
+    let (prompt, output, shared, deadline_s) = match parse_generate(req) {
+        Ok(p) => p,
+        Err(e) => {
+            let body = err_json(&e.to_string());
+            sock.write_all(&response(400, "Bad Request", "application/json", &body))?;
+            return Err(e);
+        }
+    };
+    let (id, rx) = gw.submit(prompt, output, shared, deadline_s);
+
+    // wait for the first event before committing to a status line
+    let first = match rx.recv_timeout(IO_TIMEOUT) {
+        Ok(ev) => ev,
+        Err(_) => {
+            gw.cancel(id);
+            let body = err_json("timed out waiting for the scheduler");
+            sock.write_all(&response(503, "Service Unavailable", "application/json", &body))?;
+            return Err(anyhow!("request {id}: no event within {IO_TIMEOUT:?}"));
+        }
+    };
+    if let TokenEvent::Done { outcome } = first {
+        let (status, reason) = match outcome {
+            Outcome::Completed => (200, "OK"), // zero-token completion: degenerate but honest
+            _ => (503, "Service Unavailable"),
+        };
+        let body = done_line(outcome, 0);
+        sock.write_all(&response(status, reason, "application/json", &body))?;
+        return Ok(());
+    }
+
+    sock.write_all(&streaming_head(200, "OK", "application/x-ndjson"))?;
+    let mut ev = first;
+    let mut streamed = 0usize;
+    loop {
+        match ev {
+            TokenEvent::Token { index } => {
+                let line = format!("{}\n", obj(vec![("token", num(index as f64))]).to_string());
+                if sock.write_all(&chunk(line.as_bytes())).is_err() {
+                    // client hung up mid-stream: reclaim the KV blocks
+                    gw.cancel(id);
+                    return Err(anyhow!("request {id}: client disconnected mid-stream"));
+                }
+                streamed += 1;
+            }
+            TokenEvent::Done { outcome } => {
+                let mut tail = chunk(&done_line(outcome, streamed));
+                tail.extend_from_slice(last_chunk());
+                sock.write_all(&tail)?;
+                return Ok(());
+            }
+        }
+        ev = match rx.recv_timeout(IO_TIMEOUT) {
+            Ok(ev) => ev,
+            Err(_) => {
+                gw.cancel(id);
+                return Err(anyhow!("request {id}: event stream stalled"));
+            }
+        };
+    }
+}
+
+/// The final ndjson line of a generation stream.
+fn done_line(outcome: Outcome, tokens: usize) -> Vec<u8> {
+    format!(
+        "{}\n",
+        obj(vec![
+            ("done", b(true)),
+            ("outcome", s(outcome.label())),
+            ("tokens", num(tokens as f64)),
+        ])
+        .to_string()
+    )
+    .into_bytes()
+}
+
+/// Decode the generate request: JSON body + `X-Deadline-Ms` header.
+fn parse_generate(req: &HttpRequest) -> Result<(usize, usize, usize, Option<f64>)> {
+    let body = std::str::from_utf8(&req.body).map_err(|_| anyhow!("body is not UTF-8"))?;
+    let json = Json::parse(body).map_err(|e| anyhow!("bad JSON body: {e}"))?;
+    let field = |key: &str| -> Result<usize> {
+        json.req(key)?
+            .as_f64()
+            .filter(|v| v.fract() == 0.0 && *v >= 1.0)
+            .map(|v| v as usize)
+            .ok_or_else(|| anyhow!("{key} must be a positive integer"))
+    };
+    let prompt = field("prompt_tokens")?;
+    let output = field("output_tokens")?;
+    let shared = match json.get("shared_prefix_tokens") {
+        Some(v) => v
+            .as_f64()
+            .filter(|x| x.fract() == 0.0 && *x >= 0.0)
+            .map(|x| x as usize)
+            .ok_or_else(|| anyhow!("shared_prefix_tokens must be a non-negative integer"))?,
+        None => 0,
+    };
+    if shared > prompt {
+        return Err(anyhow!("shared_prefix_tokens cannot exceed prompt_tokens"));
+    }
+    let deadline_s = match req.header("x-deadline-ms") {
+        Some(v) => {
+            let ms: f64 = v.parse().map_err(|_| anyhow!("bad X-Deadline-Ms {v:?}"))?;
+            if !ms.is_finite() || ms <= 0.0 {
+                return Err(anyhow!("X-Deadline-Ms must be a positive number of milliseconds"));
+            }
+            Some(ms * 1e-3)
+        }
+        None => None,
+    };
+    Ok((prompt, output, shared, deadline_s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn post(body: &str, deadline: Option<&str>) -> HttpRequest {
+        let mut headers = vec![("Content-Length".to_string(), body.len().to_string())];
+        if let Some(d) = deadline {
+            headers.push(("X-Deadline-Ms".to_string(), d.to_string()));
+        }
+        HttpRequest {
+            method: "POST".into(),
+            path: "/v1/generate".into(),
+            headers,
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    #[test]
+    fn parses_generate_body_and_deadline() {
+        let req = post(r#"{"prompt_tokens": 32, "output_tokens": 8}"#, Some("250"));
+        let (p, o, sh, dl) = parse_generate(&req).unwrap();
+        assert_eq!((p, o, sh), (32, 8, 0));
+        assert_eq!(dl, Some(0.25));
+        let req = post(
+            r#"{"prompt_tokens": 70, "output_tokens": 4, "shared_prefix_tokens": 64}"#,
+            None,
+        );
+        let (p, _, sh, dl) = parse_generate(&req).unwrap();
+        assert_eq!((p, sh), (70, 64));
+        assert_eq!(dl, None);
+    }
+
+    #[test]
+    fn rejects_bad_generate_requests() {
+        for (body, dl) in [
+            ("not json", None),
+            (r#"{"output_tokens": 8}"#, None),
+            (r#"{"prompt_tokens": 0, "output_tokens": 8}"#, None),
+            (r#"{"prompt_tokens": 4, "output_tokens": 8, "shared_prefix_tokens": 9}"#, None),
+            (r#"{"prompt_tokens": 4, "output_tokens": 8}"#, Some("soon")),
+            (r#"{"prompt_tokens": 4, "output_tokens": 8}"#, Some("-5")),
+        ] {
+            assert!(parse_generate(&post(body, dl)).is_err(), "{body:?} dl={dl:?}");
+        }
+    }
+
+    #[test]
+    fn done_line_is_one_ndjson_record() {
+        let line = String::from_utf8(done_line(Outcome::Completed, 7)).unwrap();
+        assert!(line.ends_with('\n'));
+        let parsed = Json::parse(line.trim()).unwrap();
+        assert_eq!(parsed.get("done"), Some(&Json::Bool(true)));
+        assert_eq!(parsed.get("outcome").unwrap().as_str(), Some("completed"));
+        assert_eq!(parsed.get("tokens").unwrap().as_usize(), Some(7));
+    }
+}

@@ -80,6 +80,13 @@ impl WallClock {
     pub fn new() -> WallClock {
         WallClock { start: Instant::now() }
     }
+
+    /// A wall clock sharing an external anchor, so independent
+    /// components (the server's accept loop stamping arrival offsets,
+    /// the scheduler thread driving the serve loop) agree on t = 0.
+    pub fn anchored_at(start: Instant) -> WallClock {
+        WallClock { start }
+    }
 }
 
 impl Default for WallClock {

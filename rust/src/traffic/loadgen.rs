@@ -35,6 +35,23 @@ pub struct TrafficRequest {
     /// Leading prompt tokens shared verbatim across requests (the
     /// system prompt) — what the KV prefix cache can deduplicate.
     pub shared_prefix_tokens: usize,
+    /// Per-request deadline (seconds from `arrival_s`), carried by live
+    /// requests (`X-Deadline-Ms` header) and captured traces; overrides
+    /// the global `ResilienceConfig::deadline_s` when set.
+    pub deadline_s: Option<f64>,
+}
+
+impl Default for TrafficRequest {
+    fn default() -> TrafficRequest {
+        TrafficRequest {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 1,
+            output_tokens: 1,
+            shared_prefix_tokens: 0,
+            deadline_s: None,
+        }
+    }
 }
 
 impl TrafficRequest {
@@ -256,30 +273,109 @@ impl LoadSpec {
                 arrival_s,
                 prompt_tokens: self.prompt.sample(&mut rng),
                 output_tokens: self.output.sample(&mut rng),
-                shared_prefix_tokens: 0,
+                ..TrafficRequest::default()
             })
             .collect())
     }
 }
 
-/// Parse a replay trace: one arrival offset (seconds, f64) per line;
-/// blank lines and `#` comments are skipped.
-pub fn parse_trace(text: &str) -> Result<Vec<f64>> {
+/// One parsed line of a replay trace.  Legacy traces carry only the
+/// arrival offset; capture-v1 traces (written by `platinum serve
+/// --capture`) also carry the live request's lengths and optional
+/// deadline, so a production session replays verbatim.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub arrival_s: f64,
+    /// `Some` on capture-v1 lines, `None` on legacy offset-only lines.
+    pub prompt_tokens: Option<usize>,
+    pub output_tokens: Option<usize>,
+    pub deadline_s: Option<f64>,
+}
+
+/// Parse a replay trace.  Two line grammars, mixable with blank lines
+/// and `#` comments:
+///
+/// * legacy: `<arrival_s>` — one f64 seconds-offset per request;
+/// * capture v1: `<arrival_s> <prompt_tokens> <output_tokens>
+///   <deadline_ms|->` — what [`format_capture`] writes.
+pub fn parse_trace_records(text: &str) -> Result<Vec<TraceRecord>> {
     let mut out = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let t: f64 = line
-            .parse()
-            .map_err(|_| anyhow!("trace line {}: {line:?} is not a number", lineno + 1))?;
-        out.push(t);
+        let err = |what: &str| anyhow!("trace line {}: {line:?} {what}", lineno + 1);
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        let arrival_s: f64 =
+            fields[0].parse().map_err(|_| err("is not a number"))?;
+        if !arrival_s.is_finite() || arrival_s < 0.0 {
+            return Err(err("has a negative or non-finite arrival offset"));
+        }
+        let rec = match fields.len() {
+            1 => TraceRecord {
+                arrival_s,
+                prompt_tokens: None,
+                output_tokens: None,
+                deadline_s: None,
+            },
+            4 => {
+                let prompt: usize =
+                    fields[1].parse().map_err(|_| err("has a bad prompt length"))?;
+                let output: usize =
+                    fields[2].parse().map_err(|_| err("has a bad output length"))?;
+                if prompt == 0 || output == 0 {
+                    return Err(err("needs prompt/output lengths >= 1"));
+                }
+                let deadline_s = if fields[3] == "-" {
+                    None
+                } else {
+                    let ms: f64 =
+                        fields[3].parse().map_err(|_| err("has a bad deadline (ms or -)"))?;
+                    if !ms.is_finite() || ms <= 0.0 {
+                        return Err(err("needs a positive deadline (ms) or -"));
+                    }
+                    Some(ms * 1e-3)
+                };
+                TraceRecord {
+                    arrival_s,
+                    prompt_tokens: Some(prompt),
+                    output_tokens: Some(output),
+                    deadline_s,
+                }
+            }
+            _ => return Err(err("has neither 1 field (legacy) nor 4 (capture v1)")),
+        };
+        out.push(rec);
     }
     if out.is_empty() {
         bail!("trace contains no arrival offsets");
     }
     Ok(out)
+}
+
+/// Parse a replay trace down to its arrival offsets (both grammars).
+pub fn parse_trace(text: &str) -> Result<Vec<f64>> {
+    Ok(parse_trace_records(text)?.iter().map(|r| r.arrival_s).collect())
+}
+
+/// Serialize captured live arrivals into the capture-v1 trace grammar.
+/// Arrival offsets round-trip bit-exactly ([`parse_trace_records`]
+/// reads back the same f64: Rust's `Display` is shortest-round-trip),
+/// which is what makes a captured session a byte-reproducible replay.
+pub fn format_capture(records: &[TraceRecord]) -> String {
+    let mut out = String::from("# platinum capture v1\n# arrival_s prompt_tokens output_tokens deadline_ms|-\n");
+    for r in records {
+        let prompt = r.prompt_tokens.unwrap_or(1);
+        let output = r.output_tokens.unwrap_or(1);
+        match r.deadline_s {
+            Some(dl) => {
+                out.push_str(&format!("{} {} {} {}\n", r.arrival_s, prompt, output, dl * 1e3));
+            }
+            None => out.push_str(&format!("{} {} {} -\n", r.arrival_s, prompt, output)),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -371,6 +467,36 @@ mod tests {
     }
 
     #[test]
+    fn capture_records_roundtrip_and_legacy_lines_interleave() {
+        let recs = vec![
+            TraceRecord {
+                arrival_s: 0.0,
+                prompt_tokens: Some(8),
+                output_tokens: Some(4),
+                deadline_s: Some(0.25),
+            },
+            TraceRecord {
+                arrival_s: 1.0625,
+                prompt_tokens: Some(16),
+                output_tokens: Some(2),
+                deadline_s: None,
+            },
+        ];
+        let text = format_capture(&recs);
+        assert!(text.starts_with("# platinum capture v1"));
+        assert_eq!(parse_trace_records(&text).unwrap(), recs, "capture must round-trip");
+        // legacy offset-only lines parse as length-less records
+        let legacy = parse_trace_records("0.1\n0.2\n").unwrap();
+        assert!(legacy.iter().all(|r| r.prompt_tokens.is_none() && r.deadline_s.is_none()));
+        assert_eq!(parse_trace("# c\n0.1\n0.2\n").unwrap(), vec![0.1, 0.2]);
+        // strictness: partial records, bad deadlines, negative offsets
+        assert!(parse_trace_records("0.1 8\n").is_err(), "2-field lines are malformed");
+        assert!(parse_trace_records("0.1 8 4 soon\n").is_err());
+        assert!(parse_trace_records("0.1 0 4 -\n").is_err(), "zero-length prompt");
+        assert!(parse_trace_records("-0.5\n").is_err(), "negative offsets rejected");
+    }
+
+    #[test]
     fn bad_patterns_error() {
         let mut rng = Rng::seed_from(1);
         assert!(ArrivalPattern::Poisson { rate_rps: 0.0 }.arrival_times(4, &mut rng).is_err());
@@ -395,7 +521,7 @@ mod tests {
             arrival_s: 0.0,
             prompt_tokens: 12,
             output_tokens: 5,
-            shared_prefix_tokens: 0,
+            ..TrafficRequest::default()
         };
         assert_eq!(r.reserved_tokens(), 17);
     }

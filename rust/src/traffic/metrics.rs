@@ -158,6 +158,10 @@ pub struct TrafficMetrics {
     pub admitted: u64,
     pub rejected: u64,
     pub completed: u64,
+    /// Requests killed by client cancellation (e.g. a dropped
+    /// connection mid-stream) — serialized only when > 0, so runs
+    /// without cancellations keep the legacy JSON schema byte-for-byte.
+    pub cancelled: u64,
 
     pub prefill_steps: u64,
     pub decode_steps: u64,
@@ -256,16 +260,18 @@ impl TrafficMetrics {
         let series = self.series();
         let makespan = self.makespan_s;
         let rps = |n: u64| if makespan > 0.0 { n as f64 / makespan } else { 0.0 };
+        let mut counts = vec![
+            ("offered", num(self.offered as f64)),
+            ("admitted", num(self.admitted as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("completed", num(self.completed as f64)),
+        ];
+        // conditional so cancellation-free runs keep the legacy schema
+        if self.cancelled > 0 {
+            counts.push(("cancelled", num(self.cancelled as f64)));
+        }
         let mut fields = vec![
-            (
-                "counts",
-                obj(vec![
-                    ("offered", num(self.offered as f64)),
-                    ("admitted", num(self.admitted as f64)),
-                    ("rejected", num(self.rejected as f64)),
-                    ("completed", num(self.completed as f64)),
-                ]),
-            ),
+            ("counts", obj(counts)),
             (
                 "latency_s",
                 obj(vec![
@@ -419,6 +425,18 @@ mod tests {
             text.find("\"series\"").unwrap(),
         );
         assert!(kv < res && res < ser, "{text}");
+    }
+
+    #[test]
+    fn cancelled_count_appears_only_when_nonzero() {
+        let mut m = TrafficMetrics::new();
+        assert!(
+            !m.to_json().to_string().contains("\"cancelled\""),
+            "cancellation-free runs must keep the legacy counts schema"
+        );
+        m.cancelled = 3;
+        let j = m.to_json();
+        assert_eq!(j.get("counts").unwrap().get("cancelled").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

@@ -27,6 +27,12 @@
 //! * [`clock`] — the [`Clock`] abstraction that makes the same control
 //!   loop a deterministic discrete-event simulation ([`VirtualClock`])
 //!   or a live paced run ([`WallClock`]).
+//! * [`source`] — the S18 arrival-source abstraction: the serve loop
+//!   pulls due arrivals from an [`ArrivalSource`] instead of scanning a
+//!   pre-materialized slice, so traces ([`TraceSource`]), the loadgen,
+//!   and live connections ([`PushSource`] fed through [`PushHandle`]s
+//!   by [`crate::server`]) all drive the identical scheduler, with
+//!   cancellation and terminal-outcome reporting riding along.
 //!
 //! The scheduler also hosts the [`crate::fault`] subsystem's responses
 //! (`Scheduler::serve_faults`): deterministic fault injection with
@@ -46,11 +52,16 @@ pub mod clock;
 pub mod loadgen;
 pub mod metrics;
 pub mod scheduler;
+pub mod source;
 
 pub use clock::{Clock, VirtualClock, WallClock};
-pub use loadgen::{parse_trace, with_shared_prefix, ArrivalPattern, LenDist, LoadSpec, TrafficRequest};
+pub use loadgen::{
+    format_capture, parse_trace, parse_trace_records, with_shared_prefix, ArrivalPattern, LenDist,
+    LoadSpec, TraceRecord, TrafficRequest,
+};
 pub use metrics::{Histogram, StepSample, TrafficMetrics};
 pub use scheduler::{
     decode_capacity_tok_s, ExecutorBridge, RunResult, Scheduler, SchedulerConfig, StepExecutor,
     StepKind, StepRecord,
 };
+pub use source::{ArrivalSource, Outcome, PushHandle, PushSource, TraceSource};

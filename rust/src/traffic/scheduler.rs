@@ -41,6 +41,7 @@
 use super::clock::Clock;
 use super::loadgen::TrafficRequest;
 use super::metrics::{StepSample, TrafficMetrics};
+use super::source::{ArrivalSource, Outcome, TraceSource};
 use crate::coordinator::serve::Executor;
 use crate::engine::{Backend, Workload};
 use crate::fault::{FaultInjector, FaultPlan, ResilienceConfig, ResilienceStats};
@@ -49,7 +50,7 @@ use crate::models::BitNetModel;
 use crate::sim::DramModel;
 use crate::util::rng::Rng;
 use anyhow::Result;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// Admission and batching policy.
 #[derive(Debug, Clone, Copy)]
@@ -224,10 +225,10 @@ fn release_inflight(inflight_tokens: &mut usize, reserve: usize, underflows: &mu
 
 /// Re-enter a rejected / timed-out / failed attempt into the arrival
 /// timeline with capped exponential backoff, or exhaust its retry
-/// budget.  Keyed by `(re-arrival time bits, id)` in a `BTreeMap`, so
-/// retried attempts merge back into the timeline in a deterministic
-/// order (times are non-negative, so the bit order is the numeric
-/// order).
+/// budget (returns `false` — the attempt is terminal).  Keyed by
+/// `(re-arrival time bits, id)` in a `BTreeMap`, so retried attempts
+/// merge back into the timeline in a deterministic order (times are
+/// non-negative, so the bit order is the numeric order).
 fn schedule_retry(
     req: TrafficRequest,
     now: f64,
@@ -235,11 +236,11 @@ fn schedule_retry(
     attempts: &mut BTreeMap<u64, u32>,
     retries: &mut BTreeMap<(u64, u64), TrafficRequest>,
     res: &mut ResilienceStats,
-) {
+) -> bool {
     let attempt = attempts.get(&req.id).copied().unwrap_or(0) + 1;
     if attempt > rc.max_retries {
         res.retry_exhausted += 1;
-        return;
+        return false;
     }
     attempts.insert(req.id, attempt);
     let backoff = (rc.retry_base_s * f64::powi(2.0, attempt as i32 - 1)).min(rc.retry_cap_s);
@@ -247,6 +248,14 @@ fn schedule_retry(
     r.arrival_s = now + backoff;
     retries.insert((r.arrival_s.to_bits(), r.id), r);
     res.retries += 1;
+    true
+}
+
+/// Effective deadline of one attempt: the per-request deadline (set by
+/// a live client's `X-Deadline-Ms` header or a captured trace) wins
+/// over the global [`ResilienceConfig::deadline_s`].
+fn effective_deadline(req: &TrafficRequest, rc: &ResilienceConfig) -> Option<f64> {
+    req.deadline_s.or(rc.deadline_s)
 }
 
 /// Price moving `blocks` over the DRAM channel (seconds of timeline
@@ -320,12 +329,48 @@ impl<'a> Scheduler<'a> {
         &self,
         requests: &[TrafficRequest],
         clock: &mut dyn Clock,
+        exec: Option<&mut dyn StepExecutor>,
+        plan: &FaultPlan,
+    ) -> Result<RunResult> {
+        let mut source = TraceSource::new(requests);
+        self.serve_source(&mut source, clock, exec, plan)
+    }
+
+    /// Serve from an external [`ArrivalSource`] — the S18 enabling
+    /// refactor.  The loop *pulls* due arrivals instead of scanning a
+    /// pre-materialized slice, so a live front end ([`crate::server`])
+    /// pushes requests into the timeline as clients connect, a trace
+    /// is just a [`TraceSource`], and the loadgen is one producer among
+    /// several.  On top of the [`Scheduler::serve_faults`] semantics
+    /// this adds:
+    ///
+    /// * **cancellation** — ids delivered through
+    ///   [`ArrivalSource::drain_cancellations`] (a client hanging up
+    ///   mid-stream) are killed wherever they sit, with their KV
+    ///   blocks and token reservation reclaimed, counted in
+    ///   `metrics.cancelled`;
+    /// * **per-request deadlines** — a request carrying `deadline_s`
+    ///   gets the PR 7 timeout-kill/retry treatment even when the
+    ///   global [`ResilienceConfig`] is inert;
+    /// * **terminal reporting** — every offered request ends in exactly
+    ///   one [`ArrivalSource::note_terminal`] call (completed /
+    ///   rejected / shed / exhausted / cancelled), which is how the
+    ///   server routes outcomes back to waiting connections;
+    /// * **idle parking** — with no pending work and no known wake-up
+    ///   time the loop calls [`ArrivalSource::park`] instead of
+    ///   terminating, so a wall-clock daemon idles on the producer's
+    ///   condvar until [`ArrivalSource::finished`] turns true.
+    ///
+    /// Decision-identity: driven by a [`TraceSource`], every branch
+    /// reduces to the legacy loop — pinned byte-identical in
+    /// `tests/traffic_serving.rs`.
+    pub fn serve_source(
+        &self,
+        source: &mut dyn ArrivalSource,
+        clock: &mut dyn Clock,
         mut exec: Option<&mut dyn StepExecutor>,
         plan: &FaultPlan,
     ) -> Result<RunResult> {
-        let mut arrivals: Vec<TrafficRequest> = requests.to_vec();
-        arrivals.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
-
         let mut kv = KvCache::new(&self.cfg.kv, self.model.kv_bytes_per_token())?;
         let mut dram = self.cfg.kv.dram_model.build(self.cfg.kv.dram_bw, self.cfg.kv.freq_hz)?;
         let block_bytes = kv.block_bytes();
@@ -334,8 +379,12 @@ impl<'a> Scheduler<'a> {
         let rc = self.cfg.resilience;
         let fault_on = !plan.is_empty();
         // decides retry/absorb behaviour and whether the `resilience`
-        // metrics section is emitted at drain
-        let resilience_on = fault_on || rc.active();
+        // metrics section is emitted at drain; flips on the moment a
+        // request carrying its own deadline arrives, so per-request
+        // SLOs work without any global resilience config
+        let mut resilience_on = fault_on || rc.active();
+        // true once any admitted request carried `deadline_s`
+        let mut req_deadlines = false;
         let mut res = ResilienceStats::default();
         let mut injector = FaultInjector::new(plan, rc.fault_seed, self.backend.replicas());
 
@@ -355,7 +404,9 @@ impl<'a> Scheduler<'a> {
         let mut attempts: BTreeMap<u64, u32> = BTreeMap::new();
         let mut inflight_tokens = 0usize;
         let mut underflows = 0u64;
-        let mut next = 0usize;
+        // cancellations whose request has not been located yet (it may
+        // still be pending inside the source)
+        let mut cancel_wanted: BTreeSet<u64> = BTreeSet::new();
 
         loop {
             let now = clock.now();
@@ -369,21 +420,30 @@ impl<'a> Scheduler<'a> {
             // `arrival_s`; with no retries pending this is the legacy
             // arrival scan)
             loop {
-                let arrival_due = next < arrivals.len() && arrivals[next].arrival_s <= now;
+                let arrival_t = source.next_arrival_s().filter(|&t| t <= now);
                 let retry_key = retries
                     .first_key_value()
                     .map(|(&k, _)| k)
                     .filter(|&(t_bits, _)| f64::from_bits(t_bits) <= now);
-                let take_arrival = match (arrival_due, retry_key) {
-                    (false, None) => break,
-                    (true, None) => true,
-                    (false, Some(_)) => false,
-                    (true, Some((t_bits, _))) => arrivals[next].arrival_s <= f64::from_bits(t_bits),
+                let take_arrival = match (arrival_t, retry_key) {
+                    (None, None) => break,
+                    (Some(_), None) => true,
+                    (None, Some(_)) => false,
+                    (Some(a), Some((t_bits, _))) => a <= f64::from_bits(t_bits),
                 };
                 let r = if take_arrival {
-                    let r = arrivals[next];
-                    next += 1;
+                    let r = source.pop_due(now).expect("due arrival vanished");
                     metrics.offered += 1; // a retry is NOT a new offer
+                    if r.deadline_s.is_some() {
+                        resilience_on = true;
+                        req_deadlines = true;
+                    }
+                    if cancel_wanted.remove(&r.id) {
+                        // cancelled before it was even admitted
+                        metrics.cancelled += 1;
+                        source.note_terminal(r.id, Outcome::Cancelled);
+                        continue;
+                    }
                     r
                 } else {
                     retries.remove(&retry_key.unwrap()).unwrap()
@@ -391,10 +451,84 @@ impl<'a> Scheduler<'a> {
                 if queue.len() >= self.cfg.max_queue {
                     metrics.rejected += 1;
                     if resilience_on {
-                        schedule_retry(r, now, &rc, &mut attempts, &mut retries, &mut res);
+                        if !schedule_retry(r, now, &rc, &mut attempts, &mut retries, &mut res) {
+                            source.note_terminal(r.id, Outcome::Exhausted);
+                        }
+                    } else {
+                        source.note_terminal(r.id, Outcome::Rejected);
                     }
                 } else {
                     queue.push_back(r);
+                }
+            }
+
+            // (1d) cancellation: a client hanging up kills its request
+            // wherever it sits — queued, awaiting re-prefill, swapped
+            // out, running, or waiting on a retry — reclaiming every
+            // resource it holds, exactly like the deadline kill path
+            // but terminal (no retry).  Ids not found yet stay wanted:
+            // the request may still be pending inside the source.
+            for id in source.drain_cancellations() {
+                cancel_wanted.insert(id);
+            }
+            if !cancel_wanted.is_empty() {
+                let mut killed: Vec<u64> = Vec::new();
+                queue.retain(|r| {
+                    let hit = cancel_wanted.contains(&r.id);
+                    if hit {
+                        killed.push(r.id);
+                    }
+                    !hit
+                });
+                requeued.retain(|s| {
+                    let hit = cancel_wanted.contains(&s.req.id);
+                    if hit {
+                        release_inflight(
+                            &mut inflight_tokens,
+                            s.req.reserved_tokens(),
+                            &mut underflows,
+                        );
+                        killed.push(s.req.id);
+                    }
+                    !hit
+                });
+                swapped.retain(|s| {
+                    let hit = cancel_wanted.contains(&s.req.id);
+                    if hit {
+                        kv.release_swapped(s.req.id);
+                        release_inflight(
+                            &mut inflight_tokens,
+                            s.req.reserved_tokens(),
+                            &mut underflows,
+                        );
+                        killed.push(s.req.id);
+                    }
+                    !hit
+                });
+                running.retain(|s| {
+                    let hit = cancel_wanted.contains(&s.req.id);
+                    if hit {
+                        kv.release(s.req.id);
+                        release_inflight(
+                            &mut inflight_tokens,
+                            s.req.reserved_tokens(),
+                            &mut underflows,
+                        );
+                        killed.push(s.req.id);
+                    }
+                    !hit
+                });
+                retries.retain(|&(_, id), _| {
+                    let hit = cancel_wanted.contains(&id);
+                    if hit {
+                        killed.push(id);
+                    }
+                    !hit
+                });
+                for id in killed {
+                    cancel_wanted.remove(&id);
+                    metrics.cancelled += 1;
+                    source.note_terminal(id, Outcome::Cancelled);
                 }
             }
 
@@ -403,17 +537,20 @@ impl<'a> Scheduler<'a> {
             // KV blocks (live or swapped) and the in-flight token
             // reservation — is reclaimed before the killed attempt is
             // handed to the retry path
-            if let Some(dl) = rc.deadline_s {
+            if rc.deadline_s.is_some() || req_deadlines {
+                let overdue = |r: &TrafficRequest| {
+                    effective_deadline(r, &rc).is_some_and(|dl| now - r.arrival_s > dl)
+                };
                 let mut killed: Vec<TrafficRequest> = Vec::new();
                 queue.retain(|r| {
-                    let dead = now - r.arrival_s > dl;
+                    let dead = overdue(r);
                     if dead {
                         killed.push(*r);
                     }
                     !dead
                 });
                 requeued.retain(|s| {
-                    let dead = now - s.req.arrival_s > dl;
+                    let dead = overdue(&s.req);
                     if dead {
                         // recompute-preempted: blocks already dropped,
                         // only the token reservation is held
@@ -427,7 +564,7 @@ impl<'a> Scheduler<'a> {
                     !dead
                 });
                 swapped.retain(|s| {
-                    let dead = now - s.req.arrival_s > dl;
+                    let dead = overdue(&s.req);
                     if dead {
                         kv.release_swapped(s.req.id);
                         release_inflight(
@@ -440,7 +577,7 @@ impl<'a> Scheduler<'a> {
                     !dead
                 });
                 running.retain(|s| {
-                    let dead = now - s.req.arrival_s > dl;
+                    let dead = overdue(&s.req);
                     if dead {
                         kv.release(s.req.id);
                         release_inflight(
@@ -454,7 +591,9 @@ impl<'a> Scheduler<'a> {
                 });
                 for r in killed {
                     res.timeouts += 1;
-                    schedule_retry(r, now, &rc, &mut attempts, &mut retries, &mut res);
+                    if !schedule_retry(r, now, &rc, &mut attempts, &mut retries, &mut res) {
+                        source.note_terminal(r.id, Outcome::Exhausted);
+                    }
                 }
             }
 
@@ -463,15 +602,18 @@ impl<'a> Scheduler<'a> {
             // dropped outright — shedding to the retry path would
             // defeat the point of shedding load
             if rc.brownout_queue > 0 && queue.len() >= rc.brownout_queue {
-                if let Some(dl) = rc.deadline_s {
-                    queue.retain(|r| {
+                queue.retain(|r| match effective_deadline(r, &rc) {
+                    Some(dl) => {
                         let keep = r.arrival_s + dl - now >= rc.brownout_slack_s;
                         if !keep {
                             res.shed += 1;
+                            source.note_terminal(r.id, Outcome::Shed);
                         }
                         keep
-                    });
-                }
+                    }
+                    // no deadline, no slack to judge by: never shed
+                    None => true,
+                });
             }
 
             // (2a) resume swapped-out sequences while blocks allow —
@@ -575,8 +717,11 @@ impl<'a> Scheduler<'a> {
                         running.push(seq);
                     } else {
                         // idle: jump to the next timeline event — a
-                        // fresh arrival or a retried attempt — or drain
-                        let arrival_t = (next < arrivals.len()).then(|| arrivals[next].arrival_s);
+                        // fresh arrival or a retried attempt — or, when
+                        // no wake-up time is known, park on the source
+                        // (a live daemon between requests) until it
+                        // either produces work or finishes
+                        let arrival_t = source.next_arrival_s();
                         let retry_t = retries
                             .first_key_value()
                             .map(|(&(t_bits, _), _)| f64::from_bits(t_bits));
@@ -588,7 +733,14 @@ impl<'a> Scheduler<'a> {
                             clock.wait_until(t);
                             continue;
                         }
-                        break; // drained
+                        if source.finished() {
+                            // drained (a leftover cancel for an id that
+                            // already reached a terminal state is a
+                            // no-op, not a reason to wait)
+                            break;
+                        }
+                        source.park();
+                        continue;
                     }
                 }
                 // (3b) block pressure: each decode token may need a
@@ -709,7 +861,9 @@ impl<'a> Scheduler<'a> {
                 for s in failed {
                     kv.release(s.req.id);
                     release_inflight(&mut inflight_tokens, s.req.reserved_tokens(), &mut underflows);
-                    schedule_retry(s.req, t_end, &rc, &mut attempts, &mut retries, &mut res);
+                    if !schedule_retry(s.req, t_end, &rc, &mut attempts, &mut retries, &mut res) {
+                        source.note_terminal(s.req.id, Outcome::Exhausted);
+                    }
                 }
             } else {
                 match kind {
@@ -740,6 +894,7 @@ impl<'a> Scheduler<'a> {
                                     &mut underflows,
                                 );
                                 kv.release(s.req.id);
+                                source.note_terminal(s.req.id, Outcome::Completed);
                             } else {
                                 running.push(s);
                             }
@@ -768,6 +923,7 @@ impl<'a> Scheduler<'a> {
                                     &mut underflows,
                                 );
                                 kv.release(s.req.id);
+                                source.note_terminal(s.req.id, Outcome::Completed);
                                 false
                             } else {
                                 true
@@ -912,7 +1068,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: 8,
                 output_tokens: 10,
-                shared_prefix_tokens: 0,
+                ..TrafficRequest::default()
             })
             .collect();
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
@@ -935,7 +1091,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: 4,
                 output_tokens: 8,
-                shared_prefix_tokens: 0,
+                ..TrafficRequest::default()
             })
             .collect();
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
@@ -962,7 +1118,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: 20,
                 output_tokens: 20,
-                shared_prefix_tokens: 0,
+                ..TrafficRequest::default()
             })
             .collect();
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
@@ -988,7 +1144,7 @@ mod tests {
             arrival_s: 0.0,
             prompt_tokens: 64,
             output_tokens: 64,
-            shared_prefix_tokens: 0,
+            ..TrafficRequest::default()
         }];
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
         assert_eq!(r.metrics.completed, 1);
@@ -1029,14 +1185,14 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: 4,
                 output_tokens: 2,
-                shared_prefix_tokens: 0,
+                ..TrafficRequest::default()
             },
             TrafficRequest {
                 id: 1,
                 arrival_s: 100.0,
                 prompt_tokens: 4,
                 output_tokens: 2,
-                shared_prefix_tokens: 0,
+                ..TrafficRequest::default()
             },
         ];
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
@@ -1055,7 +1211,7 @@ mod tests {
                     arrival_s: 0.0,
                     prompt_tokens: 4,
                     output_tokens: 4,
-                    shared_prefix_tokens: 0,
+                    ..TrafficRequest::default()
                 })
                 .collect();
             with_shared_prefix(&mut reqs, shared);
@@ -1110,7 +1266,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: 8,
                 output_tokens: 8,
-                shared_prefix_tokens: 0,
+                ..TrafficRequest::default()
             })
             .collect();
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
@@ -1140,7 +1296,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: 8,
                 output_tokens: 8,
-                shared_prefix_tokens: 0,
+                ..TrafficRequest::default()
             })
             .collect();
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
@@ -1181,7 +1337,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: 7,
                 output_tokens: 2,
-                shared_prefix_tokens: 0,
+                ..TrafficRequest::default()
             })
             .collect();
         let r = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
@@ -1203,7 +1359,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: prompt,
                 output_tokens: output,
-                shared_prefix_tokens: 0,
+                ..TrafficRequest::default()
             })
             .collect()
     }
@@ -1407,5 +1563,41 @@ mod tests {
         assert!(res.retries >= 1);
         assert_eq!(m.completed, m.offered, "the failed step's sequences recovered");
         assert!(!m.kv.leaked(), "absorbed failures must not leak blocks");
+    }
+
+    #[test]
+    fn per_request_deadlines_bite_without_global_config() {
+        let be = PlatinumBackend::ternary();
+        // resilience config left fully inert: the deadline rides on the
+        // requests themselves (the live server's X-Deadline-Ms path)
+        let cfg =
+            SchedulerConfig { max_batch: 2, step_overhead_s: 0.001, ..SchedulerConfig::default() };
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let reqs: Vec<TrafficRequest> = (0..8)
+            .map(|i| TrafficRequest {
+                id: i,
+                arrival_s: 0.0,
+                prompt_tokens: 8,
+                output_tokens: 6,
+                // odd ids can't possibly finish 6 tokens in 4 ms over a
+                // 2-slot batch at ~1 ms/step; even ids are unconstrained
+                deadline_s: if i % 2 == 1 { Some(0.004) } else { None },
+                ..TrafficRequest::default()
+            })
+            .collect();
+        let run = || sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+        let r = run();
+        let m = &r.metrics;
+        let res = m.resilience.as_ref().expect("request deadlines must emit the section");
+        assert!(res.timeouts > 0, "tight per-request deadlines must kill");
+        assert_eq!(res.retry_exhausted, res.timeouts, "no retry budget ⇒ terminal kills");
+        assert!(m.completed >= 4, "requests without deadlines must be untouched");
+        assert_eq!(m.completed + res.retry_exhausted, m.offered);
+        assert!(!m.kv.leaked(), "deadline kills must reclaim blocks and reservations");
+        assert_eq!(
+            r.metrics.to_json().to_string(),
+            run().metrics.to_json().to_string(),
+            "per-request deadlines keep the determinism contract"
+        );
     }
 }

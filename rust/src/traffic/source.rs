@@ -1,0 +1,303 @@
+//! Arrival sources: the scheduler's pluggable event feed (S18).
+//!
+//! PR 5's scheduler consumed a pre-materialized `&[TrafficRequest]`
+//! slice — fine for benchmarks, useless for a live server, and the
+//! ROADMAP names exactly this refactor as the unlock for both the
+//! daemon and closed-loop clients.  [`ArrivalSource`] inverts the
+//! dependency: the serve loop *pulls* due arrivals from a source, so
+//! the materialized trace ([`TraceSource`]) becomes one producer among
+//! several and a live front end pushes requests through a cloneable
+//! [`PushHandle`] as clients connect ([`PushSource`]).  Sources can
+//! also deliver mid-flight cancellations (a client hanging up) and are
+//! told every request's terminal [`Outcome`], which is how the server
+//! routes completions back to waiting connections.
+//!
+//! Determinism: the scheduler observes only the (time, id, request)
+//! stream a source presents, so two sources presenting identical
+//! streams drive byte-identical runs — pinned by
+//! `tests/traffic_serving.rs` (pushed-arrival mode vs. the
+//! pre-materialized path).
+
+use super::loadgen::TrafficRequest;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Terminal state of one offered request, reported back to the source
+/// (a live server routes these to the waiting connection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Generated every output token.
+    Completed,
+    /// Dropped at admission (queue full, no retry budget configured).
+    Rejected,
+    /// Brownout-shed under overload.
+    Shed,
+    /// Killed (deadline miss or step failure) with the retry budget
+    /// exhausted.
+    Exhausted,
+    /// Cancelled by the client mid-flight (e.g. disconnect).
+    Cancelled,
+}
+
+impl Outcome {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Outcome::Completed => "completed",
+            Outcome::Rejected => "rejected",
+            Outcome::Shed => "shed",
+            Outcome::Exhausted => "exhausted",
+            Outcome::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// An external feed of arrivals driving
+/// [`super::Scheduler::serve_source`].
+///
+/// The contract the serve loop relies on:
+///
+/// * [`next_arrival_s`](ArrivalSource::next_arrival_s) /
+///   [`pop_due`](ArrivalSource::pop_due) present pending arrivals in
+///   nondecreasing `(arrival_s, id)` order;
+/// * [`finished`](ArrivalSource::finished) means *no arrival will ever
+///   come again* — distinct from "momentarily empty", which is what a
+///   live source looks like between requests;
+/// * [`park`](ArrivalSource::park) may block briefly while empty and
+///   unfinished, so a wall-clock serve loop idles on the producer's
+///   condvar instead of spinning.
+pub trait ArrivalSource {
+    /// Earliest pending arrival time, if one is currently known.
+    fn next_arrival_s(&mut self) -> Option<f64>;
+
+    /// Pop the earliest pending arrival if it is due at `now`.
+    fn pop_due(&mut self, now: f64) -> Option<TrafficRequest>;
+
+    /// `true` once the source is closed *and* drained.
+    fn finished(&mut self) -> bool;
+
+    /// Block briefly until new arrivals may exist.  Trace sources never
+    /// need to (pending work always names a wake-up time).
+    fn park(&mut self) {}
+
+    /// Drain cancellation requests issued since the last call.
+    fn drain_cancellations(&mut self) -> Vec<u64> {
+        Vec::new()
+    }
+
+    /// Report a request's terminal state.  Called exactly once per
+    /// offered request (and once per cancelled-before-offer id).
+    fn note_terminal(&mut self, _id: u64, _outcome: Outcome) {}
+}
+
+/// The legacy pre-materialized trace as a source: sorts once, then
+/// replays — [`super::Scheduler::serve_faults`] wraps every request
+/// slice in one of these, so the old entry points are byte-identical
+/// frontends over the new loop.
+pub struct TraceSource {
+    arrivals: Vec<TrafficRequest>,
+    next: usize,
+}
+
+impl TraceSource {
+    pub fn new(requests: &[TrafficRequest]) -> TraceSource {
+        let mut arrivals = requests.to_vec();
+        arrivals.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        TraceSource { arrivals, next: 0 }
+    }
+}
+
+impl ArrivalSource for TraceSource {
+    fn next_arrival_s(&mut self) -> Option<f64> {
+        self.arrivals.get(self.next).map(|r| r.arrival_s)
+    }
+
+    fn pop_due(&mut self, now: f64) -> Option<TrafficRequest> {
+        let r = self.arrivals.get(self.next)?;
+        if r.arrival_s <= now {
+            self.next += 1;
+            Some(*r)
+        } else {
+            None
+        }
+    }
+
+    fn finished(&mut self) -> bool {
+        self.next >= self.arrivals.len()
+    }
+}
+
+/// Shared state between a [`PushSource`] (consumer: the serve loop) and
+/// its [`PushHandle`]s (producers: connection threads).
+struct PushState {
+    /// Pending arrivals keyed `(arrival_s bits, id)` — times are
+    /// non-negative, so the bit order is the numeric order and pops are
+    /// deterministic even when producers race.
+    pending: BTreeMap<(u64, u64), TrafficRequest>,
+    cancels: Vec<u64>,
+    closed: bool,
+}
+
+/// Producer handle: cheap to clone, safe to use from any thread.
+#[derive(Clone)]
+pub struct PushHandle {
+    inner: Arc<(Mutex<PushState>, Condvar)>,
+}
+
+impl PushHandle {
+    /// Enqueue one arrival (its `arrival_s` is the timeline position
+    /// the scheduler will admit it at).
+    pub fn push(&self, r: TrafficRequest) {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        g.pending.insert((r.arrival_s.to_bits(), r.id), r);
+        cv.notify_all();
+    }
+
+    /// Cancel a previously pushed request wherever it currently sits
+    /// (queued, running, swapped, or awaiting retry).
+    pub fn cancel(&self, id: u64) {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        g.cancels.push(id);
+        cv.notify_all();
+    }
+
+    /// No further pushes will come: once pending work drains, the serve
+    /// loop returns.
+    pub fn close(&self) {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        g.closed = true;
+        cv.notify_all();
+    }
+}
+
+/// A live, thread-safe arrival source fed through [`PushHandle`]s —
+/// what `platinum serve` drives the scheduler with.
+pub struct PushSource {
+    inner: Arc<(Mutex<PushState>, Condvar)>,
+    on_terminal: Option<Box<dyn FnMut(u64, Outcome) + Send>>,
+}
+
+impl PushSource {
+    pub fn new() -> (PushSource, PushHandle) {
+        let inner = Arc::new((
+            Mutex::new(PushState { pending: BTreeMap::new(), cancels: Vec::new(), closed: false }),
+            Condvar::new(),
+        ));
+        (PushSource { inner: inner.clone(), on_terminal: None }, PushHandle { inner })
+    }
+
+    /// Install the terminal-outcome observer (the server's router from
+    /// scheduler events back to connection threads).
+    pub fn set_observer(&mut self, f: Box<dyn FnMut(u64, Outcome) + Send>) {
+        self.on_terminal = Some(f);
+    }
+}
+
+impl ArrivalSource for PushSource {
+    fn next_arrival_s(&mut self) -> Option<f64> {
+        let g = self.inner.0.lock().unwrap();
+        g.pending.keys().next().map(|&(bits, _)| f64::from_bits(bits))
+    }
+
+    fn pop_due(&mut self, now: f64) -> Option<TrafficRequest> {
+        let mut g = self.inner.0.lock().unwrap();
+        let &key = g.pending.keys().next()?;
+        if f64::from_bits(key.0) <= now {
+            g.pending.remove(&key)
+        } else {
+            None
+        }
+    }
+
+    fn finished(&mut self) -> bool {
+        let g = self.inner.0.lock().unwrap();
+        g.closed && g.pending.is_empty() && g.cancels.is_empty()
+    }
+
+    fn park(&mut self) {
+        let (m, cv) = &*self.inner;
+        let g = m.lock().unwrap();
+        if g.pending.is_empty() && g.cancels.is_empty() && !g.closed {
+            // bounded wait: re-check even if a notify is lost
+            let _ = cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
+        }
+    }
+
+    fn drain_cancellations(&mut self) -> Vec<u64> {
+        let mut g = self.inner.0.lock().unwrap();
+        std::mem::take(&mut g.cancels)
+    }
+
+    fn note_terminal(&mut self, id: u64, outcome: Outcome) {
+        if let Some(f) = self.on_terminal.as_mut() {
+            f(id, outcome);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival_s: f64) -> TrafficRequest {
+        TrafficRequest { id, arrival_s, prompt_tokens: 4, output_tokens: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn trace_source_replays_in_time_order() {
+        let mut s = TraceSource::new(&[req(1, 0.5), req(0, 0.1)]);
+        assert!(!s.finished());
+        assert_eq!(s.next_arrival_s(), Some(0.1));
+        assert!(s.pop_due(0.0).is_none(), "nothing due yet");
+        assert_eq!(s.pop_due(0.2).unwrap().id, 0);
+        assert_eq!(s.pop_due(1.0).unwrap().id, 1);
+        assert!(s.finished());
+        assert_eq!(s.next_arrival_s(), None);
+    }
+
+    #[test]
+    fn push_source_orders_by_time_then_id_and_finishes_on_close() {
+        let (mut s, h) = PushSource::new();
+        h.push(req(7, 0.2));
+        h.push(req(3, 0.2));
+        h.push(req(1, 0.1));
+        assert_eq!(s.next_arrival_s(), Some(0.1));
+        assert_eq!(s.pop_due(1.0).unwrap().id, 1);
+        assert_eq!(s.pop_due(1.0).unwrap().id, 3, "id breaks the time tie");
+        assert_eq!(s.pop_due(1.0).unwrap().id, 7);
+        assert!(!s.finished(), "empty but not closed: a live lull, not the end");
+        h.close();
+        assert!(s.finished());
+    }
+
+    #[test]
+    fn cancellations_drain_once_and_park_returns() {
+        let (mut s, h) = PushSource::new();
+        h.cancel(9);
+        h.cancel(11);
+        assert_eq!(s.drain_cancellations(), vec![9, 11]);
+        assert!(s.drain_cancellations().is_empty());
+        h.push(req(0, 0.0));
+        s.park(); // pending work: must return immediately
+        h.close();
+        s.park(); // closed: must return immediately
+    }
+
+    #[test]
+    fn observer_sees_terminals() {
+        let (mut s, _h) = PushSource::new();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let sink = seen.clone();
+        s.set_observer(Box::new(move |id, o| sink.lock().unwrap().push((id, o))));
+        s.note_terminal(4, Outcome::Completed);
+        s.note_terminal(5, Outcome::Cancelled);
+        assert_eq!(
+            *seen.lock().unwrap(),
+            vec![(4, Outcome::Completed), (5, Outcome::Cancelled)]
+        );
+        assert_eq!(Outcome::Exhausted.label(), "exhausted");
+    }
+}

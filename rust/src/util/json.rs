@@ -144,6 +144,10 @@ pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+pub fn b(v: bool) -> Json {
+    Json::Bool(v)
+}
+
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }

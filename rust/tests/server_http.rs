@@ -1,0 +1,148 @@
+//! Socket-free tests for the `platinum serve` wire layer (S18).
+//!
+//! Everything here drives [`platinum::server::http`] on raw byte
+//! slices — no `TcpListener`, no threads — so the parser's handling of
+//! malformed input, size limits, and arbitrary read-boundary splits is
+//! pinned without any timing sensitivity.  The live socket path is
+//! exercised end-to-end by CI's `daemon-smoke` job
+//! (`python/tools/daemon_smoke.py`).
+
+use platinum::server::http::{
+    chunk, last_chunk, response, streaming_head, RequestParser, MAX_BODY_BYTES, MAX_HEAD_BYTES,
+};
+
+fn parse_one(raw: &[u8]) -> anyhow::Result<Option<platinum::server::http::HttpRequest>> {
+    let mut p = RequestParser::new();
+    p.feed(raw);
+    p.poll()
+}
+
+#[test]
+fn malformed_request_lines_are_rejected_not_hung() {
+    for raw in [
+        &b"GET\r\n\r\n"[..],                             // too few parts
+        b"GET /x HTTP/1.1 extra\r\n\r\n",                // too many parts
+        b" /x HTTP/1.1\r\n\r\n",                         // empty method
+        b"GET  HTTP/1.1\r\n\r\n",                        // empty path
+        b"GET /x SPDY/3\r\n\r\n",                        // wrong protocol
+        b"GET /x HTTP/2\r\n\r\n",                        // wrong major version
+        b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n",     // header without ':'
+        b"GET /x HTTP/1.1\r\nBad Name: v\r\n\r\n",       // space in header name
+        b"GET /x HTTP/1.1\r\n: value\r\n\r\n",           // empty header name
+        b"GET /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n", // non-numeric length
+        b"GET /x HTTP/1.1\r\nContent-Length: -4\r\n\r\n",  // negative length
+        b"\xff\xfe /x HTTP/1.1\r\n\r\n",                 // non-UTF-8 head
+    ] {
+        assert!(
+            parse_one(raw).is_err(),
+            "must 400, not hang or accept: {:?}",
+            String::from_utf8_lossy(raw)
+        );
+    }
+}
+
+#[test]
+fn oversized_heads_and_bodies_are_bounded() {
+    // a head that never terminates must error once past the cap, not
+    // buffer forever
+    let mut p = RequestParser::new();
+    p.feed(b"GET /x HTTP/1.1\r\nX-Junk: ");
+    p.feed(&vec![b'a'; MAX_HEAD_BYTES]);
+    assert!(p.poll().is_err(), "unterminated head past the cap must error");
+
+    // a terminated head over the cap is equally rejected
+    let mut raw = b"GET /x HTTP/1.1\r\nX-Junk: ".to_vec();
+    raw.extend_from_slice(&vec![b'a'; MAX_HEAD_BYTES]);
+    raw.extend_from_slice(b"\r\n\r\n");
+    assert!(parse_one(&raw).is_err());
+
+    // a declared body over the cap is rejected up front — before any
+    // body bytes arrive
+    let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+    assert!(parse_one(raw.as_bytes()).is_err());
+
+    // exactly at the cap is fine
+    let mut raw =
+        format!("POST /x HTTP/1.1\r\nContent-Length: {MAX_BODY_BYTES}\r\n\r\n").into_bytes();
+    raw.extend_from_slice(&vec![b'b'; MAX_BODY_BYTES]);
+    let req = parse_one(&raw).unwrap().expect("body at the cap parses");
+    assert_eq!(req.body.len(), MAX_BODY_BYTES);
+}
+
+#[test]
+fn partial_reads_across_every_boundary_reassemble() {
+    // split a full POST (head + body) at every byte offset, feeding the
+    // two halves separately; poll() must return need-more then the
+    // complete request, identical for all cuts
+    let raw = b"POST /v1/generate HTTP/1.1\r\nHost: h\r\nContent-Length: 17\r\n\r\n{\"prompt\": \"abc\"}";
+    let whole = parse_one(raw).unwrap().expect("whole request parses");
+    for cut in 1..raw.len() {
+        let mut p = RequestParser::new();
+        p.feed(&raw[..cut]);
+        let first = p.poll().unwrap_or_else(|e| panic!("cut {cut}: spurious error {e}"));
+        p.feed(&raw[cut..]);
+        let req = match first {
+            Some(r) => r,
+            None => p.poll().unwrap().unwrap_or_else(|| panic!("cut {cut}: incomplete")),
+        };
+        assert_eq!(req, whole, "cut at {cut} changed the parse");
+    }
+}
+
+#[test]
+fn byte_at_a_time_delivery_parses() {
+    let raw = b"GET /metrics HTTP/1.1\r\nAccept: application/json\r\n\r\n";
+    let mut p = RequestParser::new();
+    for (i, byte) in raw.iter().enumerate() {
+        p.feed(&[*byte]);
+        let got = p.poll().unwrap();
+        if i + 1 < raw.len() {
+            assert!(got.is_none(), "complete before byte {i}?");
+        } else {
+            let req = got.expect("complete at final byte");
+            assert_eq!(req.path, "/metrics");
+        }
+    }
+}
+
+#[test]
+fn pipelined_requests_pop_one_at_a_time() {
+    let mut p = RequestParser::new();
+    p.feed(b"GET /health HTTP/1.1\r\n\r\nPOST /v1/generate HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi");
+    let a = p.poll().unwrap().expect("first request");
+    assert_eq!((a.method.as_str(), a.path.as_str()), ("GET", "/health"));
+    let b = p.poll().unwrap().expect("second request");
+    assert_eq!((b.method.as_str(), b.path.as_str()), ("POST", "/v1/generate"));
+    assert_eq!(b.body, b"hi");
+    assert!(p.poll().unwrap().is_none(), "buffer drained");
+}
+
+#[test]
+fn header_lookup_is_case_insensitive_and_first_wins() {
+    let req = parse_one(b"GET /x HTTP/1.1\r\nX-Deadline-Ms: 250\r\nx-deadline-ms: 900\r\n\r\n")
+        .unwrap()
+        .unwrap();
+    assert_eq!(req.header("X-DEADLINE-MS"), Some("250"));
+    assert_eq!(req.header("x-deadline-ms"), Some("250"));
+    assert_eq!(req.header("absent"), None);
+}
+
+#[test]
+fn response_and_stream_framing_golden_bytes() {
+    let r = String::from_utf8(response(404, "Not Found", "application/json", b"{}")).unwrap();
+    assert!(r.starts_with("HTTP/1.1 404 Not Found\r\n"), "{r}");
+    assert!(r.contains("Content-Length: 2\r\n"));
+    assert!(r.contains("Connection: close\r\n"));
+    assert!(r.ends_with("\r\n\r\n{}"));
+
+    let head = String::from_utf8(streaming_head(200, "OK", "application/x-ndjson")).unwrap();
+    assert!(head.contains("Transfer-Encoding: chunked\r\n"));
+    assert!(!head.contains("Content-Length"), "chunked and length are exclusive");
+
+    // a full chunked body, decoded by hand: two chunks + terminator
+    let mut wire = chunk(b"{\"token\":0}\n");
+    wire.extend_from_slice(&chunk(b"{\"done\":true}\n"));
+    wire.extend_from_slice(last_chunk());
+    let text = String::from_utf8(wire).unwrap();
+    assert_eq!(text, "c\r\n{\"token\":0}\n\r\ne\r\n{\"done\":true}\n\r\n0\r\n\r\n");
+}

@@ -22,7 +22,8 @@ use platinum::models::BitNetModel;
 use platinum::runtime::pool::Pool;
 use platinum::traffic::{
     decode_capacity_tok_s, with_shared_prefix, ArrivalPattern, ExecutorBridge, LenDist, LoadSpec,
-    Scheduler, SchedulerConfig, StepRecord, TrafficRequest, VirtualClock,
+    Outcome, PushSource, Scheduler, SchedulerConfig, StepKind, StepRecord, TrafficRequest,
+    VirtualClock,
 };
 use platinum::util::json::Json;
 use platinum::util::rng::Rng;
@@ -209,7 +210,7 @@ fn sharded_and_measured_backends_serve_through_the_same_scheduler() {
             arrival_s: 0.0,
             prompt_tokens: 4,
             output_tokens: 3,
-            shared_prefix_tokens: 0,
+            ..TrafficRequest::default()
         })
         .collect();
     let cfg = SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() };
@@ -414,7 +415,7 @@ fn sharded_failover_redistributes_and_loses_no_sequences() {
             arrival_s: i as f64 * 1e-4,
             prompt_tokens: 8,
             output_tokens: 6,
-            shared_prefix_tokens: 0,
+            ..TrafficRequest::default()
         })
         .collect();
     let cfg = SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() };
@@ -454,6 +455,91 @@ fn clean_runs_emit_neither_resilience_nor_leak_keys() {
     let doc = Json::parse(&r.metrics.to_json().to_string()).unwrap();
     assert!(doc.get("resilience").is_none(), "inert config must not grow the schema");
     assert!(doc.get("kv").unwrap().get("leaks").is_none(), "clean drains leak nothing");
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 8: arrival sources — the `platinum serve` enabling refactor
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pushed_arrivals_are_decision_identical_to_prematerialized() {
+    // the daemon's PushSource and the legacy slice path must drive the
+    // scheduler to the same decisions, step for step and byte for byte —
+    // the determinism contract that lets a captured live session replay
+    // exactly through serve-bench
+    let be = PlatinumBackend::ternary();
+    let cfg = SchedulerConfig { max_batch: 8, ..SchedulerConfig::default() };
+    let sched = Scheduler::new(&be, TINY, cfg);
+    let reqs = poisson_spec(200.0, 48, 42).generate().unwrap();
+    let base = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+    let (mut source, handle) = PushSource::new();
+    for r in &reqs {
+        handle.push(*r);
+    }
+    handle.close();
+    let pushed = sched
+        .serve_source(&mut source, &mut VirtualClock::new(), None, &FaultPlan::default())
+        .unwrap();
+    assert_eq!(base.steps, pushed.steps, "pushed arrivals changed scheduler decisions");
+    assert_eq!(
+        base.metrics.to_json().to_string(),
+        pushed.metrics.to_json().to_string(),
+        "pushed arrivals changed the metrics JSON"
+    );
+}
+
+#[test]
+fn client_cancellation_releases_kv_and_counts() {
+    // a client hanging up mid-stream cancels through the push handle:
+    // the sequence is killed wherever it sits, its KV blocks and token
+    // reservation come back, the run counts it, and the source observer
+    // sees exactly one Cancelled terminal
+    let be = PlatinumBackend::ternary();
+    let cfg = SchedulerConfig { max_batch: 8, ..SchedulerConfig::default() };
+    let sched = Scheduler::new(&be, TINY, cfg);
+    let (mut source, handle) = PushSource::new();
+    let outcomes = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    let sink = outcomes.clone();
+    source.set_observer(Box::new(move |id, o| sink.lock().unwrap().push((id, o))));
+    for i in 0..8 {
+        handle.push(TrafficRequest {
+            id: i,
+            arrival_s: 0.0,
+            prompt_tokens: 8,
+            output_tokens: 6,
+            ..TrafficRequest::default()
+        });
+    }
+    handle.close();
+    let canceller = handle.clone();
+    let mut cancelled_once = false;
+    let mut exec = |s: &StepRecord, _w: &Workload| -> anyhow::Result<()> {
+        if s.kind == StepKind::Decode && !cancelled_once {
+            cancelled_once = true;
+            canceller.cancel(5); // disconnect mid-generation
+        }
+        Ok(())
+    };
+    let r = sched
+        .serve_source(&mut source, &mut VirtualClock::new(), Some(&mut exec), &FaultPlan::default())
+        .unwrap();
+    let m = &r.metrics;
+    assert_eq!(m.offered, 8);
+    assert_eq!(m.cancelled, 1, "the hang-up must be counted");
+    assert_eq!(m.completed, 7, "the other sequences must finish");
+    assert!(!m.kv.leaked(), "cancellation must return every block");
+    assert_eq!(m.kv.allocated_final, 0);
+    let doc = Json::parse(&m.to_json().to_string()).unwrap();
+    assert_eq!(
+        doc.get("counts").unwrap().get("cancelled").unwrap().as_f64(),
+        Some(1.0),
+        "cancelled count must serialize (and only when nonzero)"
+    );
+    let seen = outcomes.lock().unwrap();
+    assert_eq!(seen.len(), 8, "exactly one terminal per offered request");
+    assert_eq!(seen.iter().filter(|(_, o)| *o == Outcome::Cancelled).count(), 1);
+    assert_eq!(seen.iter().filter(|(_, o)| *o == Outcome::Completed).count(), 7);
+    assert!(seen.contains(&(5, Outcome::Cancelled)));
 }
 
 #[test]
