@@ -10,9 +10,10 @@ What it pins, in order:
 
 1. the daemon comes up and answers `/health`;
 2. 32 concurrent `POST /v1/generate` requests (half carrying an
-   `X-Deadline-Ms` header) each stream chunked ndjson token lines
-   ending in a `{"done":true,"outcome":"completed"}` record whose
-   token count matches the streamed lines;
+   `X-Deadline-Ms` header, a quarter a shared prompt prefix) each
+   stream chunked ndjson token lines ending in a
+   `{"done":true,"outcome":"completed"}` record whose token count
+   matches the streamed lines;
 3. `/metrics` parses, counts all 32 completions, and reports a finite
    positive p99 TTFT;
 4. SIGTERM drains and the process exits 0, writing the capture trace
@@ -38,6 +39,7 @@ import time
 REQUESTS = 32
 PROMPT_TOKENS = 16
 OUTPUT_TOKENS = 8
+SHARED_PREFIX_TOKENS = 8  # sent by every 4th request (idx % 4 == 0)
 
 
 def free_port():
@@ -70,7 +72,10 @@ def one_generate(port, idx, results):
         headers = {"Content-Type": "application/json"}
         if idx % 2 == 0:
             headers["X-Deadline-Ms"] = "10000"
-        body = json.dumps({"prompt_tokens": PROMPT_TOKENS, "output_tokens": OUTPUT_TOKENS})
+        req = {"prompt_tokens": PROMPT_TOKENS, "output_tokens": OUTPUT_TOKENS}
+        if idx % 4 == 0:
+            req["shared_prefix_tokens"] = SHARED_PREFIX_TOKENS
+        body = json.dumps(req)
         conn.request("POST", "/v1/generate", body=body, headers=headers)
         resp = conn.getresponse()
         if resp.status != 200:
@@ -174,14 +179,19 @@ def main():
     assert final["serve"]["counts"]["completed"] == REQUESTS, final["serve"]["counts"]
 
     records = [
-        l for l in open(capture).read().splitlines()
+        l.split() for l in open(capture).read().splitlines()
         if l.strip() and not l.startswith("#")
     ]
     assert len(records) == REQUESTS, "capture has %d records, want %d" % (len(records), REQUESTS)
-    with_deadline = [r for r in records if not r.endswith(" -")]
+    # capture-v1 line: arrival_s prompt output deadline_ms|- shared_prefix
+    assert all(len(r) == 5 for r in records), records
+    with_deadline = [r for r in records if r[3] != "-"]
     assert len(with_deadline) == REQUESTS // 2, records
-    print("daemon-smoke: capture holds %d records (%d with deadlines)"
-          % (len(records), len(with_deadline)))
+    with_shared = [r for r in records if r[4] == str(SHARED_PREFIX_TOKENS)]
+    assert len(with_shared) == REQUESTS // 4, records
+    assert all(r[4] in ("0", str(SHARED_PREFIX_TOKENS)) for r in records), records
+    print("daemon-smoke: capture holds %d records (%d with deadlines, %d with shared prefixes)"
+          % (len(records), len(with_deadline), len(with_shared)))
 
     # replay determinism: byte-identical across runs and pool sizes
     a = run_replay(binary, capture, threads=1)

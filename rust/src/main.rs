@@ -593,7 +593,8 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
     let model = model_by_name(args.get_str("model", "700m"))?;
     let rate = args.get_f64("rate", 50.0)?;
     // a capture-v1 trace (`platinum serve --capture`) carries request
-    // shapes and deadlines: replay it verbatim instead of sampling
+    // shapes, deadlines, and shared-prefix spans: replay it verbatim
+    // instead of sampling
     let mut replay_records: Option<Vec<TraceRecord>> = None;
     let pattern = match args.get_str("pattern", "poisson") {
         "poisson" => ArrivalPattern::Poisson { rate_rps: rate },
@@ -645,8 +646,8 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
                     arrival_s: r.arrival_s,
                     prompt_tokens: r.prompt_tokens.unwrap_or(1),
                     output_tokens: r.output_tokens.unwrap_or(1),
+                    shared_prefix_tokens: r.shared_prefix_tokens,
                     deadline_s: r.deadline_s,
-                    ..TrafficRequest::default()
                 })
                 .collect()
         }

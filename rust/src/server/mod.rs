@@ -106,8 +106,10 @@ struct LiveStats {
 /// reports tokens (step-executor hook) and terminals (source observer);
 /// `/metrics` reads the aggregate.
 ///
-/// Lock order: `sinks` before `live` — both token and terminal paths
-/// follow it, so the two mutexes cannot deadlock.
+/// Lock order: `sinks` before `live`.  [`Gateway::on_step_token`] is
+/// the *only* path that holds both at once (sinks → live); every other
+/// path takes one lock at a time and releases it before touching the
+/// other, so the two mutexes cannot deadlock.
 pub struct Gateway {
     handle: PushHandle,
     anchor: Instant,
@@ -159,6 +161,7 @@ impl Gateway {
             prompt_tokens: Some(prompt_tokens),
             output_tokens: Some(output_tokens),
             deadline_s,
+            shared_prefix_tokens,
         });
         self.handle.push(TrafficRequest {
             id,
@@ -243,6 +246,11 @@ impl Gateway {
     /// `/metrics` payload: request counters plus the live TTFT / TPOT /
     /// E2E histograms (same serialization as the bench metrics).
     pub fn metrics_json(&self) -> Json {
+        // read (and release) `sinks` before taking `live`: holding
+        // `live` while acquiring `sinks` would invert on_step_token's
+        // sinks → live order and ABBA-deadlock against the scheduler
+        // thread's token path
+        let active = self.sinks.lock().unwrap().len();
         let live = self.live.lock().unwrap();
         obj(vec![
             (
@@ -254,7 +262,7 @@ impl Gateway {
                     ("rejected", num(live.rejected as f64)),
                     ("shed", num(live.shed as f64)),
                     ("exhausted", num(live.exhausted as f64)),
-                    ("active", num(self.sinks.lock().unwrap().len() as f64)),
+                    ("active", num(active as f64)),
                 ]),
             ),
             (
@@ -362,11 +370,18 @@ pub fn run(opts: ServeOptions) -> Result<()> {
         opts.backend_id, opts.model.name, opts.max_conns
     );
 
-    // accept loop: one OS thread per connection, bounded by max_conns
+    // accept loop: one OS thread per connection, bounded by max_conns.
+    // Transient accept failures (EMFILE under fd pressure,
+    // ECONNABORTED, EINTR, …) shed that connection and keep serving; a
+    // persistently failing listener gives up through the graceful
+    // drain below, so the capture trace and final metrics still land.
+    const MAX_CONSECUTIVE_ACCEPT_ERRORS: u32 = 100;
     let conns = Arc::new(AtomicUsize::new(0));
+    let mut accept_errors = 0u32;
     while !sig::requested() && !gw.stop_requested() {
         match listener.accept() {
             Ok((stream_sock, _peer)) => {
+                accept_errors = 0;
                 if conns.load(Ordering::SeqCst) >= opts.max_conns {
                     stream::refuse_overloaded(stream_sock);
                     continue;
@@ -382,7 +397,15 @@ pub fn run(opts: ServeOptions) -> Result<()> {
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(5));
             }
-            Err(e) => return Err(anyhow!("accept failed: {e}")),
+            Err(e) => {
+                accept_errors += 1;
+                eprintln!("platinum serve: accept error ({e}); retrying");
+                if accept_errors >= MAX_CONSECUTIVE_ACCEPT_ERRORS {
+                    eprintln!("platinum serve: accept failing persistently; draining");
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
         }
     }
 
@@ -451,6 +474,22 @@ mod tests {
         assert_eq!(recs[0].prompt_tokens, Some(8));
         assert_eq!(recs[0].output_tokens, Some(2));
         assert_eq!(recs[0].deadline_s, Some(0.25));
+        assert_eq!(recs[0].shared_prefix_tokens, 0);
+    }
+
+    #[test]
+    fn capture_preserves_shared_prefix_for_replay() {
+        // a live prefix-cache session must replay with the same shared
+        // span, not shared=0 — otherwise KV/admission decisions diverge
+        let (_source, handle) = PushSource::new();
+        let gw = Gateway::new(handle, Instant::now());
+        let (id, _rx) = gw.submit(70, 4, 64, None);
+        gw.on_terminal(id, Outcome::Completed);
+        let recs = gw.capture_records();
+        assert_eq!(recs[0].shared_prefix_tokens, 64);
+        let parsed =
+            crate::traffic::parse_trace_records(&format_capture(&recs)).unwrap();
+        assert_eq!(parsed, recs, "shared prefix must survive the capture round-trip");
     }
 
     #[test]

@@ -68,6 +68,11 @@ impl TrafficRequest {
 /// prompt lengths grow by `tokens` and the shared span is marked so the
 /// KV prefix cache can deduplicate it.  A no-op when `tokens` is 0.
 pub fn with_shared_prefix(requests: &mut [TrafficRequest], tokens: usize) {
+    if tokens == 0 {
+        // true no-op: leave any per-request shared spans (e.g. from a
+        // capture-v1 replay trace) untouched
+        return;
+    }
     for r in requests.iter_mut() {
         r.prompt_tokens += tokens;
         r.shared_prefix_tokens = tokens;
@@ -290,6 +295,10 @@ pub struct TraceRecord {
     pub prompt_tokens: Option<usize>,
     pub output_tokens: Option<usize>,
     pub deadline_s: Option<f64>,
+    /// Leading prompt tokens shared across requests (the system
+    /// prompt) — 0 on legacy lines and on 4-field capture lines
+    /// written before the column existed.
+    pub shared_prefix_tokens: usize,
 }
 
 /// Parse a replay trace.  Two line grammars, mixable with blank lines
@@ -297,7 +306,9 @@ pub struct TraceRecord {
 ///
 /// * legacy: `<arrival_s>` — one f64 seconds-offset per request;
 /// * capture v1: `<arrival_s> <prompt_tokens> <output_tokens>
-///   <deadline_ms|->` — what [`format_capture`] writes.
+///   <deadline_ms|-> [<shared_prefix_tokens>]` — what
+///   [`format_capture`] writes; the trailing shared-prefix column
+///   defaults to 0 when absent (earlier captures had 4 fields).
 pub fn parse_trace_records(text: &str) -> Result<Vec<TraceRecord>> {
     let mut out = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
@@ -318,8 +329,9 @@ pub fn parse_trace_records(text: &str) -> Result<Vec<TraceRecord>> {
                 prompt_tokens: None,
                 output_tokens: None,
                 deadline_s: None,
+                shared_prefix_tokens: 0,
             },
-            4 => {
+            4 | 5 => {
                 let prompt: usize =
                     fields[1].parse().map_err(|_| err("has a bad prompt length"))?;
                 let output: usize =
@@ -337,14 +349,26 @@ pub fn parse_trace_records(text: &str) -> Result<Vec<TraceRecord>> {
                     }
                     Some(ms * 1e-3)
                 };
+                let shared_prefix_tokens = match fields.get(4) {
+                    Some(f) => {
+                        let shared: usize =
+                            f.parse().map_err(|_| err("has a bad shared-prefix length"))?;
+                        if shared > prompt {
+                            return Err(err("has a shared prefix longer than the prompt"));
+                        }
+                        shared
+                    }
+                    None => 0,
+                };
                 TraceRecord {
                     arrival_s,
                     prompt_tokens: Some(prompt),
                     output_tokens: Some(output),
                     deadline_s,
+                    shared_prefix_tokens,
                 }
             }
-            _ => return Err(err("has neither 1 field (legacy) nor 4 (capture v1)")),
+            _ => return Err(err("has neither 1 field (legacy) nor 4-5 (capture v1)")),
         };
         out.push(rec);
     }
@@ -364,15 +388,25 @@ pub fn parse_trace(text: &str) -> Result<Vec<f64>> {
 /// reads back the same f64: Rust's `Display` is shortest-round-trip),
 /// which is what makes a captured session a byte-reproducible replay.
 pub fn format_capture(records: &[TraceRecord]) -> String {
-    let mut out = String::from("# platinum capture v1\n# arrival_s prompt_tokens output_tokens deadline_ms|-\n");
+    let mut out = String::from(
+        "# platinum capture v1\n# arrival_s prompt_tokens output_tokens deadline_ms|- shared_prefix_tokens\n",
+    );
     for r in records {
         let prompt = r.prompt_tokens.unwrap_or(1);
         let output = r.output_tokens.unwrap_or(1);
+        let shared = r.shared_prefix_tokens;
         match r.deadline_s {
-            Some(dl) => {
-                out.push_str(&format!("{} {} {} {}\n", r.arrival_s, prompt, output, dl * 1e3));
+            Some(dl) => out.push_str(&format!(
+                "{} {} {} {} {}\n",
+                r.arrival_s,
+                prompt,
+                output,
+                dl * 1e3,
+                shared
+            )),
+            None => {
+                out.push_str(&format!("{} {} {} - {}\n", r.arrival_s, prompt, output, shared))
             }
-            None => out.push_str(&format!("{} {} {} -\n", r.arrival_s, prompt, output)),
         }
     }
     out
@@ -474,12 +508,14 @@ mod tests {
                 prompt_tokens: Some(8),
                 output_tokens: Some(4),
                 deadline_s: Some(0.25),
+                shared_prefix_tokens: 3,
             },
             TraceRecord {
                 arrival_s: 1.0625,
                 prompt_tokens: Some(16),
                 output_tokens: Some(2),
                 deadline_s: None,
+                shared_prefix_tokens: 0,
             },
         ];
         let text = format_capture(&recs);
@@ -487,13 +523,28 @@ mod tests {
         assert_eq!(parse_trace_records(&text).unwrap(), recs, "capture must round-trip");
         // legacy offset-only lines parse as length-less records
         let legacy = parse_trace_records("0.1\n0.2\n").unwrap();
-        assert!(legacy.iter().all(|r| r.prompt_tokens.is_none() && r.deadline_s.is_none()));
+        assert!(legacy.iter().all(|r| {
+            r.prompt_tokens.is_none() && r.deadline_s.is_none() && r.shared_prefix_tokens == 0
+        }));
         assert_eq!(parse_trace("# c\n0.1\n0.2\n").unwrap(), vec![0.1, 0.2]);
-        // strictness: partial records, bad deadlines, negative offsets
+        // 4-field captures (written before the shared-prefix column
+        // existed) still parse, with a zero shared span
+        let old = parse_trace_records("0.1 8 4 250\n").unwrap();
+        assert_eq!(old[0].prompt_tokens, Some(8));
+        assert_eq!(old[0].deadline_s, Some(0.25));
+        assert_eq!(old[0].shared_prefix_tokens, 0);
+        // strictness: partial records, bad deadlines, negative offsets,
+        // malformed or oversized shared prefixes
         assert!(parse_trace_records("0.1 8\n").is_err(), "2-field lines are malformed");
         assert!(parse_trace_records("0.1 8 4 soon\n").is_err());
         assert!(parse_trace_records("0.1 0 4 -\n").is_err(), "zero-length prompt");
         assert!(parse_trace_records("-0.5\n").is_err(), "negative offsets rejected");
+        assert!(parse_trace_records("0.1 8 4 - lots\n").is_err(), "bad shared prefix");
+        assert!(
+            parse_trace_records("0.1 8 4 - 9\n").is_err(),
+            "shared prefix cannot exceed the prompt"
+        );
+        assert!(parse_trace_records("0.1 8 4 - 0 7\n").is_err(), "6-field lines are malformed");
     }
 
     #[test]

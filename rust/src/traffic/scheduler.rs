@@ -50,7 +50,7 @@ use crate::models::BitNetModel;
 use crate::sim::DramModel;
 use crate::util::rng::Rng;
 use anyhow::Result;
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 /// Admission and batching policy.
 #[derive(Debug, Clone, Copy)]
@@ -251,6 +251,33 @@ fn schedule_retry(
     true
 }
 
+/// How many loop iterations a cancellation may sit unmatched in
+/// `cancel_wanted` before it is aged out.  A cancel that raced past
+/// its request's terminal state (client hang-up at the same instant
+/// the last token completed) never finds a request to kill; without a
+/// bound those ids would accumulate for the daemon's lifetime.  The
+/// only legitimate long wait is a request still pending *inside* the
+/// source (future `arrival_s`), which the admission scan catches at
+/// pop time — live pushes arrive due immediately, so this bound is
+/// generous.
+const CANCEL_WANTED_TTL: u32 = 1024;
+
+/// Mark one offered request terminal: report the outcome to the source
+/// and drop its per-id bookkeeping (retry `attempts`, any pending
+/// `cancel_wanted` entry) so a long-running daemon does not accumulate
+/// state for requests that no longer exist.
+fn finish_request(
+    source: &mut dyn ArrivalSource,
+    attempts: &mut BTreeMap<u64, u32>,
+    cancel_wanted: &mut BTreeMap<u64, u32>,
+    id: u64,
+    outcome: Outcome,
+) {
+    attempts.remove(&id);
+    cancel_wanted.remove(&id);
+    source.note_terminal(id, outcome);
+}
+
 /// Effective deadline of one attempt: the per-request deadline (set by
 /// a live client's `X-Deadline-Ms` header or a captured trace) wins
 /// over the global [`ResilienceConfig::deadline_s`].
@@ -405,8 +432,9 @@ impl<'a> Scheduler<'a> {
         let mut inflight_tokens = 0usize;
         let mut underflows = 0u64;
         // cancellations whose request has not been located yet (it may
-        // still be pending inside the source)
-        let mut cancel_wanted: BTreeSet<u64> = BTreeSet::new();
+        // still be pending inside the source), each with a remaining-
+        // iterations TTL so stale ids age out instead of accumulating
+        let mut cancel_wanted: BTreeMap<u64, u32> = BTreeMap::new();
 
         loop {
             let now = clock.now();
@@ -438,10 +466,16 @@ impl<'a> Scheduler<'a> {
                         resilience_on = true;
                         req_deadlines = true;
                     }
-                    if cancel_wanted.remove(&r.id) {
+                    if cancel_wanted.contains_key(&r.id) {
                         // cancelled before it was even admitted
                         metrics.cancelled += 1;
-                        source.note_terminal(r.id, Outcome::Cancelled);
+                        finish_request(
+                            source,
+                            &mut attempts,
+                            &mut cancel_wanted,
+                            r.id,
+                            Outcome::Cancelled,
+                        );
                         continue;
                     }
                     r
@@ -452,10 +486,22 @@ impl<'a> Scheduler<'a> {
                     metrics.rejected += 1;
                     if resilience_on {
                         if !schedule_retry(r, now, &rc, &mut attempts, &mut retries, &mut res) {
-                            source.note_terminal(r.id, Outcome::Exhausted);
+                            finish_request(
+                                source,
+                                &mut attempts,
+                                &mut cancel_wanted,
+                                r.id,
+                                Outcome::Exhausted,
+                            );
                         }
                     } else {
-                        source.note_terminal(r.id, Outcome::Rejected);
+                        finish_request(
+                            source,
+                            &mut attempts,
+                            &mut cancel_wanted,
+                            r.id,
+                            Outcome::Rejected,
+                        );
                     }
                 } else {
                     queue.push_back(r);
@@ -466,22 +512,28 @@ impl<'a> Scheduler<'a> {
             // wherever it sits — queued, awaiting re-prefill, swapped
             // out, running, or waiting on a retry — reclaiming every
             // resource it holds, exactly like the deadline kill path
-            // but terminal (no retry).  Ids not found yet stay wanted:
-            // the request may still be pending inside the source.
-            for id in source.drain_cancellations() {
-                cancel_wanted.insert(id);
+            // but terminal (no retry).  One sweep per drained batch
+            // suffices: an id the sweep does not find is either still
+            // pending inside the source (the admission scan kills it at
+            // pop time) or already terminal — the latter age out after
+            // CANCEL_WANTED_TTL iterations instead of triggering full
+            // sweeps for the daemon's lifetime.
+            let drained = source.drain_cancellations();
+            let sweep = !drained.is_empty();
+            for id in drained {
+                cancel_wanted.insert(id, CANCEL_WANTED_TTL);
             }
-            if !cancel_wanted.is_empty() {
+            if sweep {
                 let mut killed: Vec<u64> = Vec::new();
                 queue.retain(|r| {
-                    let hit = cancel_wanted.contains(&r.id);
+                    let hit = cancel_wanted.contains_key(&r.id);
                     if hit {
                         killed.push(r.id);
                     }
                     !hit
                 });
                 requeued.retain(|s| {
-                    let hit = cancel_wanted.contains(&s.req.id);
+                    let hit = cancel_wanted.contains_key(&s.req.id);
                     if hit {
                         release_inflight(
                             &mut inflight_tokens,
@@ -493,7 +545,7 @@ impl<'a> Scheduler<'a> {
                     !hit
                 });
                 swapped.retain(|s| {
-                    let hit = cancel_wanted.contains(&s.req.id);
+                    let hit = cancel_wanted.contains_key(&s.req.id);
                     if hit {
                         kv.release_swapped(s.req.id);
                         release_inflight(
@@ -506,7 +558,7 @@ impl<'a> Scheduler<'a> {
                     !hit
                 });
                 running.retain(|s| {
-                    let hit = cancel_wanted.contains(&s.req.id);
+                    let hit = cancel_wanted.contains_key(&s.req.id);
                     if hit {
                         kv.release(s.req.id);
                         release_inflight(
@@ -519,17 +571,29 @@ impl<'a> Scheduler<'a> {
                     !hit
                 });
                 retries.retain(|&(_, id), _| {
-                    let hit = cancel_wanted.contains(&id);
+                    let hit = cancel_wanted.contains_key(&id);
                     if hit {
                         killed.push(id);
                     }
                     !hit
                 });
                 for id in killed {
-                    cancel_wanted.remove(&id);
                     metrics.cancelled += 1;
-                    source.note_terminal(id, Outcome::Cancelled);
+                    finish_request(
+                        source,
+                        &mut attempts,
+                        &mut cancel_wanted,
+                        id,
+                        Outcome::Cancelled,
+                    );
                 }
+            }
+            if !cancel_wanted.is_empty() {
+                // age out cancels that raced past their terminal state
+                cancel_wanted.retain(|_, ttl| {
+                    *ttl -= 1;
+                    *ttl > 0
+                });
             }
 
             // (1b) deadline timeout-kill: an attempt past its deadline
@@ -592,7 +656,13 @@ impl<'a> Scheduler<'a> {
                 for r in killed {
                     res.timeouts += 1;
                     if !schedule_retry(r, now, &rc, &mut attempts, &mut retries, &mut res) {
-                        source.note_terminal(r.id, Outcome::Exhausted);
+                        finish_request(
+                            source,
+                            &mut attempts,
+                            &mut cancel_wanted,
+                            r.id,
+                            Outcome::Exhausted,
+                        );
                     }
                 }
             }
@@ -607,7 +677,13 @@ impl<'a> Scheduler<'a> {
                         let keep = r.arrival_s + dl - now >= rc.brownout_slack_s;
                         if !keep {
                             res.shed += 1;
-                            source.note_terminal(r.id, Outcome::Shed);
+                            finish_request(
+                                source,
+                                &mut attempts,
+                                &mut cancel_wanted,
+                                r.id,
+                                Outcome::Shed,
+                            );
                         }
                         keep
                     }
@@ -862,7 +938,13 @@ impl<'a> Scheduler<'a> {
                     kv.release(s.req.id);
                     release_inflight(&mut inflight_tokens, s.req.reserved_tokens(), &mut underflows);
                     if !schedule_retry(s.req, t_end, &rc, &mut attempts, &mut retries, &mut res) {
-                        source.note_terminal(s.req.id, Outcome::Exhausted);
+                        finish_request(
+                            source,
+                            &mut attempts,
+                            &mut cancel_wanted,
+                            s.req.id,
+                            Outcome::Exhausted,
+                        );
                     }
                 }
             } else {
@@ -894,7 +976,13 @@ impl<'a> Scheduler<'a> {
                                     &mut underflows,
                                 );
                                 kv.release(s.req.id);
-                                source.note_terminal(s.req.id, Outcome::Completed);
+                                finish_request(
+                                    source,
+                                    &mut attempts,
+                                    &mut cancel_wanted,
+                                    s.req.id,
+                                    Outcome::Completed,
+                                );
                             } else {
                                 running.push(s);
                             }
@@ -923,7 +1011,13 @@ impl<'a> Scheduler<'a> {
                                     &mut underflows,
                                 );
                                 kv.release(s.req.id);
-                                source.note_terminal(s.req.id, Outcome::Completed);
+                                finish_request(
+                                    source,
+                                    &mut attempts,
+                                    &mut cancel_wanted,
+                                    s.req.id,
+                                    Outcome::Completed,
+                                );
                                 false
                             } else {
                                 true

@@ -543,6 +543,46 @@ fn client_cancellation_releases_kv_and_counts() {
 }
 
 #[test]
+fn stale_cancellations_are_harmless_and_alter_no_decisions() {
+    // a cancel can race past its request's terminal state (the client
+    // hangs up in the instant the last token lands) or name an id the
+    // scheduler never sees; either way it must neither wedge the drain
+    // nor perturb a single scheduling decision — the stale id ages out
+    // instead of triggering retain sweeps for the daemon's lifetime
+    let be = PlatinumBackend::ternary();
+    let cfg = SchedulerConfig { max_batch: 8, ..SchedulerConfig::default() };
+    let sched = Scheduler::new(&be, TINY, cfg);
+    let reqs = poisson_spec(200.0, 24, 7).generate().unwrap();
+    let base = sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+    let (mut source, handle) = PushSource::new();
+    for r in &reqs {
+        handle.push(*r);
+    }
+    handle.close();
+    let canceller = handle.clone();
+    let mut fired = false;
+    let mut exec = |s: &StepRecord, _w: &Workload| -> anyhow::Result<()> {
+        if !fired && s.kind == StepKind::Decode {
+            fired = true;
+            canceller.cancel(10_000); // an id no request ever carries
+        }
+        Ok(())
+    };
+    let r = sched
+        .serve_source(&mut source, &mut VirtualClock::new(), Some(&mut exec), &FaultPlan::default())
+        .unwrap();
+    assert!(fired, "the stale cancel must actually have been issued");
+    assert_eq!(r.metrics.cancelled, 0, "a stale cancel must not count");
+    assert_eq!(r.metrics.completed, 24, "every real request still drains");
+    assert_eq!(base.steps, r.steps, "a stale cancel must not perturb decisions");
+    assert_eq!(
+        base.metrics.to_json().to_string(),
+        r.metrics.to_json().to_string(),
+        "a stale cancel must not change the metrics JSON"
+    );
+}
+
+#[test]
 fn executor_panic_propagates_without_wedging_pool_or_scheduler() {
     // an Err from the executor is absorbed by a resilient scheduler and
     // retried, but a panic is a bug: it must propagate to the caller —
