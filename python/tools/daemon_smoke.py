@@ -10,18 +10,19 @@ What it pins, in order:
 
 1. the daemon comes up and answers `/health`;
 2. 32 concurrent `POST /v1/generate` requests (half carrying an
-   `X-Deadline-Ms` header, a quarter a shared prompt prefix) each
-   stream chunked ndjson token lines ending in a
-   `{"done":true,"outcome":"completed"}` record whose token count
-   matches the streamed lines;
+   `X-Deadline-Ms` header, the other half an `X-Tenant-Class: batch`
+   header, a quarter a shared prompt prefix) each stream chunked
+   ndjson token lines ending in a `{"done":true,"outcome":"completed"}`
+   record whose token count matches the streamed lines;
 3. `/metrics` parses, counts all 32 completions, and reports a finite
    positive p99 TTFT;
 4. SIGTERM drains and the process exits 0, writing the capture trace
    and the final metrics JSON;
-5. the capture holds exactly 32 records, and feeding it back through
-   `serve-bench --pattern replay --clock virtual` is byte-identical
-   across repeat runs *and* across worker-pool sizes — the replay
-   determinism contract.
+5. the capture holds exactly 32 records — the tenant class surviving
+   as the capture-v1 sixth column on exactly the `batch` half — and
+   feeding it back through `serve-bench --pattern replay --clock
+   virtual` is byte-identical across repeat runs *and* across
+   worker-pool sizes — the replay determinism contract.
 """
 
 import http.client
@@ -72,6 +73,8 @@ def one_generate(port, idx, results):
         headers = {"Content-Type": "application/json"}
         if idx % 2 == 0:
             headers["X-Deadline-Ms"] = "10000"
+        else:
+            headers["X-Tenant-Class"] = "batch"
         req = {"prompt_tokens": PROMPT_TOKENS, "output_tokens": OUTPUT_TOKENS}
         if idx % 4 == 0:
             req["shared_prefix_tokens"] = SHARED_PREFIX_TOKENS
@@ -184,14 +187,22 @@ def main():
     ]
     assert len(records) == REQUESTS, "capture has %d records, want %d" % (len(records), REQUESTS)
     # capture-v1 line: arrival_s prompt output deadline_ms|- shared_prefix
-    assert all(len(r) == 5 for r in records), records
+    # [class] — the class column is written only when nonzero, so the
+    # default-class half stays in the 5-field shape older tools expect
+    assert all(len(r) in (5, 6) for r in records), records
     with_deadline = [r for r in records if r[3] != "-"]
     assert len(with_deadline) == REQUESTS // 2, records
     with_shared = [r for r in records if r[4] == str(SHARED_PREFIX_TOKENS)]
     assert len(with_shared) == REQUESTS // 4, records
     assert all(r[4] in ("0", str(SHARED_PREFIX_TOKENS)) for r in records), records
-    print("daemon-smoke: capture holds %d records (%d with deadlines, %d with shared prefixes)"
-          % (len(records), len(with_deadline), len(with_shared)))
+    with_class = [r for r in records if len(r) == 6]
+    assert len(with_class) == REQUESTS // 2, records
+    assert all(r[5] == "1" for r in with_class), with_class
+    # X-Tenant-Class went to the non-deadline half, so no overlap
+    assert all(r[3] == "-" for r in with_class), with_class
+    print("daemon-smoke: capture holds %d records (%d with deadlines, %d with shared "
+          "prefixes, %d with tenant classes)"
+          % (len(records), len(with_deadline), len(with_shared), len(with_class)))
 
     # replay determinism: byte-identical across runs and pool sizes
     a = run_replay(binary, capture, threads=1)
@@ -201,7 +212,14 @@ def main():
     assert a == c, "replay metrics depend on the worker-pool size"
     doc = json.loads(a)
     assert doc["metrics"]["counts"]["completed"] == REQUESTS, doc["metrics"]["counts"]
-    print("daemon-smoke: replay byte-identical across runs and pool sizes 1/4")
+    # the tenant class survived capture → replay: the batch half drives
+    # the per-class metrics section on the replay side
+    classes = doc["metrics"]["classes"]
+    assert len(classes) == 2, classes
+    per_class = [c["counts"]["completed"] for c in classes]
+    assert per_class == [REQUESTS // 2, REQUESTS // 2], per_class
+    print("daemon-smoke: replay byte-identical across runs and pool sizes 1/4, "
+          "classes %s" % per_class)
     print("daemon-smoke: OK")
 
 

@@ -8,14 +8,16 @@
 //! `BENCH_SERVE_LOAD_JSON=<path>`); `SERVE_LOAD_BUDGET_MS` bounds the
 //! overhead measurement like `HOTPATH_BUDGET_MS` does for hotpath.
 
-use platinum::engine::{Backend, BackendInfo, BackendKind, Registry, Report, Workload};
+use platinum::engine::{
+    Backend, BackendInfo, BackendKind, PlatinumBackend, Registry, Report, Workload,
+};
 use platinum::models::BitNetModel;
 use platinum::traffic::{
     decode_capacity_tok_s, ArrivalPattern, LenDist, LoadSpec, Scheduler, SchedulerConfig,
     VirtualClock,
 };
 use platinum::util::bench::{bench, report};
-use platinum::util::json::{arr, num, obj, s as jstr, Json};
+use platinum::util::json::{arr, b as jbool, num, obj, s as jstr, Json};
 use std::time::Duration;
 
 /// Small-but-real model for the measured goodput rows (the 700M+ zoo
@@ -145,6 +147,62 @@ fn main() {
             ("utilization", num(m.utilization())),
         ]));
     }
+
+    // --- chunked prefill: interactive tail TTFT under a mixed tenant load --
+    // weight-4 interactive shorts share the scheduler with weight-1 batch
+    // longs at 2× the decode knee; splitting the 256-token batch prefills
+    // into 32-token chunks lets interactive first tokens land between
+    // chunk steps instead of behind a monolithic long prefill
+    let ternary = PlatinumBackend::ternary();
+    let base = SchedulerConfig {
+        max_batch: 8,
+        max_queue: 256,
+        max_inflight_tokens: 1024,
+        ..SchedulerConfig::default()
+    };
+    let rate_rps = 2.0 * decode_capacity_tok_s(&ternary, SMALL, base.max_batch) / 8.0;
+    let mixed_trace = || {
+        let spec = LoadSpec {
+            pattern: ArrivalPattern::Poisson { rate_rps },
+            prompt: LenDist::Fixed(8),
+            output: LenDist::Fixed(8),
+            requests: 48,
+            seed: 42,
+        };
+        let mut reqs = spec.generate().unwrap();
+        for (i, r) in reqs.iter_mut().enumerate() {
+            if i % 2 == 1 {
+                r.class = 1;
+                r.prompt_tokens = 256; // the long batch prompts
+            }
+        }
+        reqs
+    };
+    let interactive_p99 = |chunk: usize| {
+        let mut cfg = SchedulerConfig { prefill_chunk: chunk, ..base };
+        cfg.classes = 2;
+        cfg.class_weights[0] = 4;
+        let sched = Scheduler::new(&ternary, SMALL, cfg);
+        let r = sched.serve(&mixed_trace(), &mut VirtualClock::new()).unwrap();
+        let classes = r.metrics.classes.expect("two-class run emits per-class metrics");
+        classes[0].ttft.quantile(0.99).unwrap_or(f64::NAN)
+    };
+    let unsplit = interactive_p99(0);
+    let chunked = interactive_p99(32);
+    println!(
+        "\ntraffic/chunked_prefill_interactive_p99_ttft   unsplit {:.2} ms  chunk=32 {:.2} ms  ({:.2}x)",
+        unsplit * 1e3,
+        chunked * 1e3,
+        chunked / unsplit
+    );
+    rows.push(obj(vec![
+        ("name", jstr("traffic/chunked_prefill_interactive_p99_ttft")),
+        ("offered_frac_of_capacity", num(2.0)),
+        ("p99_ttft_unsplit_s", num(unsplit)),
+        ("p99_ttft_chunk32_s", num(chunked)),
+        ("ratio_chunked_over_unsplit", num(chunked / unsplit)),
+        ("improved", jbool(chunked < unsplit)),
+    ]));
 
     let path = std::env::var("BENCH_SERVE_LOAD_JSON")
         .unwrap_or_else(|_| "BENCH_serve_load.json".to_string());

@@ -85,6 +85,17 @@ impl ResilienceConfig {
     pub fn active(&self) -> bool {
         self.deadline_s.is_some() || self.max_retries > 0 || self.brownout_queue > 0
     }
+
+    /// Brownout slack threshold for one SLO class.  The scheduler
+    /// evaluates brownout per class queue (a saturated batch tenant
+    /// browns out alone instead of shedding every class); this is the
+    /// per-class hook it consults.  All classes currently share the
+    /// global `brownout_slack_s` — the signature keeps the evaluation
+    /// point in one place so per-class slack overrides slot in without
+    /// touching the scheduler.
+    pub fn brownout_slack_for(&self, _class: usize) -> f64 {
+        self.brownout_slack_s
+    }
 }
 
 /// Counters and gauges for the `resilience` metrics section.
@@ -163,6 +174,18 @@ mod tests {
         assert!(ResilienceConfig { deadline_s: Some(0.5), ..cfg }.active());
         assert!(ResilienceConfig { max_retries: 3, ..cfg }.active());
         assert!(ResilienceConfig { brownout_queue: 64, ..cfg }.active());
+    }
+
+    #[test]
+    fn brownout_slack_is_uniform_across_classes() {
+        let cfg = ResilienceConfig {
+            brownout_queue: 8,
+            brownout_slack_s: 0.25,
+            ..ResilienceConfig::default()
+        };
+        for class in 0..8 {
+            assert_eq!(cfg.brownout_slack_for(class), 0.25);
+        }
     }
 
     #[test]

@@ -34,7 +34,7 @@ use platinum::server::{self, ServeOptions};
 use platinum::sim::DramModelKind;
 use platinum::traffic::{
     parse_trace_records, with_shared_prefix, ArrivalPattern, Clock, LenDist, LoadSpec, Scheduler,
-    SchedulerConfig, TraceRecord, TrafficRequest, VirtualClock, WallClock,
+    SchedulerConfig, TenantMix, TraceRecord, TrafficRequest, VirtualClock, WallClock,
 };
 use platinum::util::cli;
 use platinum::util::env as envknob;
@@ -92,6 +92,11 @@ fn print_help() {
                       \"straggler:r1:p0.05:x8,linkdeg:0.2:4gbps,swapfail:p0.01,crash:r2@t=1.5s\"\n\
                       [--deadline-ms <f>] [--retries <n>] [--retry-base-ms <f>]\n\
                       [--retry-cap-ms <f>] [--brownout-queue <n>] [--brownout-slack-ms <f>]\n\
+                      [--tenants <name:share[:wN],...>] SLO-class mix with weighted\n\
+                      fair queueing, e.g. \"interactive:0.7:w4,batch:0.3:w1\"\n\
+                      (per-class TTFT/TPOT/E2E/goodput in a `classes` section)\n\
+                      [--prefill-chunk <tok>] chunked prefill: prompts larger than\n\
+                      the chunk interleave with decode steps (0 = off)\n\
                       continuous-batching load run: TTFT/TPOT/E2E percentiles,\n\
                       batch/queue series, paged-KV block/prefix-cache stats,\n\
                       goodput vs offered load; under faults/SLO flags the\n\
@@ -101,7 +106,8 @@ fn print_help() {
                       [--model {{700m|1.3b|3b}}] [--capture <file>] [--metrics-out <file>]\n\
                       [+ the serve-bench scheduler/KV/SLO flags]\n\
                       std-only HTTP/1.1 daemon: POST /v1/generate streams chunked\n\
-                      ndjson tokens (X-Deadline-Ms sets a per-request deadline),\n\
+                      ndjson tokens (X-Deadline-Ms sets a per-request deadline,\n\
+                      X-Tenant-Class tags the SLO class: interactive|batch|0-3),\n\
                       GET /health + /metrics, POST /shutdown or SIGTERM drains\n\
                       gracefully; --capture records live arrivals as a replay\n\
                       trace (env: PLATINUM_ADDR, PLATINUM_MAX_CONNS)\n\
@@ -494,6 +500,13 @@ fn cmd_backends(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// `--tenants <name:share[:wN],...>` SLO-class mix shared by
+/// `serve-bench` and `serve` — `None` when the flag is absent
+/// (single-tenant legacy behaviour).
+fn tenant_mix_from_args(args: &cli::Args) -> Result<Option<TenantMix>> {
+    args.get("tenants").map(TenantMix::parse).transpose()
+}
+
 /// Scheduler / KV / SLO configuration shared by `serve-bench` and
 /// `serve`: env (`PLATINUM_KV_*`) seeds the KV defaults, flags win; the
 /// resilience knobs stay inert unless given, so a flagless run
@@ -525,7 +538,7 @@ fn scheduler_config_from_args(args: &cli::Args) -> Result<SchedulerConfig> {
         brownout_slack_s: args.get_f64("brownout-slack-ms", 0.0)? * 1e-3,
         fault_seed: args.get_usize("seed", 0)? as u64,
     };
-    Ok(SchedulerConfig {
+    let mut cfg = SchedulerConfig {
         max_batch: args.get_usize("max-batch", 32)?,
         max_queue: args.get_usize("max-queue", 256)?,
         max_inflight_tokens: args.get_usize("max-inflight-tokens", 65_536)?,
@@ -533,7 +546,14 @@ fn scheduler_config_from_args(args: &cli::Args) -> Result<SchedulerConfig> {
         step_overhead_s: args.get_f64("step-overhead-us", 0.0)? * 1e-6,
         kv,
         resilience,
-    })
+        ..SchedulerConfig::default()
+    };
+    cfg.prefill_chunk = args.get_usize("prefill-chunk", 0)?;
+    if let Some(mix) = tenant_mix_from_args(args)? {
+        cfg.classes = mix.classes.len();
+        cfg.class_weights = mix.weights();
+    }
+    Ok(cfg)
 }
 
 /// `--faults <plan>` clause grammar (S17), shared by `serve-bench` and
@@ -648,12 +668,19 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
                     output_tokens: r.output_tokens.unwrap_or(1),
                     shared_prefix_tokens: r.shared_prefix_tokens,
                     deadline_s: r.deadline_s,
+                    class: r.class,
                 })
                 .collect()
         }
         None => spec.generate()?,
     };
     with_shared_prefix(&mut requests, shared_prefix);
+    // applied post-generation like `with_shared_prefix`, from its own
+    // seeded stream, so a tenant mix never perturbs arrivals or shapes
+    let mix = tenant_mix_from_args(args)?;
+    if let Some(mix) = &mix {
+        mix.assign(&mut requests, spec.seed);
+    }
     let mut clock: Box<dyn Clock> = match args.get_str("clock", "virtual") {
         "virtual" => Box::new(VirtualClock::new()),
         "wall" => Box::new(WallClock::new()),
@@ -702,6 +729,14 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
             ("dram_model", s(cfg.kv.dram_model.label())),
             ("shared_prefix_tokens", num(shared_prefix as f64)),
         ];
+        // only when the flags are set, so single-tenant unchunked
+        // output stays byte-identical to the pre-class era
+        if let Some(mix) = &mix {
+            config.push(("tenants", s(&mix.label())));
+        }
+        if cfg.prefill_chunk > 0 {
+            config.push(("prefill_chunk", num(cfg.prefill_chunk as f64)));
+        }
         // only when the resilience section exists, so fault-free output
         // stays byte-identical to the pre-fault era
         if m.resilience.is_some() {
@@ -777,6 +812,22 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
         println!("  TPOT        {}", q(&m.tpot));
         println!("  E2E         {}", q(&m.e2e));
         println!("  queue wait  {}", q(&m.queue_wait));
+        if let Some(classes) = &m.classes {
+            for (i, c) in classes.iter().enumerate() {
+                let name = mix
+                    .as_ref()
+                    .and_then(|mx| mx.classes.get(i))
+                    .map(|t| t.name.clone())
+                    .unwrap_or_else(|| format!("class{i}"));
+                println!(
+                    "  [{name:<12}] offered {:>5}  completed {:>5}  shed {:>4}  TTFT {}",
+                    c.offered,
+                    c.completed,
+                    c.shed,
+                    q(&c.ttft)
+                );
+            }
+        }
         if let Some(res) = &m.resilience {
             println!(
                 "  resilience: availability {:.4}  timeouts {}  retries {}  shed {}  \

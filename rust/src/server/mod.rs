@@ -147,6 +147,7 @@ impl Gateway {
         output_tokens: usize,
         shared_prefix_tokens: usize,
         deadline_s: Option<f64>,
+        class: u8,
     ) -> (u64, Receiver<TokenEvent>) {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let arrival_s = self.now_s();
@@ -162,6 +163,7 @@ impl Gateway {
             output_tokens: Some(output_tokens),
             deadline_s,
             shared_prefix_tokens,
+            class,
         });
         self.handle.push(TrafficRequest {
             id,
@@ -170,6 +172,7 @@ impl Gateway {
             output_tokens,
             shared_prefix_tokens,
             deadline_s,
+            class,
         });
         (id, rx)
     }
@@ -457,7 +460,7 @@ mod tests {
     fn gateway_routes_tokens_and_terminals() {
         let (_source, handle) = PushSource::new();
         let gw = Gateway::new(handle, Instant::now());
-        let (id, rx) = gw.submit(8, 2, 0, Some(0.25));
+        let (id, rx) = gw.submit(8, 2, 0, Some(0.25), 0);
         gw.on_step_token(id);
         gw.on_step_token(id);
         gw.on_terminal(id, Outcome::Completed);
@@ -475,6 +478,7 @@ mod tests {
         assert_eq!(recs[0].output_tokens, Some(2));
         assert_eq!(recs[0].deadline_s, Some(0.25));
         assert_eq!(recs[0].shared_prefix_tokens, 0);
+        assert_eq!(recs[0].class, 0);
     }
 
     #[test]
@@ -483,21 +487,24 @@ mod tests {
         // span, not shared=0 — otherwise KV/admission decisions diverge
         let (_source, handle) = PushSource::new();
         let gw = Gateway::new(handle, Instant::now());
-        let (id, _rx) = gw.submit(70, 4, 64, None);
+        let (id, _rx) = gw.submit(70, 4, 64, None, 0);
         gw.on_terminal(id, Outcome::Completed);
+        let (id2, _rx2) = gw.submit(16, 2, 0, None, 1);
+        gw.on_terminal(id2, Outcome::Completed);
         let recs = gw.capture_records();
         assert_eq!(recs[0].shared_prefix_tokens, 64);
+        assert_eq!(recs[1].class, 1, "the tenant class is captured");
         let parsed =
             crate::traffic::parse_trace_records(&format_capture(&recs)).unwrap();
-        assert_eq!(parsed, recs, "shared prefix must survive the capture round-trip");
+        assert_eq!(parsed, recs, "shared prefix and class must survive the capture round-trip");
     }
 
     #[test]
     fn gateway_counts_non_completed_outcomes() {
         let (_source, handle) = PushSource::new();
         let gw = Gateway::new(handle, Instant::now());
-        let (a, rx_a) = gw.submit(4, 1, 0, None);
-        let (b_id, rx_b) = gw.submit(4, 1, 0, None);
+        let (a, rx_a) = gw.submit(4, 1, 0, None, 0);
+        let (b_id, rx_b) = gw.submit(4, 1, 0, None, 1);
         gw.on_terminal(a, Outcome::Rejected);
         gw.on_terminal(b_id, Outcome::Cancelled);
         assert_eq!(rx_a.recv().unwrap(), TokenEvent::Done { outcome: Outcome::Rejected });

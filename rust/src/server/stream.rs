@@ -11,7 +11,7 @@
 
 use super::http::{chunk, last_chunk, response, streaming_head, HttpRequest, RequestParser};
 use super::{Gateway, TokenEvent};
-use crate::traffic::Outcome;
+use crate::traffic::{Outcome, MAX_CLASSES};
 use crate::util::json::{b, num, obj, s, Json};
 use anyhow::{anyhow, Result};
 use std::io::{Read, Write};
@@ -99,7 +99,7 @@ fn generate(mut sock: TcpStream, gw: &Gateway, req: &HttpRequest) -> Result<()> 
         sock.write_all(&response(503, "Service Unavailable", "application/json", &body))?;
         return Ok(());
     }
-    let (prompt, output, shared, deadline_s) = match parse_generate(req) {
+    let (prompt, output, shared, deadline_s, class) = match parse_generate(req) {
         Ok(p) => p,
         Err(e) => {
             let body = err_json(&e.to_string());
@@ -107,7 +107,7 @@ fn generate(mut sock: TcpStream, gw: &Gateway, req: &HttpRequest) -> Result<()> 
             return Err(e);
         }
     };
-    let (id, rx) = gw.submit(prompt, output, shared, deadline_s);
+    let (id, rx) = gw.submit(prompt, output, shared, deadline_s, class);
 
     // wait for the first event before committing to a status line
     let first = match rx.recv_timeout(IO_TIMEOUT) {
@@ -174,8 +174,9 @@ fn done_line(outcome: Outcome, tokens: usize) -> Vec<u8> {
     .into_bytes()
 }
 
-/// Decode the generate request: JSON body + `X-Deadline-Ms` header.
-fn parse_generate(req: &HttpRequest) -> Result<(usize, usize, usize, Option<f64>)> {
+/// Decode the generate request: JSON body + `X-Deadline-Ms` and
+/// `X-Tenant-Class` headers.
+fn parse_generate(req: &HttpRequest) -> Result<(usize, usize, usize, Option<f64>, u8)> {
     let body = std::str::from_utf8(&req.body).map_err(|_| anyhow!("body is not UTF-8"))?;
     let json = Json::parse(body).map_err(|e| anyhow!("bad JSON body: {e}"))?;
     let field = |key: &str| -> Result<usize> {
@@ -208,7 +209,27 @@ fn parse_generate(req: &HttpRequest) -> Result<(usize, usize, usize, Option<f64>
         }
         None => None,
     };
-    Ok((prompt, output, shared, deadline_s))
+    // SLO class: the built-in names map to the default two-class
+    // layout; a bare digit addresses a custom class table directly
+    let class = match req.header("x-tenant-class") {
+        Some(v) => match v.trim().to_ascii_lowercase().as_str() {
+            "interactive" => 0u8,
+            "batch" => 1u8,
+            t => t
+                .parse::<u8>()
+                .ok()
+                .filter(|&c| (c as usize) < MAX_CLASSES)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "bad X-Tenant-Class {v:?}: expected interactive, batch, \
+                         or a class id 0..{}",
+                        MAX_CLASSES - 1
+                    )
+                })?,
+        },
+        None => 0,
+    };
+    Ok((prompt, output, shared, deadline_s, class))
 }
 
 #[cfg(test)]
@@ -216,9 +237,16 @@ mod tests {
     use super::*;
 
     fn post(body: &str, deadline: Option<&str>) -> HttpRequest {
+        post_with_class(body, deadline, None)
+    }
+
+    fn post_with_class(body: &str, deadline: Option<&str>, class: Option<&str>) -> HttpRequest {
         let mut headers = vec![("Content-Length".to_string(), body.len().to_string())];
         if let Some(d) = deadline {
             headers.push(("X-Deadline-Ms".to_string(), d.to_string()));
+        }
+        if let Some(c) = class {
+            headers.push(("X-Tenant-Class".to_string(), c.to_string()));
         }
         HttpRequest {
             method: "POST".into(),
@@ -231,16 +259,37 @@ mod tests {
     #[test]
     fn parses_generate_body_and_deadline() {
         let req = post(r#"{"prompt_tokens": 32, "output_tokens": 8}"#, Some("250"));
-        let (p, o, sh, dl) = parse_generate(&req).unwrap();
-        assert_eq!((p, o, sh), (32, 8, 0));
+        let (p, o, sh, dl, c) = parse_generate(&req).unwrap();
+        assert_eq!((p, o, sh, c), (32, 8, 0, 0));
         assert_eq!(dl, Some(0.25));
         let req = post(
             r#"{"prompt_tokens": 70, "output_tokens": 4, "shared_prefix_tokens": 64}"#,
             None,
         );
-        let (p, _, sh, dl) = parse_generate(&req).unwrap();
+        let (p, _, sh, dl, _) = parse_generate(&req).unwrap();
         assert_eq!((p, sh), (70, 64));
         assert_eq!(dl, None);
+    }
+
+    #[test]
+    fn parses_tenant_class_header() {
+        let body = r#"{"prompt_tokens": 8, "output_tokens": 4}"#;
+        for (hdr, want) in [
+            (Some("interactive"), 0u8),
+            (Some("Batch"), 1),
+            (Some("2"), 2),
+            (Some("3"), 3),
+            (None, 0),
+        ] {
+            let (_, _, _, _, c) = parse_generate(&post_with_class(body, None, hdr)).unwrap();
+            assert_eq!(c, want, "header {hdr:?}");
+        }
+        for bad in ["premium", "4", "255", "-1", ""] {
+            assert!(
+                parse_generate(&post_with_class(body, None, Some(bad))).is_err(),
+                "class {bad:?} must be rejected"
+            );
+        }
     }
 
     #[test]

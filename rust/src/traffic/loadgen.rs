@@ -19,6 +19,11 @@
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Result};
 
+/// Upper bound on distinct SLO classes one run can carry; class ids
+/// are clamped into `0..MAX_CLASSES` by the scheduler, so a fixed-size
+/// table suffices everywhere (keeps `SchedulerConfig` `Copy`).
+pub const MAX_CLASSES: usize = 4;
+
 /// One request of the load trace: a prompt to prefill and a number of
 /// output tokens to decode, arriving at a fixed offset from run start.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -39,6 +44,10 @@ pub struct TrafficRequest {
     /// requests (`X-Deadline-Ms` header) and captured traces; overrides
     /// the global `ResilienceConfig::deadline_s` when set.
     pub deadline_s: Option<f64>,
+    /// SLO class (tenant tier) of the request — an index into the
+    /// run's class table ([`TenantMix`] / `SchedulerConfig`); 0 is the
+    /// default single-tenant class, so legacy traces are class 0.
+    pub class: u8,
 }
 
 impl Default for TrafficRequest {
@@ -50,6 +59,7 @@ impl Default for TrafficRequest {
             output_tokens: 1,
             shared_prefix_tokens: 0,
             deadline_s: None,
+            class: 0,
         }
     }
 }
@@ -76,6 +86,132 @@ pub fn with_shared_prefix(requests: &mut [TrafficRequest], tokens: usize) {
     for r in requests.iter_mut() {
         r.prompt_tokens += tokens;
         r.shared_prefix_tokens = tokens;
+    }
+}
+
+/// One SLO class of a tenant mix: a share of the offered traffic and a
+/// weighted-fair-queueing weight for the scheduler's admission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantClass {
+    pub name: String,
+    /// Fraction of offered requests assigned to this class (the mix
+    /// shares must sum to 1).
+    pub share: f64,
+    /// WFQ weight: this class's relative share of the scheduler's
+    /// in-flight token budget while classes compete.
+    pub weight: u32,
+}
+
+/// A tenant/SLO-class mix, parsed from the CLI grammar
+/// `name:share[:w<weight>],...` — e.g.
+/// `interactive:0.7:w4,batch:0.3:w1`.  Class ids are the positions in
+/// the grammar (first entry is class 0).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TenantMix {
+    pub classes: Vec<TenantClass>,
+}
+
+impl TenantMix {
+    /// Parse the CLI grammar.  Shares must be positive and sum to 1
+    /// (±1e-6); weights default to 1 and must be ≥ 1; at most
+    /// [`MAX_CLASSES`] classes.
+    pub fn parse(spec: &str) -> Result<TenantMix> {
+        let mut classes = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("tenant mix {spec:?} has an empty class entry");
+            }
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 2 || fields.len() > 3 {
+                bail!("tenant class {part:?} is not name:share[:w<weight>]");
+            }
+            let name = fields[0].trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-') {
+                bail!("tenant class name {name:?} must be non-empty alphanumeric/dash");
+            }
+            let share: f64 = fields[1]
+                .parse()
+                .map_err(|_| anyhow!("tenant class {part:?} has a bad share"))?;
+            if !share.is_finite() || share <= 0.0 || share > 1.0 {
+                bail!("tenant class {part:?} needs a share in (0, 1]");
+            }
+            let weight = match fields.get(2) {
+                None => 1u32,
+                Some(w) => {
+                    let w = w
+                        .strip_prefix('w')
+                        .ok_or_else(|| anyhow!("tenant class {part:?}: weight must be w<n>"))?;
+                    let w: u32 =
+                        w.parse().map_err(|_| anyhow!("tenant class {part:?} has a bad weight"))?;
+                    if w == 0 {
+                        bail!("tenant class {part:?} needs a weight >= 1");
+                    }
+                    w
+                }
+            };
+            if classes.iter().any(|c: &TenantClass| c.name == name) {
+                bail!("tenant class {name:?} appears twice in {spec:?}");
+            }
+            classes.push(TenantClass { name: name.to_string(), share, weight });
+        }
+        if classes.len() > MAX_CLASSES {
+            bail!("tenant mix {spec:?} has more than {MAX_CLASSES} classes");
+        }
+        let sum: f64 = classes.iter().map(|c| c.share).sum();
+        if (sum - 1.0).abs() > 1e-6 {
+            bail!("tenant mix shares must sum to 1, got {sum} in {spec:?}");
+        }
+        Ok(TenantMix { classes })
+    }
+
+    /// Class id of `name` (position in the grammar), case-insensitive.
+    pub fn class_id(&self, name: &str) -> Option<u8> {
+        self.classes.iter().position(|c| c.name.eq_ignore_ascii_case(name)).map(|i| i as u8)
+    }
+
+    /// The WFQ weight table the scheduler consumes (unconfigured slots
+    /// default to weight 1).
+    pub fn weights(&self) -> [u32; MAX_CLASSES] {
+        let mut w = [1u32; MAX_CLASSES];
+        for (i, c) in self.classes.iter().enumerate().take(MAX_CLASSES) {
+            w[i] = c.weight;
+        }
+        w
+    }
+
+    /// Round-trippable spec string (`name:share:w<weight>,...`) for
+    /// config echoes.
+    pub fn label(&self) -> String {
+        self.classes
+            .iter()
+            .map(|c| format!("{}:{}:w{}", c.name, c.share, c.weight))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Assign classes to a materialized trace by the mix shares.  The
+    /// draw uses its own stream derived from `seed`, so a trace with a
+    /// tenant mix keeps the exact shapes/arrivals of the same trace
+    /// without one — classes ride on top.
+    pub fn assign(&self, requests: &mut [TrafficRequest], seed: u64) {
+        if self.classes.len() <= 1 {
+            return;
+        }
+        let mut rng = Rng::seed_from(seed ^ 0x7E4A_47C1);
+        for r in requests.iter_mut() {
+            let u = rng.f64();
+            let mut acc = 0.0;
+            let mut class = self.classes.len() - 1;
+            for (i, c) in self.classes.iter().enumerate() {
+                acc += c.share;
+                if u < acc {
+                    class = i;
+                    break;
+                }
+            }
+            r.class = class as u8;
+        }
     }
 }
 
@@ -176,7 +312,11 @@ impl ArrivalPattern {
                 *rate_rps
             }
             ArrivalPattern::Replay { times_s } => {
-                let span = times_s.last().copied().unwrap_or(0.0);
+                // the span is the *largest* offset: recorded traces are
+                // not required to be sorted (arrival_times sorts a
+                // copy), so `last()` would under- or over-state the
+                // rate for an unsorted capture
+                let span = times_s.iter().copied().fold(0.0f64, f64::max);
                 if span > 0.0 {
                     times_s.len() as f64 / span
                 } else {
@@ -209,12 +349,23 @@ impl ArrivalPattern {
                 if *mean_burst_s <= 0.0 || *mean_calm_s <= 0.0 {
                     bail!("burst sojourn means must be > 0 s");
                 }
-                // time fraction spent bursting, and the calm rate that
-                // keeps the weighted mean at rate_rps (floored at 2% of
-                // the mean so the calm state still trickles)
+                // time fraction spent bursting, and the exact calm
+                // rate that keeps the weighted mean at rate_rps.  No
+                // silent floor: a config whose bursts already carry
+                // the whole mean (burst_factor × f ≥ 1) has no
+                // non-negative calm rate that preserves the mean, so
+                // it is rejected instead of quietly exceeding the
+                // configured rate.
                 let f = mean_burst_s / (mean_burst_s + mean_calm_s);
                 let hi = rate_rps * burst_factor;
-                let lo = ((rate_rps - f * hi) / (1.0 - f)).max(rate_rps * 0.02);
+                let lo = (rate_rps - f * hi) / (1.0 - f);
+                if lo <= 0.0 {
+                    bail!(
+                        "burst config cannot preserve the mean rate: burst_factor {burst_factor} \
+                         over a {f:.3} burst time-fraction concentrates >= the whole mean into \
+                         bursts; lower burst_factor or shorten bursts"
+                    );
+                }
                 let mut out = Vec::with_capacity(n);
                 let mut t = 0.0;
                 let mut bursting = false;
@@ -299,6 +450,39 @@ pub struct TraceRecord {
     /// prompt) — 0 on legacy lines and on 4-field capture lines
     /// written before the column existed.
     pub shared_prefix_tokens: usize,
+    /// SLO class (tenant tier) — 0 on legacy lines and on 4/5-field
+    /// capture lines written before the column existed.
+    pub class: u8,
+}
+
+impl Default for TraceRecord {
+    fn default() -> TraceRecord {
+        TraceRecord {
+            arrival_s: 0.0,
+            prompt_tokens: None,
+            output_tokens: None,
+            deadline_s: None,
+            shared_prefix_tokens: 0,
+            class: 0,
+        }
+    }
+}
+
+/// Format one deadline for the capture's `deadline_ms|-` column so the
+/// round-trip is **bit-exact**: in milliseconds when `ms × 1e-3`
+/// reproduces the seconds value (every `X-Deadline-Ms`-derived
+/// deadline does), otherwise in shortest-round-trip seconds with an
+/// `s` suffix.  Writing `deadline_s * 1e3` and reading back `ms × 1e-3`
+/// double-rounds and can perturb a replayed deadline by 1 ulp — enough
+/// to flip a timeout-kill decision and break capture→replay
+/// byte-identity.
+fn format_deadline(dl_s: f64) -> String {
+    let ms = dl_s * 1e3;
+    if ms.is_finite() && ms * 1e-3 == dl_s {
+        format!("{ms}")
+    } else {
+        format!("{dl_s}s")
+    }
 }
 
 /// Parse a replay trace.  Two line grammars, mixable with blank lines
@@ -306,9 +490,11 @@ pub struct TraceRecord {
 ///
 /// * legacy: `<arrival_s>` — one f64 seconds-offset per request;
 /// * capture v1: `<arrival_s> <prompt_tokens> <output_tokens>
-///   <deadline_ms|-> [<shared_prefix_tokens>]` — what
-///   [`format_capture`] writes; the trailing shared-prefix column
-///   defaults to 0 when absent (earlier captures had 4 fields).
+///   <deadline_ms|-> [<shared_prefix_tokens> [<class>]]` — what
+///   [`format_capture`] writes; the trailing shared-prefix and class
+///   columns default to 0 when absent (earlier captures had 4 or 5
+///   fields).  A deadline with an `s` suffix is exact seconds (written
+///   when the value does not round-trip through milliseconds).
 pub fn parse_trace_records(text: &str) -> Result<Vec<TraceRecord>> {
     let mut out = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
@@ -324,14 +510,8 @@ pub fn parse_trace_records(text: &str) -> Result<Vec<TraceRecord>> {
             return Err(err("has a negative or non-finite arrival offset"));
         }
         let rec = match fields.len() {
-            1 => TraceRecord {
-                arrival_s,
-                prompt_tokens: None,
-                output_tokens: None,
-                deadline_s: None,
-                shared_prefix_tokens: 0,
-            },
-            4 | 5 => {
+            1 => TraceRecord { arrival_s, ..TraceRecord::default() },
+            4 | 5 | 6 => {
                 let prompt: usize =
                     fields[1].parse().map_err(|_| err("has a bad prompt length"))?;
                 let output: usize =
@@ -341,9 +521,18 @@ pub fn parse_trace_records(text: &str) -> Result<Vec<TraceRecord>> {
                 }
                 let deadline_s = if fields[3] == "-" {
                     None
+                } else if let Some(sec) = fields[3].strip_suffix('s') {
+                    // exact-seconds escape for deadlines that don't
+                    // round-trip through the millisecond column
+                    let s: f64 =
+                        sec.parse().map_err(|_| err("has a bad deadline (ms, <s>s, or -)"))?;
+                    if !s.is_finite() || s <= 0.0 {
+                        return Err(err("needs a positive deadline or -"));
+                    }
+                    Some(s)
                 } else {
                     let ms: f64 =
-                        fields[3].parse().map_err(|_| err("has a bad deadline (ms or -)"))?;
+                        fields[3].parse().map_err(|_| err("has a bad deadline (ms, <s>s, or -)"))?;
                     if !ms.is_finite() || ms <= 0.0 {
                         return Err(err("needs a positive deadline (ms) or -"));
                     }
@@ -360,15 +549,26 @@ pub fn parse_trace_records(text: &str) -> Result<Vec<TraceRecord>> {
                     }
                     None => 0,
                 };
+                let class = match fields.get(5) {
+                    Some(f) => {
+                        let class: u8 = f.parse().map_err(|_| err("has a bad class id"))?;
+                        if class as usize >= MAX_CLASSES {
+                            return Err(err("has a class id beyond the class table"));
+                        }
+                        class
+                    }
+                    None => 0,
+                };
                 TraceRecord {
                     arrival_s,
                     prompt_tokens: Some(prompt),
                     output_tokens: Some(output),
                     deadline_s,
                     shared_prefix_tokens,
+                    class,
                 }
             }
-            _ => return Err(err("has neither 1 field (legacy) nor 4-5 (capture v1)")),
+            _ => return Err(err("has neither 1 field (legacy) nor 4-6 (capture v1)")),
         };
         out.push(rec);
     }
@@ -389,24 +589,26 @@ pub fn parse_trace(text: &str) -> Result<Vec<f64>> {
 /// which is what makes a captured session a byte-reproducible replay.
 pub fn format_capture(records: &[TraceRecord]) -> String {
     let mut out = String::from(
-        "# platinum capture v1\n# arrival_s prompt_tokens output_tokens deadline_ms|- shared_prefix_tokens\n",
+        "# platinum capture v1\n# arrival_s prompt_tokens output_tokens deadline_ms|- shared_prefix_tokens [class]\n",
     );
     for r in records {
         let prompt = r.prompt_tokens.unwrap_or(1);
         let output = r.output_tokens.unwrap_or(1);
         let shared = r.shared_prefix_tokens;
-        match r.deadline_s {
-            Some(dl) => out.push_str(&format!(
-                "{} {} {} {} {}\n",
-                r.arrival_s,
-                prompt,
-                output,
-                dl * 1e3,
-                shared
-            )),
-            None => {
-                out.push_str(&format!("{} {} {} - {}\n", r.arrival_s, prompt, output, shared))
-            }
+        let dl = match r.deadline_s {
+            Some(dl) => format_deadline(dl),
+            None => "-".to_string(),
+        };
+        // the class column is written only when nonzero, so
+        // single-tenant captures stay byte-identical to the pre-class
+        // grammar
+        if r.class > 0 {
+            out.push_str(&format!(
+                "{} {} {} {} {} {}\n",
+                r.arrival_s, prompt, output, dl, shared, r.class
+            ));
+        } else {
+            out.push_str(&format!("{} {} {} {} {}\n", r.arrival_s, prompt, output, dl, shared));
         }
     }
     out
@@ -509,6 +711,7 @@ mod tests {
                 output_tokens: Some(4),
                 deadline_s: Some(0.25),
                 shared_prefix_tokens: 3,
+                class: 0,
             },
             TraceRecord {
                 arrival_s: 1.0625,
@@ -516,6 +719,7 @@ mod tests {
                 output_tokens: Some(2),
                 deadline_s: None,
                 shared_prefix_tokens: 0,
+                class: 2,
             },
         ];
         let text = format_capture(&recs);
@@ -544,7 +748,153 @@ mod tests {
             parse_trace_records("0.1 8 4 - 9\n").is_err(),
             "shared prefix cannot exceed the prompt"
         );
-        assert!(parse_trace_records("0.1 8 4 - 0 7\n").is_err(), "6-field lines are malformed");
+        // class column: parses, bounds-checked, zero is implicit
+        let classed = parse_trace_records("0.1 8 4 - 0 3\n").unwrap();
+        assert_eq!(classed[0].class, 3);
+        assert!(parse_trace_records("0.1 8 4 - 0 7\n").is_err(), "class beyond the table");
+        assert!(parse_trace_records("0.1 8 4 - 0 batch\n").is_err(), "non-numeric class");
+        assert!(parse_trace_records("0.1 8 4 - 0 1 9\n").is_err(), "7-field lines are malformed");
+        // a class-0 record serializes without the column (legacy bytes)
+        let zero = TraceRecord {
+            arrival_s: 0.5,
+            prompt_tokens: Some(4),
+            output_tokens: Some(2),
+            ..TraceRecord::default()
+        };
+        assert!(format_capture(&[zero]).ends_with("0.5 4 2 - 0\n"));
+    }
+
+    #[test]
+    fn deadline_round_trip_is_bit_exact() {
+        // awkward values: decimals, 1 ulp past a millisecond boundary,
+        // huge, tiny, and a seeded sweep — every deadline must come
+        // back bit-identical through format_capture → parse
+        let mut awkward = vec![
+            0.1,
+            0.25,
+            1e-3,
+            f64::from_bits((1e-3f64).to_bits() + 1),
+            f64::from_bits((0.1f64).to_bits() - 1),
+            12345.6789,
+            1e9,
+            1e-9,
+            0.017,
+            2.0 / 3.0,
+        ];
+        let mut rng = Rng::seed_from(99);
+        for _ in 0..500 {
+            awkward.push(rng.exponential(10.0).max(1e-12));
+        }
+        for dl in awkward {
+            let rec = TraceRecord {
+                arrival_s: 0.0,
+                prompt_tokens: Some(4),
+                output_tokens: Some(2),
+                deadline_s: Some(dl),
+                ..TraceRecord::default()
+            };
+            let text = format_capture(&[rec]);
+            let back = parse_trace_records(&text).unwrap();
+            assert_eq!(
+                back[0].deadline_s.unwrap().to_bits(),
+                dl.to_bits(),
+                "deadline {dl:?} must round-trip bit-exactly via {text:?}"
+            );
+        }
+        // ms-representable deadlines keep the plain millisecond column
+        let text = format_capture(&[TraceRecord {
+            arrival_s: 0.0,
+            prompt_tokens: Some(4),
+            output_tokens: Some(2),
+            deadline_s: Some(0.25),
+            ..TraceRecord::default()
+        }]);
+        assert!(text.contains(" 250 "), "{text:?}");
+    }
+
+    #[test]
+    fn replay_rate_uses_max_offset_even_when_unsorted() {
+        // 3 requests over a 2 s span; the last *element* is not the
+        // last *arrival*
+        let p = ArrivalPattern::Replay { times_s: vec![2.0, 0.5, 1.0] };
+        assert!((p.rate_rps() - 1.5).abs() < 1e-12, "rate {}", p.rate_rps());
+        // sorted traces are unchanged
+        let sorted = ArrivalPattern::Replay { times_s: vec![0.5, 1.0, 2.0] };
+        assert_eq!(p.rate_rps(), sorted.rate_rps());
+    }
+
+    #[test]
+    fn burst_rejects_configs_that_cannot_preserve_the_mean() {
+        let mut rng = Rng::seed_from(1);
+        // f = 0.5/2.5 = 0.2; burst_factor 5 puts the whole mean into
+        // bursts (calm rate 0) — rejected at the boundary
+        let bad = ArrivalPattern::Burst {
+            rate_rps: 50.0,
+            burst_factor: 5.0,
+            mean_burst_s: 0.5,
+            mean_calm_s: 2.0,
+        };
+        assert!(bad.arrival_times(16, &mut rng).is_err());
+        let worse = ArrivalPattern::Burst {
+            rate_rps: 50.0,
+            burst_factor: 8.0,
+            mean_burst_s: 0.5,
+            mean_calm_s: 2.0,
+        };
+        assert!(worse.arrival_times(16, &mut rng).is_err());
+        // just inside the boundary: accepted, and the calm rate is the
+        // exact mean-preserving solution (no silent 2% floor)
+        let ok = ArrivalPattern::Burst {
+            rate_rps: 50.0,
+            burst_factor: 4.99,
+            mean_burst_s: 0.5,
+            mean_calm_s: 2.0,
+        };
+        assert!(ok.arrival_times(16, &mut rng).is_ok());
+    }
+
+    #[test]
+    fn tenant_mix_parses_assigns_and_stays_deterministic() {
+        let mix = TenantMix::parse("interactive:0.7:w4,batch:0.3:w1").unwrap();
+        assert_eq!(mix.classes.len(), 2);
+        assert_eq!(mix.classes[0].name, "interactive");
+        assert_eq!(mix.classes[0].weight, 4);
+        assert_eq!(mix.class_id("BATCH"), Some(1));
+        assert_eq!(mix.class_id("free"), None);
+        assert_eq!(mix.weights(), [4, 1, 1, 1]);
+        // grammar strictness
+        assert!(TenantMix::parse("a:0.5,b:0.6").is_err(), "shares must sum to 1");
+        assert!(TenantMix::parse("a:0.5:4,b:0.5").is_err(), "weight needs the w prefix");
+        assert!(TenantMix::parse("a:0.5:w0,b:0.5").is_err(), "zero weight");
+        assert!(TenantMix::parse("a:0.5,a:0.5").is_err(), "duplicate name");
+        assert!(TenantMix::parse("a:0.2,b:0.2,c:0.2,d:0.2,e:0.2").is_err(), "too many classes");
+        // assignment: deterministic, share-accurate, and shape-neutral
+        let s = spec(ArrivalPattern::Poisson { rate_rps: 50.0 });
+        let plain = s.generate().unwrap();
+        let mut a = plain.clone();
+        mix.assign(&mut a, s.seed);
+        let mut b = plain.clone();
+        mix.assign(&mut b, s.seed);
+        assert_eq!(a, b, "same seed must give the identical class assignment");
+        let interactive = a.iter().filter(|r| r.class == 0).count();
+        assert!(
+            (interactive as f64 / a.len() as f64 - 0.7).abs() < 0.08,
+            "share {interactive}/{}",
+            a.len()
+        );
+        assert!(a.iter().any(|r| r.class == 1));
+        // shapes/arrivals are untouched — classes ride on top
+        for (r, p) in a.iter().zip(&plain) {
+            assert_eq!(
+                (r.arrival_s, r.prompt_tokens, r.output_tokens),
+                (p.arrival_s, p.prompt_tokens, p.output_tokens)
+            );
+        }
+        // single-class mixes are a no-op
+        let solo = TenantMix::parse("all:1.0:w2").unwrap();
+        let mut c = plain.clone();
+        solo.assign(&mut c, s.seed);
+        assert_eq!(c, plain);
     }
 
     #[test]

@@ -123,6 +123,70 @@ impl Histogram {
     }
 }
 
+/// Per-SLO-class slice of the serving metrics (multi-tenant runs): the
+/// latency histograms and admission counters that measure one class's
+/// service quality — and its interference with the others.  Indexed by
+/// class id; serialized as the conditional `classes` array of
+/// [`TrafficMetrics::to_json`].
+#[derive(Debug, Clone, Default)]
+pub struct ClassMetrics {
+    pub ttft: Histogram,
+    pub tpot: Histogram,
+    pub e2e: Histogram,
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    /// Brownout sheds charged to this class's queue.
+    pub shed: u64,
+    /// Output tokens of completed requests (per-class goodput
+    /// numerator).
+    pub completed_tokens: u64,
+}
+
+impl ClassMetrics {
+    /// Whether the class saw any traffic at all (trailing inactive
+    /// classes are trimmed from the serialized array).
+    pub fn active(&self) -> bool {
+        self.offered > 0
+            || self.admitted > 0
+            || self.rejected > 0
+            || self.completed > 0
+            || self.shed > 0
+    }
+
+    /// The per-class entry of the `classes` metrics array.
+    pub fn to_json(&self, makespan_s: f64) -> Json {
+        let goodput = if makespan_s > 0.0 {
+            self.completed_tokens as f64 / makespan_s
+        } else {
+            0.0
+        };
+        obj(vec![
+            (
+                "counts",
+                obj(vec![
+                    ("offered", num(self.offered as f64)),
+                    ("admitted", num(self.admitted as f64)),
+                    ("rejected", num(self.rejected as f64)),
+                    ("completed", num(self.completed as f64)),
+                    ("shed", num(self.shed as f64)),
+                ]),
+            ),
+            (
+                "latency_s",
+                obj(vec![
+                    ("ttft", self.ttft.to_json()),
+                    ("tpot", self.tpot.to_json()),
+                    ("e2e", self.e2e.to_json()),
+                ]),
+            ),
+            ("completed_output_tokens", num(self.completed_tokens as f64)),
+            ("goodput_tokens_per_s", num(goodput)),
+        ])
+    }
+}
+
 /// One per-step sample of the time series.
 #[derive(Debug, Clone, Copy)]
 pub struct StepSample {
@@ -186,6 +250,12 @@ pub struct TrafficMetrics {
     /// End-of-run KV-cache snapshot (block utilization, prefix-cache
     /// hits, swap/recompute pressure, DRAM row-buffer locality).
     pub kv: KvStats,
+
+    /// Per-SLO-class metrics, indexed by class id — `Some` only when
+    /// more than one class was configured or a request carried a
+    /// nonzero class, so single-tenant runs serialize byte-identically
+    /// to the pre-class era.
+    pub classes: Option<Vec<ClassMetrics>>,
 
     /// Fault-injection / SLO-resilience counters — `Some` only when a
     /// fault plan or a resilience response was active, so fault-free
@@ -314,6 +384,13 @@ impl TrafficMetrics {
             ),
             ("kv", self.kv.to_json()),
         ];
+        // conditional so single-tenant runs stay byte-identical
+        if let Some(classes) = &self.classes {
+            fields.push((
+                "classes",
+                arr(classes.iter().map(|c| c.to_json(makespan)).collect()),
+            ));
+        }
         // conditional so fault-free runs stay byte-identical
         if let Some(res) = &self.resilience {
             fields.push(("resilience", res.to_json()));
@@ -425,6 +502,43 @@ mod tests {
             text.find("\"series\"").unwrap(),
         );
         assert!(kv < res && res < ser, "{text}");
+    }
+
+    #[test]
+    fn classes_section_appears_only_when_present() {
+        let mut m = TrafficMetrics::new();
+        assert!(
+            !m.to_json().to_string().contains("\"classes\""),
+            "single-tenant runs must not emit the section"
+        );
+        let mut interactive = ClassMetrics::default();
+        interactive.offered = 5;
+        interactive.completed = 4;
+        interactive.completed_tokens = 40;
+        interactive.ttft.record(0.01);
+        let batch = ClassMetrics::default();
+        assert!(interactive.active());
+        assert!(!batch.active());
+        m.classes = Some(vec![interactive, batch]);
+        m.makespan_s = 10.0;
+        let j = m.to_json();
+        let cls = j.get("classes").unwrap().as_arr().unwrap();
+        assert_eq!(cls.len(), 2);
+        let c0 = &cls[0];
+        assert_eq!(c0.get("counts").unwrap().get("offered").unwrap().as_f64(), Some(5.0));
+        assert_eq!(c0.get("goodput_tokens_per_s").unwrap().as_f64(), Some(4.0));
+        assert_eq!(
+            c0.get("latency_s").unwrap().get("ttft").unwrap().get("count").unwrap().as_f64(),
+            Some(1.0)
+        );
+        // placement: after kv, before resilience/series
+        let text = j.to_string();
+        let (kv, cl, ser) = (
+            text.find("\"kv\"").unwrap(),
+            text.find("\"classes\"").unwrap(),
+            text.find("\"series\"").unwrap(),
+        );
+        assert!(kv < cl && cl < ser, "{text}");
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! * [`loadgen`] — deterministic open-loop load: Poisson, bursty
 //!   (2-state MMPP), and trace-replay arrivals with configurable
 //!   prompt/output length distributions, materialized up front from one
-//!   seed.
+//!   seed; a [`TenantMix`] assigns SLO classes (multi-tenant) on top.
 //! * [`metrics`] — TTFT / TPOT / end-to-end / queue-wait percentiles
 //!   from fixed-bucket log histograms, queue-depth and batch-size time
 //!   series, goodput vs. offered load; JSON via [`crate::util::json`].
@@ -57,9 +57,9 @@ pub mod source;
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use loadgen::{
     format_capture, parse_trace, parse_trace_records, with_shared_prefix, ArrivalPattern, LenDist,
-    LoadSpec, TraceRecord, TrafficRequest,
+    LoadSpec, TenantClass, TenantMix, TraceRecord, TrafficRequest, MAX_CLASSES,
 };
-pub use metrics::{Histogram, StepSample, TrafficMetrics};
+pub use metrics::{ClassMetrics, Histogram, StepSample, TrafficMetrics};
 pub use scheduler::{
     decode_capacity_tok_s, ExecutorBridge, RunResult, Scheduler, SchedulerConfig, StepExecutor,
     StepKind, StepRecord,

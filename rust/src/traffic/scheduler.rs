@@ -39,8 +39,8 @@
 //! byte-identical across worker-pool sizes {1, 8}.
 
 use super::clock::Clock;
-use super::loadgen::TrafficRequest;
-use super::metrics::{StepSample, TrafficMetrics};
+use super::loadgen::{TrafficRequest, MAX_CLASSES};
+use super::metrics::{ClassMetrics, StepSample, TrafficMetrics};
 use super::source::{ArrivalSource, Outcome, TraceSource};
 use crate::coordinator::serve::Executor;
 use crate::engine::{Backend, Workload};
@@ -72,6 +72,24 @@ pub struct SchedulerConfig {
     /// SLO responses (deadlines, retries, brownout) — inert by default;
     /// see [`ResilienceConfig`].
     pub resilience: ResilienceConfig,
+    /// Chunked prefill: cap on one sequence's *computed* prompt tokens
+    /// per prefill step.  A prompt larger than the chunk carries its
+    /// remainder across steps (interleaving decode steps between
+    /// chunks), so long prompts stop monopolizing whole steps.  0
+    /// disables chunking (prompts prefill whole — the legacy
+    /// behaviour); any chunk ≥ the longest prompt is decision-identical
+    /// to 0.
+    pub prefill_chunk: usize,
+    /// Number of SLO classes configured (1 = single-tenant legacy; the
+    /// per-class metrics section appears only beyond 1 or when a
+    /// request carries a nonzero class).
+    pub classes: usize,
+    /// Weighted-fair-queueing weights per class id: under competition a
+    /// class's in-flight token reservation is bounded by its weighted
+    /// share of `max_inflight_tokens`; a lone class keeps the whole
+    /// budget (work conservation), so single-tenant runs are
+    /// decision-identical to the pre-class scheduler.
+    pub class_weights: [u32; MAX_CLASSES],
 }
 
 impl Default for SchedulerConfig {
@@ -84,6 +102,9 @@ impl Default for SchedulerConfig {
             step_overhead_s: 0.0,
             kv: KvConfig::default(),
             resilience: ResilienceConfig::default(),
+            prefill_chunk: 0,
+            classes: 1,
+            class_weights: [1; MAX_CLASSES],
         }
     }
 }
@@ -203,24 +224,77 @@ impl Seq {
     }
 }
 
+/// What completing a prompt emits at the end of its prefill step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Emit {
+    /// The prompt's first output token (a TTFT sample).
+    First,
+    /// The next token of a re-prefill after recompute preemption (a
+    /// TPOT sample over the preemption gap).
+    Next,
+}
+
 /// One sequence entering the upcoming coalesced prefill step.
 struct PrefillSeq {
     seq: Seq,
-    /// First admission (counts admitted / queue-wait / TTFT) — as
-    /// opposed to a re-prefill after recompute preemption.
-    fresh: bool,
+    /// First admission this step (counts admitted / queue-wait /
+    /// prompt tokens).
+    admit: bool,
+    /// Computed prompt tokens still owed after this step — 0 means the
+    /// prompt completes and `done_emit` fires (chunked prefill carries
+    /// a nonzero remainder across steps).
+    remaining: usize,
+    done_emit: Emit,
+    /// Continuation of an already-partial prompt (ordering: unfinished
+    /// continuations re-enter ahead of freshly chunked admissions).
+    from_partial: bool,
 }
 
-/// Hardened in-flight token release: an underflow (releasing more
-/// tokens than were reserved) is a checked error counted into the run's
-/// `kv.leaks.token_release_underflows` — visible in release builds, not
-/// just a debug assert — and the reservation counter saturates instead
-/// of wrapping.
-fn release_inflight(inflight_tokens: &mut usize, reserve: usize, underflows: &mut u64) {
-    if *inflight_tokens < reserve {
-        *underflows += 1;
+/// A partially-prefilled sequence between chunk steps (chunked
+/// prefill): it holds its KV reservation and in-flight tokens but has
+/// not emitted its first token yet.
+struct Partial {
+    seq: Seq,
+    /// Computed prompt tokens still owed.
+    remaining: usize,
+    done_emit: Emit,
+}
+
+/// Queue/accounting index of one request's SLO class; ids beyond the
+/// fixed table clamp into the last slot.
+fn class_of(r: &TrafficRequest) -> usize {
+    (r.class as usize).min(MAX_CLASSES - 1)
+}
+
+/// In-flight token reservation, tracked globally and per SLO class
+/// (the WFQ share accounting).  Hardened like the legacy counter: an
+/// underflow (releasing more tokens than were reserved) is a checked
+/// error counted into the run's
+/// `kv.leaks.token_release_underflows` — visible in release builds,
+/// not just a debug assert — and the counters saturate instead of
+/// wrapping.
+struct Inflight {
+    total: usize,
+    per_class: [usize; MAX_CLASSES],
+}
+
+impl Inflight {
+    fn new() -> Inflight {
+        Inflight { total: 0, per_class: [0; MAX_CLASSES] }
     }
-    *inflight_tokens = inflight_tokens.saturating_sub(reserve);
+
+    fn reserve(&mut self, class: usize, n: usize) {
+        self.total += n;
+        self.per_class[class] += n;
+    }
+
+    fn release(&mut self, class: usize, n: usize, underflows: &mut u64) {
+        if self.total < n || self.per_class[class] < n {
+            *underflows += 1;
+        }
+        self.total = self.total.saturating_sub(n);
+        self.per_class[class] = self.per_class[class].saturating_sub(n);
+    }
 }
 
 /// Re-enter a rejected / timed-out / failed attempt into the arrival
@@ -417,7 +491,17 @@ impl<'a> Scheduler<'a> {
 
         let mut metrics = TrafficMetrics::new();
         let mut steps: Vec<StepRecord> = Vec::new();
-        let mut queue: VecDeque<TrafficRequest> = VecDeque::new();
+        // per-SLO-class waiting queues (single-tenant runs only ever
+        // populate class 0, reducing to the legacy FCFS queue)
+        let mut queues: [VecDeque<TrafficRequest>; MAX_CLASSES] =
+            std::array::from_fn(|_| VecDeque::new());
+        let weights = self.cfg.class_weights;
+        let chunk = self.cfg.prefill_chunk;
+        // emits the per-class metrics section at drain; flips on the
+        // moment a request carrying a nonzero class arrives, so tagged
+        // live traffic is measurable without any class table configured
+        let mut classes_on = self.cfg.classes > 1;
+        let mut cls: [ClassMetrics; MAX_CLASSES] = std::array::from_fn(|_| ClassMetrics::default());
         // recompute-preempted sequences awaiting re-prefill (already
         // admitted: they keep their token reservation and re-enter
         // ahead of fresh arrivals)
@@ -425,12 +509,17 @@ impl<'a> Scheduler<'a> {
         // swap-preempted sequences whose private blocks sit in swap
         // space; resumed FCFS as blocks free up
         let mut swapped: VecDeque<Seq> = VecDeque::new();
+        // partially-prefilled prompts between chunk steps (chunked
+        // prefill only; empty whenever `prefill_chunk` covers every
+        // prompt, which is what keeps ample budgets decision-identical)
+        let mut prefilling: VecDeque<Partial> = VecDeque::new();
         let mut running: Vec<Seq> = Vec::new();
         // retried attempts waiting to re-arrive, in timeline order
         let mut retries: BTreeMap<(u64, u64), TrafficRequest> = BTreeMap::new();
         let mut attempts: BTreeMap<u64, u32> = BTreeMap::new();
-        let mut inflight_tokens = 0usize;
+        let mut inflight = Inflight::new();
         let mut underflows = 0u64;
+        let mut last_kind: Option<StepKind> = None;
         // cancellations whose request has not been located yet (it may
         // still be pending inside the source), each with a remaining-
         // iterations TTL so stale ids age out instead of accumulating
@@ -462,6 +551,10 @@ impl<'a> Scheduler<'a> {
                 let r = if take_arrival {
                     let r = source.pop_due(now).expect("due arrival vanished");
                     metrics.offered += 1; // a retry is NOT a new offer
+                    cls[class_of(&r)].offered += 1;
+                    if r.class > 0 {
+                        classes_on = true;
+                    }
                     if r.deadline_s.is_some() {
                         resilience_on = true;
                         req_deadlines = true;
@@ -482,8 +575,10 @@ impl<'a> Scheduler<'a> {
                 } else {
                     retries.remove(&retry_key.unwrap()).unwrap()
                 };
-                if queue.len() >= self.cfg.max_queue {
+                let waiting: usize = queues.iter().map(|q| q.len()).sum();
+                if waiting >= self.cfg.max_queue {
                     metrics.rejected += 1;
+                    cls[class_of(&r)].rejected += 1;
                     if resilience_on {
                         if !schedule_retry(r, now, &rc, &mut attempts, &mut retries, &mut res) {
                             finish_request(
@@ -504,7 +599,7 @@ impl<'a> Scheduler<'a> {
                         );
                     }
                 } else {
-                    queue.push_back(r);
+                    queues[class_of(&r)].push_back(r);
                 }
             }
 
@@ -525,18 +620,20 @@ impl<'a> Scheduler<'a> {
             }
             if sweep {
                 let mut killed: Vec<u64> = Vec::new();
-                queue.retain(|r| {
-                    let hit = cancel_wanted.contains_key(&r.id);
-                    if hit {
-                        killed.push(r.id);
-                    }
-                    !hit
-                });
+                for q in queues.iter_mut() {
+                    q.retain(|r| {
+                        let hit = cancel_wanted.contains_key(&r.id);
+                        if hit {
+                            killed.push(r.id);
+                        }
+                        !hit
+                    });
+                }
                 requeued.retain(|s| {
                     let hit = cancel_wanted.contains_key(&s.req.id);
                     if hit {
-                        release_inflight(
-                            &mut inflight_tokens,
+                        inflight.release(
+                            class_of(&s.req),
                             s.req.reserved_tokens(),
                             &mut underflows,
                         );
@@ -544,12 +641,25 @@ impl<'a> Scheduler<'a> {
                     }
                     !hit
                 });
+                prefilling.retain(|p| {
+                    let hit = cancel_wanted.contains_key(&p.seq.req.id);
+                    if hit {
+                        kv.release(p.seq.req.id);
+                        inflight.release(
+                            class_of(&p.seq.req),
+                            p.seq.req.reserved_tokens(),
+                            &mut underflows,
+                        );
+                        killed.push(p.seq.req.id);
+                    }
+                    !hit
+                });
                 swapped.retain(|s| {
                     let hit = cancel_wanted.contains_key(&s.req.id);
                     if hit {
                         kv.release_swapped(s.req.id);
-                        release_inflight(
-                            &mut inflight_tokens,
+                        inflight.release(
+                            class_of(&s.req),
                             s.req.reserved_tokens(),
                             &mut underflows,
                         );
@@ -561,8 +671,8 @@ impl<'a> Scheduler<'a> {
                     let hit = cancel_wanted.contains_key(&s.req.id);
                     if hit {
                         kv.release(s.req.id);
-                        release_inflight(
-                            &mut inflight_tokens,
+                        inflight.release(
+                            class_of(&s.req),
                             s.req.reserved_tokens(),
                             &mut underflows,
                         );
@@ -606,20 +716,22 @@ impl<'a> Scheduler<'a> {
                     effective_deadline(r, &rc).is_some_and(|dl| now - r.arrival_s > dl)
                 };
                 let mut killed: Vec<TrafficRequest> = Vec::new();
-                queue.retain(|r| {
-                    let dead = overdue(r);
-                    if dead {
-                        killed.push(*r);
-                    }
-                    !dead
-                });
+                for q in queues.iter_mut() {
+                    q.retain(|r| {
+                        let dead = overdue(r);
+                        if dead {
+                            killed.push(*r);
+                        }
+                        !dead
+                    });
+                }
                 requeued.retain(|s| {
                     let dead = overdue(&s.req);
                     if dead {
                         // recompute-preempted: blocks already dropped,
                         // only the token reservation is held
-                        release_inflight(
-                            &mut inflight_tokens,
+                        inflight.release(
+                            class_of(&s.req),
                             s.req.reserved_tokens(),
                             &mut underflows,
                         );
@@ -627,12 +739,25 @@ impl<'a> Scheduler<'a> {
                     }
                     !dead
                 });
+                prefilling.retain(|p| {
+                    let dead = overdue(&p.seq.req);
+                    if dead {
+                        kv.release(p.seq.req.id);
+                        inflight.release(
+                            class_of(&p.seq.req),
+                            p.seq.req.reserved_tokens(),
+                            &mut underflows,
+                        );
+                        killed.push(p.seq.req);
+                    }
+                    !dead
+                });
                 swapped.retain(|s| {
                     let dead = overdue(&s.req);
                     if dead {
                         kv.release_swapped(s.req.id);
-                        release_inflight(
-                            &mut inflight_tokens,
+                        inflight.release(
+                            class_of(&s.req),
                             s.req.reserved_tokens(),
                             &mut underflows,
                         );
@@ -644,8 +769,8 @@ impl<'a> Scheduler<'a> {
                     let dead = overdue(&s.req);
                     if dead {
                         kv.release(s.req.id);
-                        release_inflight(
-                            &mut inflight_tokens,
+                        inflight.release(
+                            class_of(&s.req),
                             s.req.reserved_tokens(),
                             &mut underflows,
                         );
@@ -667,29 +792,40 @@ impl<'a> Scheduler<'a> {
                 }
             }
 
-            // (1c) brownout load-shedding: at or beyond the trigger
-            // depth, queued attempts without enough deadline slack are
-            // dropped outright — shedding to the retry path would
-            // defeat the point of shedding load
-            if rc.brownout_queue > 0 && queue.len() >= rc.brownout_queue {
-                queue.retain(|r| match effective_deadline(r, &rc) {
-                    Some(dl) => {
-                        let keep = r.arrival_s + dl - now >= rc.brownout_slack_s;
-                        if !keep {
-                            res.shed += 1;
-                            finish_request(
-                                source,
-                                &mut attempts,
-                                &mut cancel_wanted,
-                                r.id,
-                                Outcome::Shed,
-                            );
-                        }
-                        keep
+            // (1c) brownout load-shedding, evaluated **per SLO class**:
+            // a class whose own queue is at or beyond the trigger depth
+            // sheds its queued attempts without enough deadline slack —
+            // one saturated batch tenant browns out alone instead of
+            // dragging every class down (single-tenant runs only ever
+            // populate class 0, so this is the legacy global trigger).
+            // Shedding to the retry path would defeat the point of
+            // shedding load, so sheds are terminal.
+            if rc.brownout_queue > 0 {
+                for (c, q) in queues.iter_mut().enumerate() {
+                    if q.len() < rc.brownout_queue {
+                        continue;
                     }
-                    // no deadline, no slack to judge by: never shed
-                    None => true,
-                });
+                    let slack = rc.brownout_slack_for(c);
+                    q.retain(|r| match effective_deadline(r, &rc) {
+                        Some(dl) => {
+                            let keep = r.arrival_s + dl - now >= slack;
+                            if !keep {
+                                res.shed += 1;
+                                cls[c].shed += 1;
+                                finish_request(
+                                    source,
+                                    &mut attempts,
+                                    &mut cancel_wanted,
+                                    r.id,
+                                    Outcome::Shed,
+                                );
+                            }
+                            keep
+                        }
+                        // no deadline, no slack to judge by: never shed
+                        None => true,
+                    });
+                }
             }
 
             // (2a) resume swapped-out sequences while blocks allow —
@@ -710,65 +846,172 @@ impl<'a> Scheduler<'a> {
                 running.push(swapped.pop_front().unwrap());
             }
 
+            // chunked-prefill starvation guard: with partial prompts
+            // outstanding AND decodes running, alternate — one chunk
+            // step, one decode step — so chunks drip in without
+            // stalling every running sequence (with ample chunk budgets
+            // `prefilling` stays empty and this never fires)
+            let interleave = chunk > 0
+                && !prefilling.is_empty()
+                && !running.is_empty()
+                && last_kind == Some(StepKind::Prefill);
+
+            // (2b0) chunked prefill: continue partially-prefilled
+            // prompts first (they already hold KV blocks and token
+            // reservations); each spends min(remaining, chunk) of the
+            // step's computed-token budget.  The front partial
+            // progresses even past the budget (mirroring the
+            // oversized-alone escape) so chunked runs cannot wedge.
+            let mut promoted: Vec<PrefillSeq> = Vec::new();
+            let mut prefill_tokens = 0usize;
+            if !interleave {
+                while let Some(front) = prefilling.front() {
+                    let take = front.remaining.min(chunk.max(1));
+                    if prefill_tokens > 0
+                        && prefill_tokens + take > self.cfg.max_prefill_tokens
+                    {
+                        break;
+                    }
+                    let p = prefilling.pop_front().unwrap();
+                    prefill_tokens += take;
+                    promoted.push(PrefillSeq {
+                        seq: p.seq,
+                        admit: false,
+                        remaining: p.remaining - take,
+                        done_emit: p.done_emit,
+                        from_partial: true,
+                    });
+                }
+            }
+
             // (2b) re-prefill recompute-preempted sequences, then (2c)
-            // promote fresh arrivals: FCFS while slots, the token
+            // promote fresh arrivals: while slots, the token
             // reservation, the computed-token prefill budget, and the
             // KV block reservation all hold; an oversized request at
             // the head of an otherwise-empty system is admitted alone
-            // (overflow allowed so it always terminates)
-            let mut promoted: Vec<PrefillSeq> = Vec::new();
-            let mut prefill_tokens = 0usize;
-            while let Some(front) = requeued.front() {
-                let resident = front.resident_tokens();
-                let computed = resident - kv.cached_tokens(resident, front.req.shared_prefix_tokens);
-                let fits = running.len() + promoted.len() < self.cfg.max_batch
-                    && prefill_tokens + computed <= self.cfg.max_prefill_tokens;
-                let alone = running.is_empty() && promoted.is_empty() && swapped.is_empty();
-                if !(fits || alone) {
-                    break;
+            // (overflow allowed so it always terminates).  With a
+            // chunk configured, a prompt bigger than the chunk takes
+            // only its first chunk now and carries the rest across
+            // steps.
+            if !interleave {
+                while let Some(front) = requeued.front() {
+                    let resident = front.resident_tokens();
+                    let computed =
+                        resident - kv.cached_tokens(resident, front.req.shared_prefix_tokens);
+                    let take = if chunk > 0 { computed.min(chunk) } else { computed };
+                    let fits = running.len() + prefilling.len() + promoted.len()
+                        < self.cfg.max_batch
+                        && prefill_tokens + take <= self.cfg.max_prefill_tokens;
+                    let alone = running.is_empty()
+                        && promoted.is_empty()
+                        && swapped.is_empty()
+                        && prefilling.is_empty();
+                    if !(fits || alone) {
+                        break;
+                    }
+                    if kv
+                        .try_admit(front.req.id, resident, front.req.shared_prefix_tokens, alone)
+                        .is_none()
+                    {
+                        break; // block backpressure: stays queued
+                    }
+                    let seq = requeued.pop_front().unwrap();
+                    prefill_tokens += take;
+                    promoted.push(PrefillSeq {
+                        seq,
+                        admit: false,
+                        remaining: computed - take,
+                        done_emit: Emit::Next,
+                        from_partial: false,
+                    });
+                    if alone && !fits {
+                        break; // oversized re-prefill runs by itself
+                    }
                 }
-                if kv
-                    .try_admit(front.req.id, resident, front.req.shared_prefix_tokens, alone)
-                    .is_none()
-                {
-                    break; // block backpressure: stays queued
-                }
-                let seq = requeued.pop_front().unwrap();
-                prefill_tokens += computed;
-                promoted.push(PrefillSeq { seq, fresh: false });
-                if alone && !fits {
-                    break; // oversized re-prefill runs by itself
-                }
-            }
-            while let Some(front) = queue.front() {
-                let reserve = front.reserved_tokens();
-                let computed = front.prompt_tokens
-                    - kv.cached_tokens(front.prompt_tokens, front.shared_prefix_tokens);
-                let fits = running.len() + promoted.len() < self.cfg.max_batch
-                    && inflight_tokens + reserve <= self.cfg.max_inflight_tokens
-                    && prefill_tokens + computed <= self.cfg.max_prefill_tokens;
-                let alone = running.is_empty()
-                    && promoted.is_empty()
-                    && swapped.is_empty()
-                    && requeued.is_empty();
-                if !(fits || alone) {
-                    break;
-                }
-                if kv
-                    .try_admit(front.id, front.prompt_tokens, front.shared_prefix_tokens, alone)
-                    .is_none()
-                {
-                    break; // block backpressure: stays queued
-                }
-                let r = queue.pop_front().unwrap();
-                inflight_tokens += reserve;
-                prefill_tokens += computed;
-                promoted.push(PrefillSeq {
-                    seq: Seq { req: r, generated: 0, last_token_s: now },
-                    fresh: true,
-                });
-                if alone && !fits {
-                    break; // oversized request runs by itself
+                // (2c) weighted fair queueing across SLO classes: among
+                // classes with waiting work, the one with the least
+                // weight-normalized in-flight reservation admits next
+                // (FCFS within a class).  The weighted share binds only
+                // while another class is also waiting — WFQ is
+                // work-conserving — so a single-tenant run reduces
+                // exactly to the legacy FCFS loop.
+                let mut blocked = [false; MAX_CLASSES];
+                loop {
+                    let mut best: Option<usize> = None;
+                    for c in 0..MAX_CLASSES {
+                        if blocked[c] || queues[c].is_empty() {
+                            continue;
+                        }
+                        best = Some(match best {
+                            None => c,
+                            Some(b) => {
+                                let nb =
+                                    inflight.per_class[b] as f64 / weights[b].max(1) as f64;
+                                let nc =
+                                    inflight.per_class[c] as f64 / weights[c].max(1) as f64;
+                                if nc < nb {
+                                    c
+                                } else {
+                                    b
+                                }
+                            }
+                        });
+                    }
+                    let Some(c) = best else { break };
+                    let front = *queues[c].front().unwrap();
+                    let reserve = front.reserved_tokens();
+                    let computed = front.prompt_tokens
+                        - kv.cached_tokens(front.prompt_tokens, front.shared_prefix_tokens);
+                    let take = if chunk > 0 { computed.min(chunk) } else { computed };
+                    let fits = running.len() + prefilling.len() + promoted.len()
+                        < self.cfg.max_batch
+                        && inflight.total + reserve <= self.cfg.max_inflight_tokens
+                        && prefill_tokens + take <= self.cfg.max_prefill_tokens;
+                    // weighted share of the in-flight token budget,
+                    // enforced only under competition; a class with
+                    // nothing in flight always gets one admission so a
+                    // tiny share cannot starve it outright
+                    let competing =
+                        (0..MAX_CLASSES).any(|o| o != c && !queues[o].is_empty());
+                    let share_ok = !competing || inflight.per_class[c] == 0 || {
+                        let wsum: u64 = (0..MAX_CLASSES)
+                            .filter(|&o| !queues[o].is_empty() || inflight.per_class[o] > 0)
+                            .map(|o| weights[o].max(1) as u64)
+                            .sum();
+                        let share = (self.cfg.max_inflight_tokens as u64
+                            * weights[c].max(1) as u64
+                            / wsum.max(1)) as usize;
+                        inflight.per_class[c] + reserve <= share
+                    };
+                    let alone = running.is_empty()
+                        && promoted.is_empty()
+                        && swapped.is_empty()
+                        && requeued.is_empty()
+                        && prefilling.is_empty();
+                    if !((fits && share_ok) || alone) {
+                        blocked[c] = true;
+                        continue;
+                    }
+                    if kv
+                        .try_admit(front.id, front.prompt_tokens, front.shared_prefix_tokens, alone)
+                        .is_none()
+                    {
+                        blocked[c] = true; // block backpressure: stays queued
+                        continue;
+                    }
+                    let r = queues[c].pop_front().unwrap();
+                    inflight.reserve(c, reserve);
+                    prefill_tokens += take;
+                    promoted.push(PrefillSeq {
+                        seq: Seq { req: r, generated: 0, last_token_s: now },
+                        admit: true,
+                        remaining: computed - take,
+                        done_emit: Emit::First,
+                        from_partial: false,
+                    });
+                    if alone && !fits {
+                        break; // oversized request runs by itself
+                    }
                 }
             }
 
@@ -936,7 +1179,7 @@ impl<'a> Scheduler<'a> {
                 };
                 for s in failed {
                     kv.release(s.req.id);
-                    release_inflight(&mut inflight_tokens, s.req.reserved_tokens(), &mut underflows);
+                    inflight.release(class_of(&s.req), s.req.reserved_tokens(), &mut underflows);
                     if !schedule_retry(s.req, t_end, &rc, &mut attempts, &mut retries, &mut res) {
                         finish_request(
                             source,
@@ -951,30 +1194,54 @@ impl<'a> Scheduler<'a> {
                 match kind {
                     StepKind::Prefill => {
                         metrics.prefill_steps += 1;
+                        let mut resumed: Vec<Partial> = Vec::new();
                         for p in promoted {
                             let mut s = p.seq;
-                            if p.fresh {
+                            let c = class_of(&s.req);
+                            if p.admit {
                                 metrics.admitted += 1;
+                                cls[c].admitted += 1;
                                 metrics.prompt_tokens += s.req.prompt_tokens as u64;
                                 metrics.queue_wait.record(now - s.req.arrival_s);
-                                metrics.ttft.record(t_end - s.req.arrival_s);
-                            } else {
-                                // a re-prefill emits the sequence's next
-                                // token: the preemption gap is a TPOT sample
-                                metrics.tpot.record(t_end - s.last_token_s);
+                            }
+                            if p.remaining > 0 {
+                                // prompt not finished: carry the rest
+                                // across steps (no token emitted yet)
+                                let part = Partial {
+                                    seq: s,
+                                    remaining: p.remaining,
+                                    done_emit: p.done_emit,
+                                };
+                                if p.from_partial {
+                                    resumed.push(part);
+                                } else {
+                                    prefilling.push_back(part);
+                                }
+                                continue;
+                            }
+                            match p.done_emit {
+                                Emit::First => {
+                                    metrics.ttft.record(t_end - s.req.arrival_s);
+                                    cls[c].ttft.record(t_end - s.req.arrival_s);
+                                }
+                                Emit::Next => {
+                                    // a re-prefill emits the sequence's next
+                                    // token: the preemption gap is a TPOT sample
+                                    metrics.tpot.record(t_end - s.last_token_s);
+                                    cls[c].tpot.record(t_end - s.last_token_s);
+                                }
                             }
                             metrics.generated_tokens += 1;
                             s.generated += 1;
                             s.last_token_s = t_end;
                             if s.generated >= s.req.output_tokens {
                                 metrics.completed += 1;
+                                cls[c].completed += 1;
                                 metrics.completed_tokens += s.req.output_tokens as u64;
+                                cls[c].completed_tokens += s.req.output_tokens as u64;
                                 metrics.e2e.record(t_end - s.req.arrival_s);
-                                release_inflight(
-                                    &mut inflight_tokens,
-                                    s.req.reserved_tokens(),
-                                    &mut underflows,
-                                );
+                                cls[c].e2e.record(t_end - s.req.arrival_s);
+                                inflight.release(c, s.req.reserved_tokens(), &mut underflows);
                                 kv.release(s.req.id);
                                 finish_request(
                                     source,
@@ -987,6 +1254,12 @@ impl<'a> Scheduler<'a> {
                                 running.push(s);
                             }
                         }
+                        // continuations rejoin at the FRONT (oldest
+                        // first — reverse keeps their relative order)
+                        // ahead of freshly chunked admissions
+                        for part in resumed.into_iter().rev() {
+                            prefilling.push_front(part);
+                        }
                     }
                     StepKind::Decode => {
                         metrics.decode_steps += 1;
@@ -998,18 +1271,19 @@ impl<'a> Scheduler<'a> {
                             // prefill steps that ran since the sequence's
                             // previous token are what loaded systems pay
                             metrics.tpot.record(t_end - s.last_token_s);
+                            cls[class_of(&s.req)].tpot.record(t_end - s.last_token_s);
                             s.last_token_s = t_end;
                         }
                         running.retain(|s| {
                             if s.generated >= s.req.output_tokens {
+                                let c = class_of(&s.req);
                                 metrics.completed += 1;
+                                cls[c].completed += 1;
                                 metrics.completed_tokens += s.req.output_tokens as u64;
+                                cls[c].completed_tokens += s.req.output_tokens as u64;
                                 metrics.e2e.record(t_end - s.req.arrival_s);
-                                release_inflight(
-                                    &mut inflight_tokens,
-                                    s.req.reserved_tokens(),
-                                    &mut underflows,
-                                );
+                                cls[c].e2e.record(t_end - s.req.arrival_s);
+                                inflight.release(c, s.req.reserved_tokens(), &mut underflows);
                                 kv.release(s.req.id);
                                 finish_request(
                                     source,
@@ -1029,12 +1303,15 @@ impl<'a> Scheduler<'a> {
             metrics.note_step(
                 StepSample {
                     t_s: t_end,
-                    queue_depth: queue.len() + requeued.len() + swapped.len(),
+                    queue_depth: queues.iter().map(|q| q.len()).sum::<usize>()
+                        + requeued.len()
+                        + swapped.len(),
                     batch: tokens,
                 },
-                inflight_tokens,
+                inflight.total,
                 step_s,
             );
+            last_kind = Some(kind);
             steps.push(record);
         }
 
@@ -1047,8 +1324,21 @@ impl<'a> Scheduler<'a> {
         let (leaked_blocks, leaked_seqs) = kv.leak_counts();
         metrics.kv.leaked_blocks = leaked_blocks;
         metrics.kv.leaked_seqs = leaked_seqs;
-        metrics.kv.leaked_inflight_tokens = inflight_tokens as u64;
+        metrics.kv.leaked_inflight_tokens = inflight.total as u64;
         metrics.makespan_s = clock.now();
+        if classes_on {
+            // trim trailing all-zero classes but keep at least the
+            // configured class count so every tenant appears even when
+            // one received no traffic
+            let used = cls
+                .iter()
+                .rposition(|c| c.active())
+                .map(|i| i + 1)
+                .unwrap_or(1)
+                .max(self.cfg.classes.min(MAX_CLASSES))
+                .max(1);
+            metrics.classes = Some(cls.into_iter().take(used).collect());
+        }
         if resilience_on {
             res.availability = if metrics.offered > 0 {
                 metrics.completed as f64 / metrics.offered as f64

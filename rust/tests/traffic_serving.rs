@@ -22,8 +22,8 @@ use platinum::models::BitNetModel;
 use platinum::runtime::pool::Pool;
 use platinum::traffic::{
     decode_capacity_tok_s, with_shared_prefix, ArrivalPattern, ExecutorBridge, LenDist, LoadSpec,
-    Outcome, PushSource, Scheduler, SchedulerConfig, StepKind, StepRecord, TrafficRequest,
-    VirtualClock,
+    Outcome, PushSource, Scheduler, SchedulerConfig, StepKind, StepRecord, TenantMix,
+    TrafficRequest, VirtualClock,
 };
 use platinum::util::json::Json;
 use platinum::util::rng::Rng;
@@ -623,4 +623,176 @@ fn executor_panic_propagates_without_wedging_pool_or_scheduler() {
     let r = sched.serve_with(&reqs, &mut VirtualClock::new(), Some(&mut exec)).unwrap();
     assert_eq!(r.metrics.completed, r.metrics.admitted, "post-panic serve must drain");
     assert!(!r.metrics.kv.leaked(), "post-panic serve must not report KV leaks");
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 9: multi-tenant SLO classes + chunked prefill
+// ---------------------------------------------------------------------------
+
+#[test]
+fn inert_class_and_chunk_config_is_byte_identical_to_legacy() {
+    // the acceptance pin: one class, default weights, and a chunk budget
+    // at least as large as the longest prompt must reproduce the PR 8
+    // schema byte for byte — no `classes` key, no decision drift
+    let be = PlatinumBackend::ternary();
+    let reqs = poisson_spec(150.0, 48, 17).generate().unwrap();
+    let legacy = Scheduler::new(&be, TINY, SchedulerConfig::default())
+        .serve(&reqs, &mut VirtualClock::new())
+        .unwrap();
+    // prompts are Uniform{4,12}: chunk 12 covers every admission exactly
+    for chunk in [12, 2048] {
+        let cfg = SchedulerConfig {
+            prefill_chunk: chunk,
+            classes: 1,
+            ..SchedulerConfig::default()
+        };
+        let inert =
+            Scheduler::new(&be, TINY, cfg).serve(&reqs, &mut VirtualClock::new()).unwrap();
+        assert_eq!(legacy.steps, inert.steps, "chunk {chunk} ≥ max prompt moved a decision");
+        assert_eq!(
+            legacy.metrics.to_json().to_string(),
+            inert.metrics.to_json().to_string(),
+            "chunk {chunk} ≥ max prompt moved a metrics byte"
+        );
+    }
+    let doc = Json::parse(&legacy.metrics.to_json().to_string()).unwrap();
+    assert!(doc.get("classes").is_none(), "single-class runs must not grow the schema");
+}
+
+#[test]
+fn tenant_mix_metrics_invariant_across_pool_sizes_1_and_8() {
+    // the ISSUE 5 pool-invariance contract extends to the tentpole: a
+    // two-class tenant mix with chunked prefill engaged, real golden
+    // GEMMs inside every step, byte-identical between pools of 1 and 8
+    let mix = TenantMix::parse("interactive:0.7:w4,batch:0.3:w1").unwrap();
+    let mut cfg = SchedulerConfig {
+        max_batch: 8,
+        prefill_chunk: 8, // below the max prompt of 12: chunking engages
+        ..SchedulerConfig::default()
+    };
+    cfg.classes = mix.classes.len();
+    cfg.class_weights = mix.weights();
+    let run = |threads: usize| -> (String, Vec<StepRecord>) {
+        let be = PlatinumBackend::ternary();
+        let sched = Scheduler::new(&be, TINY, cfg);
+        let mut reqs = poisson_spec(200.0, 48, 42).generate().unwrap();
+        mix.assign(&mut reqs, 42);
+        let pool = Pool::new(threads);
+        let pcfg = PlatinumConfig::default();
+        let mut wrng = Rng::seed_from(1);
+        let w = wrng.ternary_vec(64 * 64);
+        let packed = pack_ternary(&w, 64, 64, pcfg.c_ternary);
+        let mut exec = |s: &StepRecord, _w: &Workload| -> anyhow::Result<()> {
+            let n = s.tokens.max(1);
+            let mut xrng = Rng::seed_from(0x5EED ^ s.index);
+            let x = xrng.act_vec(64 * n);
+            let (y, _) = ternary_mpgemm_pool(&pcfg, &packed, &x, n, &pool, threads);
+            assert_eq!(y.len(), 64 * n);
+            Ok(())
+        };
+        let r = sched.serve_with(&reqs, &mut VirtualClock::new(), Some(&mut exec)).unwrap();
+        (r.metrics.to_json().to_string(), r.steps)
+    };
+    let (json1, steps1) = run(1);
+    let (json8, steps8) = run(8);
+    assert_eq!(steps1, steps8, "tenant-mix scheduler decisions leaked the pool size");
+    assert_eq!(json1, json8, "tenant-mix metrics JSON leaked the pool size");
+    // the per-class section rides inside the byte-identical document
+    let doc = Json::parse(&json1).unwrap();
+    let classes = doc.get("classes").expect("two-class run must emit per-class metrics");
+    let arr = classes.as_arr().unwrap();
+    assert_eq!(arr.len(), 2);
+    let completed: f64 = arr
+        .iter()
+        .map(|c| c.get("counts").unwrap().get("completed").unwrap().as_f64().unwrap())
+        .sum();
+    let total = doc.get("counts").unwrap().get("completed").unwrap().as_f64().unwrap();
+    assert_eq!(completed, total, "per-class counts must partition the global count");
+}
+
+#[test]
+fn chunked_prefill_interleaves_decode_steps_and_drains() {
+    // prompts 4× the chunk budget: prefill splits across steps, decode
+    // steps interleave between chunk steps once a sequence is running,
+    // every sequence still completes, and the run replays byte-identically
+    let be = PlatinumBackend::ternary();
+    let reqs: Vec<TrafficRequest> = (0..6)
+        .map(|i| TrafficRequest {
+            id: i,
+            arrival_s: i as f64 * 1e-4,
+            prompt_tokens: 64,
+            output_tokens: 8,
+            ..TrafficRequest::default()
+        })
+        .collect();
+    let base_cfg = SchedulerConfig { max_batch: 8, ..SchedulerConfig::default() };
+    let unchunked =
+        Scheduler::new(&be, TINY, base_cfg).serve(&reqs, &mut VirtualClock::new()).unwrap();
+    let cfg = SchedulerConfig { prefill_chunk: 16, ..base_cfg };
+    let sched = Scheduler::new(&be, TINY, cfg);
+    let run = || sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+    let r = run();
+    assert_eq!(r.metrics.completed, 6, "chunking must not lose sequences");
+    assert!(!r.metrics.kv.leaked(), "carried partials must release their blocks");
+    assert!(
+        r.metrics.prefill_steps > unchunked.metrics.prefill_steps,
+        "64-token prompts under a 16-token budget must take extra prefill steps: {} vs {}",
+        r.metrics.prefill_steps,
+        unchunked.metrics.prefill_steps
+    );
+    let kinds: Vec<StepKind> = r.steps.iter().map(|s| s.kind).collect();
+    assert!(
+        kinds
+            .windows(3)
+            .any(|w| w == [StepKind::Prefill, StepKind::Decode, StepKind::Prefill]),
+        "decode steps must interleave between prefill chunks: {kinds:?}"
+    );
+    assert_eq!(
+        r.metrics.to_json().to_string(),
+        run().metrics.to_json().to_string(),
+        "the chunked path must stay deterministic"
+    );
+}
+
+#[test]
+fn wfq_gives_interactive_lower_ttft_than_batch_at_saturation() {
+    // past the knee with a tight in-flight token budget, a weight-4
+    // interactive class must clear the queue faster than a weight-1
+    // batch class sharing the same scheduler — the SLO the tentpole buys
+    let be = PlatinumBackend::ternary();
+    let mut cfg = SchedulerConfig {
+        max_batch: 8,
+        max_inflight_tokens: 120,
+        ..SchedulerConfig::default()
+    };
+    cfg.classes = 2;
+    cfg.class_weights[0] = 4;
+    cfg.class_weights[1] = 1;
+    let rate = 8.0 * capacity_rps(&be, &cfg, 6);
+    let mut reqs = poisson_spec(rate, 96, 23).generate().unwrap();
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.class = (i % 2) as u8; // even split, identical shape distribution
+    }
+    let sched = Scheduler::new(&be, TINY, cfg);
+    let run = || sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+    let r = run();
+    let classes = r.metrics.classes.as_ref().expect("two-class run must emit the section");
+    assert_eq!(classes.len(), 2);
+    assert!(classes[0].completed > 0 && classes[1].completed > 0);
+    let p99 = |c: usize| classes[c].ttft.quantile(0.99).unwrap();
+    assert!(
+        p99(0) < p99(1),
+        "weight-4 interactive must beat weight-1 batch at saturation: {:.4}s vs {:.4}s",
+        p99(0),
+        p99(1)
+    );
+    assert!(
+        classes[0].ttft.mean().unwrap() < classes[1].ttft.mean().unwrap(),
+        "the ordering must hold in the mean, not just the tail"
+    );
+    assert_eq!(
+        r.metrics.to_json().to_string(),
+        run().metrics.to_json().to_string(),
+        "the WFQ path must stay deterministic"
+    );
 }
