@@ -1,0 +1,129 @@
+//! Interconnect-topology benchmarks (ISSUE 10): what the event-driven
+//! `sim::net` timeline prices that the closed-form analytic
+//! interconnect cannot, and how the three topologies compare at the
+//! same chip count.  Three row families, all deterministic (modelled
+//! `platinum-ternary` pricer, virtual clock, fixed calibration):
+//!
+//! 1. **Analytic agreement** — a contention-free single-hop gather
+//!    (2-replica ring) priced by both models: the gap must stay under
+//!    10% (the validation pin the ROADMAP records).
+//! 2. **Congestion divergence** — an all-to-all burst on an 8-node
+//!    ring: the event makespan must exceed the contention-blind bound
+//!    (the slowest solo transfer) by more than 1.5x, because every
+//!    stripe queues on shared links the analytic model never sees.
+//! 3. **Topology comparison** — ring / mesh2d / fattree at 8 chips:
+//!    gather makespan and queueing, end-to-end sharded kernel latency,
+//!    and the priced failover redistribution fan-out per topology.
+//!
+//! Rows land in `BENCH_net.json` (override with `BENCH_NET_JSON=<path>`).
+
+use platinum::config::Gemm;
+use platinum::engine::{Interconnect, Registry, Workload};
+use platinum::models::B158_3B;
+use platinum::sim::net::{NetSim, Topology, Transfer};
+use platinum::util::json::{arr, num, obj, s as jstr, Json};
+
+fn main() {
+    let mut rows: Vec<Json> = Vec::new();
+    let reg = Registry::with_defaults();
+    let ic = Interconnect::default();
+    let w = Workload::Kernel(Gemm::new(4320, 2080, 32));
+
+    // --- 1. contention-free agreement --------------------------------------
+    println!("== analytic vs event: contention-free 2-replica gather ==");
+    let analytic = reg.build("sharded:2:platinum-ternary").unwrap().run(&w).latency_s;
+    let event = reg.build("sharded:2:net=ring:platinum-ternary").unwrap().run(&w).latency_s;
+    let gap = (event - analytic).abs() / analytic;
+    assert!(gap < 0.10, "contention-free gap must stay under 10%: {gap:.4}");
+    println!(
+        "  analytic {:>9.3} us  event {:>9.3} us  gap {:.2}%",
+        analytic * 1e6,
+        event * 1e6,
+        gap * 100.0
+    );
+    rows.push(obj(vec![
+        ("name", jstr("net/contention_free_agreement")),
+        ("analytic_latency_s", num(analytic)),
+        ("event_latency_s", num(event)),
+        ("rel_gap", num(gap)),
+    ]));
+
+    // --- 2. all-to-all congestion vs the contention-blind bound ------------
+    println!("\n== all-to-all congestion on an 8-node ring ==");
+    let chips = 8;
+    let net = NetSim::new(Topology::Ring, chips, ic.link_bytes_per_s, ic.hop_s).unwrap();
+    let stripe = 1_048_576.0; // 1 MiB per pairwise stripe
+    let mut xfers = Vec::new();
+    let mut blind: f64 = 0.0;
+    for src in 0..chips {
+        for dst in 0..chips {
+            if src != dst {
+                xfers.push(Transfer { src, dst, bytes: stripe, start_s: 0.0 });
+                blind = blind.max(net.solo_latency_s(src, dst, stripe));
+            }
+        }
+    }
+    let rep = net.simulate(&xfers);
+    let ratio = rep.makespan_s / blind;
+    assert!(ratio > 1.5, "congestion must exceed the contention-blind bound: x{ratio:.2}");
+    println!(
+        "  {} transfers  blind bound {:>8.3} us  event {:>8.3} us  x{ratio:.2}  \
+         queue wait {:>8.3} us (max {:>7.3} us)",
+        xfers.len(),
+        blind * 1e6,
+        rep.makespan_s * 1e6,
+        rep.queue_wait_s * 1e6,
+        rep.max_queue_wait_s * 1e6
+    );
+    rows.push(obj(vec![
+        ("name", jstr("net/all_to_all_congestion")),
+        ("transfers", num(xfers.len() as f64)),
+        ("blind_bound_s", num(blind)),
+        ("event_makespan_s", num(rep.makespan_s)),
+        ("congestion_x", num(ratio)),
+        ("queue_wait_s", num(rep.queue_wait_s)),
+        ("max_queue_wait_s", num(rep.max_queue_wait_s)),
+    ]));
+
+    // --- 3. topology comparison at 8 chips ----------------------------------
+    // same gather, same kernel, same crash: only the wiring changes
+    println!("\n== topologies at 8 chips: gather / kernel / failover ==");
+    let weight_bytes = B158_3B.weight_bytes_ternary();
+    for topo in Topology::ALL {
+        let net = NetSim::new(topo, chips, ic.link_bytes_per_s, ic.hop_s).unwrap();
+        let gather: Vec<Transfer> = (1..chips)
+            .map(|src| Transfer { src, dst: 0, bytes: stripe, start_s: 0.0 })
+            .collect();
+        let g = net.simulate(&gather);
+        let id = format!("sharded:8:net={}:platinum-ternary", topo.label());
+        let be = reg.build(&id).unwrap();
+        let latency = be.run(&w).latency_s;
+        let redist = be.redistribute_cost_s(weight_bytes, chips - 1);
+        assert!(latency > 0.0 && redist > 0.0);
+        println!(
+            "  {:<7}  gather {:>8.3} us (queue {:>7.3} us)  kernel {:>9.3} us  \
+             redistribution {:>9.3} us",
+            topo.label(),
+            g.makespan_s * 1e6,
+            g.queue_wait_s * 1e6,
+            latency * 1e6,
+            redist * 1e6
+        );
+        rows.push(obj(vec![
+            ("name", jstr(&format!("net/topology_{}", topo.label()))),
+            ("topology", jstr(topo.label())),
+            ("chips", num(chips as f64)),
+            ("gather_makespan_s", num(g.makespan_s)),
+            ("gather_queue_wait_s", num(g.queue_wait_s)),
+            ("kernel_latency_s", num(latency)),
+            ("redistribution_s", num(redist)),
+        ]));
+    }
+
+    let path = std::env::var("BENCH_NET_JSON").unwrap_or_else(|_| "BENCH_net.json".to_string());
+    let doc = obj(vec![("bench", jstr("net_topology")), ("results", arr(rows))]);
+    match std::fs::write(&path, doc.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

@@ -10,11 +10,21 @@
 //! replica sweep exposes the scaling trade: latency drops toward
 //! 1/N (bounded by the interconnect merge term) while energy and area
 //! grow with N.
+//!
+//! The topology axis (`--topology` on the CLI) crosses the replica
+//! sweep with [`crate::sim::net`] event-driven interconnects: the same
+//! (tiling, N) point is priced under `ring`/`mesh2d`/`fattree` gather
+//! timelines, so a sweep answers "which topology at N chips" — the
+//! system-level co-design question the LUT-accelerator DSE papers pose.
+//! (Topology, count) pairs the topology cannot form (a prime count on
+//! a mesh, a non-power-of-two fat tree) are skipped; the CLI prints
+//! which, so the sweep never silently thins.
 
 use crate::config::{ExecMode, PlatinumConfig, Stationarity, Tiling};
 use crate::energy::AreaModel;
 use crate::engine::{Backend, PlatinumBackend, ShardStrategy, Sharded, Workload};
 use crate::models::{BitNetModel, ALL_MODELS, PREFILL_N};
+use crate::sim::net::Topology;
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -22,6 +32,9 @@ pub struct DsePoint {
     pub tiling: Tiling,
     /// Chip replicas this point was evaluated at (1 = single chip).
     pub replicas: usize,
+    /// Interconnect model: `None` = analytic merge term, `Some` = the
+    /// event-driven network simulator over that topology.
+    pub topology: Option<Topology>,
     /// Summed prefill latency across the evaluated models (s).
     pub latency_s: f64,
     /// Summed prefill energy across the evaluated models (J).
@@ -69,6 +82,21 @@ pub fn evaluate(tiling: Tiling, models: &[BitNetModel]) -> DsePoint {
 /// the replica count; latency/energy come out of the engine's
 /// max+interconnect / sum aggregation.
 pub fn evaluate_replicated(tiling: Tiling, replicas: usize, models: &[BitNetModel]) -> DsePoint {
+    evaluate_topology(tiling, replicas, None, models)
+        .expect("analytic evaluation accepts any replica count")
+}
+
+/// [`evaluate_replicated`] with an explicit interconnect model: `None`
+/// keeps the analytic merge term, `Some(topology)` routes the gather
+/// traffic through the event-driven network simulator.  Errors when the
+/// replica count cannot form the topology (callers either pre-validate
+/// or surface the message).
+pub fn evaluate_topology(
+    tiling: Tiling,
+    replicas: usize,
+    topology: Option<Topology>,
+    models: &[BitNetModel],
+) -> anyhow::Result<DsePoint> {
     let replicas = replicas.max(1);
     let mut cfg = PlatinumConfig::default();
     cfg.tiling = tiling;
@@ -80,7 +108,10 @@ pub fn evaluate_replicated(tiling: Tiling, replicas: usize, models: &[BitNetMode
                 as Box<dyn Backend>
         })
         .collect();
-    let backend = Sharded::new(chips, ShardStrategy::Rows).expect("non-empty replica set");
+    let backend = match topology {
+        None => Sharded::new(chips, ShardStrategy::Rows)?,
+        Some(t) => Sharded::with_net(chips, ShardStrategy::Rows, t)?,
+    };
     let mut latency = 0.0;
     let mut energy = 0.0;
     for model in models {
@@ -88,14 +119,15 @@ pub fn evaluate_replicated(tiling: Tiling, replicas: usize, models: &[BitNetMode
         latency += r.latency_s;
         energy += r.energy_j.expect("platinum models energy");
     }
-    DsePoint {
+    Ok(DsePoint {
         tiling,
         replicas,
+        topology,
         latency_s: latency,
         energy_j: energy,
         area_mm2: area * replicas as f64,
         sram_kb: area_model.total_sram_kb() * replicas as f64,
-    }
+    })
 }
 
 /// Run the full sweep (Fig 7). `models` defaults to all three b1.58
@@ -112,12 +144,48 @@ pub fn sweep_replicated(
     replica_counts: &[usize],
     models: &[BitNetModel],
 ) -> Vec<DsePoint> {
+    sweep_topology(grid, replica_counts, &[None], models)
+}
+
+/// The full system sweep: tiling grid × replica counts × interconnect
+/// models.  (Topology, count) pairs the topology cannot form are
+/// skipped — use [`skipped_topology_pairs`] to report them (the CLI
+/// does), so nothing is dropped silently.
+pub fn sweep_topology(
+    grid: &[Tiling],
+    replica_counts: &[usize],
+    topologies: &[Option<Topology>],
+    models: &[BitNetModel],
+) -> Vec<DsePoint> {
     let models = if models.is_empty() { &ALL_MODELS[..] } else { models };
     let counts = if replica_counts.is_empty() { &[1][..] } else { replica_counts };
+    let topos = if topologies.is_empty() { &[None][..] } else { topologies };
     grid.iter()
         .flat_map(|&t| counts.iter().map(move |&r| (t, r)))
-        .map(|(t, r)| evaluate_replicated(t, r, models))
+        .flat_map(|(t, r)| topos.iter().map(move |&topo| (t, r, topo)))
+        .filter(|(_, r, topo)| topo.map(|t| t.validate(*r).is_ok()).unwrap_or(true))
+        .map(|(t, r, topo)| {
+            evaluate_topology(t, r, topo, models).expect("validated (topology, count) pair")
+        })
         .collect()
+}
+
+/// The (topology, replica-count) combinations [`sweep_topology`] would
+/// skip, with the validation message explaining why.
+pub fn skipped_topology_pairs(
+    replica_counts: &[usize],
+    topologies: &[Option<Topology>],
+) -> Vec<(Topology, usize, String)> {
+    let mut out = Vec::new();
+    for &topo in topologies {
+        let Some(t) = topo else { continue };
+        for &r in replica_counts {
+            if let Err(e) = t.validate(r) {
+                out.push((t, r, e.to_string()));
+            }
+        }
+    }
+    out
 }
 
 /// Pareto frontier under (latency, energy, area) minimization.
@@ -219,6 +287,32 @@ mod tests {
         let p = pts.iter().find(|p| p.tiling == grid[0] && p.replicas == 1).unwrap();
         assert_eq!(p.latency_s, classic.latency_s);
         assert_eq!(p.energy_j, classic.energy_j);
+    }
+
+    #[test]
+    fn topology_sweep_crosses_and_skips_invalid() {
+        let grid = vec![Tiling { m: 540, k: 260, n: 16, order: Stationarity::Mnk }];
+        let topos = [None, Some(Topology::Ring), Some(Topology::Mesh2d)];
+        let pts = sweep_topology(&grid, &[2, 4], &topos, &[B158_3B]);
+        // 2 counts × 3 interconnect models, minus the (mesh2d, 2) pair
+        // no rectangular mesh can form
+        assert_eq!(pts.len(), 5);
+        assert!(pts.iter().any(|p| p.topology == Some(Topology::Ring) && p.replicas == 2));
+        assert!(!pts.iter().any(|p| p.topology == Some(Topology::Mesh2d) && p.replicas == 2));
+        let skipped = skipped_topology_pairs(&[2, 4], &topos);
+        assert_eq!(skipped.len(), 1);
+        assert_eq!((skipped[0].0, skipped[0].1), (Topology::Mesh2d, 2));
+        assert!(skipped[0].2.contains("rectangular"), "{}", skipped[0].2);
+        // the interconnect model changes pricing, not provisioning
+        let analytic = pts.iter().find(|p| p.topology.is_none() && p.replicas == 4).unwrap();
+        let ring =
+            pts.iter().find(|p| p.topology == Some(Topology::Ring) && p.replicas == 4).unwrap();
+        assert_eq!(analytic.area_mm2, ring.area_mm2);
+        assert_eq!(analytic.energy_j, ring.energy_j);
+        assert!(ring.latency_s > 0.0);
+        // classic sweep stays the analytic model
+        let classic = sweep_replicated(&grid, &[2], &[B158_3B]);
+        assert!(classic.iter().all(|p| p.topology.is_none()));
     }
 
     #[test]

@@ -22,11 +22,13 @@
 //!   frontend (`--backend` CLI flags, DSE, benches, serving) selects
 //!   systems the same way and new accelerators plug in at one place.
 //!   Beyond the fixed table it resolves the parameterized multi-chip
-//!   grammar `sharded:<replicas>[:<strategy>]:<inner-id>`.
+//!   grammar `sharded:<replicas>[:<strategy>][:net=<topology>]:<inner-id>`.
 //! * [`Sharded`] — the multi-chip composite: N replicas of any backend
 //!   with a workload partitioned across them (`rows`/`batch`/`layers`)
 //!   and reports merged under the max-latency/sum-energy rules plus a
-//!   modelled interconnect term.
+//!   modelled interconnect term — analytic by default, or the
+//!   event-driven topology simulator ([`crate::sim::net`]) when the id
+//!   selects `net=ring|mesh2d|fattree`.
 //!
 //! The legacy free functions remain as thin shims over the same
 //! arithmetic; `tests/engine_api.rs` pins the equivalence.

@@ -16,6 +16,7 @@ use super::backends::{
 };
 use super::sharded::{ShardStrategy, Sharded};
 use super::Backend;
+use crate::sim::net::Topology;
 use anyhow::{anyhow, bail, Result};
 
 type Builder = fn() -> Box<dyn Backend>;
@@ -56,8 +57,11 @@ pub const COMPARISON_IDS: &str = "platinum-ternary,platinum-bitserial,eyeriss,pr
 
 /// The parameterized multi-chip id form [`Registry::build`] accepts on
 /// top of the fixed table: replica count, optional partition strategy
-/// (default `rows`), then any resolvable inner id (composites nest).
-pub const SHARDED_GRAMMAR: &str = "sharded:<replicas>[:rows|batch|layers]:<inner-id>";
+/// (default `rows`), optional event-driven network topology (default:
+/// the analytic interconnect), then any resolvable inner id
+/// (composites nest).
+pub const SHARDED_GRAMMAR: &str =
+    "sharded:<replicas>[:rows|batch|layers][:net=ring|mesh2d|fattree]:<inner-id>";
 
 /// Ceiling on the TOTAL chip count a `sharded:` id may construct,
 /// multiplied across nesting levels — a typo/DoS guard (each replica
@@ -73,8 +77,15 @@ fn nested_replicas(mut spec: &str) -> u128 {
         let Some((count, tail)) = rest.split_once(':') else { break };
         let Ok(n) = count.parse::<u128>() else { break };
         total = total.saturating_mul(n.max(1));
+        // skip the optional strategy token, then the optional net= token
         spec = match tail.split_once(':') {
-            Some((tok, inner)) if ShardStrategy::parse(tok).is_some() => inner,
+            Some((tok, inner)) if ShardStrategy::parse(tok).is_some() => {
+                match inner.split_once(':') {
+                    Some((t2, inner2)) if t2.starts_with("net=") => inner2,
+                    _ => inner,
+                }
+            }
+            Some((tok, inner)) if tok.starts_with("net=") => inner,
             _ => tail,
         };
     }
@@ -133,7 +144,7 @@ impl Registry {
     }
 
     /// Resolve the tail of a `sharded:` id (everything after the
-    /// prefix): `<replicas>[:<strategy>]:<inner-id>`.
+    /// prefix): `<replicas>[:<strategy>][:net=<topology>]:<inner-id>`.
     fn build_sharded(&self, spec: &str) -> Result<Box<dyn Backend>> {
         let (count, tail) = spec
             .split_once(':')
@@ -146,13 +157,40 @@ impl Registry {
         }
         // the strategy segment is optional; an unrecognized token here
         // is part of the inner id and diagnosed by the recursive build
-        let (strategy, inner_id) = match tail.split_once(':') {
+        let (strategy, tail) = match tail.split_once(':') {
             Some((tok, rest)) => match ShardStrategy::parse(tok) {
                 Some(st) => (st, rest),
                 None => (ShardStrategy::Rows, tail),
             },
             None => (ShardStrategy::Rows, tail),
         };
+        // the net= segment selects the event-driven interconnect; an
+        // unknown topology or a count the topology cannot form is a
+        // hard error naming the offending id — never a silent fallback
+        // to the analytic model
+        let (topology, inner_id) = match tail.split_once(':') {
+            Some((tok, rest)) if tok.starts_with("net=") => {
+                let name = &tok[4..];
+                let t = Topology::parse(name).ok_or_else(|| {
+                    anyhow!(
+                        "unknown net topology {name:?} in backend id \"sharded:{spec}\"; \
+                         known topologies: ring, mesh2d, fattree"
+                    )
+                })?;
+                (Some(t), rest)
+            }
+            _ if tail.starts_with("net=") => {
+                bail!(
+                    "malformed backend id \"sharded:{spec}\": nothing after the net= \
+                     segment; expected {SHARDED_GRAMMAR}"
+                );
+            }
+            _ => (None, tail),
+        };
+        if let Some(t) = topology {
+            t.validate(replicas)
+                .map_err(|e| anyhow!("backend id \"sharded:{spec}\": {e}"))?;
+        }
         // cap the TOTAL chip count: nested composites multiply, so a
         // per-level check alone would let sharded:4096:sharded:4096:…
         // eagerly construct millions of backend instances
@@ -165,7 +203,11 @@ impl Registry {
         }
         let inner: Vec<Box<dyn Backend>> =
             (0..replicas).map(|_| self.build(inner_id)).collect::<Result<_>>()?;
-        Ok(Box::new(Sharded::new(inner, strategy)?))
+        let sharded = match topology {
+            None => Sharded::new(inner, strategy)?,
+            Some(t) => Sharded::with_net(inner, strategy, t)?,
+        };
+        Ok(Box::new(sharded))
     }
 
     /// Construct several backends from a comma-separated selection
@@ -242,6 +284,56 @@ mod tests {
             assert_eq!(r.backend, canon);
             assert!(r.latency_s > 0.0, "{spec}");
         }
+    }
+
+    #[test]
+    fn net_sharded_ids_build_and_canonicalize() {
+        let reg = Registry::with_defaults();
+        for (spec, canon) in [
+            ("sharded:4:net=mesh2d:platinum-ternary", "sharded:4:net=mesh2d:platinum-ternary"),
+            // explicit default strategy still elides
+            ("sharded:4:rows:net=ring:platinum-ternary", "sharded:4:net=ring:platinum-ternary"),
+            ("sharded:2:batch:net=ring:eyeriss", "sharded:2:batch:net=ring:eyeriss"),
+            ("sharded:8:net=fattree:platinum-ternary", "sharded:8:net=fattree:platinum-ternary"),
+            // composites nest with independent network models per level
+            (
+                "sharded:2:layers:net=ring:sharded:2:net=ring:platinum-ternary",
+                "sharded:2:layers:net=ring:sharded:2:net=ring:platinum-ternary",
+            ),
+        ] {
+            let be = reg.build(spec).unwrap();
+            assert_eq!(be.id(), canon, "{spec}");
+            let r = be.run(&Workload::Kernel(Gemm::new(64, 40, 8)));
+            assert_eq!(r.backend, canon);
+            assert!(r.latency_s > 0.0, "{spec}");
+        }
+    }
+
+    #[test]
+    fn net_grammar_errors_name_the_offending_id() {
+        let reg = Registry::with_defaults();
+        // unknown topology token
+        let err = reg.build("sharded:4:net=torus:platinum-ternary").unwrap_err().to_string();
+        assert!(err.contains("torus"), "{err}");
+        assert!(err.contains("sharded:4:net=torus:platinum-ternary"), "{err}");
+        assert!(err.contains("ring") && err.contains("mesh2d") && err.contains("fattree"), "{err}");
+        // topology/replica-count mismatches fail at resolve time
+        let err = reg.build("sharded:7:net=mesh2d:platinum-ternary").unwrap_err().to_string();
+        assert!(err.contains("sharded:7:net=mesh2d:platinum-ternary"), "{err}");
+        assert!(err.contains("rectangular"), "{err}");
+        let err = reg.build("sharded:6:net=fattree:platinum-ternary").unwrap_err().to_string();
+        assert!(err.contains("sharded:6:net=fattree:platinum-ternary"), "{err}");
+        assert!(err.contains("power-of-two"), "{err}");
+        // net= with no inner id after it
+        let err = reg.build("sharded:4:net=ring").unwrap_err().to_string();
+        assert!(err.contains("sharded:4:net=ring"), "{err}");
+        // the chip-count cap still sees through net= tokens when
+        // walking nested composites (no construction happens)
+        let err = reg
+            .build("sharded:2:net=ring:sharded:2049:net=ring:platinum-ternary")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("4098") && err.contains("cap"), "{err}");
     }
 
     #[test]

@@ -31,9 +31,26 @@
 //! the energy breakdown are cross-chip sums, phases/utilization are
 //! the critical (slowest) replica's view.
 //!
-//! Registry grammar: `sharded:<replicas>[:<strategy>]:<inner-id>`,
-//! e.g. `sharded:4:platinum-ternary` or `sharded:8:batch:eyeriss`
-//! (strategy defaults to `rows`; composites nest, so
+//! The closed-form interconnect term is the default; an optional
+//! **event-driven network model** ([`crate::sim::net`]) replaces it
+//! when a topology is selected.  With `net=<topology>` the composite
+//! builds a [`NetSim`] over the replica graph and prices every dispatch
+//! as the *makespan of an event timeline*: each replica's output stripe
+//! (rows/batch) or activation handoff (layers) becomes a routed
+//! [`Transfer`] starting when that replica's compute span ends, links
+//! serialize contending messages, and crash-failover weight
+//! redistribution ([`Backend::redistribute_cost_s`]) is priced on the
+//! same timeline instead of the analytic single-link formula.  Both
+//! models read the same `PLATINUM_LINK_GBPS`/`PLATINUM_HOP_US`
+//! calibration knobs; the analytic and event models agree on
+//! contention-free patterns and diverge under congestion (pinned in
+//! tests and `benches/net_topology.rs`).
+//!
+//! Registry grammar:
+//! `sharded:<replicas>[:<strategy>][:net=<topology>]:<inner-id>`,
+//! e.g. `sharded:4:platinum-ternary`, `sharded:8:batch:eyeriss`, or
+//! `sharded:4:net=mesh2d:platinum-ternary` (strategy defaults to
+//! `rows`, the interconnect to the analytic model; composites nest, so
 //! `sharded:2:layers:sharded:4:platinum-ternary` is a 2-stage pipeline
 //! of 4-way row-parallel chips).
 
@@ -42,6 +59,7 @@ use super::workload::Workload;
 use super::Backend;
 use crate::analysis::Gemm;
 use crate::runtime::pool::split_even;
+use crate::sim::net::{NetSim, Topology, Transfer};
 use anyhow::{bail, Result};
 
 /// How a [`Sharded`] backend partitions a workload across replicas.
@@ -127,6 +145,8 @@ pub struct Sharded {
     inner: Vec<Box<dyn Backend>>,
     strategy: ShardStrategy,
     interconnect: Interconnect,
+    /// Event-driven network model; `None` keeps the analytic term.
+    net: Option<NetSim>,
 }
 
 impl Sharded {
@@ -145,16 +165,61 @@ impl Sharded {
         strategy: ShardStrategy,
         interconnect: Interconnect,
     ) -> Result<Sharded> {
+        Sharded::compose(inner, strategy, interconnect, None)
+    }
+
+    /// [`Sharded::new`] with the event-driven interconnect over an
+    /// explicit topology (env-calibrated link/hop constants).  Errors
+    /// when the replica count cannot form the topology.
+    pub fn with_net(
+        inner: Vec<Box<dyn Backend>>,
+        strategy: ShardStrategy,
+        topology: Topology,
+    ) -> Result<Sharded> {
+        Sharded::compose(inner, strategy, Interconnect::from_env()?, Some(topology))
+    }
+
+    /// [`Sharded::with_net`] with an explicit interconnect calibration.
+    pub fn with_net_interconnect(
+        inner: Vec<Box<dyn Backend>>,
+        strategy: ShardStrategy,
+        topology: Topology,
+        interconnect: Interconnect,
+    ) -> Result<Sharded> {
+        Sharded::compose(inner, strategy, interconnect, Some(topology))
+    }
+
+    fn compose(
+        inner: Vec<Box<dyn Backend>>,
+        strategy: ShardStrategy,
+        interconnect: Interconnect,
+        topology: Option<Topology>,
+    ) -> Result<Sharded> {
         if inner.is_empty() {
             bail!("sharded backend needs at least one replica");
         }
-        let id = match strategy {
-            // canonical form omits the default strategy, so
-            // `sharded:4:platinum-ternary` round-trips unchanged
-            ShardStrategy::Rows => format!("sharded:{}:{}", inner.len(), inner[0].id()),
-            st => format!("sharded:{}:{}:{}", inner.len(), st.label(), inner[0].id()),
+        let net = match topology {
+            None => None,
+            Some(t) => Some(NetSim::new(
+                t,
+                inner.len(),
+                interconnect.link_bytes_per_s,
+                interconnect.hop_s,
+            )?),
         };
-        Ok(Sharded { id, inner, strategy, interconnect })
+        // canonical form omits the default strategy and the default
+        // (analytic) interconnect, so `sharded:4:platinum-ternary`
+        // round-trips unchanged
+        let strat = match strategy {
+            ShardStrategy::Rows => String::new(),
+            st => format!("{}:", st.label()),
+        };
+        let nets = match topology {
+            None => String::new(),
+            Some(t) => format!("net={}:", t.label()),
+        };
+        let id = format!("sharded:{}:{}{}{}", inner.len(), strat, nets, inner[0].id());
+        Ok(Sharded { id, inner, strategy, interconnect, net })
     }
 
     pub fn replicas(&self) -> usize {
@@ -163,6 +228,11 @@ impl Sharded {
 
     pub fn strategy(&self) -> ShardStrategy {
         self.strategy
+    }
+
+    /// The event-model topology, when one was selected (`net=` grammar).
+    pub fn net_topology(&self) -> Option<Topology> {
+        self.net.as_ref().map(|n| n.topology())
     }
 
     /// The per-replica shards of `w` (only non-empty shards; fewer than
@@ -253,12 +323,7 @@ impl Sharded {
             return 0.0;
         }
         let boundaries = active as f64 - 1.0;
-        // total output bytes of the workload (i32 accumulator words)
-        let out_bytes: f64 = w
-            .kernels()
-            .iter()
-            .map(|(g, c)| 4.0 * (g.m * g.n) as f64 * *c as f64)
-            .sum();
+        let out_bytes = out_bytes(w);
         let (hops, bytes) = match (self.strategy, w) {
             // pipeline: (active-1) sequential stage boundaries, each
             // handing off the activation tile (n × hidden i32 words)
@@ -277,12 +342,75 @@ impl Sharded {
         hops * self.interconnect.hop_s + bytes / self.interconnect.link_bytes_per_s
     }
 
-    /// Aggregate one dispatch over an explicit live-backend set (the
-    /// shared body of [`Backend::run`] and [`Backend::run_degraded`]).
-    fn run_on(&self, w: &Workload, live: &[&dyn Backend]) -> Report {
+    /// Event-timeline dispatch latency (the `net=` model): per-replica
+    /// compute spans overlap with gather/handoff traffic routed over
+    /// the topology, and the result is the makespan of the simulated
+    /// timeline — not an analytic max-plus-merge.
+    ///
+    /// * rows/batch — every non-root busy replica ships its output
+    ///   stripe to the gather root (the lowest-indexed live replica)
+    ///   the moment *its own* shard finishes; stripes crossing the same
+    ///   link serialize.  The dispatch completes when the root has both
+    ///   finished its shard and received the last stripe.
+    /// * layers — the dispatch traverses the pipeline stages
+    ///   sequentially, each boundary handing the activation tile to the
+    ///   next stage's physical node over its (possibly multi-hop,
+    ///   e.g. around a dead replica) route.
+    fn event_latency_s(
+        &self,
+        net: &NetSim,
+        w: &Workload,
+        shards: &[Workload],
+        reports: &[Report],
+        nodes: &[usize],
+    ) -> f64 {
+        let n = reports.len();
+        if n <= 1 {
+            return reports.first().map(|r| r.latency_s).unwrap_or(0.0);
+        }
+        if self.strategy == ShardStrategy::Layers {
+            let handoff = match w {
+                Workload::ModelPass { model, n: toks, .. } => {
+                    4.0 * (*toks as f64) * model.hidden as f64
+                }
+                _ => out_bytes(w) / n as f64,
+            };
+            let mut t = 0.0;
+            for (i, r) in reports.iter().enumerate() {
+                t += r.latency_s;
+                if i + 1 < n {
+                    let hop = Transfer {
+                        src: nodes[i],
+                        dst: nodes[i + 1],
+                        bytes: handoff,
+                        start_s: t,
+                    };
+                    t = net.simulate(&[hop]).makespan_s;
+                }
+            }
+            return t;
+        }
+        let root = nodes[0];
+        let transfers: Vec<Transfer> = (1..n)
+            .map(|i| Transfer {
+                src: nodes[i],
+                dst: root,
+                bytes: out_bytes(&shards[i]),
+                start_s: reports[i].latency_s,
+            })
+            .collect();
+        reports[0].latency_s.max(net.simulate(&transfers).makespan_s)
+    }
+
+    /// Aggregate one dispatch over an explicit live-replica set — pairs
+    /// of (physical replica index, backend) — the shared body of
+    /// [`Backend::run`] and [`Backend::run_degraded`].  The physical
+    /// indices are what the event model routes between, so failover
+    /// traffic detours around dead replicas' positions.
+    fn run_on(&self, w: &Workload, live: &[(usize, &dyn Backend)]) -> Report {
         let shards = self.partition_n(w, live.len().max(1));
         let reports: Vec<Report> =
-            shards.iter().zip(live).map(|(shard, be)| be.run(shard)).collect();
+            shards.iter().zip(live).map(|(shard, (_, be))| be.run(shard)).collect();
         let mut out = Report {
             backend: self.id.clone(),
             workload: w.label(),
@@ -295,18 +423,28 @@ impl Sharded {
         }
         // latency: concurrent shards bound by the critical (slowest)
         // replica; pipeline stages traverse sequentially — plus the
-        // interconnect term either way
+        // interconnect term either way (analytic), or the makespan of
+        // the routed event timeline (net= model)
         let crit = reports
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.latency_s.total_cmp(&b.1.latency_s))
             .map(|(i, _)| i)
             .unwrap_or(0);
-        let compute_latency = match self.strategy {
-            ShardStrategy::Layers => reports.iter().map(|r| r.latency_s).sum(),
-            _ => reports[crit].latency_s,
+        out.latency_s = match &self.net {
+            Some(net) => {
+                let nodes: Vec<usize> =
+                    live.iter().take(reports.len()).map(|(i, _)| *i).collect();
+                self.event_latency_s(net, w, &shards, &reports, &nodes)
+            }
+            None => {
+                let compute_latency = match self.strategy {
+                    ShardStrategy::Layers => reports.iter().map(|r| r.latency_s).sum(),
+                    _ => reports[crit].latency_s,
+                };
+                compute_latency + self.merge_latency_s(w, reports.len())
+            }
         };
-        out.latency_s = compute_latency + self.merge_latency_s(w, reports.len());
         // energy: sum, with one unmodelled replica nulling the total
         out.energy_j = reports.iter().fold(Some(0.0f64), |acc, r| match (acc, r.energy_j) {
             (Some(a), Some(e)) => Some(a + e),
@@ -356,24 +494,36 @@ impl Backend for Sharded {
             pes: base.pes.map(|p| p * n),
             area_mm2: base.area_mm2.map(|a| a * n as f64),
             tech_nm: base.tech_nm,
-            notes: format!(
-                "{n} {} replicas, {}-partitioned; latency = {} + interconnect \
-                 ({} GB/s link, {} us/hop; env PLATINUM_LINK_GBPS/PLATINUM_HOP_US), \
-                 energy = sum",
-                base.id,
-                self.strategy.label(),
-                match self.strategy {
-                    ShardStrategy::Layers => "stage sum",
-                    _ => "max",
-                },
-                self.interconnect.link_bytes_per_s / 1e9,
-                self.interconnect.hop_s * 1e6
-            ),
+            notes: {
+                let mut notes = format!(
+                    "{n} {} replicas, {}-partitioned; latency = {} + interconnect \
+                     ({} GB/s link, {} us/hop; env PLATINUM_LINK_GBPS/PLATINUM_HOP_US), \
+                     energy = sum",
+                    base.id,
+                    self.strategy.label(),
+                    match self.strategy {
+                        ShardStrategy::Layers => "stage sum",
+                        _ => "max",
+                    },
+                    self.interconnect.link_bytes_per_s / 1e9,
+                    self.interconnect.hop_s * 1e6
+                );
+                if let Some(net) = &self.net {
+                    notes.push_str(&format!(
+                        "; net={} event-driven interconnect ({}): latency = timeline \
+                         makespan with link contention and compute/comm overlap",
+                        net.topology().label(),
+                        net.topology().shape(n)
+                    ));
+                }
+                notes
+            },
         }
     }
 
     fn run(&self, w: &Workload) -> Report {
-        let live: Vec<&dyn Backend> = self.inner.iter().map(|b| b.as_ref()).collect();
+        let live: Vec<(usize, &dyn Backend)> =
+            self.inner.iter().enumerate().map(|(i, b)| (i, b.as_ref())).collect();
         self.run_on(w, &live)
     }
 
@@ -382,18 +532,20 @@ impl Backend for Sharded {
     }
 
     fn run_degraded(&self, w: &Workload, alive: &[bool]) -> Report {
-        let live: Vec<&dyn Backend> = self
+        let live: Vec<(usize, &dyn Backend)> = self
             .inner
             .iter()
             .enumerate()
             .filter(|(i, _)| alive.get(*i).copied().unwrap_or(true))
-            .map(|(_, b)| b.as_ref())
+            .map(|(i, b)| (i, b.as_ref()))
             .collect();
         if live.len() == self.inner.len() {
             return self.run(w);
         }
         // failover: the dead replicas' shards fold into the survivors'
-        // partitions — same aggregation physics, fewer chips
+        // partitions — same aggregation physics, fewer chips (and under
+        // the net= model the survivors' physical positions keep their
+        // routes, so traffic detours around the dead slots)
         self.run_on(w, &live)
     }
 
@@ -403,12 +555,32 @@ impl Backend for Sharded {
         }
         // The failed chip's weight shard must be re-shipped to the
         // survivors over the modelled link (the ROADMAP's still-open
-        // weight-redistribution cost when shard assignment changes):
-        // one hop to fan the stripe out, then the shard's bytes
-        // serialized over a single link from the weight store.
+        // weight-redistribution cost when shard assignment changes).
         let shard_bytes = weight_bytes as f64 / self.inner.len() as f64;
-        self.interconnect.hop_s + shard_bytes / self.interconnect.link_bytes_per_s
+        match &self.net {
+            // analytic: one hop to fan the stripe out, then the shard's
+            // bytes serialized over a single link from the weight store
+            None => self.interconnect.hop_s + shard_bytes / self.interconnect.link_bytes_per_s,
+            // event model: the shard fans out from the weight store
+            // (node 0) to the survivors in equal slices at t=0; the
+            // timeline's makespan prices the near-source link
+            // contention the analytic term cannot see
+            Some(net) => {
+                let fan = survivors.min(self.inner.len() - 1);
+                let per = shard_bytes / fan as f64;
+                let transfers: Vec<Transfer> = (1..=fan)
+                    .map(|d| Transfer { src: 0, dst: d, bytes: per, start_s: 0.0 })
+                    .collect();
+                net.simulate(&transfers).makespan_s
+            }
+        }
     }
+}
+
+/// Total output bytes of a workload (i32 accumulator words) — what the
+/// gather/handoff traffic ships between chips.
+fn out_bytes(w: &Workload) -> f64 {
+    w.kernels().iter().map(|(g, c)| 4.0 * (g.m * g.n) as f64 * *c as f64).sum()
 }
 
 #[cfg(test)]
@@ -640,6 +812,126 @@ mod tests {
         // cross-chip energy exceeds a single chip's (construct overhead
         // is replicated per shard dispatch)
         assert!(r.energy_j.unwrap() > 0.0);
+    }
+
+    fn sharded_net(n: usize, strategy: ShardStrategy, topo: Topology) -> Sharded {
+        // explicit default calibration: immune to the env round-trip
+        // test mutating PLATINUM_* in a sibling thread
+        let inner: Vec<Box<dyn Backend>> =
+            (0..n).map(|_| Box::new(PlatinumBackend::ternary()) as Box<dyn Backend>).collect();
+        Sharded::with_net_interconnect(inner, strategy, topo, Interconnect::default()).unwrap()
+    }
+
+    fn sharded_analytic(n: usize, strategy: ShardStrategy) -> Sharded {
+        let inner: Vec<Box<dyn Backend>> =
+            (0..n).map(|_| Box::new(PlatinumBackend::ternary()) as Box<dyn Backend>).collect();
+        Sharded::with_interconnect(inner, strategy, Interconnect::default()).unwrap()
+    }
+
+    #[test]
+    fn net_canonical_id_and_notes() {
+        let sh = sharded_net(4, ShardStrategy::Rows, Topology::Ring);
+        assert_eq!(sh.id(), "sharded:4:net=ring:platinum-ternary");
+        assert_eq!(sh.net_topology(), Some(Topology::Ring));
+        let notes = sh.describe().notes;
+        assert!(notes.contains("net=ring") && notes.contains("4-chip ring"), "{notes}");
+        assert_eq!(
+            sharded_net(4, ShardStrategy::Batch, Topology::Mesh2d).id(),
+            "sharded:4:batch:net=mesh2d:platinum-ternary"
+        );
+        assert_eq!(sharded_analytic(4, ShardStrategy::Rows).net_topology(), None);
+    }
+
+    #[test]
+    fn net_rejects_mismatched_replica_counts() {
+        let inner = |n: usize| -> Vec<Box<dyn Backend>> {
+            (0..n).map(|_| Box::new(PlatinumBackend::ternary()) as Box<dyn Backend>).collect()
+        };
+        let err = Sharded::with_net_interconnect(
+            inner(7),
+            ShardStrategy::Rows,
+            Topology::Mesh2d,
+            Interconnect::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("mesh2d") && err.contains('7'), "{err}");
+        let err = Sharded::with_net_interconnect(
+            inner(6),
+            ShardStrategy::Rows,
+            Topology::FatTree,
+            Interconnect::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("power-of-two") && err.contains('6'), "{err}");
+    }
+
+    #[test]
+    fn net_single_replica_is_passthrough() {
+        let w = Workload::Kernel(Gemm::new(64, 40, 8));
+        let single = PlatinumBackend::ternary().run(&w);
+        for t in Topology::ALL {
+            let r = sharded_net(1, ShardStrategy::Rows, t).run(&w);
+            assert_eq!(r.latency_s.to_bits(), single.latency_s.to_bits(), "{}", t.label());
+        }
+    }
+
+    #[test]
+    fn net_contention_free_gather_matches_analytic() {
+        // 2 replicas on a ring: one single-hop stripe, no contention —
+        // the event timeline must reproduce the analytic model (the
+        // tolerance pin the ROADMAP's validation follow-on asks for)
+        let w = Workload::Kernel(Gemm::new(4320, 2080, 32));
+        let analytic = sharded_analytic(2, ShardStrategy::Rows).run(&w).latency_s;
+        let event = sharded_net(2, ShardStrategy::Rows, Topology::Ring).run(&w).latency_s;
+        let gap = (event - analytic).abs() / analytic;
+        assert!(gap < 0.10, "contention-free gap {gap} must stay under 10%");
+    }
+
+    #[test]
+    fn net_layers_pipeline_matches_analytic_handoff() {
+        // a 2-stage pipeline has one boundary and one route link: the
+        // event handoff degenerates to the analytic term exactly
+        let w = Workload::prefill(B158_3B);
+        let analytic = sharded_analytic(2, ShardStrategy::Layers).run(&w).latency_s;
+        let event = sharded_net(2, ShardStrategy::Layers, Topology::Ring).run(&w).latency_s;
+        assert!((event - analytic).abs() <= analytic * 1e-9, "{event} vs {analytic}");
+    }
+
+    #[test]
+    fn net_congested_gather_diverges_from_analytic() {
+        // 8 stripes converging on one root share the ring's two inbound
+        // links: the event timeline prices serialization + overlap the
+        // log-tree analytic term cannot, so the models must separate
+        let w = Workload::Kernel(Gemm::new(4320, 2080, 32));
+        let analytic = sharded_analytic(8, ShardStrategy::Rows).run(&w);
+        let sh = sharded_net(8, ShardStrategy::Rows, Topology::Ring);
+        let event = sh.run(&w);
+        assert_eq!(event.ops, analytic.ops);
+        assert!(event.cycles.is_some(), "detail survives under the net model");
+        let diff = (event.latency_s - analytic.latency_s).abs();
+        assert!(diff > 5e-6, "congested models must diverge, diff {diff}");
+    }
+
+    #[test]
+    fn net_failover_prices_redistribution_on_the_timeline() {
+        let sh = sharded_net(4, ShardStrategy::Rows, Topology::Ring);
+        let w = Workload::Kernel(Gemm::new(4320, 2080, 32));
+        let healthy = sh.run(&w);
+        let degraded = Backend::run_degraded(&sh, &w, &[true, true, false, true]);
+        assert_eq!(degraded.ops, healthy.ops, "no work lost in net failover");
+        assert!(degraded.latency_s > healthy.latency_s);
+        // redistribution: the event fan-out from the weight store sees
+        // link contention; the analytic single-link formula does not
+        let cost_event = Backend::redistribute_cost_s(&sh, 12_000_000, 3);
+        let cost_analytic =
+            Backend::redistribute_cost_s(&sharded_analytic(4, ShardStrategy::Rows), 12_000_000, 3);
+        assert!(cost_event > 0.0 && cost_analytic > 0.0);
+        assert!(
+            (cost_event - cost_analytic).abs() > 1e-7,
+            "event {cost_event} vs analytic {cost_analytic} must differ"
+        );
     }
 
     #[test]

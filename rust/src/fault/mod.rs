@@ -33,7 +33,9 @@ mod plan;
 pub use inject::{FaultInjector, StepFaults};
 pub use plan::{FaultPlan, FaultSpec};
 
+use crate::traffic::loadgen::MAX_CLASSES;
 use crate::util::json::{num, obj, Json};
+use anyhow::{bail, Result};
 
 /// Resilience knobs for the serving scheduler.  The default (no
 /// deadline, no retries, no brownout) disables every resilience code
@@ -59,6 +61,11 @@ pub struct ResilienceConfig {
     /// Minimum deadline slack (seconds) a queued request needs to
     /// survive admission while browned out.
     pub brownout_slack_s: f64,
+    /// Per-SLO-class overrides of `brownout_slack_s` (`None` → the
+    /// global value).  A class with *looser* slack (larger threshold)
+    /// sheds earlier under brownout — the knob that lets a batch tier
+    /// absorb the shedding while interactive traffic rides through.
+    pub brownout_slack_class: [Option<f64>; MAX_CLASSES],
     /// Run seed the injector's dedicated RNG stream is derived from
     /// (pass the load generator's seed for end-to-end reproducibility).
     pub fault_seed: u64,
@@ -73,6 +80,7 @@ impl Default for ResilienceConfig {
             retry_cap_s: 1.0,
             brownout_queue: 0,
             brownout_slack_s: 0.0,
+            brownout_slack_class: [None; MAX_CLASSES],
             fault_seed: 0,
         }
     }
@@ -89,12 +97,58 @@ impl ResilienceConfig {
     /// Brownout slack threshold for one SLO class.  The scheduler
     /// evaluates brownout per class queue (a saturated batch tenant
     /// browns out alone instead of shedding every class); this is the
-    /// per-class hook it consults.  All classes currently share the
-    /// global `brownout_slack_s` — the signature keeps the evaluation
-    /// point in one place so per-class slack overrides slot in without
-    /// touching the scheduler.
-    pub fn brownout_slack_for(&self, _class: usize) -> f64 {
-        self.brownout_slack_s
+    /// per-class hook it consults: the class override when one was
+    /// configured (`--brownout-slack-ms interactive:50,batch:500`),
+    /// the global `brownout_slack_s` otherwise.
+    pub fn brownout_slack_for(&self, class: usize) -> f64 {
+        self.brownout_slack_class[class.min(MAX_CLASSES - 1)].unwrap_or(self.brownout_slack_s)
+    }
+
+    /// Parse the `--brownout-slack-ms` grammar into this config: either
+    /// one global number (`"50"`), or a per-class list
+    /// (`"interactive:50,batch:500"`) whose names resolve through
+    /// `class_id` (the tenant mix's lookup; bare indices
+    /// `0..MAX_CLASSES` always resolve).  Errors are loud and name the
+    /// offending token — an unknown class never falls back silently.
+    pub fn set_brownout_slack_spec(
+        &mut self,
+        spec: &str,
+        class_id: &dyn Fn(&str) -> Option<usize>,
+    ) -> Result<()> {
+        let parse_ms = |tok: &str| -> Result<f64> {
+            match tok.trim().parse::<f64>() {
+                Ok(ms) if ms.is_finite() && ms >= 0.0 => Ok(ms),
+                _ => bail!("--brownout-slack-ms expects a non-negative number, got {tok:?}"),
+            }
+        };
+        let spec = spec.trim();
+        if !spec.contains(':') {
+            self.brownout_slack_s = parse_ms(spec)? * 1e-3;
+            return Ok(());
+        }
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((name, ms)) = part.split_once(':') else {
+                bail!(
+                    "--brownout-slack-ms per-class entries look like class:ms \
+                     (e.g. interactive:50,batch:500), got {part:?}"
+                );
+            };
+            let name = name.trim();
+            let idx = match name.parse::<usize>() {
+                Ok(i) if i < MAX_CLASSES => i,
+                _ => class_id(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--brownout-slack-ms names unknown class {name:?}; declare it in \
+                         --tenants or use a class index 0..{MAX_CLASSES}"
+                    )
+                })?,
+            };
+            if self.brownout_slack_class[idx].is_some() {
+                bail!("--brownout-slack-ms sets class {name:?} twice");
+            }
+            self.brownout_slack_class[idx] = Some(parse_ms(ms)? * 1e-3);
+        }
+        Ok(())
     }
 }
 
@@ -186,6 +240,55 @@ mod tests {
         for class in 0..8 {
             assert_eq!(cfg.brownout_slack_for(class), 0.25);
         }
+    }
+
+    #[test]
+    fn per_class_slack_overrides_the_global_value() {
+        let mut cfg = ResilienceConfig {
+            brownout_queue: 8,
+            brownout_slack_s: 0.25,
+            ..ResilienceConfig::default()
+        };
+        cfg.brownout_slack_class[1] = Some(2.0);
+        assert_eq!(cfg.brownout_slack_for(0), 0.25);
+        assert_eq!(cfg.brownout_slack_for(1), 2.0);
+        // Out-of-range classes clamp to the last slot, never panic.
+        assert_eq!(cfg.brownout_slack_for(MAX_CLASSES + 7), 0.25);
+    }
+
+    #[test]
+    fn slack_spec_parses_global_and_per_class_forms() {
+        let classes = ["interactive", "batch"];
+        let lookup = |name: &str| classes.iter().position(|c| *c == name);
+        let mut cfg = ResilienceConfig::default();
+        cfg.set_brownout_slack_spec("50", &lookup).unwrap();
+        assert_eq!(cfg.brownout_slack_s, 0.05);
+        assert_eq!(cfg.brownout_slack_class, [None; MAX_CLASSES]);
+
+        cfg.set_brownout_slack_spec("interactive:50, batch:500", &lookup).unwrap();
+        assert_eq!(cfg.brownout_slack_for(0), 0.05);
+        assert_eq!(cfg.brownout_slack_for(1), 0.5);
+        // Bare indices resolve without the lookup.
+        let mut by_index = ResilienceConfig::default();
+        by_index.set_brownout_slack_spec("1:125", &lookup).unwrap();
+        assert_eq!(by_index.brownout_slack_class[1], Some(0.125));
+    }
+
+    #[test]
+    fn slack_spec_errors_are_loud() {
+        let lookup = |_: &str| None;
+        let fail = |spec: &str| {
+            let mut cfg = ResilienceConfig::default();
+            cfg.set_brownout_slack_spec(spec, &lookup).unwrap_err().to_string()
+        };
+        let unknown = fail("premium:50");
+        assert!(unknown.contains("unknown class \"premium\""), "{unknown}");
+        let dup = fail("0:50,0:60");
+        assert!(dup.contains("twice"), "{dup}");
+        let neg = fail("-5");
+        assert!(neg.contains("non-negative"), "{neg}");
+        let bad = fail("0:fast");
+        assert!(bad.contains("non-negative"), "{bad}");
     }
 
     #[test]

@@ -31,6 +31,7 @@ use platinum::kv::{KvConfig, KvPolicy};
 use platinum::models::{ALL_MODELS, B158_3B, DECODE_N, PREFILL_N};
 use platinum::runtime::{HostTensor, Runtime};
 use platinum::server::{self, ServeOptions};
+use platinum::sim::net::Topology;
 use platinum::sim::DramModelKind;
 use platinum::traffic::{
     parse_trace_records, with_shared_prefix, ArrivalPattern, Clock, LenDist, LoadSpec, Scheduler,
@@ -74,7 +75,9 @@ fn print_help() {
                       [--threads <t>] caps the worker pool (overrides PLATINUM_THREADS)\n\
                       (--mode bitserial ≡ --backend platinum-bitserial: k retiled to 728)\n\
            report     --area --power --util   breakdowns vs paper §V-B  [--json]\n\
-           dse        [--full] [--replicas <list>]  Fig 7 tiling sweep (× chip count)\n\
+           dse        [--full] [--replicas <list>] [--topology <list>]\n\
+                      Fig 7 tiling sweep (× chip count × interconnect:\n\
+                      ring,mesh2d,fattree,analytic)\n\
            paths      [--kind ternary|binary] [--c <chunk>] [--dump] ISA dump\n\
            baselines  [--backend <ids|all>] [--json] [--threads <t>]\n\
                       Table I comparison on b1.58-3B\n\
@@ -91,7 +94,10 @@ fn print_help() {
                       [--faults <plan>] deterministic fault injection, e.g.\n\
                       \"straggler:r1:p0.05:x8,linkdeg:0.2:4gbps,swapfail:p0.01,crash:r2@t=1.5s\"\n\
                       [--deadline-ms <f>] [--retries <n>] [--retry-base-ms <f>]\n\
-                      [--retry-cap-ms <f>] [--brownout-queue <n>] [--brownout-slack-ms <f>]\n\
+                      [--retry-cap-ms <f>] [--brownout-queue <n>]\n\
+                      [--brownout-slack-ms <f | class:ms,...>] global slack, or\n\
+                      per-class e.g. \"interactive:50,batch:500\" (classes from\n\
+                      --tenants; looser slack sheds first under brownout)\n\
                       [--tenants <name:share[:wN],...>] SLO-class mix with weighted\n\
                       fair queueing, e.g. \"interactive:0.7:w4,batch:0.3:w1\"\n\
                       (per-class TTFT/TPOT/E2E/goodput in a `classes` section)\n\
@@ -116,8 +122,11 @@ fn print_help() {
          BACKENDS (see `platinum backends`):\n\
            platinum-ternary, platinum-bitserial, eyeriss, prosperity, tmac,\n\
            tmac-cpu, platinum-cpu (measured on this host; energy reported null);\n\
-           multi-chip composites: sharded:<replicas>[:rows|batch|layers]:<inner-id>\n\
-           (e.g. --backend sharded:4:platinum-ternary)"
+           multi-chip composites:\n\
+           sharded:<replicas>[:rows|batch|layers][:net=ring|mesh2d|fattree]:<inner-id>\n\
+           (e.g. --backend sharded:4:platinum-ternary; net= prices dispatches on an\n\
+           event-driven topology timeline with link contention instead of the\n\
+           analytic interconnect term)"
     );
 }
 
@@ -365,27 +374,56 @@ fn cmd_dse(args: &cli::Args) -> Result<()> {
     if replicas.is_empty() {
         bail!("--replicas expects a comma-separated list of positive integers, e.g. 1,2,4");
     }
-    let pts = dse::sweep_replicated(&grid, &replicas, &models);
+    // `--topology ring,mesh2d,fattree[,analytic]` crosses the sweep
+    // with event-driven interconnect models ("which topology at N
+    // chips"); the default is the analytic merge term alone
+    let topologies: Vec<Option<Topology>> = match args.get("topology") {
+        None => vec![None],
+        Some(spec) => spec
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| match t {
+                "analytic" => Ok(None),
+                _ => Topology::parse(t).map(Some).ok_or_else(|| {
+                    anyhow!(
+                        "--topology expects ring, mesh2d, fattree or analytic \
+                         (comma-separated), got {t:?}"
+                    )
+                }),
+            })
+            .collect::<Result<_>>()?,
+    };
+    if topologies.is_empty() {
+        bail!("--topology expects a comma-separated list, e.g. ring,mesh2d,fattree");
+    }
+    for (t, r, why) in dse::skipped_topology_pairs(&replicas, &topologies) {
+        println!("note: skipping {} at {} chips: {why}", t.label(), r);
+    }
+    let pts = dse::sweep_topology(&grid, &replicas, &topologies, &models);
     let front = dse::pareto(&pts);
     println!(
-        "== Fig 7 DSE: {} points ({} tilings × {} chip counts), {} on the Pareto frontier ==",
+        "== Fig 7 DSE: {} points ({} tilings × {} chip counts × {} interconnects), \
+         {} on the Pareto frontier ==",
         pts.len(),
         grid.len(),
         replicas.len(),
+        topologies.len(),
         front.len()
     );
     println!(
-        "{:<22} {:>6} {:>12} {:>12} {:>9} {:>9}  pareto",
-        "tiling", "chips", "latency(s)", "energy(J)", "mm²", "KB"
+        "{:<22} {:>6} {:>9} {:>12} {:>12} {:>9} {:>9}  pareto",
+        "tiling", "chips", "net", "latency(s)", "energy(J)", "mm²", "KB"
     );
     for (i, p) in pts.iter().enumerate() {
         let t = &p.tiling;
         let tag = format!("m{} k{} n{} {}", t.m, t.k, t.n, t.order.label());
-        let chosen = p.tiling == Tiling::default() && p.replicas == 1;
+        let chosen = p.tiling == Tiling::default() && p.replicas == 1 && p.topology.is_none();
         println!(
-            "{:<22} {:>6} {:>12.4} {:>12.3} {:>9.3} {:>9.0}  {}{}",
+            "{:<22} {:>6} {:>9} {:>12.4} {:>12.3} {:>9.3} {:>9.0}  {}{}",
             tag,
             p.replicas,
+            p.topology.map(|t| t.label()).unwrap_or("analytic"),
             p.latency_s,
             p.energy_j,
             p.area_mm2,
@@ -529,15 +567,20 @@ fn scheduler_config_from_args(args: &cli::Args) -> Result<SchedulerConfig> {
         Some(_) => Some(args.get_f64("deadline-ms", 0.0)? * 1e-3),
         None => None,
     };
-    let resilience = ResilienceConfig {
+    let mix = tenant_mix_from_args(args)?;
+    let mut resilience = ResilienceConfig {
         deadline_s,
         max_retries: args.get_usize("retries", 0)? as u32,
         retry_base_s: args.get_f64("retry-base-ms", 50.0)? * 1e-3,
         retry_cap_s: args.get_f64("retry-cap-ms", 1000.0)? * 1e-3,
         brownout_queue: args.get_usize("brownout-queue", 0)?,
-        brownout_slack_s: args.get_f64("brownout-slack-ms", 0.0)? * 1e-3,
         fault_seed: args.get_usize("seed", 0)? as u64,
+        ..ResilienceConfig::default()
     };
+    if let Some(spec) = args.get("brownout-slack-ms") {
+        let lookup = |name: &str| mix.as_ref().and_then(|m| m.class_id(name)).map(|i| i as usize);
+        resilience.set_brownout_slack_spec(spec, &lookup)?;
+    }
     let mut cfg = SchedulerConfig {
         max_batch: args.get_usize("max-batch", 32)?,
         max_queue: args.get_usize("max-queue", 256)?,
@@ -549,7 +592,7 @@ fn scheduler_config_from_args(args: &cli::Args) -> Result<SchedulerConfig> {
         ..SchedulerConfig::default()
     };
     cfg.prefill_chunk = args.get_usize("prefill-chunk", 0)?;
-    if let Some(mix) = tenant_mix_from_args(args)? {
+    if let Some(mix) = mix {
         cfg.classes = mix.classes.len();
         cfg.class_weights = mix.weights();
     }
@@ -750,6 +793,17 @@ fn cmd_serve_bench(args: &cli::Args) -> Result<()> {
             config.push(("retry_cap_ms", num(cfg.resilience.retry_cap_s * 1e3)));
             config.push(("brownout_queue", num(cfg.resilience.brownout_queue as f64)));
             config.push(("brownout_slack_ms", num(cfg.resilience.brownout_slack_s * 1e3)));
+            // only when per-class overrides exist, so global-slack runs
+            // stay byte-identical to the pre-override era
+            if cfg.resilience.brownout_slack_class.iter().any(Option::is_some) {
+                let per_class: Vec<Json> = cfg
+                    .resilience
+                    .brownout_slack_class
+                    .iter()
+                    .map(|o| o.map(|v| num(v * 1e3)).unwrap_or(Json::Null))
+                    .collect();
+                config.push(("brownout_slack_class_ms", arr(per_class)));
+            }
         }
         let doc = obj(vec![
             ("bench", s("serve-bench")),

@@ -19,6 +19,7 @@
 //!   compute; stall = max(0, load_cycles − compute_cycles).
 
 mod dram;
+pub mod net;
 mod platinum;
 
 pub use dram::{

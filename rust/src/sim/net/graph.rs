@@ -1,0 +1,243 @@
+//! Link tables and deterministic routing for the [`super`] interconnect
+//! simulator.
+//!
+//! A [`Graph`] is built once per [`super::NetSim`]: every physical link
+//! becomes one *directed* entry in a dense link table (so the two
+//! directions of a full-duplex link never contend with each other), and
+//! routing is a pure function of `(topology, src, dst)` — no adaptive or
+//! load-dependent choices, which is what keeps the event timeline
+//! deterministic and pool-size invariant.
+//!
+//! Routes per topology:
+//!
+//! * `ring` — shortest direction around the cycle; an exact tie between
+//!   the two directions goes clockwise (ascending ids), so the choice
+//!   is deterministic.
+//! * `mesh2d` — dimension-order (XY) routing: correct the column first,
+//!   then the row.  Deadlock-free and the standard NoC baseline.
+//! * `fattree` — up-down routing through the lowest common ancestor of
+//!   a complete binary tree whose leaves are the replicas.  Links fatten
+//!   toward the root (bandwidth multiplier doubles per level), the
+//!   textbook fat-tree bisection story.
+
+use super::Topology;
+use std::collections::BTreeMap;
+
+/// One directed link `from → to`.  `bw_mult` scales the base per-link
+/// bandwidth (1.0 everywhere except fat-tree upper levels).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Link {
+    pub bw_mult: f64,
+}
+
+/// The static link table + routing function for one topology instance.
+/// Node ids `0..chips` are replica endpoints; the fat tree adds internal
+/// switch nodes, but [`Graph::route`] always takes *replica* indices.
+#[derive(Debug, Clone)]
+pub(crate) struct Graph {
+    topology: Topology,
+    chips: usize,
+    /// mesh2d factorization (rows, cols); `None` for other topologies.
+    mesh: Option<(usize, usize)>,
+    pub links: Vec<Link>,
+    index: BTreeMap<(usize, usize), usize>,
+}
+
+/// Most-square factorization `rows × cols` of `chips` with both factors
+/// ≥ 2 (`rows ≤ cols`).  `None` means the count cannot form a 2-D mesh
+/// (primes, 1, 2) — callers turn that into a loud validation error.
+pub(crate) fn mesh_dims(chips: usize) -> Option<(usize, usize)> {
+    let mut r = (chips as f64).sqrt().floor() as usize;
+    while r >= 2 {
+        if chips % r == 0 {
+            return Some((r, chips / r));
+        }
+        r -= 1;
+    }
+    None
+}
+
+impl Graph {
+    /// Build the link table.  Assumes `topology.validate(chips)` passed;
+    /// a single chip yields an empty (linkless) graph for any topology.
+    pub fn build(topology: Topology, chips: usize) -> Graph {
+        let mut g = Graph { topology, chips, mesh: None, links: Vec::new(), index: BTreeMap::new() };
+        match topology {
+            Topology::Ring => {
+                for i in 0..chips {
+                    let next = (i + 1) % chips;
+                    if next != i {
+                        g.add_link(i, next, 1.0);
+                        g.add_link(next, i, 1.0);
+                    }
+                }
+            }
+            Topology::Mesh2d => {
+                let (rows, cols) = mesh_dims(chips).unwrap_or((1, chips.max(1)));
+                g.mesh = Some((rows, cols));
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let v = r * cols + c;
+                        if c + 1 < cols {
+                            g.add_link(v, v + 1, 1.0);
+                            g.add_link(v + 1, v, 1.0);
+                        }
+                        if r + 1 < rows {
+                            g.add_link(v, v + cols, 1.0);
+                            g.add_link(v + cols, v, 1.0);
+                        }
+                    }
+                }
+            }
+            Topology::FatTree => {
+                // Complete binary tree in heap order: internal nodes
+                // 0..chips-1, leaves chips-1..2·chips-1; replica i is
+                // tree node chips-1+i.  The link from a node at height h
+                // (leaves: h = 0) to its parent carries multiplier 2^h.
+                if chips > 1 {
+                    let depth = chips.trailing_zeros();
+                    for v in 1..2 * chips - 1 {
+                        let parent = (v - 1) / 2;
+                        let dv = usize::BITS - 1 - (v + 1).leading_zeros();
+                        let mult = (1u64 << (depth - dv)) as f64;
+                        g.add_link(v, parent, mult);
+                        g.add_link(parent, v, mult);
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    /// The deterministic route from replica `src` to replica `dst` as a
+    /// sequence of link indices (empty when `src == dst`).
+    pub fn route(&self, src: usize, dst: usize) -> Vec<usize> {
+        assert!(
+            src < self.chips && dst < self.chips,
+            "route endpoints must be replica indices < {}",
+            self.chips
+        );
+        if src == dst {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        match self.topology {
+            Topology::Ring => {
+                let n = self.chips;
+                let fwd = (dst + n - src) % n;
+                // shortest direction; exact tie goes clockwise
+                let step = if fwd <= n - fwd { 1 } else { n - 1 };
+                let mut cur = src;
+                while cur != dst {
+                    let next = (cur + step) % n;
+                    out.push(self.link(cur, next));
+                    cur = next;
+                }
+            }
+            Topology::Mesh2d => {
+                let (_, cols) = self.mesh.expect("mesh dims set at build");
+                let (mut r, mut c) = (src / cols, src % cols);
+                let (dr, dc) = (dst / cols, dst % cols);
+                while c != dc {
+                    let nc = if dc > c { c + 1 } else { c - 1 };
+                    out.push(self.link(r * cols + c, r * cols + nc));
+                    c = nc;
+                }
+                while r != dr {
+                    let nr = if dr > r { r + 1 } else { r - 1 };
+                    out.push(self.link(r * cols + c, nr * cols + c));
+                    r = nr;
+                }
+            }
+            Topology::FatTree => {
+                // leaves share a depth, so the two climbs to the lowest
+                // common ancestor stay in lockstep
+                let (mut a, mut b) = (self.chips - 1 + src, self.chips - 1 + dst);
+                let mut down = Vec::new();
+                while a != b {
+                    let (pa, pb) = ((a - 1) / 2, (b - 1) / 2);
+                    out.push(self.link(a, pa));
+                    down.push(self.link(pb, b));
+                    a = pa;
+                    b = pb;
+                }
+                out.extend(down.into_iter().rev());
+            }
+        }
+        out
+    }
+
+    fn add_link(&mut self, from: usize, to: usize, bw_mult: f64) {
+        if let std::collections::btree_map::Entry::Vacant(e) = self.index.entry((from, to)) {
+            e.insert(self.links.len());
+            self.links.push(Link { bw_mult });
+        }
+    }
+
+    fn link(&self, from: usize, to: usize) -> usize {
+        *self.index.get(&(from, to)).expect("routes step only along constructed links")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_dims_most_square_or_none() {
+        assert_eq!(mesh_dims(4), Some((2, 2)));
+        assert_eq!(mesh_dims(6), Some((2, 3)));
+        assert_eq!(mesh_dims(12), Some((3, 4)));
+        assert_eq!(mesh_dims(9), Some((3, 3)));
+        for bad in [1usize, 2, 3, 5, 7, 11, 13] {
+            assert_eq!(mesh_dims(bad), None, "{bad} has no r×c (both ≥ 2) factorization");
+        }
+    }
+
+    #[test]
+    fn ring_routes_take_the_short_way() {
+        let g = Graph::build(Topology::Ring, 6);
+        assert_eq!(g.route(0, 0).len(), 0);
+        assert_eq!(g.route(0, 1).len(), 1);
+        assert_eq!(g.route(0, 5).len(), 1, "backward is shorter");
+        assert_eq!(g.route(0, 3).len(), 3, "exact tie routes clockwise");
+        assert_eq!(g.route(4, 1).len(), 3);
+        // the two directions of one physical link are distinct entries
+        assert_ne!(g.route(0, 1), g.route(1, 0));
+    }
+
+    #[test]
+    fn mesh_routes_are_dimension_order_manhattan() {
+        // 6 chips → 2×3: node = row·3 + col
+        let g = Graph::build(Topology::Mesh2d, 6);
+        assert_eq!(g.route(0, 5).len(), 3, "(0,0)→(1,2) is |Δc|+|Δr|");
+        assert_eq!(g.route(0, 4).len(), 2);
+        assert_eq!(g.route(3, 2).len(), 3);
+        // column corrected first: 0→4 shares its first link with 0→1
+        assert_eq!(g.route(0, 4)[0], g.route(0, 1)[0]);
+    }
+
+    #[test]
+    fn fattree_routes_climb_to_the_lca() {
+        let g = Graph::build(Topology::FatTree, 8);
+        assert_eq!(g.route(0, 1).len(), 2, "siblings meet one level up");
+        assert_eq!(g.route(0, 2).len(), 4);
+        assert_eq!(g.route(0, 4).len(), 6, "opposite halves meet at the root");
+        assert_eq!(g.route(0, 7).len(), 6);
+        // upper links are fatter: the root-adjacent link of an 8-leaf
+        // tree carries 4× the leaf-link bandwidth
+        let top = g.route(0, 4)[2];
+        let leaf = g.route(0, 4)[0];
+        assert_eq!(g.links[leaf].bw_mult, 1.0);
+        assert_eq!(g.links[top].bw_mult, 4.0);
+    }
+
+    #[test]
+    fn single_chip_graphs_are_linkless() {
+        for t in Topology::ALL {
+            let g = Graph::build(t, 1);
+            assert!(g.links.is_empty());
+            assert!(g.route(0, 0).is_empty());
+        }
+    }
+}

@@ -1,0 +1,445 @@
+//! Event-driven multi-chip interconnect simulator (S21) — the
+//! topology-aware replacement for [`crate::engine::Sharded`]'s
+//! closed-form `max + link + hops` interconnect term.
+//!
+//! Platinum's 0.96 mm² positioning implies *many* chips per deployment,
+//! and an analytic gather term cannot see the three effects that decide
+//! whether a topology scales: **link contention** (two stripes crossing
+//! the same link serialize), **route length** (a mesh corner pays more
+//! hops than its neighbor), and **compute/communication overlap** (a
+//! replica's stripe starts moving the moment *its* shard finishes, not
+//! when the slowest one does).  This module prices all three with a
+//! deterministic discrete-event simulation:
+//!
+//! * [`Topology`] — `ring`, `mesh2d` (dimension-order routing over the
+//!   most-square `r×c` factorization), `fattree` (up-down routing over
+//!   a complete binary tree, links fattening 2× per level toward the
+//!   root).  Replica-count validation is loud: a prime count cannot be
+//!   a mesh, a non-power-of-two cannot be a fat tree.
+//! * [`NetSim`] — the event engine.  Each [`Transfer`] is routed
+//!   store-and-forward over its links; a link serializes at
+//!   `bytes / (base_bw · bw_mult)` and is FIFO-owned while doing so
+//!   (later messages queue), while the per-hop propagation `hop_s` adds
+//!   latency without occupying the link.  The engine is a binary heap
+//!   of `(time, seq)` events — ties break on insertion order, times are
+//!   compared as raw non-negative f64 bits — so one input always yields
+//!   one byte-identical [`NetReport`], independent of thread pools or
+//!   wall clocks (the serving determinism contract).
+//!
+//! Calibration rides the same env knobs as the analytic model:
+//! `PLATINUM_LINK_GBPS` is the per-link base bandwidth and
+//! `PLATINUM_HOP_US` the per-hop propagation, both via
+//! [`crate::engine::Interconnect::from_env`] at composition time.
+//!
+//! Guidance: the analytic term and the event timeline agree to within a
+//! few percent on contention-free patterns (pinned in tests), so for
+//! quick sweeps the analytic model is fine; reach for `net=` when the
+//! pattern is congested (all-to-all, many-to-one gathers at high
+//! replica counts) or when comparing topologies — that is where the two
+//! models diverge by design (pinned at >1.5× on an all-to-all ring).
+
+mod graph;
+
+use anyhow::{bail, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// The replica-graph shape simulated by [`NetSim`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Bidirectional cycle; shortest-direction routing (ties clockwise).
+    Ring,
+    /// 2-D mesh over the most-square `r×c` factorization (both ≥ 2);
+    /// dimension-order (XY) routing.
+    Mesh2d,
+    /// Complete binary fat tree over a power-of-two leaf count; up-down
+    /// routing, link bandwidth doubling per level toward the root.
+    FatTree,
+}
+
+impl Topology {
+    pub const ALL: [Topology; 3] = [Topology::Ring, Topology::Mesh2d, Topology::FatTree];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Topology::Ring => "ring",
+            Topology::Mesh2d => "mesh2d",
+            Topology::FatTree => "fattree",
+        }
+    }
+
+    /// Parse a grammar token (`ring`/`mesh2d`/`fattree`).
+    pub fn parse(s: &str) -> Option<Topology> {
+        Topology::ALL.into_iter().find(|t| t.label() == s)
+    }
+
+    /// Check that `chips` replicas can form this topology; the error
+    /// names the constraint and the offending count.  A single chip is
+    /// trivially valid everywhere (linkless graph, pass-through).
+    pub fn validate(&self, chips: usize) -> Result<()> {
+        if chips == 0 {
+            bail!("topology {} needs at least one chip", self.label());
+        }
+        match self {
+            Topology::Ring => Ok(()),
+            Topology::Mesh2d => {
+                if chips == 1 || graph::mesh_dims(chips).is_some() {
+                    Ok(())
+                } else {
+                    bail!(
+                        "mesh2d needs a rectangular replica count (r x c, both >= 2): \
+                         {chips} has no such factorization (try 4, 6, 8, 9, 12, ...)"
+                    )
+                }
+            }
+            Topology::FatTree => {
+                if chips.is_power_of_two() {
+                    Ok(())
+                } else {
+                    bail!("fattree needs a power-of-two replica count, got {chips}")
+                }
+            }
+        }
+    }
+
+    /// Human-readable shape at a given replica count, e.g. `2x3 mesh`.
+    pub fn shape(&self, chips: usize) -> String {
+        match self {
+            Topology::Ring => format!("{chips}-chip ring"),
+            Topology::Mesh2d => match graph::mesh_dims(chips) {
+                Some((r, c)) => format!("{r}x{c} mesh"),
+                None => format!("{chips}-chip mesh"),
+            },
+            Topology::FatTree => format!("{chips}-leaf fat tree"),
+        }
+    }
+}
+
+/// One message on the network: `bytes` from replica `src` to replica
+/// `dst`, becoming ready to inject at absolute time `start_s`.
+#[derive(Debug, Clone, Copy)]
+pub struct Transfer {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+    pub start_s: f64,
+}
+
+/// Outcome of one [`NetSim::simulate`] timeline.
+#[derive(Debug, Clone, Default)]
+pub struct NetReport {
+    /// Latest arrival time across all transfers (absolute; 0 if none).
+    pub makespan_s: f64,
+    /// Per-transfer arrival time at its destination, input order.
+    pub finish_s: Vec<f64>,
+    /// Summed time messages spent queued behind busy links — the
+    /// contention the analytic model cannot see (0 ⇒ contention-free).
+    pub queue_wait_s: f64,
+    /// Worst single queueing wait on any hop.
+    pub max_queue_wait_s: f64,
+}
+
+/// Heap event: message `msg` is ready to enter hop `hop` of its route at
+/// time `f64::from_bits(t_bits)`.  Non-negative f64 bit patterns order
+/// like the values, and `seq` (global insertion order) breaks ties, so
+/// `Ord` is total and deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Ev {
+    t_bits: u64,
+    seq: u64,
+    msg: u32,
+    hop: u32,
+}
+
+/// A deterministic discrete-event simulator of one topology instance.
+/// See the module docs for the link/contention model.
+#[derive(Debug, Clone)]
+pub struct NetSim {
+    topology: Topology,
+    chips: usize,
+    link_bytes_per_s: f64,
+    hop_s: f64,
+    graph: graph::Graph,
+}
+
+impl NetSim {
+    /// Validates the (topology, count) pair and the calibration values;
+    /// all failures are loud errors naming the offending input.
+    pub fn new(
+        topology: Topology,
+        chips: usize,
+        link_bytes_per_s: f64,
+        hop_s: f64,
+    ) -> Result<NetSim> {
+        topology.validate(chips)?;
+        if !link_bytes_per_s.is_finite() || link_bytes_per_s <= 0.0 {
+            bail!("net link bandwidth must be positive and finite, got {link_bytes_per_s}");
+        }
+        if !hop_s.is_finite() || hop_s < 0.0 {
+            bail!("net hop latency must be non-negative and finite, got {hop_s}");
+        }
+        let graph = graph::Graph::build(topology, chips);
+        Ok(NetSim { topology, chips, link_bytes_per_s, hop_s, graph })
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    pub fn chips(&self) -> usize {
+        self.chips
+    }
+
+    /// Route length in links between two replicas.
+    pub fn hops(&self, src: usize, dst: usize) -> usize {
+        self.graph.route(src, dst).len()
+    }
+
+    /// The contention-blind price of one message: the sum over its route
+    /// of serialization + propagation, as if it had the network to
+    /// itself.  Equal to `simulate(&[t]).makespan_s - t.start_s` for a
+    /// single transfer; the gap between `max(solo)` and a simulated
+    /// makespan is exactly the congestion the event model adds.
+    pub fn solo_latency_s(&self, src: usize, dst: usize, bytes: f64) -> f64 {
+        self.graph
+            .route(src, dst)
+            .iter()
+            .map(|&l| bytes.max(0.0) / self.link_bw(l) + self.hop_s)
+            .sum()
+    }
+
+    fn link_bw(&self, link: usize) -> f64 {
+        self.link_bytes_per_s * self.graph.links[link].bw_mult
+    }
+
+    /// Run the event timeline for a set of transfers.  Store-and-forward
+    /// per hop: a message entering a link at `t` starts serializing at
+    /// `max(t, link_free)`, holds the link for `bytes/bw`, and arrives
+    /// at the next node `hop_s` later.  Links are FIFO in ready-time
+    /// order (ties by injection order).  Pure function of its inputs.
+    pub fn simulate(&self, transfers: &[Transfer]) -> NetReport {
+        let routes: Vec<Vec<usize>> = transfers
+            .iter()
+            .map(|t| {
+                assert!(
+                    t.src < self.chips && t.dst < self.chips,
+                    "transfer endpoints must be replica indices < {}",
+                    self.chips
+                );
+                self.graph.route(t.src, t.dst)
+            })
+            .collect();
+        let mut free = vec![0.0f64; self.graph.links.len()];
+        let mut finish = vec![0.0f64; transfers.len()];
+        let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+        let mut seq: u64 = 0;
+        for (i, t) in transfers.iter().enumerate() {
+            let start = if t.start_s.is_finite() && t.start_s > 0.0 { t.start_s } else { 0.0 };
+            heap.push(Reverse(Ev { t_bits: start.to_bits(), seq, msg: i as u32, hop: 0 }));
+            seq += 1;
+        }
+        let (mut queue_wait, mut max_wait) = (0.0f64, 0.0f64);
+        while let Some(Reverse(ev)) = heap.pop() {
+            let t = f64::from_bits(ev.t_bits);
+            let route = &routes[ev.msg as usize];
+            if ev.hop as usize == route.len() {
+                finish[ev.msg as usize] = t;
+                continue;
+            }
+            let link = route[ev.hop as usize];
+            let start = t.max(free[link]);
+            let wait = start - t;
+            queue_wait += wait;
+            max_wait = max_wait.max(wait);
+            let ser = transfers[ev.msg as usize].bytes.max(0.0) / self.link_bw(link);
+            free[link] = start + ser;
+            let arrive = start + ser + self.hop_s;
+            heap.push(Reverse(Ev { t_bits: arrive.to_bits(), seq, msg: ev.msg, hop: ev.hop + 1 }));
+            seq += 1;
+        }
+        let makespan_s = finish.iter().copied().fold(0.0f64, f64::max);
+        NetReport {
+            makespan_s,
+            finish_s: finish,
+            queue_wait_s: queue_wait,
+            max_queue_wait_s: max_wait,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BW: f64 = 16e9;
+    const HOP: f64 = 1e-6;
+
+    fn net(t: Topology, chips: usize) -> NetSim {
+        NetSim::new(t, chips, BW, HOP).unwrap()
+    }
+
+    #[test]
+    fn topology_labels_roundtrip() {
+        for t in Topology::ALL {
+            assert_eq!(Topology::parse(t.label()), Some(t));
+        }
+        assert_eq!(Topology::parse("torus"), None);
+        assert_eq!(Topology::parse("Ring"), None, "grammar tokens are lowercase");
+    }
+
+    #[test]
+    fn validation_is_loud_and_specific() {
+        assert!(Topology::Ring.validate(1).is_ok());
+        assert!(Topology::Ring.validate(7).is_ok());
+        assert!(Topology::Mesh2d.validate(6).is_ok());
+        assert!(Topology::FatTree.validate(8).is_ok());
+        for t in Topology::ALL {
+            assert!(t.validate(0).is_err());
+            assert!(t.validate(1).is_ok(), "one chip is trivially valid on {}", t.label());
+        }
+        let msg = Topology::Mesh2d.validate(7).unwrap_err().to_string();
+        assert!(msg.contains("mesh2d") && msg.contains('7'), "{msg}");
+        let msg = Topology::FatTree.validate(6).unwrap_err().to_string();
+        assert!(msg.contains("power-of-two") && msg.contains('6'), "{msg}");
+        // calibration junk is rejected at construction
+        assert!(NetSim::new(Topology::Ring, 4, 0.0, HOP).is_err());
+        assert!(NetSim::new(Topology::Ring, 4, BW, -1.0).is_err());
+        assert!(NetSim::new(Topology::Ring, 4, f64::NAN, HOP).is_err());
+    }
+
+    #[test]
+    fn shapes_read_naturally() {
+        assert_eq!(Topology::Mesh2d.shape(6), "2x3 mesh");
+        assert_eq!(Topology::Ring.shape(4), "4-chip ring");
+        assert_eq!(Topology::FatTree.shape(8), "8-leaf fat tree");
+    }
+
+    #[test]
+    fn solo_latency_matches_single_message_simulation() {
+        for t in Topology::ALL {
+            let n = net(t, 4);
+            for dst in 1..4 {
+                let solo = n.solo_latency_s(0, dst, 1e6);
+                let rep = n.simulate(&[Transfer { src: 0, dst, bytes: 1e6, start_s: 0.0 }]);
+                assert!(
+                    (rep.makespan_s - solo).abs() < 1e-15,
+                    "{}: solo {solo} vs sim {}",
+                    t.label(),
+                    rep.makespan_s
+                );
+                assert_eq!(rep.queue_wait_s, 0.0, "one message never queues");
+            }
+        }
+    }
+
+    #[test]
+    fn fattree_upper_links_are_fatter() {
+        let n = net(Topology::FatTree, 8);
+        // 6 hops to the opposite half, but the upper links serialize at
+        // 2× and 4×: total serialization is 3.5·bytes/bw, not 6×
+        let bytes = 8e6;
+        let expect = bytes / BW * (1.0 + 0.5 + 0.25 + 0.25 + 0.5 + 1.0) + 6.0 * HOP;
+        let got = n.solo_latency_s(0, 4, bytes);
+        assert!((got - expect).abs() < 1e-15, "got {got} expect {expect}");
+    }
+
+    #[test]
+    fn contending_messages_serialize_on_a_shared_link() {
+        let n = net(Topology::Ring, 4);
+        let bytes = 16e6;
+        let ser = bytes / BW; // 1 ms
+        // both messages leave node 0 clockwise at t=0 → the 0→1 link is
+        // the bottleneck; injection order breaks the tie
+        let rep = n.simulate(&[
+            Transfer { src: 0, dst: 1, bytes, start_s: 0.0 },
+            Transfer { src: 0, dst: 1, bytes, start_s: 0.0 },
+        ]);
+        assert!((rep.finish_s[0] - (ser + HOP)).abs() < 1e-12);
+        assert!((rep.finish_s[1] - (2.0 * ser + HOP)).abs() < 1e-12);
+        assert!((rep.queue_wait_s - ser).abs() < 1e-12, "second message waits one serialization");
+        assert_eq!(rep.max_queue_wait_s, rep.queue_wait_s);
+    }
+
+    #[test]
+    fn propagation_does_not_occupy_the_link() {
+        let n = net(Topology::Ring, 4);
+        let bytes = 16e6;
+        let ser = bytes / BW;
+        // the second message becomes ready exactly when the first ends
+        // serialization: the link is free even though the first message
+        // is still propagating (hop_s) → zero queueing
+        let rep = n.simulate(&[
+            Transfer { src: 0, dst: 1, bytes, start_s: 0.0 },
+            Transfer { src: 0, dst: 1, bytes, start_s: ser },
+        ]);
+        assert_eq!(rep.queue_wait_s, 0.0);
+        assert!((rep.finish_s[1] - (2.0 * ser + HOP)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_links_run_concurrently() {
+        let n = net(Topology::Ring, 4);
+        let bytes = 16e6;
+        let solo = n.solo_latency_s(0, 1, bytes);
+        // clockwise 0→1 and counter-clockwise 0→3 share no directed link
+        let rep = n.simulate(&[
+            Transfer { src: 0, dst: 1, bytes, start_s: 0.0 },
+            Transfer { src: 0, dst: 3, bytes, start_s: 0.0 },
+        ]);
+        assert_eq!(rep.queue_wait_s, 0.0);
+        assert!((rep.makespan_s - solo).abs() < 1e-12, "no shared link ⇒ no slowdown");
+    }
+
+    #[test]
+    fn all_to_all_congestion_diverges_from_contention_blind_model() {
+        // the satellite pin: under an all-to-all pattern the event
+        // timeline must exceed max(solo latencies) by well over 1.5×
+        let n = net(Topology::Ring, 8);
+        let bytes = 4e6;
+        let mut transfers = Vec::new();
+        let mut blind = 0.0f64;
+        for s in 0..8 {
+            for d in 0..8 {
+                if s != d {
+                    transfers.push(Transfer { src: s, dst: d, bytes, start_s: 0.0 });
+                    blind = blind.max(n.solo_latency_s(s, d, bytes));
+                }
+            }
+        }
+        let rep = n.simulate(&transfers);
+        assert!(rep.queue_wait_s > 0.0);
+        let ratio = rep.makespan_s / blind;
+        assert!(ratio > 1.5, "all-to-all ring congestion ratio {ratio} must exceed 1.5");
+    }
+
+    #[test]
+    fn timeline_is_deterministic_and_pure() {
+        let n = net(Topology::Mesh2d, 6);
+        let transfers: Vec<Transfer> = (0..6)
+            .flat_map(|s| (0..6).filter(move |d| *d != s))
+            .zip(0..)
+            .map(|(d, i)| Transfer {
+                src: i % 6,
+                dst: d,
+                bytes: 1e5 * (i + 1) as f64,
+                start_s: 1e-7 * i as f64,
+            })
+            .collect();
+        let a = n.simulate(&transfers);
+        let b = n.simulate(&transfers);
+        let bits = |r: &NetReport| r.finish_s.iter().map(|f| f.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&a), bits(&b), "same input ⇒ bit-identical timeline");
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.queue_wait_s.to_bits(), b.queue_wait_s.to_bits());
+    }
+
+    #[test]
+    fn empty_and_self_transfers_are_trivial() {
+        let n = net(Topology::Ring, 4);
+        let rep = n.simulate(&[]);
+        assert_eq!(rep.makespan_s, 0.0);
+        let rep = n.simulate(&[Transfer { src: 2, dst: 2, bytes: 1e9, start_s: 0.25 }]);
+        assert_eq!(rep.finish_s, vec![0.25], "self-transfer arrives at its start time");
+        assert_eq!(rep.queue_wait_s, 0.0);
+    }
+}

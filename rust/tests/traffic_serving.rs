@@ -796,3 +796,138 @@ fn wfq_gives_interactive_lower_ttft_than_batch_at_saturation() {
         "the WFQ path must stay deterministic"
     );
 }
+
+// ---------------------------------------------------------------------------
+// ISSUE 10: event-driven interconnect (sim::net) + per-class brownout slack
+// ---------------------------------------------------------------------------
+
+#[test]
+fn net_failover_is_priced_on_the_event_timeline_and_pool_invariant() {
+    // a replica crash mid-serve on the event-driven ring composite: the
+    // redistribution stall is the sim::net timeline makespan (it must
+    // differ from the analytic interconnect's price for the same crash),
+    // the resilience accounting balances, and the whole faulted run is
+    // byte-identical across worker-pool sizes {1, 8} with real golden
+    // work executing inside every step
+    let reqs: Vec<TrafficRequest> = (0..12)
+        .map(|i| TrafficRequest {
+            id: i,
+            arrival_s: i as f64 * 1e-4,
+            prompt_tokens: 8,
+            output_tokens: 6,
+            ..TrafficRequest::default()
+        })
+        .collect();
+    let cfg = SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() };
+    let reg = Registry::with_defaults();
+    let net_be = reg.build("sharded:4:net=ring:platinum-ternary").unwrap();
+    let analytic_be = reg.build("sharded:4:platinum-ternary").unwrap();
+    let plan = FaultPlan::parse("crash:r2@t=0.000001s").unwrap();
+    let run = |threads: usize| -> (String, Vec<StepRecord>, f64) {
+        let sched = Scheduler::new(net_be.as_ref(), TINY, cfg);
+        let pool = Pool::new(threads);
+        let pcfg = PlatinumConfig::default();
+        let mut wrng = Rng::seed_from(1);
+        let w = wrng.ternary_vec(64 * 64);
+        let packed = pack_ternary(&w, 64, 64, pcfg.c_ternary);
+        let mut exec = |s: &StepRecord, _w: &Workload| -> anyhow::Result<()> {
+            let n = s.tokens.max(1);
+            let mut xrng = Rng::seed_from(0x5EED ^ s.index);
+            let x = xrng.act_vec(64 * n);
+            let (y, _) = ternary_mpgemm_pool(&pcfg, &packed, &x, n, &pool, threads);
+            assert_eq!(y.len(), 64 * n);
+            Ok(())
+        };
+        let r = sched
+            .serve_faults(&reqs, &mut VirtualClock::new(), Some(&mut exec), &plan)
+            .unwrap();
+        let redist = r.metrics.resilience.as_ref().unwrap().redistribution_s;
+        (r.metrics.to_json().to_string(), r.steps, redist)
+    };
+    let (json1, steps1, redist) = run(1);
+    let (json8, steps8, _) = run(8);
+    assert_eq!(steps1, steps8, "net-priced scheduler decisions leaked the pool size");
+    assert_eq!(json1, json8, "net-priced metrics JSON leaked the pool size");
+
+    // the stall is exactly the event timeline's price for this crash …
+    let weight_bytes = TINY.weight_bytes_ternary();
+    let event_cost = net_be.redistribute_cost_s(weight_bytes, 3);
+    assert!((redist - event_cost).abs() < 1e-15, "{redist} vs {event_cost}");
+    // … which is not the analytic interconnect's price (the timeline
+    // sees link contention on the fan-out that the closed form ignores)
+    let analytic_cost = analytic_be.redistribute_cost_s(weight_bytes, 3);
+    assert!(
+        (event_cost - analytic_cost).abs() > 1e-9,
+        "event {event_cost} vs analytic {analytic_cost} should diverge under contention"
+    );
+
+    // and the resilience accounting balances: nothing lost, nothing
+    // double-counted
+    let doc = Json::parse(&json1).unwrap();
+    let counts = doc.get("counts").unwrap();
+    let g = |k: &str| counts.get(k).unwrap().as_f64().unwrap();
+    let res = doc.get("resilience").unwrap().get("counts").unwrap();
+    let shed = res.get("shed").unwrap().as_f64().unwrap();
+    let exhausted = res.get("retry_exhausted").unwrap().as_f64().unwrap();
+    assert_eq!(g("offered"), g("completed") + shed + exhausted + g("rejected"));
+    assert_eq!(g("completed"), 12.0, "failover must lose no sequence");
+    assert_eq!(res.get("failovers").unwrap().as_f64(), Some(1.0));
+}
+
+#[test]
+fn looser_brownout_slack_sheds_batch_before_interactive() {
+    // per-class brownout slack (ISSUE 10 satellite): at equal queue
+    // depth, the class with the *looser* slack threshold (batch, 10 s)
+    // sheds under brownout while the tight class (interactive, 0 ms)
+    // rides through — the regression that pins
+    // `ResilienceConfig::brownout_slack_for` to real per-class values
+    let mut cfg = SchedulerConfig { max_batch: 2, ..SchedulerConfig::default() };
+    cfg.classes = 2;
+    let mut rc = ResilienceConfig {
+        deadline_s: Some(5.0),
+        brownout_queue: 4,
+        brownout_slack_s: 0.0,
+        ..ResilienceConfig::default()
+    };
+    let classes = ["interactive", "batch"];
+    let lookup = |name: &str| classes.iter().position(|c| *c == name);
+    rc.set_brownout_slack_spec("interactive:0,batch:10000", &lookup).unwrap();
+    cfg.resilience = rc;
+    // a t=0 burst, even class split: both class queues sit at the same
+    // depth when brownout evaluates
+    let reqs: Vec<TrafficRequest> = (0..24)
+        .map(|i| TrafficRequest {
+            id: i,
+            arrival_s: 0.0,
+            prompt_tokens: 8,
+            output_tokens: 6,
+            class: (i % 2) as u8,
+            ..TrafficRequest::default()
+        })
+        .collect();
+    let be = PlatinumBackend::ternary();
+    let sched = Scheduler::new(&be, TINY, cfg);
+    let run = || sched.serve(&reqs, &mut VirtualClock::new()).unwrap();
+    let r = run();
+    let cls = r.metrics.classes.as_ref().expect("two-class run must emit the section");
+    assert_eq!(cls.len(), 2);
+    assert!(
+        cls[1].shed > 0,
+        "the loose-slack batch class must shed under brownout (queue {} deep)",
+        r.metrics.queue_depth_max
+    );
+    assert_eq!(
+        cls[0].shed, 0,
+        "the tight-slack interactive class must ride through the same depth"
+    );
+    assert_eq!(
+        r.metrics.offered,
+        r.metrics.completed + cls[0].shed + cls[1].shed,
+        "shed accounting must balance"
+    );
+    assert_eq!(
+        r.metrics.to_json().to_string(),
+        run().metrics.to_json().to_string(),
+        "per-class shedding must stay deterministic"
+    );
+}
